@@ -1,0 +1,15 @@
+//! Bench: Fig 16 simulation time per kernel across machines (see coordinator::report and DESIGN.md experiment index).
+//! Quick by default; set RTEAAL_FULL=1 for full-length runs.
+
+rteaal::install_tracking_alloc!();
+
+fn main() {
+    let ctx = rteaal::coordinator::report::Ctx::from_env();
+    let tables = rteaal::coordinator::report::run_experiment("fig16", &ctx).expect("known experiment");
+    for t in tables {
+        println!("{}", t.render());
+        if let Ok(p) = t.save_csv("fig16") {
+            eprintln!("csv: {}", p.display());
+        }
+    }
+}

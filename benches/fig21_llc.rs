@@ -1,0 +1,15 @@
+//! Bench: Fig 21 LLC-capacity sensitivity (see coordinator::report and DESIGN.md experiment index).
+//! Quick by default; set RTEAAL_FULL=1 for full-length runs.
+
+rteaal::install_tracking_alloc!();
+
+fn main() {
+    let ctx = rteaal::coordinator::report::Ctx::from_env();
+    let tables = rteaal::coordinator::report::run_experiment("fig21", &ctx).expect("known experiment");
+    for t in tables {
+        println!("{}", t.render());
+        if let Ok(p) = t.save_csv("fig21") {
+            eprintln!("csv: {}", p.display());
+        }
+    }
+}

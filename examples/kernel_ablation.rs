@@ -1,0 +1,41 @@
+//! The paper's central ablation in miniature: sweep all seven kernel
+//! configurations over one design and print the sim-time / program-size /
+//! metadata-size trade-off (paper §7.2), plus each machine model's view.
+//!
+//! Run: `cargo run --release --example kernel_ablation [design]`
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::coordinator::sweep;
+use rteaal::designs::catalog;
+use rteaal::kernels::ALL_KERNELS;
+use rteaal::perf::machine;
+use rteaal::perf::trace::SimStyle;
+use rteaal::util::fmt_bytes;
+use rteaal::util::tables::Table;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "rocket_like_2c".into());
+    let d = catalog(&name).expect("unknown design");
+    let c = compile_design(&d, CompileOpts::default());
+    let cycles = 2000;
+
+    let mut t = Table::new(
+        &format!("kernel ablation — {name} ({} ops, {} layers)", c.ir.total_ops(), c.ir.depth()),
+        &["kernel", "Mcyc/s", "program", "metadata", "Xeon frontend", "Xeon IPC"],
+    );
+    let xeon = machine::intel_xeon();
+    for cfg in ALL_KERNELS {
+        let p = sweep::measure_kernel(&d, &c, cfg, cycles);
+        let (_, td) = sweep::modeled(&c, SimStyle::Kernel(cfg), &xeon, 2);
+        t.row(vec![
+            cfg.name().to_string(),
+            format!("{:.2}", p.hz / 1e6),
+            fmt_bytes(p.program_bytes),
+            fmt_bytes(p.data_bytes),
+            format!("{:.1}%", td.frontend_bound * 100.0),
+            format!("{:.2}", td.ipc),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: parse a FIRRTL design, compile it to the OIM tensor form,
+//! and simulate it with the PSU kernel — the 60-second tour of the API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::designs::{Design, Stimulus};
+use rteaal::kernels::{build_with_oim, KernelConfig};
+use rteaal::sim::Simulator;
+
+const FIRRTL: &str = r#"
+circuit Quickstart :
+  module Quickstart :
+    input clock : Clock
+    input en : UInt<1>
+    input step : UInt<8>
+    output total : UInt<16>
+
+    reg acc : UInt<16>, clock with : (reset => (reset, UInt<16>(0)))
+    node widened = pad(step, 16)
+    node sum = tail(add(acc, widened), 1)
+    acc <= mux(en, sum, acc)
+    total <= acc
+"#;
+
+fn main() -> anyhow::Result<()> {
+    // 1. FIRRTL text -> dataflow graph
+    let graph = rteaal::firrtl::parse(FIRRTL)?;
+    println!("parsed '{}': {} ops, {} regs", graph.name, graph.num_ops(), graph.regs.len());
+
+    // 2. graph -> optimized -> levelized -> OIM tensor
+    let design = Design {
+        name: graph.name.clone(),
+        graph,
+        stimulus: Stimulus::Random(7),
+        default_cycles: 100_000,
+    };
+    let compiled = compile_design(&design, CompileOpts::default());
+    println!(
+        "compiled in {:?}: {} layers, {} effectual ops, format B = {} bytes",
+        compiled.compile_time,
+        compiled.ir.depth(),
+        compiled.ir.total_ops(),
+        compiled.oim.format_b().total_bytes()
+    );
+
+    // 3. pick a kernel configuration and simulate
+    let kernel = build_with_oim(KernelConfig::PSU, &compiled.ir, &compiled.oim);
+    let mut sim = Simulator::new(kernel, design.make_stimulus());
+    let stats = sim.run(100_000);
+    println!("simulated {} cycles at {:.2} Mcyc/s", stats.cycles, stats.hz / 1e6);
+    for (name, v) in sim.outputs() {
+        println!("  {name} = {v}");
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! End-to-end driver across all three layers: the `tiny_cpu` design runs
+//! its dhrystone-like program to completion on the **XLA/PJRT backend**
+//! (L1 Pallas ALU inside the L2 jax cycle model, AOT-compiled, executed
+//! from Rust), and the checksum is verified against the software golden
+//! model and the native PSU kernel. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! Requires `make artifacts`. Run: `cargo run --release --example tensor_e2e`
+
+use std::time::Instant;
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::designs::{catalog, tiny_cpu};
+use rteaal::kernels::{build_with_oim, KernelConfig};
+use rteaal::runtime::pjrt::PjrtRuntime;
+use rteaal::runtime::XlaBackend;
+
+fn main() -> anyhow::Result<()> {
+    let prog = tiny_cpu::dhrystone_like(40);
+    let (golden, instructions) = tiny_cpu::golden_run(&prog, 1_000_000);
+    println!("golden model: checksum={golden:#010x} after {instructions} instructions");
+
+    // --- native kernel run (L3 interpreter) ---
+    let d = catalog("tiny_cpu").expect("design");
+    let c = compile_design(&d, CompileOpts { fuse: false });
+    let mut native = build_with_oim(KernelConfig::PSU, &c.ir, &c.oim);
+    let t0 = Instant::now();
+    let mut native_cycles = 0u64;
+    loop {
+        native.step(&[0, 0, 0, 0]);
+        native_cycles += 1;
+        if native.outputs().iter().any(|(n, v)| n == "halted" && *v == 1) {
+            break;
+        }
+        assert!(native_cycles < 100_000, "did not halt");
+    }
+    let native_wall = t0.elapsed();
+    let native_checksum =
+        native.outputs().iter().find(|(n, _)| n == "checksum").map(|(_, v)| *v).unwrap();
+    println!(
+        "native PSU: halted after {native_cycles} cycles in {native_wall:?} \
+         ({:.1} kcyc/s), checksum={native_checksum:#010x}",
+        native_cycles as f64 / native_wall.as_secs_f64() / 1e3
+    );
+    assert_eq!(native_checksum, golden as u64, "native checksum mismatch");
+
+    // --- XLA backend run (L2+L1 via PJRT) ---
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut xla = XlaBackend::load(&rt, std::path::Path::new("artifacts"), "tiny_cpu")?;
+    let t0 = Instant::now();
+    let mut xla_cycles = 0u64;
+    let halted_idx =
+        xla.output_names.iter().position(|n| n == "halted").expect("halted output");
+    'outer: loop {
+        for _ in 0..xla.chunk {
+            xla.step(&[0, 0, 0, 0])?;
+            xla_cycles += 1;
+        }
+        // inspect every cycle of the chunk for the halt edge
+        let per = xla.num_outputs;
+        for (row, chunk_row) in xla.chunk_outputs().chunks(per).enumerate() {
+            if chunk_row[halted_idx] == 1 {
+                xla_cycles = xla_cycles - xla.chunk as u64 + row as u64 + 1;
+                break 'outer;
+            }
+        }
+        assert!(xla_cycles < 100_000, "did not halt");
+    }
+    let xla_wall = t0.elapsed();
+    let xla_checksum =
+        xla.outputs().iter().find(|(n, _)| n == "checksum").map(|(_, v)| *v).unwrap();
+    println!(
+        "xla backend: halted by cycle {xla_cycles} in {xla_wall:?} \
+         ({:.1} kcyc/s incl. compile-free steady state), checksum={xla_checksum:#010x}",
+        xla_cycles as f64 / xla_wall.as_secs_f64() / 1e3
+    );
+    assert_eq!(xla_checksum, golden as u64, "xla checksum mismatch");
+    assert_eq!(xla_cycles, native_cycles, "cycle count mismatch");
+
+    println!("\nE2E OK: golden == native PSU == XLA/PJRT ({golden:#010x})");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Diagnostic probe: run small HLO-text modules through the PJRT runtime
+//! and print results (used to verify which HLO constructs round-trip to
+//! xla_extension 0.5.1 — see DESIGN.md §Runtime).
+
+use rteaal::runtime::pjrt::PjrtRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = PjrtRuntime::cpu()?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(|s| s == "backend").unwrap_or(false) {
+        let dir = std::path::Path::new(&args[1]);
+        let mut b = rteaal::runtime::XlaBackend::load(&rt, dir, &args[2])?;
+        let nz = b.state.iter().filter(|&&v| v != 0).count();
+        eprintln!("init state nonzero: {nz} / {}", b.state.len());
+        for c in 0..b.chunk as u64 {
+            b.step(&vec![0u64; b.num_inputs])?;
+            let _ = c;
+        }
+        let nz = b.state.iter().filter(|&&v| v != 0).count();
+        eprintln!("after 1 chunk nonzero: {nz}; outputs {:?}", b.outputs());
+        let txt: String = b.state.iter().map(|v| format!("{v}\n")).collect();
+        std::fs::write("/tmp/rust_state.txt", txt)?;
+        return Ok(());
+    }
+    if args.first().map(|s| s == "tiny").unwrap_or(false) {
+        // run a tiny_cpu-shaped module: state from tensors.json init, zero inputs
+        let exe = rt.compile_hlo_file(std::path::Path::new(&args[1]))?;
+        let j = rteaal::util::json::parse(&std::fs::read_to_string("artifacts/tiny_cpu.tensors.json")?)?;
+        let mut state = vec![0u32; j.req_usize("num_slots")?];
+        let slots = j.req_u64_vec("init_slots")?;
+        let vals = j.req_u64_vec("init_vals")?;
+        for (s, v) in slots.iter().zip(&vals) { state[*s as usize] = *v as u32; }
+        let chunk: usize = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(4);
+        let st = xla::Literal::vec1(&state);
+        let xx = xla::Literal::vec1(&vec![0u32; chunk * 4]).reshape(&[chunk as i64, 4])?;
+        let r = exe.execute::<xla::Literal>(&[st, xx])?[0][0].to_literal_sync()?;
+        let (st2, outs) = r.to_tuple2()?;
+        let sv = st2.to_vec::<u32>()?;
+        let ov = outs.to_vec::<u32>()?;
+        eprintln!("state nonzero: {}, last outputs row: {:?}", sv.iter().filter(|&&v| v != 0).count(), &ov[ov.len()-4..]);
+        return Ok(());
+    }
+    for path in std::env::args().skip(1) {
+        let exe = rt.compile_hlo_file(std::path::Path::new(&path))?;
+        let st = xla::Literal::vec1(&(0..8u32).collect::<Vec<_>>());
+        let xx = xla::Literal::vec1(&(0..8u32).map(|v| v + 10).collect::<Vec<_>>()).reshape(&[4, 2])?;
+        let r = exe.execute::<xla::Literal>(&[st, xx])?[0][0].to_literal_sync()?;
+        let parts = r.to_tuple()?;
+        print!("{path}:");
+        for p in &parts {
+            print!(" {:?}", p.to_vec::<u32>()?);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn unused() {}

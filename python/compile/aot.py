@@ -1,0 +1,82 @@
+"""AOT export: lower the L2 cycle-chunk model to HLO *text* + metadata.
+
+HLO text (NOT `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the rust side's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and DESIGN.md).
+
+Usage:
+    python -m compile.aot --tensors ../artifacts/<d>.tensors.json \
+                          --out ../artifacts/<d> [--chunk 32] [--no-pallas]
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import build_cycle_fn, load_encoding
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print_large_constants — the default printer elides big
+    # constant arrays ("{1, 2, ...}"), and xla_extension 0.5.1's text
+    # parser silently fills the gap with garbage. The design's index
+    # tensors are exactly such constants.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # ... and the default printer emits metadata attributes (source_end_line)
+    # the 0.5.1 parser rejects.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_design(tensors_path, chunk=8, use_pallas=True, block=128):
+    enc = load_encoding(tensors_path)
+    assert enc["max_ops"] % block == 0 or enc["max_ops"] < block, \
+        "exporter must pad max_ops to the Pallas block"
+    fn = build_cycle_fn(enc, use_pallas=use_pallas, block=block, chunk=chunk)
+    n_inputs = max(int(enc["num_inputs"]), 1)
+    state_spec = jax.ShapeDtypeStruct((int(enc["num_slots"]),), jnp.uint32)
+    inputs_spec = jax.ShapeDtypeStruct((chunk, n_inputs), jnp.uint32)
+    lowered = jax.jit(fn).lower(state_spec, inputs_spec)
+    meta = {
+        "name": enc["name"],
+        "num_slots": int(enc["num_slots"]),
+        "chunk": chunk,
+        "num_inputs": int(enc["num_inputs"]),
+        "num_outputs": int(len(enc["output_slots"])),
+        "pallas": bool(use_pallas),
+        "block": block,
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tensors", required=True, help="dense tensor encoding JSON")
+    ap.add_argument("--out", required=True, help="output basename (writes .hlo.txt and .meta.json)")
+    ap.add_argument("--chunk", type=int, default=8, help="cycles per PJRT call")
+    ap.add_argument("--block", type=int, default=128, help="Pallas S-tile")
+    ap.add_argument("--no-pallas", action="store_true", help="plain-jnp ALU (ablation)")
+    args = ap.parse_args()
+
+    hlo, meta = lower_design(
+        args.tensors, chunk=args.chunk, use_pallas=not args.no_pallas, block=args.block
+    )
+    hlo_path = f"{args.out}.hlo.txt"
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    with open(f"{args.out}.meta.json", "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {hlo_path} ({len(hlo)} chars), chunk={args.chunk}, pallas={not args.no_pallas}")
+
+
+if __name__ == "__main__":
+    main()

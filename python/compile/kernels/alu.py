@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: the batched multi-operation ALU.
+
+The compute hot-spot of the tensorized cycle: for a layer's S lanes,
+``out[s] = mask[s] & op[opcode[s]](a[s], b[s], c[s])``. Lanes are tiled
+over S with a BlockSpec so the kernel streams VMEM-sized blocks; the
+opcode select tree is lane-uniform (every lane computes all candidate
+results, then selects) — the right shape for a TPU VPU, and exactly how
+a sparse-tensor-algebra accelerator would execute the `op_u/op_r` actions
+of the cascade.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation); the kernel still
+lowers into the same HLO module the rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# default S-tile; multiples of 128 lanes (VPU width)
+BLOCK_S = 512
+
+
+def _candidates(op, a, b, c, imm, mask, aux):
+    """All candidate results, lane-wise (u32 semantics)."""
+    zero = jnp.zeros_like(a)
+    one = jnp.ones_like(a)
+    bool2u = lambda x: x.astype(jnp.uint32)  # noqa: E731
+    shamt_b = jnp.minimum(b, 31).astype(jnp.uint32)
+    b_ok = b < 32
+    imm5 = jnp.minimum(imm, 31).astype(jnp.uint32)
+
+    cands = [
+        a + b,                                            # add
+        a - b,                                            # sub
+        a * b,                                            # mul
+        jnp.where(b == 0, zero, a // jnp.maximum(b, one)),  # div
+        jnp.where(b == 0, zero, a % jnp.maximum(b, one)),   # rem
+        bool2u(a < b),                                    # lt
+        bool2u(a <= b),                                   # leq
+        bool2u(a > b),                                    # gt
+        bool2u(a >= b),                                   # geq
+        bool2u(a == b),                                   # eq
+        bool2u(a != b),                                   # neq
+        a & b,                                            # and
+        a | b,                                            # or
+        a ^ b,                                            # xor
+        ~a,                                               # not
+        zero - a,                                         # neg
+        bool2u(a == aux),                                 # andrk
+        bool2u(a != 0),                                   # orr
+        jax.lax.population_count(a) & one,                # xorr
+        a << imm5,                                        # shli
+        a >> imm5,                                        # shri
+        jnp.where(b_ok, a << shamt_b, zero),              # dshl
+        jnp.where(b_ok, a >> shamt_b, zero),              # dshr
+        (a << imm5) | b,                                  # cat
+        jnp.where(a != 0, b, c),                          # mux
+        a,                                                # copy
+        zero,                                             # muxchain (never exported)
+    ]
+    return cands
+
+
+def alu_lanes(op, a, b, c, imm, mask, aux):
+    """Lane-wise multi-op ALU in plain jnp (used inside the kernel and as
+    the L2 fallback when Pallas is disabled)."""
+    cands = _candidates(op, a, b, c, imm, mask, aux)
+    stack = jnp.stack(cands, axis=0)  # [NUM_OPS, S]
+    sel = jnp.take_along_axis(stack, op[None, :].astype(jnp.int32), axis=0)[0]
+    return sel & mask
+
+
+def _alu_kernel(op_ref, a_ref, b_ref, c_ref, imm_ref, mask_ref, aux_ref, out_ref):
+    out_ref[...] = alu_lanes(
+        op_ref[...], a_ref[...], b_ref[...], c_ref[...],
+        imm_ref[...], mask_ref[...], aux_ref[...],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pallas_alu(op, a, b, c, imm, mask, aux, block=BLOCK_S):
+    """The Pallas entry point. S must be a multiple of `block` (the AOT
+    exporter pads layers accordingly)."""
+    s = a.shape[0]
+    block = min(block, s)
+    assert s % block == 0, f"S={s} not a multiple of block={block}"
+    grid = (s // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _alu_kernel,
+        grid=grid,
+        in_specs=[spec] * 7,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((s,), jnp.uint32),
+        interpret=True,
+    )(op, a, b, c, imm, mask, aux)

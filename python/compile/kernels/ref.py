@@ -1,0 +1,133 @@
+"""Pure-numpy oracle for the L1 multi-op ALU and the cycle semantics.
+
+This is the correctness anchor of the Python side: the Pallas kernel
+(`alu.py`) and the L2 model (`model.py`) are tested against these
+definitions, and these definitions mirror `rust/src/tensor/ir.rs::eval_rec`
+exactly (u32 flavour).
+"""
+
+import numpy as np
+
+# Executor opcode numbering — MUST match rust/src/tensor/ir.rs::KOp.
+OPS = [
+    "add", "sub", "mul", "div", "rem",
+    "lt", "leq", "gt", "geq", "eq", "neq",
+    "and", "or", "xor",
+    "not", "neg",
+    "andrk", "orr", "xorr",
+    "shli", "shri",
+    "dshl", "dshr",
+    "cat", "mux", "copy", "muxchain",
+]
+OPCODE = {name: i for i, name in enumerate(OPS)}
+NUM_OPS = len(OPS)  # 27 (muxchain never appears in XLA exports)
+
+
+def ref_alu_scalar(op, a, b, c, imm, mask, aux):
+    """Scalar u32 reference for one op (python ints)."""
+    M32 = 0xFFFFFFFF
+    a, b, c = a & M32, b & M32, c & M32
+    name = OPS[op]
+    if name == "add":
+        r = a + b
+    elif name == "sub":
+        r = a - b
+    elif name == "mul":
+        r = a * b
+    elif name == "div":
+        r = 0 if b == 0 else a // b
+    elif name == "rem":
+        r = 0 if b == 0 else a % b
+    elif name == "lt":
+        r = int(a < b)
+    elif name == "leq":
+        r = int(a <= b)
+    elif name == "gt":
+        r = int(a > b)
+    elif name == "geq":
+        r = int(a >= b)
+    elif name == "eq":
+        r = int(a == b)
+    elif name == "neq":
+        r = int(a != b)
+    elif name == "and":
+        r = a & b
+    elif name == "or":
+        r = a | b
+    elif name == "xor":
+        r = a ^ b
+    elif name == "not":
+        r = ~a
+    elif name == "neg":
+        r = -a
+    elif name == "andrk":
+        r = int(a == (aux & M32))
+    elif name == "orr":
+        r = int(a != 0)
+    elif name == "xorr":
+        r = bin(a).count("1") & 1
+    elif name == "shli":
+        r = a << imm if imm < 32 else 0
+    elif name == "shri":
+        r = a >> imm if imm < 32 else 0
+    elif name == "dshl":
+        r = 0 if b >= 32 else a << b
+    elif name == "dshr":
+        r = 0 if b >= 32 else a >> b
+    elif name == "cat":
+        r = ((a << imm) | b) if imm < 32 else b
+    elif name == "mux":
+        r = b if a != 0 else c
+    elif name == "copy":
+        r = a
+    else:
+        raise ValueError(f"op {name} not supported in the u32 tensor ISA")
+    return r & mask & M32
+
+
+def ref_alu(opcode, a, b, c, imm, mask, aux):
+    """Vectorized numpy reference: element-wise multi-op ALU."""
+    out = np.zeros_like(np.asarray(a), dtype=np.uint32)
+    for i in range(len(out)):
+        out[i] = ref_alu_scalar(
+            int(opcode[i]), int(a[i]), int(b[i]), int(c[i]),
+            int(imm[i]), int(mask[i]), int(aux[i]),
+        )
+    return out
+
+
+class RefCycleSim:
+    """Pure-python cycle simulator over the dense tensor encoding
+    (mirrors rust's IrSim; used to validate the jax model).
+
+    Layout contract (see rust/src/tensor/export.rs): inputs at slots
+    [0, num_inputs), registers at [num_inputs, +num_regs), layer i's
+    outputs at [sources_end + i*max_ops, +max_ops)."""
+
+    def __init__(self, enc):
+        self.enc = enc
+        self.state = np.zeros(enc["num_slots"], dtype=np.uint32)
+        for s, v in zip(enc["init_slots"], enc["init_vals"]):
+            self.state[s] = v
+
+    def step(self, inputs):
+        enc = self.enc
+        for i in range(enc["num_inputs"]):
+            w = enc["input_widths"][i]
+            m = 0xFFFFFFFF if w >= 32 else (1 << w) - 1
+            self.state[i] = np.uint32(int(inputs[i]) & m)
+        L, M, S0 = enc["num_layers"], enc["max_ops"], enc["sources_end"]
+        for layer in range(L):
+            lo, hi = layer * M, (layer + 1) * M
+            a = self.state[enc["a"][lo:hi]]
+            b = self.state[enc["b"][lo:hi]]
+            c = self.state[enc["c"][lo:hi]]
+            out = ref_alu(enc["opcode"][lo:hi], a, b, c,
+                          enc["imm"][lo:hi], enc["mask"][lo:hi], enc["aux"][lo:hi])
+            self.state[S0 + layer * M:S0 + (layer + 1) * M] = out
+        base = enc["num_inputs"]
+        for i, (n, m) in enumerate(zip(enc["commit_next"], enc["commit_mask"])):
+            self.state[base + i] = self.state[n] & np.uint32(m)
+
+    def outputs(self):
+        return [int(self.state[s]) for s in self.enc["output_slots"]]

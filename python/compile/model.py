@@ -1,0 +1,97 @@
+"""L2: the tensorized simulation-cycle model (build-time jax).
+
+One simulation cycle of the dense cascade encoding:
+
+    per layer i:   gather a/b/c from LI  ->  L1 Pallas ALU
+                   -> dynamic_update_slice into the layer's slot window
+    then:          register commit (the `◇ : i ≡ I` connects)
+
+**Scatter-free by contract** with `rust/src/tensor/export.rs`: the slot
+layout makes every update contiguous (inputs at 0, registers at
+`num_inputs`, layer i's outputs at `sources_end + i*max_ops`), because
+xla_extension 0.5.1 — the rust runtime's XLA — mis-executes the scatter
+ops newer jax emits for `state.at[idx].set`. Gathers round-trip fine.
+
+Layers are unrolled at trace time (static slice offsets); the cycle chunk
+is unrolled too, so the lowered module is straight-line HLO — mirroring,
+pleasingly, the paper's own observation that RTL simulation compiles well
+to static schedules. Python never runs on the simulation path.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.alu import alu_lanes, pallas_alu
+
+ARRAY_KEYS = [
+    "opcode", "a", "b", "c", "imm", "mask", "aux",
+    "commit_next", "commit_mask", "input_widths",
+    "init_slots", "init_vals", "output_slots",
+]
+
+
+def load_encoding(path):
+    """Load the dense tensor encoding exported by `rteaal export-tensors`."""
+    with open(path) as f:
+        enc = json.load(f)
+    for k in ARRAY_KEYS:
+        enc[k] = np.asarray(enc[k], dtype=np.uint32)
+    return enc
+
+
+def build_cycle_fn(enc, use_pallas=True, block=128, chunk=8):
+    """Build `cycle_chunk(state, inputs) -> (state', outputs)`.
+
+    state:   u32[num_slots]
+    inputs:  u32[chunk, max(num_inputs, 1)]
+    outputs: u32[chunk, num_outputs]
+    """
+    L, M = int(enc["num_layers"]), int(enc["max_ops"])
+    S0 = int(enc["sources_end"])
+    n_inputs = int(enc["num_inputs"])
+    layer_arrays = [
+        tuple(jnp.asarray(enc[k].reshape(L, M)[i]) for k in ("opcode", "a", "b", "c", "imm", "mask", "aux"))
+        for i in range(L)
+    ]
+    commit_next = jnp.asarray(enc["commit_next"])
+    commit_mask = jnp.asarray(enc["commit_mask"])
+    widths = enc["input_widths"].astype(np.uint64)
+    input_mask = jnp.asarray(
+        np.where(widths >= 32, 0xFFFFFFFF, (1 << widths) - 1).astype(np.uint32)
+    )
+    output_slots = jnp.asarray(enc["output_slots"])
+
+    alu = (lambda *args: pallas_alu(*args, block=min(block, M))) if use_pallas else alu_lanes
+
+    def cycle(state, inp_row):
+        if n_inputs > 0:
+            masked = inp_row[:n_inputs] & input_mask
+            state = jax.lax.dynamic_update_slice(state, masked, (0,))
+        # layers unrolled: static offsets, contiguous updates
+        for i, (opcode, a_idx, b_idx, c_idx, imm, mask, aux) in enumerate(layer_arrays):
+            vals = alu(opcode, state[a_idx], state[b_idx], state[c_idx], imm, mask, aux)
+            state = jax.lax.dynamic_update_slice(state, vals, (S0 + i * M,))
+        # register commit: gather next-state values, contiguous write
+        if len(enc["commit_next"]) > 0:
+            next_vals = state[commit_next] & commit_mask
+            state = jax.lax.dynamic_update_slice(state, next_vals, (n_inputs,))
+        return state, state[output_slots]
+
+    def cycle_chunk(state, inputs):
+        outs = []
+        for k in range(chunk):
+            state, o = cycle(state, inputs[k])
+            outs.append(o)
+        return state, jnp.stack(outs)
+
+    return cycle_chunk
+
+
+def initial_state(enc):
+    state = np.zeros(enc["num_slots"], dtype=np.uint32)
+    for s, v in zip(enc["init_slots"], enc["init_vals"]):
+        state[s] = v
+    return state

@@ -1,0 +1,125 @@
+//! ESSENT-class baseline: fully unrolled straight-line evaluation.
+//!
+//! ESSENT emits the whole dataflow graph as straight-line C++ (full-cycle,
+//! -O2 — the paper's activity-oblivious configuration), giving minimal
+//! branching and maximal compiler optimization at the cost of a huge
+//! binary and compile. The executor here is a flat tape of precompiled
+//! per-op closures with direct slot writes — the fastest interpreter
+//! structure available to us, standing in for "most aggressively compiled".
+//! `naive` mode models ESSENT at -O0: the paper measures a 103× dynamic
+//! instruction blow-up because every straight-line temporary round-trips
+//! through memory; we model it with boxed per-op thunks and per-op heap
+//! traffic.
+
+use crate::graph::ops::mask;
+use crate::kernels::common::eval_op;
+use crate::kernels::SimKernel;
+use crate::tensor::ir::{LayerIr, OpRec};
+
+type EsFn = fn(&mut [u64], &OpRec, &[u32]);
+type BoxedThunk = Box<dyn Fn(&mut Vec<u64>, &[u32]) + Send + Sync>;
+
+pub struct EssentLike {
+    v: Vec<u64>,
+    tape: Vec<(EsFn, OpRec)>,
+    naive_tape: Vec<BoxedThunk>,
+    ext_args: Vec<u32>,
+    input_slots: Vec<u32>,
+    input_masks: Vec<u64>,
+    commits: Vec<(u32, u32, u64)>,
+    outputs: Vec<(String, u32)>,
+    naive: bool,
+    total_ops: usize,
+}
+
+fn es_eval(v: &mut [u64], rec: &OpRec, ext: &[u32]) {
+    v[rec.out as usize] = crate::tensor::ir::eval_rec(rec, v, ext);
+}
+
+impl EssentLike {
+    pub fn new(ir: &LayerIr, naive: bool) -> Self {
+        let mut tape: Vec<(EsFn, OpRec)> = Vec::with_capacity(ir.total_ops());
+        let mut naive_tape: Vec<BoxedThunk> = Vec::new();
+        for layer in &ir.layers {
+            for rec in layer {
+                if naive {
+                    let rec = *rec;
+                    naive_tape.push(Box::new(move |v: &mut Vec<u64>, ext: &[u32]| {
+                        // -O0: gather to heap, evaluate, write back
+                        let slots = crate::tensor::oim::operand_slots(&rec, ext);
+                        let operands: Vec<u64> = slots.iter().map(|&r| v[r as usize]).collect();
+                        let out = eval_op(rec.kop(), &operands, rec.imm, rec.mask, rec.aux);
+                        v[rec.out as usize] = out;
+                    }));
+                } else {
+                    tape.push((es_eval, *rec));
+                }
+            }
+        }
+        EssentLike {
+            v: ir.initial_slots(),
+            tape,
+            naive_tape,
+            ext_args: ir.ext_args.clone(),
+            input_slots: ir.input_slots.clone(),
+            input_masks: ir.input_widths.iter().map(|&w| mask(w)).collect(),
+            commits: ir.commits.clone(),
+            outputs: ir.output_slots.clone(),
+            naive,
+            total_ops: ir.total_ops(),
+        }
+    }
+}
+
+impl SimKernel for EssentLike {
+    fn config_name(&self) -> &'static str {
+        if self.naive {
+            "essent-like-O0"
+        } else {
+            "essent-like"
+        }
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        for i in 0..self.input_slots.len() {
+            self.v[self.input_slots[i] as usize] = inputs[i] & self.input_masks[i];
+        }
+        if self.naive {
+            // temporarily move v to satisfy the borrow checker cheaply
+            let mut v = std::mem::take(&mut self.v);
+            for thunk in &self.naive_tape {
+                thunk(&mut v, &self.ext_args);
+            }
+            self.v = v;
+        } else {
+            for (f, rec) in &self.tape {
+                f(&mut self.v, rec, &self.ext_args);
+            }
+        }
+        for &(reg, next, m) in &self.commits {
+            self.v[reg as usize] = self.v[next as usize] & m;
+        }
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.outputs.iter().map(|(n, s)| (n.clone(), self.v[*s as usize])).collect()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        let per_op = if self.naive { 160 } else { 40 };
+        150 * 1024 + self.total_ops * per_op
+    }
+
+    fn data_bytes(&self) -> usize {
+        0
+    }
+}

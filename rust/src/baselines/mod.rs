@@ -1,0 +1,61 @@
+//! Baseline simulators (substitutes for the paper's comparators).
+//!
+//! The paper evaluates against Verilator 5.016 and ESSENT (-O2). Neither
+//! can run here (no Chipyard designs, no multi-hundred-GB compiles), so we
+//! implement executors with the same *structural* properties the paper
+//! measures:
+//!
+//! * [`verilator_like`] — compiled per-node code with data-dependent
+//!   branching and moderate optimization (Verilator's macrotask style).
+//! * [`essent_like`] — fully flattened straight-line op list with
+//!   pre-resolved operands and direct writes (ESSENT's full-cycle -O2
+//!   mode; activity-aware -O3 is out of scope, as in the paper §3).
+//! * [`event_driven`] — a classic activity-aware event-driven simulator
+//!   (bonus baseline; the paper's §2.1 taxonomy).
+//!
+//! `graph::RefSim` (the semantic oracle) lives with the graph IR.
+
+pub mod verilator_like;
+pub mod essent_like;
+pub mod event_driven;
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::builder::{random_circuit, random_inputs};
+    use crate::graph::passes::optimize_no_fusion;
+    use crate::graph::RefSim;
+    use crate::kernels::SimKernel;
+    use crate::tensor::ir::lower;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn baselines_match_reference() {
+        for seed in 0..8 {
+            let mut rng = Rng::new(70_000 + seed);
+            let g = random_circuit(&mut rng, 80);
+            let opt = optimize_no_fusion(&g);
+            let ir = lower(&opt);
+            let mut reference = RefSim::new(opt.clone());
+            let mut sims: Vec<Box<dyn SimKernel>> = vec![
+                Box::new(super::verilator_like::VerilatorLike::new(&ir, false)),
+                Box::new(super::verilator_like::VerilatorLike::new(&ir, true)),
+                Box::new(super::essent_like::EssentLike::new(&ir, false)),
+                Box::new(super::essent_like::EssentLike::new(&ir, true)),
+                Box::new(super::event_driven::EventDriven::new(&ir)),
+            ];
+            for cycle in 0..12 {
+                let inputs = random_inputs(&mut rng, &reference.graph);
+                reference.step(&inputs);
+                for s in &mut sims {
+                    s.step(&inputs);
+                    assert_eq!(
+                        s.outputs(),
+                        reference.outputs(),
+                        "{} diverged seed {seed} cycle {cycle}",
+                        s.config_name()
+                    );
+                }
+            }
+        }
+    }
+}

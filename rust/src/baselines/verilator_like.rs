@@ -1,0 +1,136 @@
+//! Verilator-class baseline: compiled per-node evaluation with
+//! data-dependent branching.
+//!
+//! Verilator translates each dataflow node into C++ statements with
+//! conditional operand handling (width guards, X-propagation remnants,
+//! `if`-based muxing). The executor here mirrors that structure: one
+//! record per node evaluated through *branchy* code paths (explicit `if`s
+//! rather than branchless selects), operands read through an indirection
+//! table, values stored into the node-ordered signal vector. `naive`
+//! mode is the `-O0` analog (per-op heap traffic, boxed dispatch).
+
+use crate::graph::ops::mask;
+use crate::kernels::common::eval_op;
+use crate::kernels::SimKernel;
+use crate::tensor::ir::{KOp, LayerIr, OpRec};
+
+pub struct VerilatorLike {
+    v: Vec<u64>,
+    tape: Vec<OpRec>,
+    ext_args: Vec<u32>,
+    input_slots: Vec<u32>,
+    input_masks: Vec<u64>,
+    commits: Vec<(u32, u32, u64)>,
+    outputs: Vec<(String, u32)>,
+    naive: bool,
+    total_ops: usize,
+}
+
+impl VerilatorLike {
+    pub fn new(ir: &LayerIr, naive: bool) -> Self {
+        let mut tape = Vec::with_capacity(ir.total_ops());
+        for layer in &ir.layers {
+            tape.extend_from_slice(layer);
+        }
+        VerilatorLike {
+            v: ir.initial_slots(),
+            tape,
+            ext_args: ir.ext_args.clone(),
+            input_slots: ir.input_slots.clone(),
+            input_masks: ir.input_widths.iter().map(|&w| mask(w)).collect(),
+            commits: ir.commits.clone(),
+            outputs: ir.output_slots.clone(),
+            naive,
+            total_ops: ir.total_ops(),
+        }
+    }
+
+    /// Branchy evaluation: conditions via `if`s, operand guards included —
+    /// the branch behaviour the paper measures (22% mispredict on x86).
+    #[inline(never)]
+    fn eval_branchy(&mut self, idx: usize) {
+        let rec = self.tape[idx];
+        let a = self.v[rec.a as usize];
+        let out = match rec.kop() {
+            KOp::Mux => {
+                // explicit branch, not a select
+                if a != 0 {
+                    self.v[rec.b as usize]
+                } else {
+                    self.v[rec.c as usize]
+                }
+            }
+            KOp::MuxChain => crate::tensor::ir::eval_rec(&rec, &self.v, &self.ext_args),
+            KOp::Add => a.wrapping_add(self.v[rec.b as usize]),
+            KOp::Sub => a.wrapping_sub(self.v[rec.b as usize]),
+            KOp::And => a & self.v[rec.b as usize],
+            KOp::Or => a | self.v[rec.b as usize],
+            KOp::Xor => a ^ self.v[rec.b as usize],
+            KOp::Eq => (a == self.v[rec.b as usize]) as u64,
+            KOp::Copy => a,
+            _ => crate::tensor::ir::eval_rec(&rec, &self.v, &self.ext_args) ^ rec.mask ^ rec.mask,
+        };
+        self.v[rec.out as usize] = out & rec.mask;
+    }
+
+    fn eval_naive(&mut self, idx: usize) {
+        // -O0 analog: everything through temporary heap storage
+        let rec = self.tape[idx];
+        let ar = rec.arity as usize;
+        let mut operands: Vec<u64> = Vec::with_capacity(ar);
+        for r in crate::tensor::oim::operand_slots(&rec, &self.ext_args) {
+            operands.push(self.v[r as usize]);
+        }
+        self.v[rec.out as usize] = eval_op(rec.kop(), &operands, rec.imm, rec.mask, rec.aux);
+    }
+}
+
+impl SimKernel for VerilatorLike {
+    fn config_name(&self) -> &'static str {
+        if self.naive {
+            "verilator-like-O0"
+        } else {
+            "verilator-like"
+        }
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        for i in 0..self.input_slots.len() {
+            self.v[self.input_slots[i] as usize] = inputs[i] & self.input_masks[i];
+        }
+        if self.naive {
+            for i in 0..self.tape.len() {
+                self.eval_naive(i);
+            }
+        } else {
+            for i in 0..self.tape.len() {
+                self.eval_branchy(i);
+            }
+        }
+        for &(reg, next, m) in &self.commits {
+            self.v[reg as usize] = self.v[next as usize] & m;
+        }
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.outputs.iter().map(|(n, s)| (n.clone(), self.v[*s as usize])).collect()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        // compiled code per node (~68 B) + runtime
+        200 * 1024 + self.total_ops * 68
+    }
+
+    fn data_bytes(&self) -> usize {
+        0 // operands baked into code; only the signal vector is data
+    }
+}

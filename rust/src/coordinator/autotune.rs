@@ -1,0 +1,74 @@
+//! Best-kernel selection (paper §7.5: "for each design and machine, we
+//! report the simulation time of the best-performing RTeAAL Sim kernel").
+//!
+//! Two strategies:
+//! * [`best_measured`] — short trial runs of every configuration on this
+//!   host (what the paper does per machine);
+//! * [`best_modeled`] — pick by the perf model's projected
+//!   cycles-per-sim-cycle on a *modeled* machine (used for the four-host
+//!   projections).
+
+use super::compile::Compiled;
+use crate::designs::Design;
+use crate::kernels::{KernelConfig, ALL_KERNELS};
+use crate::perf::machine::Machine;
+use crate::perf::trace::SimStyle;
+
+/// Trial-run every kernel; return (config, cycles/sec).
+pub fn best_measured(design: &Design, compiled: &Compiled, trial_cycles: u64) -> (KernelConfig, f64) {
+    let mut best = (KernelConfig::PSU, 0.0f64);
+    for cfg in ALL_KERNELS {
+        let p = super::sweep::measure_kernel(design, compiled, cfg, trial_cycles);
+        if p.hz > best.1 {
+            best = (cfg, p.hz);
+        }
+    }
+    best
+}
+
+/// Model every kernel on `machine`; return (config, modeled core cycles
+/// per simulated cycle — lower is better).
+pub fn best_modeled(compiled: &Compiled, machine: &Machine) -> (KernelConfig, f64) {
+    let mut best = (KernelConfig::PSU, f64::INFINITY);
+    for cfg in ALL_KERNELS {
+        let (_, td) = super::sweep::modeled(compiled, SimStyle::Kernel(cfg), machine, 2);
+        if td.cycles_per_sim_cycle < best.1 {
+            best = (cfg, td.cycles_per_sim_cycle);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::compile::{compile_design, CompileOpts};
+    use crate::designs::catalog;
+    use crate::perf::machine;
+
+    #[test]
+    fn small_design_prefers_unrolled_on_big_cache_machine() {
+        // paper §7.5: SHA3-small designs favour TI; big designs favour
+        // rolled kernels. Model must reproduce the small-design side.
+        let d = catalog("counter").unwrap();
+        let c = compile_design(&d, CompileOpts::default());
+        let (cfg, _) = best_modeled(&c, &machine::intel_core());
+        assert!(
+            matches!(cfg, KernelConfig::TI | KernelConfig::SU | KernelConfig::IU),
+            "expected unrolled kernel for tiny design, got {}",
+            cfg.name()
+        );
+    }
+
+    #[test]
+    fn big_design_prefers_rolled_on_xeon() {
+        let d = catalog("rocket_like_4c").unwrap();
+        let c = compile_design(&d, CompileOpts::default());
+        let (cfg, _) = best_modeled(&c, &machine::intel_xeon());
+        assert!(
+            matches!(cfg, KernelConfig::NU | KernelConfig::PSU | KernelConfig::IU),
+            "expected rolled kernel for big design on Xeon, got {}",
+            cfg.name()
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! CLI command routing (the leader entrypoint's verbs).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::compile::{compile_design, CompileOpts};
+use super::report;
+use crate::designs::catalog;
+use crate::kernels::KernelConfig;
+use crate::sim::Simulator;
+use crate::tensor::export;
+use crate::util::cli::Args;
+use crate::util::fmt_bytes;
+
+const USAGE: &str = "\
+rteaal — RTL simulation as sparse tensor algebra (paper reproduction)
+
+USAGE: rteaal <command> [options]
+
+COMMANDS:
+  help                         this text
+  designs                      list available designs
+  compile   --design D         compile D; print graph/OIM/format statistics
+            [--emit-oim F]     also write the OIM tensors as JSON (paper §6.1)
+            [--emit-fir F]     also write the design as FIRRTL text
+  sim       --design D         simulate D
+            [--kernel K]       RU|OU|NU|PSU|IU|SU|TI (default PSU)
+            [--backend B]      interp|verilator|essent|event|parallel (default interp)
+            [--threads N]      partitions for --backend parallel
+            [--cycles N]       cycle count (default: design default)
+            [--vcd F]          write waveforms
+  xla-sim   --design D         simulate via the AOT XLA/PJRT artifact
+            [--artifacts DIR]  artifact directory (default: artifacts)
+            [--cycles N]
+  export-tensors --design D --out F
+                               write the dense tensor encoding for aot.py
+  autotune  --design D         trial-run all kernels, report the best
+  report    <id>|all           regenerate paper tables/figures
+                               (set RTEAAL_FULL=1 for full-length runs)
+";
+
+pub fn run(args: Args) -> Result<()> {
+    match args.command.as_str() {
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "designs" => {
+            println!("built-in designs:");
+            for name in crate::designs::main_eval_designs() {
+                let d = catalog(name).unwrap();
+                println!(
+                    "  {name:<18} ops={:<7} regs={:<5} default_cycles={}",
+                    d.graph.num_ops(),
+                    d.graph.regs.len(),
+                    d.default_cycles
+                );
+            }
+            println!("  (+ counter, alu32, fir8, rocket_like_Nc, boom_like_Nc, gemmini_like_N, rocket_like_xs)");
+            Ok(())
+        }
+        "compile" => cmd_compile(&args),
+        "sim" => cmd_sim(&args),
+        "xla-sim" => cmd_xla_sim(&args),
+        "export-tensors" => cmd_export(&args),
+        "autotune" => cmd_autotune(&args),
+        "report" => cmd_report(&args),
+        other => bail!("unknown command '{other}' (see `rteaal help`)"),
+    }
+}
+
+fn design_arg(args: &Args) -> Result<crate::designs::Design> {
+    let name = args.require("design")?;
+    catalog(name).with_context(|| format!("unknown design '{name}' (see `rteaal designs`)"))
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let d = design_arg(args)?;
+    let c = compile_design(&d, CompileOpts::default());
+    println!("design       {}", c.name);
+    println!("compile time {}", crate::util::fmt_duration(c.compile_time));
+    println!("peak heap    {}", fmt_bytes(c.peak_heap));
+    let s = c.graph.stats();
+    println!("nodes={} ops={} regs={} inputs={} outputs={}", s.nodes, s.ops, s.regs, s.inputs, s.outputs);
+    println!("layers (I)   {}", c.ir.depth());
+    println!("identity ops {} (elided)", c.ir.identity_ops);
+    let oimt = crate::einsum::OimTensor::from_ir(&c.ir);
+    println!("OIM density  {:.3e}", oimt.density());
+    for spec in [c.oim.format_a(), c.oim.format_b(), c.oim.format_c()] {
+        println!("{}", spec.render());
+    }
+    if let Some(path) = args.opt("emit-oim") {
+        std::fs::write(path, c.oim.to_json().to_string())?;
+        println!("wrote OIM JSON to {path}");
+    }
+    if let Some(path) = args.opt("emit-fir") {
+        std::fs::write(path, crate::firrtl::print(&c.graph))?;
+        println!("wrote FIRRTL to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let d = design_arg(args)?;
+    let cycles = args.opt_u64("cycles", d.default_cycles)?;
+    let backend = args.opt_or("backend", "interp");
+    let c = compile_design(&d, CompileOpts { fuse: args.opt("vcd").is_none() });
+
+    if backend == "parallel" {
+        let threads = args.opt_usize("threads", 4)?;
+        let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
+        let mut sim = super::parallel::ParallelSim::new(&c.ir, cfg, threads);
+        let mut stim = d.make_stimulus();
+        let t0 = std::time::Instant::now();
+        for cyc in 0..cycles {
+            sim.step(&stim(cyc));
+        }
+        let dt = t0.elapsed();
+        println!(
+            "parallel x{threads}: {cycles} cycles in {} ({:.2} Mcyc/s), replication {:.2}x, cut {}",
+            crate::util::fmt_duration(dt),
+            cycles as f64 / dt.as_secs_f64() / 1e6,
+            sim.replication_factor,
+            sim.cut_size()
+        );
+        for (name, v) in sim.outputs() {
+            println!("  out {name} = {v:#x}");
+        }
+        return Ok(());
+    }
+
+    let kernel: Box<dyn crate::kernels::SimKernel> = match backend {
+        "interp" => {
+            let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
+            crate::kernels::build_with_oim(cfg, &c.ir, &c.oim)
+        }
+        "verilator" => Box::new(crate::baselines::verilator_like::VerilatorLike::new(&c.ir, false)),
+        "essent" => Box::new(crate::baselines::essent_like::EssentLike::new(&c.ir, false)),
+        "event" => Box::new(crate::baselines::event_driven::EventDriven::new(&c.ir)),
+        other => bail!("unknown backend '{other}'"),
+    };
+    let name = kernel.config_name();
+    let mut sim = Simulator::new(kernel, d.make_stimulus());
+    if let Some(vcd) = args.opt("vcd") {
+        sim = sim.with_vcd(&c.ir, std::path::Path::new(vcd))?;
+    }
+    let stats = sim.run(cycles);
+    println!(
+        "{name}: {cycles} cycles in {} ({:.2} Mcyc/s)",
+        crate::util::fmt_duration(stats.wall),
+        stats.hz / 1e6
+    );
+    for (oname, v) in sim.outputs() {
+        println!("  out {oname} = {v:#x}");
+    }
+    sim.finish()?;
+    Ok(())
+}
+
+fn cmd_xla_sim(args: &Args) -> Result<()> {
+    let name = args.require("design")?;
+    let d = catalog(name).context("unknown design")?;
+    let dir = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let cycles = args.opt_u64("cycles", 256)?;
+    let rt = crate::runtime::pjrt::PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut backend = crate::runtime::XlaBackend::load(&rt, &dir, name)?;
+    let mut stim = d.make_stimulus();
+    let t0 = std::time::Instant::now();
+    backend.run(cycles, |c| stim(c))?;
+    let dt = t0.elapsed();
+    println!(
+        "xla backend: {cycles} cycles in {} ({:.2} kcyc/s, chunk={})",
+        crate::util::fmt_duration(dt),
+        cycles as f64 / dt.as_secs_f64() / 1e3,
+        backend.chunk
+    );
+    for (oname, v) in backend.outputs() {
+        println!("  out {oname} = {v:#x}");
+    }
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let d = design_arg(args)?;
+    let out = args.require("out")?;
+    // no mux fusion: the dense tensor ISA has no MuxChain
+    let c = compile_design(&d, CompileOpts { fuse: false });
+    let dense = export::to_dense(&c.ir, 128)?;
+    std::fs::write(out, dense.to_json().to_string())?;
+    println!(
+        "wrote {out}: slots={} layers={} max_ops={}",
+        dense.num_slots, dense.num_layers, dense.max_ops
+    );
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let d = design_arg(args)?;
+    let c = compile_design(&d, CompileOpts::default());
+    let trial = args.opt_u64("cycles", 500)?;
+    let (best, hz) = super::autotune::best_measured(&d, &c, trial);
+    println!("best kernel for {}: {} ({:.2} Mcyc/s)", d.name, best.name(), hz / 1e6);
+    for m in crate::perf::machine::all_machines() {
+        let (cfg, cyc) = super::autotune::best_modeled(&c, &m);
+        println!("  modeled best on {:<24} {} ({cyc:.0} core-cyc/sim-cyc)", m.name, cfg.name());
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let ctx = report::Ctx::from_env();
+    let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let ids: Vec<&str> =
+        if id == "all" { report::ALL_EXPERIMENTS.to_vec() } else { vec![id] };
+    for id in ids {
+        let tables = report::run_experiment(id, &ctx)
+            .with_context(|| format!("unknown experiment '{id}'"))?;
+        for t in tables {
+            println!("{}", t.render());
+            if let Ok(p) = t.save_csv(&format!("{id}_{}", t.title.split(' ').next().unwrap_or("t"))) {
+                println!("  (csv: {})", p.display());
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: compiles designs, sweeps kernel configurations, selects
+//! the best kernel per design/machine (autotuning), runs partitioned
+//! multi-threaded simulation (RepCut-style, Cascade 2), and drives the
+//! paper's experiments.
+
+pub mod cli;
+pub mod compile;
+pub mod sweep;
+pub mod autotune;
+pub mod parallel;
+pub mod report;

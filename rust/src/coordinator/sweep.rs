@@ -1,0 +1,78 @@
+//! Kernel-configuration sweeps: wall-clock simulation throughput per
+//! kernel on this host, plus modeled per-machine projections — the
+//! engine behind the Fig 16/17/18/20 benches.
+
+use std::time::Duration;
+
+use super::compile::Compiled;
+use crate::designs::Design;
+use crate::kernels::KernelConfig;
+use crate::perf::machine::Machine;
+use crate::perf::topdown::{self, TopDown};
+use crate::perf::trace::{self, SimStyle};
+use crate::sim::Simulator;
+
+/// One sweep measurement.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    /// measured on this host
+    pub wall: Duration,
+    pub cycles: u64,
+    pub hz: f64,
+    /// modeled program/data footprint
+    pub program_bytes: usize,
+    pub data_bytes: usize,
+}
+
+/// Run `cycles` of `design` under one kernel config; measured wall-clock.
+pub fn measure_kernel(design: &Design, compiled: &Compiled, cfg: KernelConfig, cycles: u64) -> SweepPoint {
+    let (kernel, _, _) = compiled.build_kernel(cfg);
+    let program_bytes = kernel.program_bytes();
+    let data_bytes = kernel.data_bytes();
+    let mut sim = Simulator::new(kernel, design.make_stimulus());
+    // warm-up then measure
+    sim.run(cycles.min(64));
+    let stats = sim.run(cycles);
+    SweepPoint {
+        label: cfg.name().to_string(),
+        wall: stats.wall,
+        cycles,
+        hz: stats.hz,
+        program_bytes,
+        data_bytes,
+    }
+}
+
+/// Run a baseline (verilator-like / essent-like / event-driven).
+pub fn measure_baseline(design: &Design, compiled: &Compiled, which: &str, cycles: u64) -> SweepPoint {
+    let kernel: Box<dyn crate::kernels::SimKernel> = match which {
+        "verilator" => Box::new(crate::baselines::verilator_like::VerilatorLike::new(&compiled.ir, false)),
+        "verilator-O0" => Box::new(crate::baselines::verilator_like::VerilatorLike::new(&compiled.ir, true)),
+        "essent" => Box::new(crate::baselines::essent_like::EssentLike::new(&compiled.ir, false)),
+        "essent-O0" => Box::new(crate::baselines::essent_like::EssentLike::new(&compiled.ir, true)),
+        "event" => Box::new(crate::baselines::event_driven::EventDriven::new(&compiled.ir)),
+        "psu-O0" => Box::new(crate::kernels::unopt::UnoptKernel::new(&compiled.ir, &compiled.oim)),
+        other => panic!("unknown baseline '{other}'"),
+    };
+    let program_bytes = kernel.program_bytes();
+    let data_bytes = kernel.data_bytes();
+    let mut sim = Simulator::new(kernel, design.make_stimulus());
+    sim.run(cycles.min(64));
+    let stats = sim.run(cycles);
+    SweepPoint {
+        label: which.to_string(),
+        wall: stats.wall,
+        cycles,
+        hz: stats.hz,
+        program_bytes,
+        data_bytes,
+    }
+}
+
+/// Modeled (perf-model) view of a style on a machine.
+pub fn modeled(compiled: &Compiled, style: SimStyle, machine: &Machine, sample_cycles: usize) -> (trace::Profile, TopDown) {
+    let p = trace::profile(style, &compiled.oim, machine, sample_cycles);
+    let td = topdown::analyze(&p, machine);
+    (p, td)
+}

@@ -1,0 +1,113 @@
+//! SmallBOOM-like synthetic generator: a wider out-of-order-shaped core —
+//! bigger mux ladders (issue select), more parallel ALU cones (more
+//! functional units), a larger regfile, and wider layers than
+//! `rocket_like`. ≈94 K effectual ops per core at `scale = 1.0`
+//! (paper Table 1, Small-1c).
+
+use crate::graph::builder::adapt_width;
+use crate::graph::ops::PrimOp;
+use crate::graph::{Graph, NodeId};
+use crate::util::prng::Rng;
+
+use super::synth;
+
+pub fn boom_like(cores: usize, scale: f64) -> Graph {
+    let mut g = Graph::new(&format!("boom_like_{cores}c"));
+    let mut rng = Rng::new(0xB004 + cores as u64);
+    let io_in = g.input("io_in", 32);
+    let flush = g.input("flush", 1);
+
+    let mut bus: Vec<NodeId> = vec![io_in];
+    let blocks = ((94_000.0 * scale) / 55.0).max(1.0) as usize;
+    for core in 0..cores {
+        let out = build_boom_core(&mut g, &mut rng, core, blocks, &bus, flush);
+        bus.push(out);
+    }
+    let mut acc = adapt_width(&mut g, bus[0], 32);
+    for &b in &bus[1..] {
+        let bb = adapt_width(&mut g, b, 32);
+        acc = g.prim(PrimOp::Xor, &[acc, bb]);
+    }
+    let r = g.reg("rob_head", 32, 0);
+    g.connect_reg(r, acc);
+    g.output("rob_head", r);
+    g
+}
+
+fn build_boom_core(
+    g: &mut Graph,
+    rng: &mut Rng,
+    core: usize,
+    blocks: usize,
+    bus: &[NodeId],
+    flush: NodeId,
+) -> NodeId {
+    let mut pool: Vec<NodeId> = bus.to_vec();
+    // physical regfile: 32 entries (wider than rocket's 16)
+    let wen = bit(g, rng, &pool);
+    let waddr = bits(g, rng, &pool, 5);
+    let wdata = bits(g, rng, &pool, 32);
+    let prf = synth::reg_bank(g, &format!("b{core}_prf"), 32, 32, wen, waddr, wdata);
+    let raddr = bits(g, rng, &pool, 5);
+    let rs = synth::bank_read(g, &prf, raddr);
+    pool.push(rs);
+
+    let mut last = rs;
+    for blk in 0..blocks {
+        // issue-select: *wide* mux ladder (12 deep — OoO select logic)
+        let sels: Vec<NodeId> = (0..12).map(|_| bit(g, rng, &pool)).collect();
+        let vals: Vec<NodeId> = (0..13).map(|_| *rng.pick(&pool)).collect();
+        let issued = synth::mux_ladder(g, rng, &sels, &vals, 32);
+        pool.push(issued);
+
+        // 2 parallel functional units
+        for _ in 0..2 {
+            let a = *rng.pick(&pool);
+            let outs = synth::alu_cone(g, rng, a, issued, 32);
+            pool.extend_from_slice(&outs);
+        }
+        // rename/bypass plumbing
+        let p = synth::plumbing(g, rng, issued);
+        pool.extend_from_slice(&p);
+        let p2 = synth::plumbing(g, rng, last);
+        pool.extend_from_slice(&p2);
+
+        // ROB-entry-ish register with flush
+        let rob = g.reg(&format!("b{core}_rob{blk}"), 32, 0);
+        let val = adapt_width(g, *rng.pick(&pool), 32);
+        let zero = g.konst(0, 32);
+        let nxt = g.prim(PrimOp::Mux, &[flush, zero, val]);
+        g.connect_reg(rob, nxt);
+        pool.push(rob);
+        last = rob;
+    }
+    let a = adapt_width(g, last, 32);
+    let b = adapt_width(g, rs, 32);
+    g.prim(PrimOp::Or, &[a, b])
+}
+
+fn bit(g: &mut Graph, rng: &mut Rng, pool: &[NodeId]) -> NodeId {
+    let src = *rng.pick(pool);
+    if g.width(src) == 1 {
+        src
+    } else {
+        let i = rng.index(g.width(src) as usize) as u8;
+        g.prim(PrimOp::Bits(i, i), &[src])
+    }
+}
+
+fn bits(g: &mut Graph, rng: &mut Rng, pool: &[NodeId], w: u8) -> NodeId {
+    let src = *rng.pick(pool);
+    adapt_width(g, src, w)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn boom_is_bigger_than_rocket() {
+        let b = super::boom_like(1, 0.1);
+        let r = super::super::rocket_like::rocket_like(1, 0.1);
+        assert!(b.num_ops() > r.num_ops());
+        assert!(b.validate().is_empty());
+    }
+}

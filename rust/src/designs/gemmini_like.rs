@@ -1,0 +1,102 @@
+//! Gemmini-like systolic array: a real `dim × dim` weight-stationary MAC
+//! grid. Activations stream west→east, partial sums north→south; weights
+//! sit in per-PE registers loaded through a decoded write port. Highly
+//! regular — the design class where dedup/instance-reuse optimizations
+//! shine (paper Box 1), and a contrast to the irregular SoC generators.
+
+use crate::graph::ops::PrimOp;
+use crate::graph::Graph;
+
+pub fn gemmini_like(dim: usize) -> Graph {
+    let mut g = Graph::new(&format!("gemmini_like_{dim}"));
+    let w = 16u8; // element width
+    // inputs: one activation per row, weight-load port
+    let acts: Vec<_> = (0..dim).map(|r| g.input(&format!("act{r}"), w)).collect();
+    let wld_en = g.input("wld_en", 1);
+    let wld_row = g.input("wld_row", 8);
+    let wld_col = g.input("wld_col", 8);
+    let wld_val = g.input("wld_val", w);
+
+    // per-PE state: weight reg, activation pipe reg, psum pipe reg
+    let mut weight = vec![vec![0u32; dim]; dim];
+    let mut act_pipe = vec![vec![0u32; dim]; dim];
+    let mut psum_pipe = vec![vec![0u32; dim]; dim];
+    for r in 0..dim {
+        for c in 0..dim {
+            weight[r][c] = g.reg(&format!("w_{r}_{c}"), w, 0);
+            act_pipe[r][c] = g.reg(&format!("a_{r}_{c}"), w, 0);
+            psum_pipe[r][c] = g.reg(&format!("p_{r}_{c}"), w, 0);
+        }
+    }
+
+    for r in 0..dim {
+        for c in 0..dim {
+            // weight load decode
+            let rk = g.konst(r as u64, 8);
+            let ck = g.konst(c as u64, 8);
+            let hr = g.prim(PrimOp::Eq, &[wld_row, rk]);
+            let hc = g.prim(PrimOp::Eq, &[wld_col, ck]);
+            let hit = g.prim(PrimOp::And, &[hr, hc]);
+            let sel = g.prim(PrimOp::And, &[wld_en, hit]);
+            let wn = g.prim_w(PrimOp::Mux, &[sel, wld_val, weight[r][c]], w);
+            g.connect_reg(weight[r][c], wn);
+
+            // activation flows west -> east
+            let a_in = if c == 0 { acts[r] } else { act_pipe[r][c - 1] };
+            g.connect_reg(act_pipe[r][c], a_in);
+
+            // MAC: psum flows north -> south
+            let p_in = if r == 0 { g.konst(0, w) } else { psum_pipe[r - 1][c] };
+            let prod = g.prim_w(PrimOp::Mul, &[a_in, weight[r][c]], w);
+            let sum = g.prim_w(PrimOp::Add, &[p_in, prod], w);
+            g.connect_reg(psum_pipe[r][c], sum);
+        }
+    }
+
+    // outputs: bottom-row partial sums, xor-condensed plus first column
+    for c in 0..dim.min(4) {
+        g.output(&format!("psum{c}"), psum_pipe[dim - 1][c]);
+    }
+    let mut acc = psum_pipe[dim - 1][0];
+    for c in 1..dim {
+        acc = g.prim_w(PrimOp::Xor, &[acc, psum_pipe[dim - 1][c]], w);
+    }
+    g.output("psum_xor", acc);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::RefSim;
+
+    /// Load a 2x2 identity weight matrix and stream an activation: the
+    /// array must behave as a pipelined matmul by identity.
+    #[test]
+    fn identity_weights_pass_activations() {
+        let g = gemmini_like(2);
+        let mut sim = RefSim::new(g);
+        let zero = |sim: &mut RefSim, acts: [u64; 2]| {
+            // inputs: act0, act1, wld_en, wld_row, wld_col, wld_val
+            sim.step(&[acts[0], acts[1], 0, 0, 0, 0]);
+        };
+        // load W = I
+        sim.step(&[0, 0, 1, 0, 0, 1]);
+        sim.step(&[0, 0, 1, 1, 1, 1]);
+        // inject activation [5, 7]: row 0 hits w00=1 -> product 5 enters
+        // column 0's psum stream
+        zero(&mut sim, [5, 7]);
+        // one more cycle for the partial sum to flow south to the bottom row
+        zero(&mut sim, [0, 0]);
+        let outs: std::collections::HashMap<String, u64> = sim.outputs().into_iter().collect();
+        assert_eq!(outs["psum0"], 5, "{outs:?}");
+    }
+
+    #[test]
+    fn scales_quadratically() {
+        let a = gemmini_like(4).num_ops();
+        let b = gemmini_like(8).num_ops();
+        let ratio = b as f64 / a as f64;
+        assert!((3.0..5.0).contains(&ratio), "{ratio}");
+    }
+}

@@ -1,0 +1,183 @@
+//! RTL designs (substitutes for the paper's Chipyard designs, §7.1).
+//!
+//! The paper evaluates RocketChip, SmallBOOM, Gemmini and SHA3 from
+//! Chipyard — multi-MB FIRRTL we cannot regenerate here. Instead:
+//!
+//! * [`rocket_like`] / [`boom_like`] — parameterized synthetic generators
+//!   reproducing the *statistics* the paper's phenomena depend on (op mix,
+//!   mux-chain density, layer shape, fanout, identity-op ratio per
+//!   Table 1), with a `cores` knob for the r1–r24 scaling studies. The
+//!   default `scale` is 1/10 of the real designs so benches stay fast;
+//!   everything scales linearly.
+//! * [`gemmini_like`] — a real weight-stationary systolic MAC array.
+//! * [`keccak`] — a *real* Keccak-f[1600] round datapath (the SHA3 role),
+//!   validated against a software Keccak.
+//! * [`tiny_cpu`] — a real 32-bit RISC-style CPU with ROM/RAM/regfile that
+//!   executes a dhrystone-like mixed-op program to completion
+//!   (checksum-verified) — the end-to-end workload.
+//! * [`simple`] — counters/ALUs/FIR for quickstarts and docs.
+//!
+//! [`catalog`] maps design names (`rocket_like_1c`, …) to built designs
+//! with their default workloads (paper Table 3 analog).
+
+pub mod simple;
+pub mod synth;
+pub mod rocket_like;
+pub mod boom_like;
+pub mod gemmini_like;
+pub mod keccak;
+pub mod tiny_cpu;
+
+use crate::graph::Graph;
+use crate::util::prng::Rng;
+
+/// How a design is driven during benchmarking.
+pub enum Stimulus {
+    /// Pseudo-random inputs from a fixed seed.
+    Random(u64),
+    /// All-zero inputs (design is self-driving, e.g. tiny_cpu).
+    Zero,
+}
+
+/// A named design plus its default workload.
+pub struct Design {
+    pub name: String,
+    pub graph: Graph,
+    pub stimulus: Stimulus,
+    /// Default simulated cycles for headline runs (Table 3 analog).
+    pub default_cycles: u64,
+}
+
+impl Design {
+    /// Produce the input vector for a cycle.
+    pub fn make_stimulus(&self) -> Box<dyn FnMut(u64) -> Vec<u64>> {
+        let n_inputs = self.graph.inputs.len();
+        let widths: Vec<u8> = self.graph.inputs.iter().map(|p| p.width).collect();
+        match self.stimulus {
+            Stimulus::Random(seed) => {
+                let mut rng = Rng::new(seed);
+                Box::new(move |_cycle| widths.iter().map(|&w| rng.bits(w)).collect())
+            }
+            Stimulus::Zero => Box::new(move |_cycle| vec![0u64; n_inputs]),
+        }
+    }
+}
+
+/// Build a design by name. Names: `counter`, `alu32`, `fir8`, `keccak`,
+/// `tiny_cpu`, `gemmini_like_{4,8,16}`, `rocket_like_{1,2,4,8,12,16,20,24}c`,
+/// `boom_like_{1,2,4,8}c`, plus `rocket_like_xs` (export-sized).
+pub fn catalog(name: &str) -> Option<Design> {
+    let d = match name {
+        "counter" => Design {
+            name: name.into(),
+            graph: simple::counter(16),
+            stimulus: Stimulus::Random(1),
+            default_cycles: 10_000,
+        },
+        "alu32" => Design {
+            name: name.into(),
+            graph: simple::alu(32),
+            stimulus: Stimulus::Random(2),
+            default_cycles: 10_000,
+        },
+        "fir8" => Design {
+            name: name.into(),
+            graph: simple::fir(8, 16),
+            stimulus: Stimulus::Random(3),
+            default_cycles: 10_000,
+        },
+        "keccak" => Design {
+            name: name.into(),
+            graph: keccak::keccak_round_datapath(),
+            stimulus: Stimulus::Random(4),
+            // paper Table 3: SHA3 runs 1.2M cycles; scaled 1/10
+            default_cycles: 120_000,
+        },
+        "tiny_cpu" => Design {
+            name: name.into(),
+            graph: tiny_cpu::tiny_cpu(&tiny_cpu::dhrystone_like(40)),
+            stimulus: Stimulus::Zero,
+            default_cycles: 8_000,
+        },
+        _ => {
+            if let Some(rest) = name.strip_prefix("rocket_like_") {
+                if rest == "xs" {
+                    // small export-sized variant for the XLA backend
+                    return Some(Design {
+                        name: name.into(),
+                        graph: rocket_like::rocket_like(1, 0.01),
+                        stimulus: Stimulus::Random(10),
+                        default_cycles: 2_000,
+                    });
+                }
+                let cores: usize = rest.strip_suffix('c')?.parse().ok()?;
+                return Some(Design {
+                    name: name.into(),
+                    graph: rocket_like::rocket_like(cores, 0.1),
+                    stimulus: Stimulus::Random(11),
+                    // paper Table 3: rocket runs 540K cycles; scaled 1/100
+                    default_cycles: 5_400,
+                });
+            }
+            if let Some(rest) = name.strip_prefix("boom_like_") {
+                let cores: usize = rest.strip_suffix('c')?.parse().ok()?;
+                return Some(Design {
+                    name: name.into(),
+                    graph: boom_like::boom_like(cores, 0.1),
+                    stimulus: Stimulus::Random(12),
+                    default_cycles: 7_500,
+                });
+            }
+            if let Some(rest) = name.strip_prefix("gemmini_like_") {
+                let dim: usize = rest.parse().ok()?;
+                return Some(Design {
+                    name: name.into(),
+                    graph: gemmini_like::gemmini_like(dim),
+                    stimulus: Stimulus::Random(13),
+                    default_cycles: 16_000,
+                });
+            }
+            return None;
+        }
+    };
+    Some(d)
+}
+
+/// Names used by the main evaluation (paper Fig 20's x-axis analog).
+pub fn main_eval_designs() -> Vec<&'static str> {
+    vec![
+        "rocket_like_1c",
+        "rocket_like_4c",
+        "rocket_like_8c",
+        "boom_like_1c",
+        "boom_like_4c",
+        "boom_like_8c",
+        "gemmini_like_8",
+        "gemmini_like_16",
+        "keccak",
+        "tiny_cpu",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_designs_are_valid() {
+        for name in ["counter", "alu32", "fir8", "rocket_like_1c", "boom_like_1c", "gemmini_like_4"] {
+            let d = catalog(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(d.graph.validate().is_empty(), "{name}: {:?}", d.graph.validate());
+            assert!(d.graph.num_ops() > 0);
+        }
+        assert!(catalog("nonexistent").is_none());
+    }
+
+    #[test]
+    fn rocket_scales_with_cores() {
+        let one = catalog("rocket_like_1c").unwrap().graph.num_ops();
+        let four = catalog("rocket_like_4c").unwrap().graph.num_ops();
+        let ratio = four as f64 / one as f64;
+        assert!((3.0..5.0).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,163 @@
+//! RocketChip-like synthetic SoC generator.
+//!
+//! Each "core" is a 5-stage-pipeline-shaped cluster: fetch/decode mux
+//! ladders, a regfile bank with decoded writes, ALU cones, bypass
+//! plumbing, and a small CSR-ish bank; cores share an interconnect xor/mux
+//! tree. At `scale = 1.0` a core carries ≈60 K effectual ops (paper
+//! Table 1, Rocket-1c); the default benches use `scale = 0.1`.
+
+use crate::graph::builder::adapt_width;
+use crate::graph::ops::PrimOp;
+use crate::graph::{Graph, NodeId};
+use crate::util::prng::Rng;
+
+use super::synth;
+
+pub fn rocket_like(cores: usize, scale: f64) -> Graph {
+    let mut g = Graph::new(&format!("rocket_like_{cores}c"));
+    let mut rng = Rng::new(0x0C0DE + cores as u64);
+    // external stimulus
+    let irq = g.input("irq", 4);
+    let io_in = g.input("io_in", 32);
+
+    // per-core clusters; cross-core values flow through `bus`
+    let mut bus: Vec<NodeId> = vec![io_in, irq];
+    // Work per core: the unit block below contributes ~35 effectual ops
+    // post-optimization; 60K * scale / 115 blocks per core.
+    let blocks = ((60_000.0 * scale) / 35.0).max(1.0) as usize;
+    for core in 0..cores {
+        let core_out = build_core(&mut g, &mut rng, core, blocks, &bus);
+        bus.push(core_out);
+    }
+    // interconnect: xor-reduce the bus and expose it
+    let mut acc = adapt_width(&mut g, bus[0], 32);
+    for &b in &bus[1..] {
+        let bb = adapt_width(&mut g, b, 32);
+        acc = g.prim(PrimOp::Xor, &[acc, bb]);
+    }
+    let out_reg = g.reg("bus_out", 32, 0);
+    g.connect_reg(out_reg, acc);
+    g.output("bus_out", out_reg);
+    g
+}
+
+fn build_core(g: &mut Graph, rng: &mut Rng, core: usize, blocks: usize, bus: &[NodeId]) -> NodeId {
+    // architectural state. Blocks read only from `state` (registers +
+    // inputs), which bounds the combinational depth per cycle like a real
+    // pipeline, and every block's logic feeds its stage register, so
+    // nothing is dead.
+    let pc = g.reg(&format!("c{core}_pc"), 32, 0x8000_0000);
+    let mut state: Vec<NodeId> = vec![pc];
+    state.extend_from_slice(bus);
+
+    // regfile: 16 x 32 with decoded write
+    let wen = take_bit(g, rng, &state);
+    let waddr = take_bits(g, rng, &state, 4);
+    let rf = synth::reg_bank(g, &format!("c{core}_rf"), 16, 32, wen, waddr, pc);
+    let raddr = take_bits(g, rng, &state, 4);
+    let rs1 = synth::bank_read(g, &rf, raddr);
+
+    let mut stage_val = rs1;
+    for b in 0..blocks {
+        // decode-ish mux ladder (ladders fuse into MuxChain)
+        let sels: Vec<NodeId> = (0..6).map(|_| take_bit(g, rng, &state)).collect();
+        let mut vals: Vec<NodeId> = (0..6).map(|_| *rng.pick(&state)).collect();
+        vals.push(stage_val);
+        let decoded = synth::mux_ladder(g, rng, &sels, &vals, 32);
+
+        // ALU cone over the decoded value
+        let a = *rng.pick(&state);
+        let outs = synth::alu_cone(g, rng, a, decoded, 32);
+
+        // bypass plumbing
+        let p = synth::plumbing(g, rng, decoded);
+
+        // fold everything into the stage register via a balanced xor tree
+        // (keeps all block logic live and the layer depth bounded)
+        let mut leaves: Vec<NodeId> = Vec::with_capacity(outs.len() + p.len() + 1);
+        leaves.push(decoded);
+        for &o in outs.iter().chain(p.iter()) {
+            leaves.push(adapt_width(g, o, 32));
+        }
+        while leaves.len() > 1 {
+            let mut next = Vec::with_capacity(leaves.len().div_ceil(2));
+            for pair in leaves.chunks(2) {
+                if pair.len() == 2 {
+                    let x = adapt_width(g, pair[0], 32);
+                    let y = adapt_width(g, pair[1], 32);
+                    next.push(g.prim(PrimOp::Xor, &[x, y]));
+                } else {
+                    next.push(pair[0]);
+                }
+            }
+            leaves = next;
+        }
+        let sreg = g.reg(&format!("c{core}_s{b}"), 32, 0);
+        g.connect_reg(sreg, leaves[0]);
+        state.push(sreg);
+        stage_val = sreg;
+    }
+
+    // pc update: branch muxing
+    let taken = take_bit(g, rng, &state);
+    let four = g.konst(4, 32);
+    let seq = g.prim_w(PrimOp::Add, &[pc, four], 32);
+    let target = adapt_width(g, stage_val, 32);
+    let pc_next = g.prim(PrimOp::Mux, &[taken, target, seq]);
+    g.connect_reg(pc, pc_next);
+
+    // core output: condensed state over *all* stage registers, so every
+    // block stays live through the bus regardless of random picks
+    let mut acc = adapt_width(g, rs1, 32);
+    for &s in state.iter().skip(1 + bus.len()) {
+        let sv = adapt_width(g, s, 32);
+        acc = g.prim(PrimOp::Xor, &[acc, sv]);
+    }
+    acc
+}
+
+fn take_bit(g: &mut Graph, rng: &mut Rng, pool: &[NodeId]) -> NodeId {
+    let src = *rng.pick(pool);
+    if g.width(src) == 1 {
+        src
+    } else {
+        let bit = rng.index(g.width(src) as usize) as u8;
+        g.prim(PrimOp::Bits(bit, bit), &[src])
+    }
+}
+
+fn take_bits(g: &mut Graph, rng: &mut Rng, pool: &[NodeId], w: u8) -> NodeId {
+    let src = *rng.pick(pool);
+    adapt_width(g, src, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::passes::optimize;
+    use crate::graph::levelize::levelize;
+
+    #[test]
+    fn has_rocket_like_statistics() {
+        let g = rocket_like(1, 0.1);
+        assert!(g.validate().is_empty());
+        let (opt, _) = optimize(&g);
+        let ops = opt.num_ops();
+        // ~6K effectual ops at scale 0.1 (Table 1 Rocket-1c / 10)
+        assert!((3_000..12_000).contains(&ops), "ops {ops}");
+        // identity ratio in the paper's ballpark (Table 1: ~5-10x)
+        let lv = levelize(&opt);
+        let ratio = lv.identity_ops as f64 / lv.effectual_ops() as f64;
+        assert!(ratio > 2.0, "identity ratio {ratio}");
+        // deep enough to be interesting
+        assert!(lv.depth() > 10, "depth {}", lv.depth());
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = rocket_like(2, 0.05);
+        let b = rocket_like(2, 0.05);
+        assert_eq!(a.nodes.len(), b.nodes.len());
+        assert_eq!(a.regs.len(), b.regs.len());
+    }
+}

@@ -1,0 +1,124 @@
+//! Small real designs for quickstarts, docs and tests.
+
+use crate::graph::ops::PrimOp;
+use crate::graph::Graph;
+
+/// An `width`-bit counter with enable and synchronous clear.
+pub fn counter(width: u8) -> Graph {
+    let mut g = Graph::new("counter");
+    let en = g.input("en", 1);
+    let clr = g.input("clr", 1);
+    let r = g.reg("count", width, 0);
+    let one = g.konst(1, width);
+    let zero = g.konst(0, width);
+    let inc = g.prim_w(PrimOp::Add, &[r, one], width);
+    let kept = g.prim(PrimOp::Mux, &[en, inc, r]);
+    let nxt = g.prim(PrimOp::Mux, &[clr, zero, kept]);
+    g.connect_reg(r, nxt);
+    g.output("count", r);
+    g
+}
+
+/// A registered ALU: op-select over add/sub/and/or/xor/shift/compare.
+pub fn alu(width: u8) -> Graph {
+    let mut g = Graph::new("alu");
+    let a = g.input("a", width);
+    let b = g.input("b", width);
+    let op = g.input("op", 3);
+    let r = g.reg("result", width, 0);
+
+    let add = g.prim_w(PrimOp::Add, &[a, b], width);
+    let sub = g.prim_w(PrimOp::Sub, &[a, b], width);
+    let and = g.prim(PrimOp::And, &[a, b]);
+    let or = g.prim(PrimOp::Or, &[a, b]);
+    let xor = g.prim(PrimOp::Xor, &[a, b]);
+    let shl = g.prim_w(PrimOp::Dshl, &[a, b], width);
+    let shr = g.prim(PrimOp::Dshr, &[a, b]);
+    let ltw = g.prim(PrimOp::Lt, &[a, b]);
+    let lt = g.prim_w(PrimOp::Pad(width), &[ltw], width);
+
+    // 3-bit op select: a mux ladder (gets fused to a MuxChain)
+    let candidates = [add, sub, and, or, xor, shl, shr, lt];
+    let mut sel = candidates[7];
+    for (i, &c) in candidates.iter().enumerate().take(7).rev() {
+        let k = g.konst(i as u64, 3);
+        let eq = g.prim(PrimOp::Eq, &[op, k]);
+        sel = g.prim(PrimOp::Mux, &[eq, c, sel]);
+    }
+    let sel = crate::graph::builder::adapt_width(&mut g, sel, width);
+    g.connect_reg(r, sel);
+    g.output("result", r);
+    g
+}
+
+/// An `taps`-tap FIR filter over `width`-bit samples (shift register +
+/// constant multipliers + adder tree).
+pub fn fir(taps: usize, width: u8) -> Graph {
+    let mut g = Graph::new("fir");
+    let x = g.input("x", width);
+    // delay line
+    let mut regs = Vec::with_capacity(taps);
+    for i in 0..taps {
+        regs.push(g.reg(&format!("z{i}"), width, 0));
+    }
+    g.connect_reg(regs[0], x);
+    for i in 1..taps {
+        g.connect_reg(regs[i], regs[i - 1]);
+    }
+    // coefficient multiply + reduce (coefficients 1,3,5,...)
+    let mut terms = Vec::with_capacity(taps);
+    for (i, &z) in regs.iter().enumerate() {
+        let c = g.konst((2 * i + 1) as u64 & ((1 << 6) - 1), 6);
+        let m = g.prim_w(PrimOp::Mul, &[z, c], width);
+        terms.push(m);
+    }
+    let mut acc = terms[0];
+    for &t in &terms[1..] {
+        acc = g.prim_w(PrimOp::Add, &[acc, t], width);
+    }
+    g.output("y", acc);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::RefSim;
+
+    #[test]
+    fn counter_with_clear() {
+        let mut sim = RefSim::new(counter(8));
+        for _ in 0..5 {
+            sim.step(&[1, 0]);
+        }
+        assert_eq!(sim.outputs()[0].1, 5);
+        sim.step(&[1, 1]); // clear wins
+        assert_eq!(sim.outputs()[0].1, 0);
+    }
+
+    #[test]
+    fn alu_ops() {
+        let mut sim = RefSim::new(alu(16));
+        sim.step(&[7, 5, 0]); // add
+        assert_eq!(sim.outputs()[0].1, 12);
+        sim.step(&[7, 5, 1]); // sub
+        assert_eq!(sim.outputs()[0].1, 2);
+        sim.step(&[0b1100, 0b1010, 2]); // and
+        assert_eq!(sim.outputs()[0].1, 0b1000);
+        sim.step(&[3, 5, 7]); // lt
+        assert_eq!(sim.outputs()[0].1, 1);
+    }
+
+    #[test]
+    fn fir_impulse_response() {
+        let mut sim = RefSim::new(fir(4, 16));
+        // impulse: first sample 1, then zeros -> outputs = coefficients
+        sim.step(&[1]);
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            sim.step(&[0]);
+            seen.push(sim.outputs()[0].1);
+        }
+        assert_eq!(seen, vec![1, 3, 5, 7]);
+    }
+}

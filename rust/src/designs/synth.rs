@@ -1,0 +1,164 @@
+//! Shared building blocks for the synthetic Chipyard-like generators.
+//!
+//! The generators aim to reproduce the graph *statistics* the paper's
+//! phenomena depend on: op mix dominated by mux ladders and bit-select
+//! plumbing, moderate arithmetic, wide layers with long dependence chains,
+//! and an identity-op ratio of ~5–10× (Table 1). Everything is driven by
+//! a seeded PRNG, so a given (design, cores, scale) is reproducible.
+
+use crate::graph::builder::adapt_width;
+use crate::graph::ops::PrimOp;
+use crate::graph::{Graph, NodeId};
+use crate::util::prng::Rng;
+
+/// A pipeline-stage-like cluster: registers feeding a cone of logic.
+pub struct Cluster {
+    pub regs: Vec<NodeId>,
+    pub outputs: Vec<NodeId>,
+}
+
+/// Build a mux ladder (decode/forwarding logic — the dominant structure).
+pub fn mux_ladder(g: &mut Graph, _rng: &mut Rng, sels: &[NodeId], vals: &[NodeId], width: u8) -> NodeId {
+    debug_assert!(!vals.is_empty());
+    let mut cur = adapt_width(g, *vals.last().unwrap(), width);
+    let n = sels.len().min(vals.len() - 1);
+    for i in (0..n).rev() {
+        let v = adapt_width(g, vals[i], width);
+        cur = g.prim_w(PrimOp::Mux, &[sels[i], v, cur], width);
+    }
+    cur
+}
+
+/// An ALU-ish arithmetic cone over two operands.
+pub fn alu_cone(g: &mut Graph, rng: &mut Rng, a: NodeId, b: NodeId, width: u8) -> Vec<NodeId> {
+    let b = adapt_width(g, b, width);
+    let a = adapt_width(g, a, width);
+    let mut outs = Vec::new();
+    outs.push(g.prim_w(PrimOp::Add, &[a, b], width));
+    outs.push(g.prim_w(PrimOp::Sub, &[a, b], width));
+    outs.push(g.prim(PrimOp::Xor, &[a, b]));
+    outs.push(g.prim(PrimOp::And, &[a, b]));
+    if rng.chance(0.5) {
+        outs.push(g.prim(PrimOp::Or, &[a, b]));
+    }
+    if rng.chance(0.3) && width <= 32 {
+        outs.push(g.prim_w(PrimOp::Mul, &[a, b], width));
+    }
+    outs.push(g.prim(PrimOp::Eq, &[a, b]));
+    outs.push(g.prim(PrimOp::Lt, &[a, b]));
+    outs
+}
+
+/// Bit-plumbing cone: extracts/concats (abundant in lowered FIRRTL).
+pub fn plumbing(g: &mut Graph, rng: &mut Rng, src: NodeId) -> Vec<NodeId> {
+    let w = g.width(src);
+    let mut outs = Vec::new();
+    let mid = (w / 2).max(1);
+    outs.push(g.prim(PrimOp::Bits(w - 1, w - mid), &[src]));
+    outs.push(g.prim(PrimOp::Bits(mid - 1, 0), &[src]));
+    let x = outs[rng.index(outs.len())];
+    let y = outs[rng.index(outs.len())];
+    if g.width(x) as usize + g.width(y) as usize <= 64 {
+        outs.push(g.prim(PrimOp::Cat, &[x, y]));
+    }
+    outs.push(g.prim(PrimOp::Orr, &[src]));
+    outs
+}
+
+/// A register bank with decoded writes (regfile/RAM-ish structure):
+/// `bank[i]' = (wen && waddr == i) ? wdata : bank[i]`.
+pub fn reg_bank(
+    g: &mut Graph,
+    name: &str,
+    n: usize,
+    width: u8,
+    wen: NodeId,
+    waddr: NodeId,
+    wdata: NodeId,
+) -> Vec<NodeId> {
+    let wdata = adapt_width(g, wdata, width);
+    let mut regs = Vec::with_capacity(n);
+    for i in 0..n {
+        regs.push(g.reg(&format!("{name}_{i}"), width, 0));
+    }
+    for (i, &r) in regs.iter().enumerate() {
+        let idx = g.konst(i as u64, g.width(waddr));
+        let hit = g.prim(PrimOp::Eq, &[waddr, idx]);
+        let sel = g.prim(PrimOp::And, &[wen, hit]);
+        let nxt = g.prim_w(PrimOp::Mux, &[sel, wdata, r], width);
+        g.connect_reg(r, nxt);
+    }
+    regs
+}
+
+/// Read port over a bank: a binary mux tree indexed by `addr`.
+/// The bank is padded to a power of two by repeating the last entry.
+pub fn bank_read(g: &mut Graph, bank: &[NodeId], addr: NodeId) -> NodeId {
+    debug_assert!(!bank.is_empty());
+    let n = bank.len().next_power_of_two();
+    let mut padded: Vec<NodeId> = bank.to_vec();
+    while padded.len() < n {
+        padded.push(*bank.last().unwrap());
+    }
+    read_tree(g, &padded, addr, n.trailing_zeros() as u8)
+}
+
+fn read_tree(g: &mut Graph, slice: &[NodeId], addr: NodeId, bits_left: u8) -> NodeId {
+    if slice.len() == 1 {
+        return slice[0];
+    }
+    let half = slice.len() / 2;
+    let sel_bit = bits_left - 1;
+    let lo = read_tree(g, &slice[..half], addr, sel_bit);
+    let hi = read_tree(g, &slice[half..], addr, sel_bit);
+    let aw = g.width(addr);
+    let b = if sel_bit < aw {
+        g.prim(PrimOp::Bits(sel_bit, sel_bit), &[addr])
+    } else {
+        g.konst(0, 1)
+    };
+    g.prim(PrimOp::Mux, &[b, hi, lo])
+}
+
+/// Wire a cluster's next-state from a pool of candidate values.
+pub fn connect_cluster(g: &mut Graph, rng: &mut Rng, regs: &[NodeId], pool: &[NodeId]) {
+    for &r in regs {
+        let src = pool[rng.index(pool.len())];
+        let w = g.width(r);
+        let adapted = adapt_width(g, src, w);
+        g.connect_reg(r, adapted);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::RefSim;
+
+    #[test]
+    fn reg_bank_decoded_write_and_read() {
+        let mut g = Graph::new("bank");
+        let wen = g.input("wen", 1);
+        let waddr = g.input("waddr", 3);
+        let wdata = g.input("wdata", 8);
+        let raddr = g.input("raddr", 3);
+        let bank = reg_bank(&mut g, "m", 8, 8, wen, waddr, wdata);
+        let rd = bank_read(&mut g, &bank, raddr);
+        g.output("rd", rd);
+        let mut sim = RefSim::new(g);
+        // write 0xAB to address 5
+        sim.step(&[1, 5, 0xAB, 0]);
+        // read it back
+        sim.step(&[0, 0, 0, 5]);
+        assert_eq!(sim.outputs()[0].1, 0xAB);
+        // unwritten address stays 0
+        sim.step(&[0, 0, 0, 3]);
+        assert_eq!(sim.outputs()[0].1, 0);
+        // write to 2, read 5 still 0xAB
+        sim.step(&[1, 2, 0x7F, 0]);
+        sim.step(&[0, 0, 0, 5]);
+        assert_eq!(sim.outputs()[0].1, 0xAB);
+        sim.step(&[0, 0, 0, 2]);
+        assert_eq!(sim.outputs()[0].1, 0x7F);
+    }
+}

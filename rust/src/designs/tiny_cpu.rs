@@ -1,0 +1,369 @@
+//! `tiny_cpu` — a real 32-bit RISC-style CPU built as a dataflow graph,
+//! executing a real program to completion. This is the end-to-end
+//! workload standing in for the paper's dhrystone runs: instruction ROM
+//! (mux tree), 16-entry register file, 32-word RAM with decoded writes,
+//! ALU, branch unit, and a DMI-style host window (paper §6.2 Host–DUT
+//! communication) for peeking RAM.
+//!
+//! ISA (word-encoded, `[31:28] op | [27:24] rd | [23:20] rs1 |
+//! [19:16] rs2 | [15:0] imm`):
+//!
+//! | op | mnemonic | semantics |
+//! |----|----------|-----------|
+//! | 0  | ADD  | rd = rs1 + rs2 |
+//! | 1  | SUB  | rd = rs1 - rs2 |
+//! | 2  | AND  | rd = rs1 & rs2 |
+//! | 3  | OR   | rd = rs1 \| rs2 |
+//! | 4  | XOR  | rd = rs1 ^ rs2 |
+//! | 5  | SHL  | rd = rs1 << (rs2 & 31) |
+//! | 6  | SHR  | rd = rs1 >> (rs2 & 31) |
+//! | 7  | ADDI | rd = rs1 + imm (imm zero-extended) |
+//! | 8  | LW   | rd = RAM[(rs1 + imm) & 31] |
+//! | 9  | SW   | RAM[(rs1 + imm) & 31] = rs2 |
+//! | 10 | BEQ  | if rs1 == rs2 { pc = imm } |
+//! | 11 | BNE  | if rs1 != rs2 { pc = imm } |
+//! | 12 | JMP  | pc = imm |
+//! | 13 | HALT | stop (pc freezes, `halted` output raises) |
+//!
+//! `r0` is hard-wired to zero.
+
+use crate::graph::ops::PrimOp;
+use crate::graph::{Graph, NodeId};
+
+use super::synth::bank_read;
+
+pub const RAM_WORDS: usize = 32;
+pub const NUM_REGS: usize = 16;
+
+// ---- assembler ----
+
+pub fn enc(op: u32, rd: u32, rs1: u32, rs2: u32, imm: u32) -> u32 {
+    (op << 28) | (rd << 24) | (rs1 << 20) | (rs2 << 16) | (imm & 0xFFFF)
+}
+pub fn add(rd: u32, rs1: u32, rs2: u32) -> u32 {
+    enc(0, rd, rs1, rs2, 0)
+}
+pub fn sub(rd: u32, rs1: u32, rs2: u32) -> u32 {
+    enc(1, rd, rs1, rs2, 0)
+}
+pub fn and(rd: u32, rs1: u32, rs2: u32) -> u32 {
+    enc(2, rd, rs1, rs2, 0)
+}
+pub fn or(rd: u32, rs1: u32, rs2: u32) -> u32 {
+    enc(3, rd, rs1, rs2, 0)
+}
+pub fn xor(rd: u32, rs1: u32, rs2: u32) -> u32 {
+    enc(4, rd, rs1, rs2, 0)
+}
+pub fn shl(rd: u32, rs1: u32, rs2: u32) -> u32 {
+    enc(5, rd, rs1, rs2, 0)
+}
+pub fn shr(rd: u32, rs1: u32, rs2: u32) -> u32 {
+    enc(6, rd, rs1, rs2, 0)
+}
+pub fn addi(rd: u32, rs1: u32, imm: u32) -> u32 {
+    enc(7, rd, rs1, 0, imm)
+}
+pub fn lw(rd: u32, rs1: u32, imm: u32) -> u32 {
+    enc(8, rd, rs1, 0, imm)
+}
+pub fn sw(rs2: u32, rs1: u32, imm: u32) -> u32 {
+    enc(9, 0, rs1, rs2, imm)
+}
+pub fn beq(rs1: u32, rs2: u32, target: u32) -> u32 {
+    enc(10, 0, rs1, rs2, target)
+}
+pub fn bne(rs1: u32, rs2: u32, target: u32) -> u32 {
+    enc(11, 0, rs1, rs2, target)
+}
+pub fn jmp(target: u32) -> u32 {
+    enc(12, 0, 0, 0, target)
+}
+pub fn halt() -> u32 {
+    enc(13, 0, 0, 0, 0)
+}
+
+/// The dhrystone-like benchmark program: a loop mixing ALU ops, loads,
+/// stores and branches, accumulating a checksum into RAM[0].
+pub fn dhrystone_like(iters: u32) -> Vec<u32> {
+    vec![
+        addi(1, 0, iters),  // 0: r1 = iters
+        addi(2, 0, 0),      // 1: r2 = checksum = 0
+        addi(3, 0, 12345),  // 2: r3 = seed
+        addi(6, 0, 1),      // 3: r6 = 1
+        addi(7, 0, 5),      // 4: r7 = 5 (shift amount)
+        // loop:
+        add(2, 2, 3),       // 5: checksum += seed
+        xor(3, 3, 2),       // 6: seed ^= checksum
+        shl(4, 3, 6),       // 7: r4 = seed << 1
+        shr(5, 4, 7),       // 8: r5 = r4 >> 5
+        or(3, 3, 5),        // 9: seed |= r5
+        sw(2, 0, 1),        // 10: RAM[1] = checksum
+        lw(8, 0, 1),        // 11: r8 = RAM[1]
+        add(2, 2, 8),       // 12: checksum += r8 (doubles it)
+        and(9, 2, 3),       // 13: r9 = checksum & seed
+        sub(2, 2, 9),       // 14: checksum -= r9
+        sub(1, 1, 6),       // 15: r1 -= 1
+        bne(1, 0, 5),       // 16: loop while r1 != 0
+        sw(2, 0, 0),        // 17: RAM[0] = checksum
+        halt(),             // 18
+    ]
+}
+
+/// Software golden model: returns (final checksum, executed instructions).
+pub fn golden_run(program: &[u32], max_steps: usize) -> (u32, usize) {
+    let mut regs = [0u32; NUM_REGS];
+    let mut ram = [0u32; RAM_WORDS];
+    let mut pc = 0usize;
+    let mut steps = 0usize;
+    while steps < max_steps {
+        let inst = if pc < program.len() { program[pc] } else { halt() };
+        let (op, rd, rs1, rs2, imm) = (
+            inst >> 28,
+            (inst >> 24) & 0xF,
+            (inst >> 20) & 0xF,
+            (inst >> 16) & 0xF,
+            inst & 0xFFFF,
+        );
+        let a = regs[rs1 as usize];
+        let b = regs[rs2 as usize];
+        let mut next_pc = pc + 1;
+        let mut wval = None;
+        match op {
+            0 => wval = Some(a.wrapping_add(b)),
+            1 => wval = Some(a.wrapping_sub(b)),
+            2 => wval = Some(a & b),
+            3 => wval = Some(a | b),
+            4 => wval = Some(a ^ b),
+            5 => wval = Some(a << (b & 31)),
+            6 => wval = Some(a >> (b & 31)),
+            7 => wval = Some(a.wrapping_add(imm)),
+            8 => wval = Some(ram[(a.wrapping_add(imm) & 31) as usize]),
+            9 => ram[(a.wrapping_add(imm) & 31) as usize] = b,
+            10 => {
+                if a == b {
+                    next_pc = imm as usize;
+                }
+            }
+            11 => {
+                if a != b {
+                    next_pc = imm as usize;
+                }
+            }
+            12 => next_pc = imm as usize,
+            _ => return (ram[0], steps),
+        }
+        if let Some(v) = wval {
+            if rd != 0 {
+                regs[rd as usize] = v;
+            }
+        }
+        pc = next_pc;
+        steps += 1;
+    }
+    (ram[0], steps)
+}
+
+/// Build the CPU with `program` baked into the instruction ROM.
+///
+/// Inputs: `dmi_wen`, `dmi_addr[5]`, `dmi_wdata[32]` (host writes into
+/// RAM — takes priority over CPU stores), and `dmi_raddr[5]`.
+/// Outputs: `halted`, `checksum` (= RAM[0]), `pc`, `dmi_rdata`.
+pub fn tiny_cpu(program: &[u32]) -> Graph {
+    assert!(program.len() <= 256, "ROM limit");
+    let mut g = Graph::new("tiny_cpu");
+    let dmi_wen = g.input("dmi_wen", 1);
+    let dmi_addr = g.input("dmi_addr", 5);
+    let dmi_wdata = g.input("dmi_wdata", 32);
+    let dmi_raddr = g.input("dmi_raddr", 5);
+
+    let halted = g.reg("halted", 1, 0);
+    let pc = g.reg("pc", 8, 0);
+
+    // ---- architectural registers (r0 = constant zero) ----
+    let zero32 = g.konst(0, 32);
+    let mut regs: Vec<NodeId> = vec![zero32];
+    for i in 1..NUM_REGS {
+        regs.push(g.reg(&format!("x{i}"), 32, 0));
+    }
+
+    // ---- instruction ROM: mux tree over pc ----
+    let rom: Vec<NodeId> = program.iter().map(|&w| g.konst(w as u64, 32)).collect();
+    let pc_idx_w = (64 - (rom.len().next_power_of_two() as u64 - 1).leading_zeros()).max(1) as u8;
+    let pc_idx = g.prim(PrimOp::Bits(pc_idx_w.min(8) - 1, 0), &[pc]);
+    let inst = bank_read(&mut g, &rom, pc_idx);
+
+    // ---- decode ----
+    let op = g.prim(PrimOp::Bits(31, 28), &[inst]);
+    let rd = g.prim(PrimOp::Bits(27, 24), &[inst]);
+    let rs1 = g.prim(PrimOp::Bits(23, 20), &[inst]);
+    let rs2 = g.prim(PrimOp::Bits(19, 16), &[inst]);
+    let imm = g.prim(PrimOp::Bits(15, 0), &[inst]);
+    let imm32 = g.prim_w(PrimOp::Pad(32), &[imm], 32);
+
+    // ---- register reads ----
+    let a = bank_read(&mut g, &regs, rs1);
+    let b = bank_read(&mut g, &regs, rs2);
+
+    // ---- ALU ----
+    let shamt = g.prim(PrimOp::Bits(4, 0), &[b]);
+    let alu_add = g.prim_w(PrimOp::Add, &[a, b], 32);
+    let alu_sub = g.prim_w(PrimOp::Sub, &[a, b], 32);
+    let alu_and = g.prim(PrimOp::And, &[a, b]);
+    let alu_or = g.prim(PrimOp::Or, &[a, b]);
+    let alu_xor = g.prim(PrimOp::Xor, &[a, b]);
+    let alu_shl = g.prim_w(PrimOp::Dshl, &[a, shamt], 32);
+    let alu_shr = g.prim(PrimOp::Dshr, &[a, shamt]);
+    let alu_addi = g.prim_w(PrimOp::Add, &[a, imm32], 32);
+
+    // ---- memory ----
+    let addr_full = g.prim_w(PrimOp::Add, &[a, imm32], 32);
+    let mem_addr = g.prim(PrimOp::Bits(4, 0), &[addr_full]);
+    let op_k = |g: &mut Graph, v: u64| g.konst(v, 4);
+    let k_sw = op_k(&mut g, 9);
+    let is_sw = g.prim(PrimOp::Eq, &[op, k_sw]);
+    let not_halted = g.prim(PrimOp::Not, &[halted]);
+    let cpu_wen = g.prim(PrimOp::And, &[is_sw, not_halted]);
+    // DMI has priority on the RAM write port
+    let ram_wen = g.prim(PrimOp::Or, &[cpu_wen, dmi_wen]);
+    let ram_waddr = g.prim(PrimOp::Mux, &[dmi_wen, dmi_addr, mem_addr]);
+    let ram_wdata = g.prim(PrimOp::Mux, &[dmi_wen, dmi_wdata, b]);
+    let ram = super::synth::reg_bank(&mut g, "ram", RAM_WORDS, 32, ram_wen, ram_waddr, ram_wdata);
+    let mem_rdata = bank_read(&mut g, &ram, mem_addr);
+    let dmi_rdata = bank_read(&mut g, &ram, dmi_raddr);
+
+    // ---- writeback value select (op mux ladder) ----
+    let candidates: [(u64, NodeId); 9] = [
+        (0, alu_add),
+        (1, alu_sub),
+        (2, alu_and),
+        (3, alu_or),
+        (4, alu_xor),
+        (5, alu_shl),
+        (6, alu_shr),
+        (7, alu_addi),
+        (8, mem_rdata),
+    ];
+    let mut wval = zero32;
+    for &(code, val) in candidates.iter().rev() {
+        let k = op_k(&mut g, code);
+        let hit = g.prim(PrimOp::Eq, &[op, k]);
+        wval = g.prim_w(PrimOp::Mux, &[hit, val, wval], 32);
+    }
+    // write enable: op <= 8 and rd != 0 and not halted
+    let k9 = op_k(&mut g, 9);
+    let writes = g.prim(PrimOp::Lt, &[op, k9]);
+    let zero4 = g.konst(0, 4);
+    let rd_nz = g.prim(PrimOp::Neq, &[rd, zero4]);
+    let wen0 = g.prim(PrimOp::And, &[writes, rd_nz]);
+    let wen = g.prim(PrimOp::And, &[wen0, not_halted]);
+    for (i, &r) in regs.iter().enumerate().skip(1) {
+        let k = g.konst(i as u64, 4);
+        let hit = g.prim(PrimOp::Eq, &[rd, k]);
+        let sel = g.prim(PrimOp::And, &[wen, hit]);
+        let nxt = g.prim_w(PrimOp::Mux, &[sel, wval, r], 32);
+        g.connect_reg(r, nxt);
+    }
+
+    // ---- next pc ----
+    let one8 = g.konst(1, 8);
+    let pc_inc = g.prim_w(PrimOp::Add, &[pc, one8], 8);
+    let imm8 = g.prim(PrimOp::Bits(7, 0), &[imm]);
+    let eq_ab = g.prim(PrimOp::Eq, &[a, b]);
+    let ne_ab = g.prim(PrimOp::Neq, &[a, b]);
+    let k_beq = op_k(&mut g, 10);
+    let k_bne = op_k(&mut g, 11);
+    let k_jmp = op_k(&mut g, 12);
+    let k_halt = op_k(&mut g, 13);
+    let is_beq = g.prim(PrimOp::Eq, &[op, k_beq]);
+    let is_bne = g.prim(PrimOp::Eq, &[op, k_bne]);
+    let is_jmp = g.prim(PrimOp::Eq, &[op, k_jmp]);
+    let is_halt = g.prim(PrimOp::Eq, &[op, k_halt]);
+    let beq_t = g.prim(PrimOp::And, &[is_beq, eq_ab]);
+    let bne_t = g.prim(PrimOp::And, &[is_bne, ne_ab]);
+    let br = g.prim(PrimOp::Or, &[beq_t, bne_t]);
+    let take = g.prim(PrimOp::Or, &[br, is_jmp]);
+    let pc_br = g.prim(PrimOp::Mux, &[take, imm8, pc_inc]);
+    let pc_next = g.prim(PrimOp::Mux, &[halted, pc, pc_br]);
+    g.connect_reg(pc, pc_next);
+
+    // halted latch
+    let set_halt = g.prim(PrimOp::And, &[is_halt, not_halted]);
+    let halted_next = g.prim(PrimOp::Or, &[halted, set_halt]);
+    g.connect_reg(halted, halted_next);
+
+    g.output("halted", halted);
+    g.output("checksum", ram[0]);
+    g.output("pc", pc);
+    g.output("dmi_rdata", dmi_rdata);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::RefSim;
+
+    fn run_to_halt(sim: &mut RefSim, max: usize) -> (u64, usize) {
+        for cycle in 0..max {
+            sim.step(&[0, 0, 0, 0]);
+            let outs: std::collections::HashMap<String, u64> = sim.outputs().into_iter().collect();
+            if outs["halted"] == 1 {
+                return (outs["checksum"], cycle + 1);
+            }
+        }
+        panic!("did not halt in {max} cycles");
+    }
+
+    #[test]
+    fn executes_dhrystone_like_to_golden_checksum() {
+        let prog = dhrystone_like(10);
+        let (golden, steps) = golden_run(&prog, 100_000);
+        assert!(steps > 50, "program actually loops");
+        let g = tiny_cpu(&prog);
+        assert!(g.validate().is_empty());
+        let mut sim = RefSim::new(g);
+        let (checksum, cycles) = run_to_halt(&mut sim, 10_000);
+        assert_eq!(checksum, golden as u64, "checksum mismatch");
+        // single-cycle core: cycles ≈ instruction count + 1
+        assert!((cycles as i64 - steps as i64).abs() <= 2, "cycles {cycles} vs steps {steps}");
+    }
+
+    #[test]
+    fn branches_and_memory() {
+        // store 5 to RAM[3], load it back, add 1, store to RAM[0], halt
+        let prog = vec![
+            addi(1, 0, 5),
+            sw(1, 0, 3),
+            lw(2, 0, 3),
+            addi(2, 2, 1),
+            sw(2, 0, 0),
+            halt(),
+        ];
+        let g = tiny_cpu(&prog);
+        let mut sim = RefSim::new(g);
+        let (checksum, _) = run_to_halt(&mut sim, 100);
+        assert_eq!(checksum, 6);
+    }
+
+    #[test]
+    fn dmi_writes_and_reads_ram() {
+        let prog = vec![jmp(0)]; // spin forever
+        let g = tiny_cpu(&prog);
+        let mut sim = RefSim::new(g);
+        // host writes 0xDEAD to RAM[7] via DMI
+        sim.step(&[1, 7, 0xDEAD, 7]);
+        sim.step(&[0, 0, 0, 7]);
+        let outs: std::collections::HashMap<String, u64> = sim.outputs().into_iter().collect();
+        assert_eq!(outs["dmi_rdata"], 0xDEAD);
+    }
+
+    #[test]
+    fn r0_is_hardwired_zero() {
+        let prog = vec![addi(0, 0, 99), sw(0, 0, 0), halt()];
+        let g = tiny_cpu(&prog);
+        let mut sim = RefSim::new(g);
+        let (checksum, _) = run_to_halt(&mut sim, 100);
+        assert_eq!(checksum, 0); // write to r0 discarded
+    }
+}

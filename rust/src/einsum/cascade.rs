@@ -1,0 +1,259 @@
+//! Cascade 1 evaluated over fibertrees (the executable specification).
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::operators::OpDesc;
+use crate::graph::ops::mask;
+use crate::tensor::fibertree::Fiber;
+use crate::tensor::ir::{KOp, LayerIr};
+
+/// The OIM tensor with rank order [I, S, N, O, R] as a fibertree, plus the
+/// operation-descriptor table that gives meaning to the N coordinates.
+pub struct OimTensor {
+    pub fiber: Fiber,
+    pub descs: Vec<OpDesc>,
+    pub shapes: OimShapes,
+}
+
+/// Shapes of the five ranks (for density reporting, paper §5.1).
+#[derive(Clone, Copy, Debug)]
+pub struct OimShapes {
+    pub i: usize,
+    pub s: usize,
+    pub n: usize,
+    pub o: usize,
+    pub r: usize,
+}
+
+impl OimTensor {
+    /// Build the OIM fibertree from the lowered design.
+    pub fn from_ir(ir: &LayerIr) -> Self {
+        let mut desc_ids: HashMap<OpDesc, usize> = HashMap::new();
+        let mut descs: Vec<OpDesc> = Vec::new();
+        let mut max_o = 1usize;
+
+        // First pass: descriptor table.
+        for layer in &ir.layers {
+            for rec in layer {
+                let d = OpDesc { op: rec.kop(), imm: rec.imm, mask: rec.mask, aux: rec.aux };
+                if !desc_ids.contains_key(&d) {
+                    desc_ids.insert(d, descs.len());
+                    descs.push(d);
+                }
+                max_o = max_o.max(rec.arity as usize);
+            }
+        }
+
+        let shapes = OimShapes {
+            i: ir.layers.len(),
+            s: ir.num_slots,
+            n: descs.len().max(1),
+            o: max_o,
+            r: ir.num_slots,
+        };
+
+        let mut root = Fiber::new(shapes.i);
+        for (i, layer) in ir.layers.iter().enumerate() {
+            for rec in layer {
+                let d = OpDesc { op: rec.kop(), imm: rec.imm, mask: rec.mask, aux: rec.aux };
+                let n = desc_ids[&d];
+                let s = rec.out as usize;
+                for (o, r) in operand_slots(rec, &ir.ext_args).into_iter().enumerate() {
+                    // OIM is a mask tensor: leaf payload 1 at
+                    // (i, s, n, o, r) marks "operand o of op s comes from r".
+                    root.set_path(
+                        &[i, s, n, o, r as usize],
+                        &[shapes.s, shapes.n, shapes.o, shapes.r],
+                        1,
+                    );
+                }
+            }
+        }
+        OimTensor { fiber: root, descs, shapes }
+    }
+
+    /// Tensor density = occupancy / size of the iteration space. The paper
+    /// reports 1e-7..1e-9 for real designs (§5.1).
+    pub fn density(&self) -> f64 {
+        let leaves = self.fiber.count_leaves() as f64;
+        let space =
+            self.shapes.i as f64 * self.shapes.s as f64 * self.shapes.n as f64 * self.shapes.o as f64 * self.shapes.r as f64;
+        leaves / space
+    }
+}
+
+/// Ordered operand slots of a record (a,b,c then ext for MuxChain).
+fn operand_slots(rec: &crate::tensor::ir::OpRec, ext_args: &[u32]) -> Vec<u32> {
+    let ar = rec.arity as usize;
+    match rec.kop() {
+        KOp::MuxChain => {
+            let mut v = vec![rec.a, rec.b];
+            v.extend_from_slice(&ext_args[rec.ext as usize..rec.ext as usize + ar - 2]);
+            v
+        }
+        _ => [rec.a, rec.b, rec.c][..ar].to_vec(),
+    }
+}
+
+/// Cycle-level simulator that evaluates Cascade 1 literally.
+pub struct CascadeSim {
+    pub oim: OimTensor,
+    /// LI: the flat value file (identity elision makes it layer-invariant).
+    pub li: Vec<u64>,
+    ir_inputs: Vec<(u32, u8)>,
+    commits: Vec<(u32, u32, u64)>,
+    outputs: Vec<(String, u32)>,
+}
+
+impl CascadeSim {
+    pub fn new(ir: &LayerIr) -> Self {
+        let oim = OimTensor::from_ir(ir);
+        CascadeSim {
+            oim,
+            li: ir.initial_slots(),
+            ir_inputs: ir.input_slots.iter().copied().zip(ir.input_widths.iter().copied()).collect(),
+            commits: ir.commits.clone(),
+            outputs: ir.output_slots.clone(),
+        }
+    }
+
+    /// One simulation cycle = one full evaluation of Cascade 1 over the
+    /// iterative rank I, followed by the register-commit connects.
+    pub fn step(&mut self, inputs: &[u64]) {
+        for ((slot, w), &v) in self.ir_inputs.iter().zip(inputs) {
+            self.li[*slot as usize] = v & mask(*w);
+        }
+        // ◇ : i ≡ I — iterate the cascade over layers.
+        for (_i, layer_payload) in self.oim.fiber.iter() {
+            let s_fiber = layer_payload.as_fiber();
+            // LO / LO_sel (merged: s coordinates are unique, §4.2).
+            let mut lo: BTreeMap<usize, u64> = BTreeMap::new();
+            for (s, n_payload) in s_fiber.iter() {
+                // N fibers are one-hot: each op has exactly one type.
+                let n_fiber = n_payload.as_fiber();
+                debug_assert_eq!(n_fiber.occupancy(), 1, "N fiber must be one-hot");
+                let (n, o_payload) = n_fiber.iter().next().unwrap();
+                let desc = self.oim.descs[n];
+                let o_fiber = o_payload.as_fiber();
+
+                // Einsum 10 (map ∧ ←(→)): OI = LI gathered through OIM.
+                // O-rank traversal is coordinate-ascending (the ordering
+                // constraint of §4.1); R fibers are one-hot.
+                let mut oi: Vec<u64> = Vec::with_capacity(o_fiber.occupancy());
+                for (_o, r_payload) in o_fiber.iter() {
+                    let r_fiber = r_payload.as_fiber();
+                    debug_assert_eq!(r_fiber.occupancy(), 1, "R fiber must be one-hot");
+                    let (r, leaf) = r_fiber.iter().next().unwrap();
+                    debug_assert_eq!(leaf.as_val(), 1, "OIM is a binary mask");
+                    oi.push(self.li[r]);
+                }
+
+                let value = if desc.is_select() {
+                    // Einsum 13: populate ⋘ 1(op_s[n]) over the O fiber.
+                    desc.op_s(&oi) & desc.mask
+                } else {
+                    // Einsum 12: ∧ op_u[n](←) ∨ op_r[n](→).
+                    let mut t = desc.op_u(oi[0]);
+                    for &v in &oi[1..] {
+                        t = desc.op_r(t, v);
+                    }
+                    t & desc.mask
+                };
+                lo.insert(s, value);
+            }
+            // Final Einsum: LI_{i+1,s} = LO_{i,n,s} / LO_sel (ANY-reduce).
+            for (s, v) in lo {
+                self.li[s] = v;
+            }
+        }
+        for &(reg, next, m) in &self.commits {
+            self.li[reg as usize] = self.li[next as usize] & m;
+        }
+    }
+
+    pub fn outputs(&self) -> Vec<(String, u64)> {
+        self.outputs.iter().map(|(n, s)| (n.clone(), self.li[*s as usize])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::{random_circuit, random_inputs};
+    use crate::graph::passes::optimize;
+    use crate::tensor::ir::{lower, IrSim};
+    use crate::util::prng::Rng;
+
+    /// The executable cascade must agree with the slot-file simulator —
+    /// this ties the Einsum formulation (§4) to the kernel semantics (§5).
+    #[test]
+    fn cascade_matches_ir_sim() {
+        for seed in 0..10 {
+            let mut rng = Rng::new(31000 + seed);
+            let g = random_circuit(&mut rng, 50);
+            let (opt, _) = optimize(&g);
+            let ir = lower(&opt);
+            let mut irsim = IrSim::new(ir.clone());
+            let mut cas = CascadeSim::new(&ir);
+            for cycle in 0..10 {
+                let inputs = random_inputs(&mut rng, &crate::graph::Graph { inputs: opt.inputs.clone(), ..Default::default() });
+                irsim.step(&inputs);
+                cas.step(&inputs);
+                assert_eq!(irsim.outputs(), cas.outputs(), "seed {seed} cycle {cycle}");
+            }
+        }
+    }
+
+    #[test]
+    fn oim_is_extremely_sparse() {
+        let mut rng = Rng::new(5);
+        let g = random_circuit(&mut rng, 300);
+        let ir = lower(&g);
+        let oim = OimTensor::from_ir(&ir);
+        // the paper reports 1e-7..1e-9 on real designs; even small random
+        // circuits are already well below 1e-4
+        assert!(oim.density() < 1e-4, "density {}", oim.density());
+    }
+
+    /// Paper Appendix A, Einsum 14: `B_{r*} = A_r :: ⋘ 1(max2)` — a
+    /// custom populate-coordinate operator acting on a whole fiber,
+    /// keeping the two largest values (coordinates preserved). This is
+    /// the general mechanism `op_s[n]`/`LO_sel`'s `o*` rank uses.
+    #[test]
+    fn appendix_a_max2_populate_operator() {
+        use crate::tensor::fibertree::{Fiber, Payload};
+        let mut a = Fiber::new(8);
+        for (c, v) in [(0usize, 3u64), (2, 9), (3, 1), (6, 7)] {
+            a.set(c, Payload::Val(v));
+        }
+        // populate ⋘ 1(max2): operator sees the whole input fiber and
+        // decides which output coordinates to populate
+        let max2 = |fiber: &Fiber| -> Fiber {
+            let mut entries: Vec<(usize, u64)> =
+                fiber.iter().map(|(c, p)| (c, p.as_val())).collect();
+            entries.sort_by_key(|&(_, v)| std::cmp::Reverse(v));
+            entries.truncate(2);
+            let mut out = Fiber::new(fiber.shape);
+            for (c, v) in entries {
+                out.set(c, Payload::Val(v));
+            }
+            out
+        };
+        let b = max2(&a);
+        assert_eq!(b.occupancy(), 2);
+        assert_eq!(b.get_path(&[2]), Some(9));
+        assert_eq!(b.get_path(&[6]), Some(7));
+        assert_eq!(b.get_path(&[0]), None);
+    }
+
+    #[test]
+    fn oim_leaves_equal_total_operands() {
+        let mut rng = Rng::new(6);
+        let g = random_circuit(&mut rng, 80);
+        let ir = lower(&g);
+        let oim = OimTensor::from_ir(&ir);
+        let operands: usize =
+            ir.layers.iter().flat_map(|l| l.iter()).map(|r| r.arity as usize).sum();
+        assert_eq!(oim.fiber.count_leaves(), operands);
+    }
+}

@@ -1,0 +1,25 @@
+//! Executable extended-Einsum cascade (paper §4, Cascade 1).
+//!
+//! This module is the *formal specification* of RTeAAL Sim's computation:
+//! the cascade
+//!
+//! ```text
+//! OI_{i,n,o,r,s}   = LI_{i,r} · OIM_{i,n,o,r,s}      :: ∧ ←(→)
+//! LO_{i,n,s}       = OI_{i,n,o,r,s}                  :: ∧ op_u[n](←) ∨ op_r[n](→)
+//! LO_sel_{i,n,o*,r,s} = OI_{i,n,o,r,s}               :: ∧ 1(←) ⋘ 1(op_s[n])
+//! LI_{i+1,s}       = LO / LO_sel                     :: ∧ 1(←) ∨ ANY(→)   ◇ i ≡ I
+//! ```
+//!
+//! evaluated literally over fibertrees, with the user-defined operators
+//! `op_u[n]` (map compute), `op_r[n]` (reduce compute, O-rank order
+//! sensitive for non-commutative ops) and `op_s[n]` (populate coordinate
+//! operator for select operations). It runs orders of magnitude slower
+//! than the kernels in `crate::kernels` — it exists as the oracle the
+//! kernels are property-tested against, mirroring how the paper derives
+//! the kernels from the cascade.
+
+pub mod cascade;
+pub mod operators;
+
+pub use cascade::{CascadeSim, OimTensor};
+pub use operators::OpDesc;

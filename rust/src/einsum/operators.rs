@@ -1,0 +1,156 @@
+//! User-defined EDGE operators for the RTeAAL cascade (paper Alg. 2):
+//! `op_u[n]` (unary map compute), `op_r[n]` (reduce compute) and
+//! `op_s[n]` (select populate), indexed by the operation-type coordinate
+//! `n`. Each `n` is an [`OpDesc`]: an executor opcode plus its static
+//! parameters (the paper's toy op set has no parameters; FIRRTL's
+//! `bits`/`shl`/`cat` do, and they are part of the operation type).
+
+use crate::tensor::ir::KOp;
+
+/// Operation descriptor — the coordinate space of rank N.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct OpDesc {
+    pub op: KOp,
+    pub imm: u8,
+    pub mask: u64,
+    pub aux: u64,
+}
+
+impl OpDesc {
+    /// Is this a select operation (handled by `op_s`, Einsum 13)?
+    pub fn is_select(&self) -> bool {
+        matches!(self.op, KOp::Mux | KOp::MuxChain)
+    }
+
+    /// `op_u[n]` — map compute operator (applies to single-operand ops;
+    /// pass-through for multi-operand ops, per §4.1).
+    pub fn op_u(&self, a: u64) -> u64 {
+        match self.op {
+            KOp::Not => !a,
+            KOp::Neg => a.wrapping_neg(),
+            KOp::AndrK => (a == self.aux) as u64,
+            KOp::Orr => (a != 0) as u64,
+            KOp::Xorr => (a.count_ones() & 1) as u64,
+            KOp::ShlI => a << self.imm,
+            KOp::ShrI => a >> self.imm,
+            KOp::Copy => a,
+            _ => a, // pass-through (1) for reducible ops
+        }
+    }
+
+    /// `op_r[n]` — reduce compute operator. `left` is the current reduce
+    /// temporary, `right` the incoming map temporary; the O rank fixes the
+    /// traversal order, making non-commutative reductions well-defined
+    /// (§4.1).
+    pub fn op_r(&self, left: u64, right: u64) -> u64 {
+        match self.op {
+            KOp::Add => left.wrapping_add(right),
+            KOp::Sub => left.wrapping_sub(right),
+            KOp::Mul => left.wrapping_mul(right),
+            KOp::Div => {
+                if right == 0 {
+                    0
+                } else {
+                    left / right
+                }
+            }
+            KOp::Rem => {
+                if right == 0 {
+                    0
+                } else {
+                    left % right
+                }
+            }
+            KOp::Lt => (left < right) as u64,
+            KOp::Leq => (left <= right) as u64,
+            KOp::Gt => (left > right) as u64,
+            KOp::Geq => (left >= right) as u64,
+            KOp::Eq => (left == right) as u64,
+            KOp::Neq => (left != right) as u64,
+            KOp::And => left & right,
+            KOp::Or => left | right,
+            KOp::Xor => left ^ right,
+            KOp::Dshl => {
+                if right >= 64 {
+                    0
+                } else {
+                    left << right
+                }
+            }
+            KOp::Dshr => {
+                if right >= 64 {
+                    0
+                } else {
+                    left >> right
+                }
+            }
+            KOp::Cat => (left << self.imm) | right,
+            // unary ops never reduce (occupancy-1 O fiber): copy-through
+            _ => right,
+        }
+    }
+
+    /// `op_s[n]` — populate coordinate operator for select operations:
+    /// consumes the whole ordered O-fiber of reduce temporaries (§4.1,
+    /// Appendix A: "effectively implements a multiplexer").
+    pub fn op_s(&self, ordered: &[u64]) -> u64 {
+        match self.op {
+            KOp::Mux => {
+                if ordered[0] != 0 {
+                    ordered[1]
+                } else {
+                    ordered[2]
+                }
+            }
+            KOp::MuxChain => {
+                let k = self.imm as usize;
+                let mut v = ordered[2 * k]; // default
+                for i in (0..k).rev() {
+                    if ordered[2 * i] != 0 {
+                        v = ordered[2 * i + 1];
+                    }
+                }
+                v
+            }
+            _ => panic!("op_s on non-select operation {:?}", self.op),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(op: KOp) -> OpDesc {
+        OpDesc { op, imm: 0, mask: u64::MAX, aux: 0 }
+    }
+
+    #[test]
+    fn reduce_order_matters_for_sub() {
+        let sub = d(KOp::Sub);
+        let t = sub.op_u(10); // pass-through
+        assert_eq!(sub.op_r(t, 3), 7);
+        // reversed order gives a different (wrong) answer — the O rank
+        // constraint exists precisely for this
+        assert_ne!(sub.op_r(3, 10), 7);
+    }
+
+    #[test]
+    fn unary_via_op_u() {
+        assert_eq!(d(KOp::Not).op_u(0), u64::MAX);
+        let andr = OpDesc { op: KOp::AndrK, imm: 0, mask: 1, aux: 0xF };
+        assert_eq!(andr.op_u(0xF), 1);
+        assert_eq!(andr.op_u(0x7), 0);
+    }
+
+    #[test]
+    fn select_consumes_whole_fiber() {
+        let mux = d(KOp::Mux);
+        assert_eq!(mux.op_s(&[1, 42, 7]), 42);
+        assert_eq!(mux.op_s(&[0, 42, 7]), 7);
+        let chain = OpDesc { op: KOp::MuxChain, imm: 2, mask: u64::MAX, aux: 0 };
+        assert_eq!(chain.op_s(&[0, 1, 1, 2, 9]), 2);
+        assert_eq!(chain.op_s(&[0, 1, 0, 2, 9]), 9);
+        assert_eq!(chain.op_s(&[1, 1, 1, 2, 9]), 1);
+    }
+}

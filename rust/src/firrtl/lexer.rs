@@ -1,0 +1,206 @@
+//! Tokenizer for the FIRRTL subset.
+
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Int(u64),
+    Colon,
+    Comma,
+    LParen,
+    RParen,
+    Lt,      // <
+    Gt,      // >
+    Eq,      // =
+    Connect, // <=
+    Arrow,   // =>
+    Newline,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "{s}"),
+            Tok::Int(v) => write!(f, "{v}"),
+            Tok::Colon => write!(f, ":"),
+            Tok::Comma => write!(f, ","),
+            Tok::LParen => write!(f, "("),
+            Tok::RParen => write!(f, ")"),
+            Tok::Lt => write!(f, "<"),
+            Tok::Gt => write!(f, ">"),
+            Tok::Eq => write!(f, "="),
+            Tok::Connect => write!(f, "<="),
+            Tok::Arrow => write!(f, "=>"),
+            Tok::Newline => write!(f, "\\n"),
+        }
+    }
+}
+
+/// A token with its source line (1-based) for error reporting.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// Tokenize FIRRTL text. Comments (`;` to end of line) are skipped;
+/// newlines are significant (statement separators) but runs collapse.
+pub fn lex(src: &str) -> Result<Vec<Spanned>, String> {
+    let mut out: Vec<Spanned> = Vec::new();
+    let b = src.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let push = |tok: Tok, line: u32, out: &mut Vec<Spanned>| {
+        if tok == Tok::Newline {
+            if matches!(out.last(), None | Some(Spanned { tok: Tok::Newline, .. })) {
+                return; // collapse blank lines / leading newline
+            }
+        }
+        out.push(Spanned { tok, line });
+    };
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                push(Tok::Newline, line, &mut out);
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b';' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b':' => {
+                push(Tok::Colon, line, &mut out);
+                i += 1;
+            }
+            b',' => {
+                push(Tok::Comma, line, &mut out);
+                i += 1;
+            }
+            b'(' => {
+                push(Tok::LParen, line, &mut out);
+                i += 1;
+            }
+            b')' => {
+                push(Tok::RParen, line, &mut out);
+                i += 1;
+            }
+            b'<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    push(Tok::Connect, line, &mut out);
+                    i += 2;
+                } else {
+                    push(Tok::Lt, line, &mut out);
+                    i += 1;
+                }
+            }
+            b'>' => {
+                push(Tok::Gt, line, &mut out);
+                i += 1;
+            }
+            b'=' => {
+                if b.get(i + 1) == Some(&b'>') {
+                    push(Tok::Arrow, line, &mut out);
+                    i += 2;
+                } else {
+                    push(Tok::Eq, line, &mut out);
+                    i += 1;
+                }
+            }
+            b'"' => {
+                // String literal used for hex values: "hABC"
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && b[j] != b'"' {
+                    j += 1;
+                }
+                if j >= b.len() {
+                    return Err(format!("line {line}: unterminated string"));
+                }
+                let body = &src[start..j];
+                let v = if let Some(hex) = body.strip_prefix('h') {
+                    u64::from_str_radix(hex, 16).map_err(|_| format!("line {line}: bad hex '{body}'"))?
+                } else {
+                    body.parse::<u64>().map_err(|_| format!("line {line}: bad number '{body}'"))?
+                };
+                push(Tok::Int(v), line, &mut out);
+                i = j + 1;
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                if c == b'0' && b.get(i + 1) == Some(&b'x') {
+                    i += 2;
+                    while i < b.len() && (b[i] as char).is_ascii_hexdigit() {
+                        i += 1;
+                    }
+                    let v = u64::from_str_radix(&src[start + 2..i], 16)
+                        .map_err(|_| format!("line {line}: bad hex"))?;
+                    push(Tok::Int(v), line, &mut out);
+                } else {
+                    while i < b.len() && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                    let v = src[start..i].parse::<u64>().map_err(|_| format!("line {line}: bad int"))?;
+                    push(Tok::Int(v), line, &mut out);
+                }
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i] == b'$' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                push(Tok::Ident(src[start..i].to_string()), line, &mut out);
+            }
+            _ => return Err(format!("line {line}: unexpected character '{}'", c as char)),
+        }
+    }
+    push(Tok::Newline, line, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_statements() {
+        let toks = lex("node x = add(a, UInt<4>(3)) ; comment\ny <= x\n").unwrap();
+        let kinds: Vec<&Tok> = toks.iter().map(|s| &s.tok).collect();
+        assert!(kinds.contains(&&Tok::Ident("add".into())));
+        assert!(kinds.contains(&&Tok::Int(3)));
+        assert!(kinds.contains(&&Tok::Connect));
+        // comment dropped
+        assert!(!kinds.iter().any(|t| matches!(t, Tok::Ident(s) if s == "comment")));
+    }
+
+    #[test]
+    fn hex_literals() {
+        let toks = lex("UInt<8>(\"hFF\") 0x1a").unwrap();
+        let ints: Vec<u64> = toks
+            .iter()
+            .filter_map(|s| match s.tok {
+                Tok::Int(v) => Some(v),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ints, vec![8, 255, 26]);
+    }
+
+    #[test]
+    fn newline_collapse() {
+        let toks = lex("a\n\n\nb\n").unwrap();
+        let newlines = toks.iter().filter(|s| s.tok == Tok::Newline).count();
+        assert_eq!(newlines, 2);
+    }
+
+    #[test]
+    fn line_numbers() {
+        let toks = lex("a\nb\nc").unwrap();
+        let c = toks.iter().find(|s| s.tok == Tok::Ident("c".into())).unwrap();
+        assert_eq!(c.line, 3);
+    }
+}

@@ -1,0 +1,61 @@
+//! FIRRTL frontend (paper §6.1: "The compiler takes a digital circuit
+//! expressed in FIRRTL").
+//!
+//! We accept a *lowered*, single-clock FIRRTL subset — the level of
+//! abstraction LoFIRRTL reaches after the standard Chisel lowering passes:
+//! flat modules, `UInt` types only, no `when` blocks (already lowered to
+//! muxes), registers + nodes + connects. This matches how RTeAAL Sim's
+//! compiler consumes FIRRTL in the paper (XMR and when-lowering happen in
+//! upstream FIRRTL transforms).
+//!
+//! Grammar (line-oriented, indentation not significant beyond ordering):
+//!
+//! ```text
+//! circuit <name> :
+//!   module <name> :
+//!     input  <id> : UInt<w>        (also: Clock — ignored)
+//!     output <id> : UInt<w>
+//!     reg    <id> : UInt<w>, clock [with : (reset => (<id>, UInt<w>(init)))]
+//!     node   <id> = <expr>
+//!     <id> <= <expr>               ; connect: output port or register next
+//!     skip
+//! ```
+//!
+//! `<expr>` is an identifier, a literal `UInt<w>(value)`, or a primitive
+//! `op(arg, ...)` with nested expressions and integer immediates
+//! (`add, sub, mul, div, rem, lt, leq, gt, geq, eq, neq, and, or, xor,
+//! not, neg, andr, orr, xorr, shl, shr, dshl, dshr, cat, bits, head,
+//! tail, pad, mux`).
+
+mod lexer;
+mod parser;
+mod printer;
+
+pub use parser::{parse, ParseError};
+pub use printer::print;
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::builder::{random_circuit, random_inputs};
+    use crate::graph::RefSim;
+    use crate::util::prng::Rng;
+
+    /// print -> parse round trip preserves behaviour on random circuits.
+    #[test]
+    fn roundtrip_random_circuits() {
+        for seed in 0..10 {
+            let mut rng = Rng::new(7000 + seed);
+            let g = random_circuit(&mut rng, 50);
+            let text = super::print(&g);
+            let g2 = super::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+            let mut a = RefSim::new(g);
+            let mut b = RefSim::new(g2);
+            for _ in 0..12 {
+                let inputs = random_inputs(&mut rng, &a.graph);
+                a.step(&inputs);
+                b.step(&inputs);
+                assert_eq!(a.outputs(), b.outputs(), "seed {seed}");
+            }
+        }
+    }
+}

@@ -1,0 +1,477 @@
+//! Recursive-descent parser for the FIRRTL subset, producing a
+//! [`crate::graph::Graph`] directly (the "extract connectivity information
+//! … construct a dataflow graph" step of Figure 14).
+
+use std::collections::HashMap;
+
+use super::lexer::{lex, Spanned, Tok};
+use crate::graph::ops::{mask, PrimOp};
+use crate::graph::{Graph, NodeId, NodeKind};
+
+#[derive(Debug, thiserror::Error)]
+#[error("firrtl parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Parse FIRRTL text into a dataflow graph.
+pub fn parse(src: &str) -> Result<Graph, ParseError> {
+    let toks = lex(src).map_err(|msg| ParseError { line: 0, msg })?;
+    Parser { toks, pos: 0, names: HashMap::new(), g: Graph::default(), pending: Vec::new() }.circuit()
+}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+    /// symbol table: identifier -> node
+    names: HashMap<String, NodeId>,
+    g: Graph,
+    /// connects to resolve at the end: (target name, source node, line)
+    pending: Vec<(String, NodeId, u32)>,
+}
+
+impl Parser {
+    fn line(&self) -> u32 {
+        self.toks.get(self.pos).map(|s| s.line).unwrap_or(0)
+    }
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError { line: self.line(), msg: msg.into() })
+    }
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|s| &s.tok)
+    }
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|s| s.tok.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+    fn expect(&mut self, t: &Tok) -> Result<(), ParseError> {
+        match self.bump() {
+            Some(got) if got == *t => Ok(()),
+            Some(got) => self.err(format!("expected '{t}', got '{got}'")),
+            None => self.err(format!("expected '{t}', got EOF")),
+        }
+    }
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.bump() {
+            Some(Tok::Ident(s)) => Ok(s),
+            Some(got) => self.err(format!("expected identifier, got '{got}'")),
+            None => self.err("expected identifier, got EOF"),
+        }
+    }
+    fn int(&mut self) -> Result<u64, ParseError> {
+        match self.bump() {
+            Some(Tok::Int(v)) => Ok(v),
+            Some(got) => self.err(format!("expected integer, got '{got}'")),
+            None => self.err("expected integer, got EOF"),
+        }
+    }
+    fn skip_newlines(&mut self) {
+        while self.peek() == Some(&Tok::Newline) {
+            self.pos += 1;
+        }
+    }
+    fn end_stmt(&mut self) -> Result<(), ParseError> {
+        match self.bump() {
+            Some(Tok::Newline) | None => Ok(()),
+            Some(got) => self.err(format!("expected end of statement, got '{got}'")),
+        }
+    }
+
+    fn circuit(mut self) -> Result<Graph, ParseError> {
+        self.skip_newlines();
+        let kw = self.ident()?;
+        if kw != "circuit" {
+            return self.err("expected 'circuit'");
+        }
+        let name = self.ident()?;
+        self.g.name = name;
+        self.expect(&Tok::Colon)?;
+        self.end_stmt()?;
+        self.skip_newlines();
+        let kw = self.ident()?;
+        if kw != "module" {
+            return self.err("expected 'module' (flat single-module subset)");
+        }
+        let _mname = self.ident()?;
+        self.expect(&Tok::Colon)?;
+        self.end_stmt()?;
+        loop {
+            self.skip_newlines();
+            if self.peek().is_none() {
+                break;
+            }
+            self.statement()?;
+        }
+        self.resolve_pending()?;
+        Ok(self.g)
+    }
+
+    fn statement(&mut self) -> Result<(), ParseError> {
+        let first = self.ident()?;
+        match first.as_str() {
+            "skip" => self.end_stmt(),
+            "input" => {
+                let name = self.ident()?;
+                self.expect(&Tok::Colon)?;
+                let w = self.ty()?;
+                if let Some(w) = w {
+                    let id = self.g.input(&name, w);
+                    self.names.insert(name, id);
+                }
+                // Clock/Reset inputs (w = None) are ignored: single clock domain.
+                self.end_stmt()
+            }
+            "output" => {
+                let name = self.ident()?;
+                self.expect(&Tok::Colon)?;
+                let w = self.ty()?;
+                if let Some(w) = w {
+                    // Output node created lazily when connected; remember width.
+                    self.g.outputs.push((name, u32::MAX));
+                    let _ = w;
+                }
+                self.end_stmt()
+            }
+            "reg" => {
+                let name = self.ident()?;
+                self.expect(&Tok::Colon)?;
+                let w = self.ty()?.ok_or(ParseError { line: self.line(), msg: "reg must be UInt".into() })?;
+                self.expect(&Tok::Comma)?;
+                let _clock = self.ident()?; // `clock`
+                let mut init = 0u64;
+                // optional: `with : (reset => (reset, UInt<w>(init)))`
+                if self.peek() == Some(&Tok::Ident("with".into())) {
+                    self.bump();
+                    self.expect(&Tok::Colon)?;
+                    self.expect(&Tok::LParen)?;
+                    let kw = self.ident()?;
+                    if kw != "reset" {
+                        return self.err("expected 'reset' in with-block");
+                    }
+                    self.expect(&Tok::Arrow)?;
+                    self.expect(&Tok::LParen)?;
+                    let _rst = self.ident()?;
+                    self.expect(&Tok::Comma)?;
+                    init = self.literal_value()?;
+                    self.expect(&Tok::RParen)?;
+                    self.expect(&Tok::RParen)?;
+                }
+                let id = self.g.reg(&name, w, init & mask(w));
+                self.names.insert(name, id);
+                self.end_stmt()
+            }
+            "node" | "wire" => {
+                let name = self.ident()?;
+                self.expect(&Tok::Eq)?;
+                let id = self.expr()?;
+                // keep user names on nodes for waveforms
+                if self.g.nodes[id as usize].name.is_none() {
+                    self.g.name_node(id, &name);
+                }
+                self.names.insert(name, id);
+                self.end_stmt()
+            }
+            target => {
+                // connect: `<target> <= <expr>`
+                let target = target.to_string();
+                self.expect(&Tok::Connect)?;
+                let line = self.line();
+                let src = self.expr()?;
+                self.pending.push((target, src, line));
+                self.end_stmt()
+            }
+        }
+    }
+
+    /// Parse `UInt<w>` (Some(w)) or `Clock`/`Reset`/`AsyncReset` (None).
+    fn ty(&mut self) -> Result<Option<u8>, ParseError> {
+        let t = self.ident()?;
+        match t.as_str() {
+            "UInt" => {
+                self.expect(&Tok::Lt)?;
+                let w = self.int()?;
+                self.expect(&Tok::Gt)?;
+                if w == 0 || w > 64 {
+                    return self.err(format!("unsupported width {w} (1..=64)"));
+                }
+                Ok(Some(w as u8))
+            }
+            "Clock" | "Reset" | "AsyncReset" => Ok(None),
+            other => self.err(format!("unsupported type '{other}' (UInt-only subset)")),
+        }
+    }
+
+    /// Parse `UInt<w>(value)` returning just the value.
+    fn literal_value(&mut self) -> Result<u64, ParseError> {
+        let kw = self.ident()?;
+        if kw != "UInt" {
+            return self.err("expected UInt literal");
+        }
+        self.expect(&Tok::Lt)?;
+        let _w = self.int()?;
+        self.expect(&Tok::Gt)?;
+        self.expect(&Tok::LParen)?;
+        let v = self.int()?;
+        self.expect(&Tok::RParen)?;
+        Ok(v)
+    }
+
+    fn expr(&mut self) -> Result<NodeId, ParseError> {
+        let head = self.ident()?;
+        // literal
+        if head == "UInt" {
+            self.expect(&Tok::Lt)?;
+            let w = self.int()? as u8;
+            self.expect(&Tok::Gt)?;
+            self.expect(&Tok::LParen)?;
+            let v = self.int()?;
+            self.expect(&Tok::RParen)?;
+            if w == 0 || w > 64 {
+                return self.err(format!("unsupported literal width {w}"));
+            }
+            return Ok(self.g.konst(v & mask(w), w));
+        }
+        // primop?
+        if self.peek() == Some(&Tok::LParen) {
+            if let Some(builder) = prim_builder(&head) {
+                self.bump(); // (
+                let mut args: Vec<NodeId> = Vec::new();
+                let mut imms: Vec<u64> = Vec::new();
+                loop {
+                    match self.peek() {
+                        Some(Tok::Int(_)) => {
+                            let v = self.int()?;
+                            imms.push(v);
+                        }
+                        Some(Tok::RParen) => {}
+                        _ => {
+                            let a = self.expr()?;
+                            args.push(a);
+                        }
+                    }
+                    match self.bump() {
+                        Some(Tok::Comma) => continue,
+                        Some(Tok::RParen) => break,
+                        Some(got) => return self.err(format!("expected ',' or ')', got '{got}'")),
+                        None => return self.err("unterminated primop"),
+                    }
+                }
+                let widths: Vec<u8> = args.iter().map(|&a| self.g.width(a)).collect();
+                let op = builder(&imms, &widths).map_err(|msg| ParseError { line: self.line(), msg })?;
+                if args.len() != op.arity() {
+                    return self.err(format!(
+                        "{head} expects {} expression args, got {}",
+                        op.arity(),
+                        args.len()
+                    ));
+                }
+                return Ok(self.g.prim(op, &args));
+            }
+            return self.err(format!("unknown primitive op '{head}'"));
+        }
+        // identifier reference
+        match self.names.get(&head) {
+            Some(&id) => Ok(id),
+            None => self.err(format!("use of undefined signal '{head}'")),
+        }
+    }
+
+    fn resolve_pending(&mut self) -> Result<(), ParseError> {
+        let pending = std::mem::take(&mut self.pending);
+        for (target, src, line) in pending {
+            // register?
+            if let Some(&node) = self.names.get(&target) {
+                if matches!(self.g.nodes[node as usize].kind, NodeKind::Reg(_)) {
+                    self.g.connect_reg(node, src);
+                    continue;
+                }
+                return Err(ParseError { line, msg: format!("cannot connect to non-register '{target}'") });
+            }
+            // declared output?
+            if let Some(slot) = self.g.outputs.iter_mut().find(|(n, id)| n == &target && *id == u32::MAX)
+            {
+                slot.1 = src;
+                continue;
+            }
+            return Err(ParseError { line, msg: format!("connect to undeclared target '{target}'") });
+        }
+        // all outputs connected?
+        if let Some((name, _)) = self.g.outputs.iter().find(|(_, id)| *id == u32::MAX) {
+            return Err(ParseError { line: 0, msg: format!("output '{name}' never connected") });
+        }
+        Ok(())
+    }
+}
+
+type PrimBuilder = fn(&[u64], &[u8]) -> Result<PrimOp, String>;
+
+/// Map a mnemonic to a PrimOp constructor (imms = trailing integer params).
+fn prim_builder(name: &str) -> Option<PrimBuilder> {
+    macro_rules! simple {
+        ($op:expr) => {{
+            fn f(imms: &[u64], _w: &[u8]) -> Result<PrimOp, String> {
+                if !imms.is_empty() {
+                    return Err("unexpected integer parameter".into());
+                }
+                Ok($op)
+            }
+            Some(f as PrimBuilder)
+        }};
+    }
+    match name {
+        "add" => simple!(PrimOp::Add),
+        "sub" => simple!(PrimOp::Sub),
+        "mul" => simple!(PrimOp::Mul),
+        "div" => simple!(PrimOp::Div),
+        "rem" => simple!(PrimOp::Rem),
+        "lt" => simple!(PrimOp::Lt),
+        "leq" => simple!(PrimOp::Leq),
+        "gt" => simple!(PrimOp::Gt),
+        "geq" => simple!(PrimOp::Geq),
+        "eq" => simple!(PrimOp::Eq),
+        "neq" => simple!(PrimOp::Neq),
+        "and" => simple!(PrimOp::And),
+        "or" => simple!(PrimOp::Or),
+        "xor" => simple!(PrimOp::Xor),
+        "not" => simple!(PrimOp::Not),
+        "neg" => simple!(PrimOp::Neg),
+        "andr" => simple!(PrimOp::Andr),
+        "orr" => simple!(PrimOp::Orr),
+        "xorr" => simple!(PrimOp::Xorr),
+        "dshl" => simple!(PrimOp::Dshl),
+        "dshr" => simple!(PrimOp::Dshr),
+        "cat" => simple!(PrimOp::Cat),
+        "mux" => simple!(PrimOp::Mux),
+        "asUInt" => simple!(PrimOp::Id),
+        "shl" => {
+            fn f(imms: &[u64], _w: &[u8]) -> Result<PrimOp, String> {
+                match imms {
+                    [n] => Ok(PrimOp::Shl(*n as u8)),
+                    _ => Err("shl expects one integer parameter".into()),
+                }
+            }
+            Some(f)
+        }
+        "shr" => {
+            fn f(imms: &[u64], _w: &[u8]) -> Result<PrimOp, String> {
+                match imms {
+                    [n] => Ok(PrimOp::Shr(*n as u8)),
+                    _ => Err("shr expects one integer parameter".into()),
+                }
+            }
+            Some(f)
+        }
+        "bits" => {
+            fn f(imms: &[u64], w: &[u8]) -> Result<PrimOp, String> {
+                match imms {
+                    [hi, lo] if hi >= lo && (*hi as u8) < w.first().copied().unwrap_or(64) => {
+                        Ok(PrimOp::Bits(*hi as u8, *lo as u8))
+                    }
+                    [hi, lo] => Err(format!("bits({hi},{lo}) out of range")),
+                    _ => Err("bits expects (expr, hi, lo)".into()),
+                }
+            }
+            Some(f)
+        }
+        "head" => {
+            fn f(imms: &[u64], w: &[u8]) -> Result<PrimOp, String> {
+                match imms {
+                    [n] if *n > 0 && (*n as u8) <= w[0] => Ok(PrimOp::Head(*n as u8)),
+                    _ => Err("head parameter out of range".into()),
+                }
+            }
+            Some(f)
+        }
+        "tail" => {
+            fn f(imms: &[u64], w: &[u8]) -> Result<PrimOp, String> {
+                match imms {
+                    [n] if (*n as u8) < w[0] => Ok(PrimOp::Tail(*n as u8)),
+                    _ => Err("tail parameter out of range".into()),
+                }
+            }
+            Some(f)
+        }
+        "pad" => {
+            fn f(imms: &[u64], _w: &[u8]) -> Result<PrimOp, String> {
+                match imms {
+                    [n] if *n <= 64 => Ok(PrimOp::Pad(*n as u8)),
+                    _ => Err("pad parameter out of range".into()),
+                }
+            }
+            Some(f)
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::RefSim;
+
+    const COUNTER: &str = r#"
+circuit Counter :
+  module Counter :
+    input clock : Clock
+    input en : UInt<1>
+    output count : UInt<4>
+
+    reg r : UInt<4>, clock with : (reset => (reset, UInt<4>(0)))
+    node inc = tail(add(r, UInt<4>(1)), 1)
+    r <= mux(en, inc, r)
+    count <= r
+"#;
+
+    #[test]
+    fn parses_counter() {
+        let g = super::parse(COUNTER).unwrap();
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert_eq!(g.inputs.len(), 1); // clock ignored
+        assert_eq!(g.regs.len(), 1);
+        let mut sim = RefSim::new(g);
+        for _ in 0..6 {
+            sim.step(&[1]);
+        }
+        assert_eq!(sim.outputs()[0].1, 6);
+    }
+
+    #[test]
+    fn nested_exprs() {
+        let src = r#"
+circuit T :
+  module T :
+    input a : UInt<8>
+    input b : UInt<8>
+    output o : UInt<8>
+    node x = bits(add(and(a, b), UInt<8>(1)), 7, 0)
+    o <= x
+"#;
+        let g = super::parse(src).unwrap();
+        let mut sim = RefSim::new(g);
+        sim.step(&[0xF0, 0x3C]);
+        assert_eq!(sim.outputs()[0].1, (0xF0u64 & 0x3C) + 1);
+    }
+
+    #[test]
+    fn error_on_undefined_signal() {
+        let src = "circuit T :\n  module T :\n    output o : UInt<1>\n    o <= nope\n";
+        let e = super::parse(src).unwrap_err();
+        assert!(e.msg.contains("undefined"), "{e}");
+    }
+
+    #[test]
+    fn error_on_unconnected_output() {
+        let src = "circuit T :\n  module T :\n    input a : UInt<1>\n    output o : UInt<1>\n    skip\n";
+        let e = super::parse(src).unwrap_err();
+        assert!(e.msg.contains("never connected"), "{e}");
+    }
+
+    #[test]
+    fn error_on_bad_bits_range() {
+        let src = "circuit T :\n  module T :\n    input a : UInt<4>\n    output o : UInt<4>\n    node x = bits(a, 9, 0)\n    o <= x\n";
+        assert!(super::parse(src).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Graph → FIRRTL text. Used by the synthetic design generators to emit
+//! `.fir` files and by round-trip tests. Inverse of [`super::parse`] up to
+//! node naming: parsing re-infers widths, so the printer inserts explicit
+//! `bits`/`pad` adjustments wherever a node's declared width differs from
+//! the FIRRTL-inferred width of its expression.
+
+use std::fmt::Write as _;
+
+use crate::graph::ops::{result_width, PrimOp};
+use crate::graph::{Graph, NodeId, NodeKind};
+
+/// Render a graph as parseable FIRRTL text.
+pub fn print(g: &Graph) -> String {
+    let mut out = String::new();
+    let name = if g.name.is_empty() { "Top" } else { &g.name };
+    let _ = writeln!(out, "circuit {name} :");
+    let _ = writeln!(out, "  module {name} :");
+    let _ = writeln!(out, "    input clock : Clock");
+
+    // Stable, collision-free names: ports and regs keep their names,
+    // everything else becomes _n<id>.
+    let node_name = |id: NodeId| -> String {
+        let n = &g.nodes[id as usize];
+        match n.kind {
+            NodeKind::Input(i) => sanitize(&g.inputs[i as usize].name),
+            NodeKind::Reg(r) => sanitize(&g.regs[r as usize].name),
+            _ => format!("_n{id}"),
+        }
+    };
+
+    for p in &g.inputs {
+        let _ = writeln!(out, "    input {} : UInt<{}>", sanitize(&p.name), p.width);
+    }
+    for (i, (oname, src)) in g.outputs.iter().enumerate() {
+        let _ = writeln!(out, "    output {} : UInt<{}>", sanitize_out(oname, i), g.width(*src));
+    }
+    let _ = writeln!(out);
+    for r in &g.regs {
+        let _ = writeln!(
+            out,
+            "    reg {} : UInt<{}>, clock with : (reset => (reset, UInt<{}>({})))",
+            sanitize(&r.name),
+            r.width,
+            r.width,
+            r.init
+        );
+    }
+
+    for id in 0..g.nodes.len() as NodeId {
+        let n = &g.nodes[id as usize];
+        match n.kind {
+            NodeKind::Const(c) => {
+                let _ = writeln!(out, "    node _n{id} = UInt<{}>({})", n.width, c);
+            }
+            NodeKind::Prim(op) => {
+                let expr = prim_expr(g, op, &n.args, n.width, &node_name);
+                let _ = writeln!(out, "    node _n{id} = {expr}");
+            }
+            _ => {}
+        }
+    }
+
+    let _ = writeln!(out);
+    for r in &g.regs {
+        let _ = writeln!(out, "    {} <= {}", sanitize(&r.name), node_name(r.next));
+    }
+    for (i, (oname, src)) in g.outputs.iter().enumerate() {
+        let _ = writeln!(out, "    {} <= {}", sanitize_out(oname, i), node_name(*src));
+    }
+    out
+}
+
+/// FIRRTL identifiers: [A-Za-z_][A-Za-z0-9_$]*
+fn sanitize(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '$' { c } else { '_' })
+        .collect();
+    if s.is_empty() || s.chars().next().unwrap().is_ascii_digit() {
+        s.insert(0, '_');
+    }
+    s
+}
+
+fn sanitize_out(name: &str, idx: usize) -> String {
+    let s = sanitize(name);
+    // Output names may collide with internal signals; suffix with index
+    // only when the raw name is empty.
+    if s.is_empty() {
+        format!("out{idx}")
+    } else {
+        s
+    }
+}
+
+/// Render a primitive op expression, fixing up declared-vs-inferred width.
+fn prim_expr(g: &Graph, op: PrimOp, args: &[NodeId], declared: u8, name: &dyn Fn(NodeId) -> String) -> String {
+    let widths: Vec<u8> = args.iter().map(|&a| g.width(a)).collect();
+    let base = match op {
+        PrimOp::MuxChain(k) => {
+            // De-fuse into nested muxes (MuxChain is internal, not FIRRTL).
+            let k = k as usize;
+            let mut expr = name(args[2 * k]);
+            let mut w = g.width(args[2 * k]);
+            for i in (0..k).rev() {
+                let vw = g.width(args[2 * i + 1]);
+                w = w.max(vw);
+                expr = format!("mux({}, {}, {})", name(args[2 * i]), name(args[2 * i + 1]), expr);
+            }
+            return fix_width(expr, w, declared);
+        }
+        PrimOp::Shl(n) => format!("shl({}, {n})", name(args[0])),
+        PrimOp::Shr(n) => format!("shr({}, {n})", name(args[0])),
+        PrimOp::Bits(hi, lo) => format!("bits({}, {hi}, {lo})", name(args[0])),
+        PrimOp::Head(n) => format!("head({}, {n})", name(args[0])),
+        PrimOp::Tail(n) => format!("tail({}, {n})", name(args[0])),
+        PrimOp::Pad(n) => format!("pad({}, {n})", name(args[0])),
+        PrimOp::Id => format!("asUInt({})", name(args[0])),
+        _ => {
+            let parts: Vec<String> = args.iter().map(|&a| name(a)).collect();
+            format!("{}({})", op.mnemonic(), parts.join(", "))
+        }
+    };
+    fix_width(base, result_width(op, &widths), declared)
+}
+
+fn fix_width(expr: String, inferred: u8, declared: u8) -> String {
+    if inferred == declared {
+        expr
+    } else if inferred > declared {
+        format!("bits({expr}, {}, 0)", declared - 1)
+    } else {
+        format!("pad({expr}, {declared})")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::ops::PrimOp;
+    use crate::graph::{Graph, RefSim};
+
+    #[test]
+    fn prints_and_reparses_width_mismatches() {
+        let mut g = Graph::new("W");
+        let a = g.input("a", 8);
+        let b = g.input("b", 8);
+        // declared width narrower than inferred (add -> 9, declared 8)
+        let s = g.prim_w(PrimOp::Add, &[a, b], 8);
+        // declared wider than inferred
+        let x = g.prim_w(PrimOp::Xor, &[a, b], 12);
+        let c = g.prim(PrimOp::Cat, &[s, x]);
+        g.output("o", c);
+        let text = super::print(&g);
+        let g2 = crate::firrtl::parse(&text).expect(&text);
+        let mut s1 = RefSim::new(g);
+        let mut s2 = RefSim::new(g2);
+        s1.step(&[200, 100]);
+        s2.step(&[200, 100]);
+        assert_eq!(s1.outputs(), s2.outputs());
+    }
+
+    #[test]
+    fn muxchain_defuses() {
+        let mut g = Graph::new("M");
+        let s0 = g.input("s0", 1);
+        let v0 = g.input("v0", 4);
+        let s1 = g.input("s1", 1);
+        let v1 = g.input("v1", 4);
+        let d = g.input("d", 4);
+        let m = g.prim(PrimOp::MuxChain(2), &[s0, v0, s1, v1, d]);
+        g.output("o", m);
+        let text = super::print(&g);
+        assert!(text.contains("mux("));
+        let g2 = crate::firrtl::parse(&text).unwrap();
+        let mut a = RefSim::new(g);
+        let mut b = RefSim::new(g2);
+        for bits in 0..32u64 {
+            let inputs =
+                vec![bits & 1, (bits >> 1) & 0xF, (bits >> 2) & 1, 0xA, 0x5];
+            a.step(&inputs);
+            b.step(&inputs);
+            assert_eq!(a.outputs(), b.outputs());
+        }
+    }
+}

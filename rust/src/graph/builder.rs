@@ -1,0 +1,197 @@
+//! Random circuit generation for property-based testing, plus small
+//! hand-rolled building blocks shared by the synthetic design generators.
+
+use super::ops::PrimOp;
+use super::{Graph, NodeId};
+use crate::util::prng::Rng;
+
+/// Generate a random synchronous circuit with roughly `size` primitive ops.
+///
+/// The generator only produces valid graphs (operands before users, widths
+/// inferred) and biases towards the op mix found in real designs: heavy on
+/// mux/bit-select/logic, lighter on arithmetic — mirroring the paper's
+/// observation that mux chains dominate (§6.1, operator fusion).
+pub fn random_circuit(rng: &mut Rng, size: usize) -> Graph {
+    let mut g = Graph::new("random");
+    let n_inputs = 1 + rng.index(4);
+    let n_regs = 1 + rng.index(4.max(size / 4));
+    for i in 0..n_inputs {
+        let w = 1 + rng.index(16) as u8;
+        g.input(&format!("in{i}"), w);
+    }
+    let mut regs = Vec::new();
+    for i in 0..n_regs {
+        let w = 1 + rng.index(16) as u8;
+        let init = rng.bits(w);
+        regs.push(g.reg(&format!("r{i}"), w, init));
+    }
+    // a couple of constants to seed the pool
+    let mut pool: Vec<NodeId> = (0..g.nodes.len() as NodeId).collect();
+    for _ in 0..3 {
+        let w = 1 + rng.index(12) as u8;
+        let v = rng.bits(w);
+        pool.push(g.konst(v, w));
+    }
+
+    let n_ops = size.max(1);
+    for _ in 0..n_ops {
+        let id = random_op(&mut g, rng, &pool);
+        pool.push(id);
+    }
+
+    // connect registers to random pool nodes (width-adapted)
+    for &r in &regs {
+        let src = *rng.pick(&pool);
+        let rw = g.width(r);
+        let adapted = adapt_width(&mut g, src, rw);
+        g.connect_reg(r, adapted);
+    }
+    // a few outputs
+    let n_out = 1 + rng.index(3);
+    for i in 0..n_out {
+        let src = *rng.pick(&pool);
+        g.output(&format!("out{i}"), src);
+    }
+    debug_assert!(g.validate().is_empty(), "random_circuit invalid: {:?}", g.validate());
+    g
+}
+
+/// Append one random primitive op reading from `pool`.
+fn random_op(g: &mut Graph, rng: &mut Rng, pool: &[NodeId]) -> NodeId {
+    // Weighted op selection (mux/bits/logic-heavy).
+    let roll = rng.index(100);
+    let a = *rng.pick(pool);
+    let b = *rng.pick(pool);
+    let wa = g.width(a);
+    match roll {
+        0..=17 => {
+            // mux
+            let sel_src = *rng.pick(pool);
+            let sel = bit_of(g, rng, sel_src);
+            let fv = adapt_width(g, b, wa);
+            g.prim(PrimOp::Mux, &[sel, a, fv])
+        }
+        18..=29 => {
+            // bits extract
+            let hi = rng.index(wa as usize) as u8;
+            let lo = rng.index(hi as usize + 1) as u8;
+            g.prim(PrimOp::Bits(hi, lo), &[a])
+        }
+        30..=43 => {
+            let op = *rng.pick(&[PrimOp::And, PrimOp::Or, PrimOp::Xor]);
+            let b = adapt_width(g, b, wa);
+            g.prim(op, &[a, b])
+        }
+        44..=57 => {
+            let op = *rng.pick(&[PrimOp::Add, PrimOp::Sub]);
+            g.prim(op, &[a, b])
+        }
+        58..=61 => {
+            if wa.saturating_add(g.width(b)) <= 64 {
+                g.prim(PrimOp::Mul, &[a, b])
+            } else {
+                let bw = adapt_width(g, b, wa);
+                g.prim(PrimOp::Xor, &[a, bw])
+            }
+        }
+        62..=65 => {
+            let op = *rng.pick(&[PrimOp::Div, PrimOp::Rem]);
+            g.prim(op, &[a, b])
+        }
+        66..=73 => {
+            let op = *rng.pick(&[PrimOp::Eq, PrimOp::Neq, PrimOp::Lt, PrimOp::Leq, PrimOp::Gt, PrimOp::Geq]);
+            g.prim(op, &[a, b])
+        }
+        74..=79 => {
+            let op = *rng.pick(&[PrimOp::Not, PrimOp::Neg]);
+            g.prim(op, &[a])
+        }
+        80..=83 => {
+            let op = *rng.pick(&[PrimOp::Andr, PrimOp::Orr, PrimOp::Xorr]);
+            g.prim(op, &[a])
+        }
+        84..=88 => {
+            let n = rng.index(8) as u8 + 1;
+            if wa + n <= 64 {
+                g.prim(PrimOp::Shl(n), &[a])
+            } else {
+                g.prim(PrimOp::Shr(n.min(wa - 1)), &[a])
+            }
+        }
+        89..=92 => {
+            let n = rng.index(wa as usize) as u8;
+            g.prim(PrimOp::Shr(n), &[a])
+        }
+        93..=95 => {
+            if wa as usize + g.width(b) as usize <= 64 {
+                g.prim(PrimOp::Cat, &[a, b])
+            } else {
+                g.prim(PrimOp::Id, &[a])
+            }
+        }
+        96..=97 => {
+            let amt = g.konst(rng.index(wa as usize) as u64, 6.min(wa).max(1));
+            g.prim(PrimOp::Dshr, &[a, amt])
+        }
+        _ => {
+            let n = (wa + rng.index(4) as u8 + 1).min(64);
+            g.prim(PrimOp::Pad(n), &[a])
+        }
+    }
+}
+
+/// Reduce or widen `id` to exactly `w` bits.
+pub fn adapt_width(g: &mut Graph, id: NodeId, w: u8) -> NodeId {
+    let cur = g.width(id);
+    if cur == w {
+        id
+    } else if cur > w {
+        g.prim(PrimOp::Bits(w - 1, 0), &[id])
+    } else {
+        g.prim_w(PrimOp::Pad(w), &[id], w)
+    }
+}
+
+/// A 1-bit view of `id` (its LSB or an orr-reduction).
+pub fn bit_of(g: &mut Graph, rng: &mut Rng, id: NodeId) -> NodeId {
+    if g.width(id) == 1 {
+        id
+    } else if rng.chance(0.5) {
+        g.prim(PrimOp::Bits(0, 0), &[id])
+    } else {
+        g.prim(PrimOp::Orr, &[id])
+    }
+}
+
+/// Random input stimulus for a graph.
+pub fn random_inputs(rng: &mut Rng, g: &Graph) -> Vec<u64> {
+    g.inputs.iter().map(|p| rng.bits(p.width)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::RefSim;
+
+    #[test]
+    fn random_circuits_are_valid_and_run() {
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let g = random_circuit(&mut rng, 40);
+            assert!(g.validate().is_empty(), "seed {seed}: {:?}", g.validate());
+            let mut sim = RefSim::new(g);
+            for _ in 0..8 {
+                let inputs = random_inputs(&mut rng, &sim.graph);
+                sim.step(&inputs);
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_scale() {
+        let mut rng = Rng::new(1);
+        let small = random_circuit(&mut rng, 10);
+        let big = random_circuit(&mut rng, 500);
+        assert!(big.num_ops() > small.num_ops() * 5);
+    }
+}

@@ -1,0 +1,391 @@
+//! Primitive operations of the dataflow graph and their evaluation
+//! semantics.
+//!
+//! The op set covers the FIRRTL primitive operations used by our designs
+//! (§6.1 of the paper: "OIM's N rank supports all FIRRTL primitive
+//! operations and the custom mux-chain operation"). All values are
+//! unsigned, stored in `u64`, and every node's result is masked to its
+//! declared width — this single definition of semantics is shared by the
+//! reference interpreter, constant folding, the Einsum cascade evaluator
+//! and all seven kernels, so agreement between them is meaningful.
+
+/// Bit mask for a width in 1..=64.
+#[inline]
+pub fn mask(width: u8) -> u64 {
+    if width >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Primitive operation (with static immediates where FIRRTL has them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrimOp {
+    // Arithmetic (reducible in the paper's taxonomy)
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    // Comparisons
+    Lt,
+    Leq,
+    Gt,
+    Geq,
+    Eq,
+    Neq,
+    // Bitwise (reducible)
+    And,
+    Or,
+    Xor,
+    // Unary
+    Not,
+    Neg,
+    Andr,
+    Orr,
+    Xorr,
+    /// Static left shift by `n`.
+    Shl(u8),
+    /// Static right shift by `n`.
+    Shr(u8),
+    // Dynamic shifts
+    Dshl,
+    Dshr,
+    /// Concatenate: `(a << width(b)) | b`.
+    Cat,
+    /// Bit extract `[hi:lo]`.
+    Bits(u8, u8),
+    /// Top `n` bits.
+    Head(u8),
+    /// Drop top `n` bits.
+    Tail(u8),
+    /// Widen to `width + n` (value-preserving for UInt).
+    Pad(u8),
+    /// Select operation: `sel != 0 ? t : f` (args `[sel, t, f]`).
+    Mux,
+    /// Identity / copy (inserted by levelization, elided per §4.3).
+    Id,
+    /// Fused mux chain (operator fusion, §B.1): args
+    /// `[s0, v0, s1, v1, .., s_{k-1}, v_{k-1}, default]`; first true
+    /// selector wins.
+    MuxChain(u8),
+}
+
+impl PrimOp {
+    /// Number of graph arguments this op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            PrimOp::Not
+            | PrimOp::Neg
+            | PrimOp::Andr
+            | PrimOp::Orr
+            | PrimOp::Xorr
+            | PrimOp::Shl(_)
+            | PrimOp::Shr(_)
+            | PrimOp::Bits(..)
+            | PrimOp::Head(_)
+            | PrimOp::Tail(_)
+            | PrimOp::Pad(_)
+            | PrimOp::Id => 1,
+            PrimOp::Mux => 3,
+            PrimOp::MuxChain(k) => 2 * (*k as usize) + 1,
+            _ => 2,
+        }
+    }
+
+    /// Operation class per the paper §4.1: reducible / unary / select.
+    pub fn class(&self) -> OpClass {
+        match self {
+            PrimOp::Mux | PrimOp::MuxChain(_) => OpClass::Select,
+            p if p.arity() == 1 => OpClass::Unary,
+            _ => OpClass::Reducible,
+        }
+    }
+
+    /// Short mnemonic (used in FIRRTL text, VCD and reports).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            PrimOp::Add => "add",
+            PrimOp::Sub => "sub",
+            PrimOp::Mul => "mul",
+            PrimOp::Div => "div",
+            PrimOp::Rem => "rem",
+            PrimOp::Lt => "lt",
+            PrimOp::Leq => "leq",
+            PrimOp::Gt => "gt",
+            PrimOp::Geq => "geq",
+            PrimOp::Eq => "eq",
+            PrimOp::Neq => "neq",
+            PrimOp::And => "and",
+            PrimOp::Or => "or",
+            PrimOp::Xor => "xor",
+            PrimOp::Not => "not",
+            PrimOp::Neg => "neg",
+            PrimOp::Andr => "andr",
+            PrimOp::Orr => "orr",
+            PrimOp::Xorr => "xorr",
+            PrimOp::Shl(_) => "shl",
+            PrimOp::Shr(_) => "shr",
+            PrimOp::Dshl => "dshl",
+            PrimOp::Dshr => "dshr",
+            PrimOp::Cat => "cat",
+            PrimOp::Bits(..) => "bits",
+            PrimOp::Head(_) => "head",
+            PrimOp::Tail(_) => "tail",
+            PrimOp::Pad(_) => "pad",
+            PrimOp::Mux => "mux",
+            PrimOp::Id => "id",
+            PrimOp::MuxChain(_) => "muxchain",
+        }
+    }
+}
+
+/// The paper's three operation classes (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    Reducible,
+    Unary,
+    Select,
+}
+
+/// Evaluate a primitive op.
+///
+/// `args` are the (already width-masked) operand values, `arg_widths` their
+/// widths, `out_width` the result width. The result is masked to
+/// `out_width`.
+pub fn eval_prim(op: PrimOp, args: &[u64], arg_widths: &[u8], out_width: u8) -> u64 {
+    let a = args.first().copied().unwrap_or(0);
+    let b = args.get(1).copied().unwrap_or(0);
+    let raw = match op {
+        PrimOp::Add => a.wrapping_add(b),
+        PrimOp::Sub => a.wrapping_sub(b),
+        PrimOp::Mul => a.wrapping_mul(b),
+        PrimOp::Div => {
+            if b == 0 {
+                0
+            } else {
+                a / b
+            }
+        }
+        PrimOp::Rem => {
+            if b == 0 {
+                0
+            } else {
+                a % b
+            }
+        }
+        PrimOp::Lt => (a < b) as u64,
+        PrimOp::Leq => (a <= b) as u64,
+        PrimOp::Gt => (a > b) as u64,
+        PrimOp::Geq => (a >= b) as u64,
+        PrimOp::Eq => (a == b) as u64,
+        PrimOp::Neq => (a != b) as u64,
+        PrimOp::And => a & b,
+        PrimOp::Or => a | b,
+        PrimOp::Xor => a ^ b,
+        PrimOp::Not => !a,
+        PrimOp::Neg => a.wrapping_neg(),
+        PrimOp::Andr => (a == mask(arg_widths[0])) as u64,
+        PrimOp::Orr => (a != 0) as u64,
+        PrimOp::Xorr => (a.count_ones() & 1) as u64,
+        PrimOp::Shl(n) => {
+            if n >= 64 {
+                0
+            } else {
+                a << n
+            }
+        }
+        PrimOp::Shr(n) => {
+            if n >= 64 {
+                0
+            } else {
+                a >> n
+            }
+        }
+        PrimOp::Dshl => {
+            if b >= 64 {
+                0
+            } else {
+                a << b
+            }
+        }
+        PrimOp::Dshr => {
+            if b >= 64 {
+                0
+            } else {
+                a >> b
+            }
+        }
+        PrimOp::Cat => {
+            let wb = arg_widths[1];
+            if wb >= 64 {
+                b
+            } else {
+                (a << wb) | b
+            }
+        }
+        PrimOp::Bits(hi, lo) => (a >> lo) & mask(hi - lo + 1),
+        PrimOp::Head(n) => a >> (arg_widths[0] - n),
+        PrimOp::Tail(n) => a & mask(arg_widths[0] - n),
+        PrimOp::Pad(_) => a,
+        PrimOp::Mux => {
+            if a != 0 {
+                b
+            } else {
+                args[2]
+            }
+        }
+        PrimOp::Id => a,
+        PrimOp::MuxChain(k) => {
+            let k = k as usize;
+            let mut v = args[2 * k]; // default
+            for i in (0..k).rev() {
+                if args[2 * i] != 0 {
+                    v = args[2 * i + 1];
+                }
+            }
+            // NOTE: iterating in reverse and overwriting implements
+            // "first true selector wins".
+            v
+        }
+    };
+    raw & mask(out_width)
+}
+
+/// FIRRTL-style result width for an op given argument widths.
+pub fn result_width(op: PrimOp, arg_widths: &[u8]) -> u8 {
+    let a = arg_widths.first().copied().unwrap_or(1);
+    let b = arg_widths.get(1).copied().unwrap_or(1);
+    let w = match op {
+        PrimOp::Add | PrimOp::Sub => a.max(b) + 1,
+        PrimOp::Mul => a + b,
+        PrimOp::Div => a,
+        PrimOp::Rem => a.min(b),
+        PrimOp::Lt
+        | PrimOp::Leq
+        | PrimOp::Gt
+        | PrimOp::Geq
+        | PrimOp::Eq
+        | PrimOp::Neq
+        | PrimOp::Andr
+        | PrimOp::Orr
+        | PrimOp::Xorr => 1,
+        PrimOp::And | PrimOp::Or | PrimOp::Xor => a.max(b),
+        PrimOp::Not | PrimOp::Neg => a,
+        PrimOp::Shl(n) => a + n,
+        PrimOp::Shr(n) => a.saturating_sub(n).max(1),
+        PrimOp::Dshl => a, // truncating dshl (lowered form)
+        PrimOp::Dshr => a,
+        PrimOp::Cat => a + b,
+        PrimOp::Bits(hi, lo) => hi - lo + 1,
+        PrimOp::Head(n) => n,
+        PrimOp::Tail(n) => a - n,
+        PrimOp::Pad(n) => a.max(n),
+        PrimOp::Mux => b.max(arg_widths[2]),
+        PrimOp::Id => a,
+        PrimOp::MuxChain(k) => {
+            let mut w = arg_widths[2 * (k as usize)];
+            for i in 0..(k as usize) {
+                w = w.max(arg_widths[2 * i + 1]);
+            }
+            w
+        }
+    };
+    w.min(64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(op: PrimOp, args: &[u64], widths: &[u8], out: u8) -> u64 {
+        eval_prim(op, args, widths, out)
+    }
+
+    #[test]
+    fn arithmetic_masks() {
+        assert_eq!(ev(PrimOp::Add, &[7, 1], &[3, 3], 3), 0); // 8 masked to 3 bits
+        assert_eq!(ev(PrimOp::Add, &[7, 1], &[3, 3], 4), 8);
+        assert_eq!(ev(PrimOp::Sub, &[0, 1], &[4, 4], 4), 15); // wraps
+        assert_eq!(ev(PrimOp::Mul, &[6, 7], &[3, 3], 6), 42);
+    }
+
+    #[test]
+    fn division_by_zero_is_zero() {
+        assert_eq!(ev(PrimOp::Div, &[5, 0], &[4, 4], 4), 0);
+        assert_eq!(ev(PrimOp::Rem, &[5, 0], &[4, 4], 4), 0);
+        assert_eq!(ev(PrimOp::Div, &[13, 3], &[4, 4], 4), 4);
+        assert_eq!(ev(PrimOp::Rem, &[13, 3], &[4, 4], 2), 1);
+    }
+
+    #[test]
+    fn comparisons() {
+        assert_eq!(ev(PrimOp::Lt, &[2, 3], &[4, 4], 1), 1);
+        assert_eq!(ev(PrimOp::Geq, &[3, 3], &[4, 4], 1), 1);
+        assert_eq!(ev(PrimOp::Neq, &[3, 3], &[4, 4], 1), 0);
+    }
+
+    #[test]
+    fn reductions() {
+        assert_eq!(ev(PrimOp::Andr, &[0b111], &[3], 1), 1);
+        assert_eq!(ev(PrimOp::Andr, &[0b101], &[3], 1), 0);
+        assert_eq!(ev(PrimOp::Orr, &[0], &[3], 1), 0);
+        assert_eq!(ev(PrimOp::Xorr, &[0b110], &[3], 1), 0);
+        assert_eq!(ev(PrimOp::Xorr, &[0b100], &[3], 1), 1);
+    }
+
+    #[test]
+    fn shifts_and_slices() {
+        assert_eq!(ev(PrimOp::Shl(2), &[0b11], &[2], 4), 0b1100);
+        assert_eq!(ev(PrimOp::Shr(1), &[0b110], &[3], 2), 0b11);
+        assert_eq!(ev(PrimOp::Dshl, &[1, 70], &[4, 8], 4), 0); // overshift
+        assert_eq!(ev(PrimOp::Bits(3, 1), &[0b1010], &[4], 3), 0b101);
+        assert_eq!(ev(PrimOp::Head(2), &[0b1011], &[4], 2), 0b10);
+        assert_eq!(ev(PrimOp::Tail(1), &[0b1011], &[4], 3), 0b011);
+    }
+
+    #[test]
+    fn cat_orders_high_low() {
+        assert_eq!(ev(PrimOp::Cat, &[0b10, 0b01], &[2, 2], 4), 0b1001);
+    }
+
+    #[test]
+    fn mux_and_chain() {
+        assert_eq!(ev(PrimOp::Mux, &[1, 5, 9], &[1, 4, 4], 4), 5);
+        assert_eq!(ev(PrimOp::Mux, &[0, 5, 9], &[1, 4, 4], 4), 9);
+        // chain: sel0=0, sel1=1 -> v1; default otherwise
+        let args = [0u64, 10, 1, 11, 99];
+        let widths = [1u8, 4, 1, 4, 7];
+        assert_eq!(ev(PrimOp::MuxChain(2), &args, &widths, 7), 11);
+        let args = [0u64, 10, 0, 11, 99];
+        assert_eq!(ev(PrimOp::MuxChain(2), &args, &widths, 7), 99);
+        // first-true-wins
+        let args = [1u64, 10, 1, 11, 99];
+        assert_eq!(ev(PrimOp::MuxChain(2), &args, &widths, 7), 10);
+    }
+
+    #[test]
+    fn classes() {
+        assert_eq!(PrimOp::Add.class(), OpClass::Reducible);
+        assert_eq!(PrimOp::Not.class(), OpClass::Unary);
+        assert_eq!(PrimOp::Mux.class(), OpClass::Select);
+        assert_eq!(PrimOp::MuxChain(3).class(), OpClass::Select);
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(result_width(PrimOp::Add, &[3, 5]), 6);
+        assert_eq!(result_width(PrimOp::Cat, &[3, 5]), 8);
+        assert_eq!(result_width(PrimOp::Bits(4, 2), &[8]), 3);
+        assert_eq!(result_width(PrimOp::Mul, &[40, 40]), 64); // clamped
+    }
+
+    #[test]
+    fn width64_edge_cases() {
+        assert_eq!(mask(64), u64::MAX);
+        assert_eq!(ev(PrimOp::Add, &[u64::MAX, 1], &[64, 64], 64), 0);
+        assert_eq!(ev(PrimOp::Not, &[0], &[64], 64), u64::MAX);
+        assert_eq!(ev(PrimOp::Andr, &[u64::MAX], &[64], 1), 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Constant folding / propagation (paper §6.1: "classical optimizations,
+//! e.g. constant propagation, as a means to optimize the OIM").
+//!
+//! Folds primitive ops whose operands are all constants, and resolves muxes
+//! with constant selectors (forwarding the surviving branch when widths
+//! allow, otherwise via an explicit `Pad`).
+
+use crate::graph::ops::{eval_prim, PrimOp};
+use crate::graph::{Graph, NodeKind};
+
+pub fn run(g: &Graph) -> Graph {
+    super::rewrite(g, |rw, g, id| {
+        let node = &g.nodes[id as usize];
+        let NodeKind::Prim(op) = node.kind else {
+            return rw.emit_default(g, id);
+        };
+        // Gather new-graph operand info.
+        let new_args: Vec<_> = node.args.iter().map(|&a| rw.map[a as usize]).collect();
+        let consts: Option<Vec<u64>> = new_args
+            .iter()
+            .map(|&a| match rw.out.nodes[a as usize].kind {
+                NodeKind::Const(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        if let Some(vals) = consts {
+            let widths: Vec<u8> = new_args.iter().map(|&a| rw.out.width(a)).collect();
+            let v = eval_prim(op, &vals, &widths, node.width);
+            return rw.out.konst(v, node.width);
+        }
+        // Mux with constant selector: keep only the taken branch.
+        if op == PrimOp::Mux {
+            if let NodeKind::Const(sel) = rw.out.nodes[new_args[0] as usize].kind {
+                let taken = if sel != 0 { new_args[1] } else { new_args[2] };
+                let tw = rw.out.width(taken);
+                if tw == node.width {
+                    return taken;
+                } else if tw < node.width {
+                    return rw.out.prim_w(PrimOp::Pad(node.width), &[taken], node.width);
+                }
+                // taken wider than mux result cannot happen (mux width =
+                // max of branches) — fall through defensively.
+            }
+        }
+        // Algebraic simplifications that need only one constant operand.
+        if new_args.len() == 2 {
+            let c0 = matches!(rw.out.nodes[new_args[0] as usize].kind, NodeKind::Const(0));
+            let c1 = matches!(rw.out.nodes[new_args[1] as usize].kind, NodeKind::Const(0));
+            match op {
+                PrimOp::And if c0 || c1 => return rw.out.konst(0, node.width),
+                PrimOp::Mul if c0 || c1 => return rw.out.konst(0, node.width),
+                _ => {}
+            }
+        }
+        rw.emit_default(g, id)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, NodeKind, RefSim};
+
+    #[test]
+    fn folds_constant_tree() {
+        let mut g = Graph::new("t");
+        let a = g.konst(3, 4);
+        let b = g.konst(5, 4);
+        let s = g.prim(PrimOp::Add, &[a, b]); // 8
+        let m = g.prim(PrimOp::Mul, &[s, b]); // 40
+        g.output("o", m);
+        let out = run(&g);
+        assert_eq!(out.num_ops(), 0);
+        let (_, o) = &out.outputs[0];
+        assert!(matches!(out.nodes[*o as usize].kind, NodeKind::Const(40)));
+    }
+
+    #[test]
+    fn const_mux_selector() {
+        let mut g = Graph::new("t");
+        let sel = g.konst(1, 1);
+        let a = g.input("a", 8);
+        let b = g.input("b", 8);
+        let m = g.prim(PrimOp::Mux, &[sel, a, b]);
+        g.output("o", m);
+        let out = run(&g);
+        assert_eq!(out.num_ops(), 0);
+        let mut s = RefSim::new(out);
+        s.step(&[7, 9]);
+        assert_eq!(s.outputs()[0].1, 7);
+    }
+
+    #[test]
+    fn and_with_zero() {
+        let mut g = Graph::new("t");
+        let z = g.konst(0, 8);
+        let a = g.input("a", 8);
+        let m = g.prim(PrimOp::And, &[a, z]);
+        g.output("o", m);
+        let out = run(&g);
+        assert_eq!(out.num_ops(), 0);
+    }
+
+    #[test]
+    fn semantics_preserved_on_partial_consts() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", 8);
+        let c = g.konst(12, 8);
+        let s = g.prim_w(PrimOp::Add, &[a, c], 8);
+        g.output("o", s);
+        let out = run(&g);
+        let mut s1 = RefSim::new(g);
+        let mut s2 = RefSim::new(out);
+        s1.step(&[30]);
+        s2.step(&[30]);
+        assert_eq!(s1.outputs(), s2.outputs());
+    }
+}

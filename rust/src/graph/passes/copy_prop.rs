@@ -1,0 +1,60 @@
+//! Copy propagation (paper §B.1, data level): forward uses of `Id` nodes to
+//! their sources, so the identities inserted during cascade construction —
+//! and any copies left by other passes — never cost an operation.
+//!
+//! Only width-preserving copies are forwarded: downstream ops like `cat`,
+//! `head` and `andr` consume argument *widths*, so forwarding a node of a
+//! different width would change semantics.
+
+use crate::graph::ops::PrimOp;
+use crate::graph::{Graph, NodeKind};
+
+pub fn run(g: &Graph) -> Graph {
+    super::rewrite(g, |rw, g, id| {
+        let node = &g.nodes[id as usize];
+        if let NodeKind::Prim(PrimOp::Id) = node.kind {
+            let src_new = rw.map[node.args[0] as usize];
+            if rw.out.width(src_new) == node.width {
+                return src_new; // forward; never emitted
+            }
+        }
+        rw.emit_default(g, id)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::PrimOp;
+    use crate::graph::{Graph, RefSim};
+
+    #[test]
+    fn forwards_chained_ids() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", 8);
+        let i1 = g.prim(PrimOp::Id, &[a]);
+        let i2 = g.prim(PrimOp::Id, &[i1]);
+        let r = g.prim(PrimOp::Not, &[i2]);
+        g.output("o", r);
+        let out = run(&g);
+        // both ids gone
+        assert_eq!(out.num_ops(), 1);
+        let mut s1 = RefSim::new(g);
+        let mut s2 = RefSim::new(out);
+        s1.step(&[0x5A]);
+        s2.step(&[0x5A]);
+        assert_eq!(s1.outputs(), s2.outputs());
+    }
+
+    #[test]
+    fn keeps_width_changing_copy() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", 4);
+        // Id with an artificially widened width must not be forwarded
+        let w = g.prim_w(PrimOp::Id, &[a], 8);
+        let c = g.prim(PrimOp::Cat, &[a, w]); // cat depends on arg width 8
+        g.output("o", c);
+        let out = run(&g);
+        assert_eq!(out.num_ops(), 2);
+    }
+}

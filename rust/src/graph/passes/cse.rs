@@ -1,0 +1,87 @@
+//! Common-subexpression elimination. Structurally identical nodes (same op,
+//! same already-deduplicated operands, same width) are merged. This is the
+//! per-node form of the "instance reuse" idea in Box 1: identical logic is
+//! represented once in the OIM.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, NodeKind};
+
+#[derive(Hash, PartialEq, Eq)]
+enum Key {
+    Const(u64, u8),
+    Prim(crate::graph::ops::PrimOp, Vec<NodeId>, u8),
+}
+
+pub fn run(g: &Graph) -> Graph {
+    let mut seen: HashMap<Key, NodeId> = HashMap::new();
+    super::rewrite(g, |rw, g, id| {
+        let node = &g.nodes[id as usize];
+        let key = match node.kind {
+            NodeKind::Const(c) => Key::Const(c, node.width),
+            NodeKind::Prim(op) => {
+                let new_args: Vec<NodeId> = node.args.iter().map(|&a| rw.map[a as usize]).collect();
+                Key::Prim(op, new_args, node.width)
+            }
+            // Never merge inputs/registers: they are distinct state.
+            _ => return rw.emit_default(g, id),
+        };
+        if let Some(&existing) = seen.get(&key) {
+            return existing;
+        }
+        let new_id = rw.emit_default(g, id);
+        seen.insert(key, new_id);
+        new_id
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::PrimOp;
+    use crate::graph::{Graph, RefSim};
+
+    #[test]
+    fn merges_identical_subtrees() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", 8);
+        let b = g.input("b", 8);
+        let x1 = g.prim_w(PrimOp::Add, &[a, b], 8);
+        let x2 = g.prim_w(PrimOp::Add, &[a, b], 8);
+        let y = g.prim_w(PrimOp::Xor, &[x1, x2], 8);
+        g.output("o", y);
+        let out = run(&g);
+        assert_eq!(out.num_ops(), 2); // one add + the xor
+        let mut s1 = RefSim::new(g);
+        let mut s2 = RefSim::new(out);
+        s1.step(&[3, 9]);
+        s2.step(&[3, 9]);
+        assert_eq!(s1.outputs(), s2.outputs());
+    }
+
+    #[test]
+    fn does_not_merge_different_widths() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", 8);
+        let x1 = g.prim_w(PrimOp::Not, &[a], 8);
+        let x2 = g.prim_w(PrimOp::Not, &[a], 4); // different width
+        let y = g.prim(PrimOp::Cat, &[x1, x2]);
+        g.output("o", y);
+        let out = run(&g);
+        assert_eq!(out.num_ops(), 3);
+    }
+
+    #[test]
+    fn merges_duplicate_constants() {
+        let mut g = Graph::new("t");
+        let c1 = g.konst(7, 4);
+        let c2 = g.konst(7, 4);
+        let s = g.prim(PrimOp::Add, &[c1, c2]);
+        g.output("o", s);
+        let out = run(&g);
+        // both constants collapse to one node
+        let n_consts =
+            out.nodes.iter().filter(|n| matches!(n.kind, crate::graph::NodeKind::Const(_))).count();
+        assert_eq!(n_consts, 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! Dead-code elimination: drop nodes not reachable from outputs or from the
+//! next-state logic of live registers. Input ports are always preserved
+//! (they are the module interface); registers are dropped when nothing
+//! observable depends on them.
+
+use crate::graph::{Graph, NodeId, NodeKind};
+
+pub fn run(g: &Graph) -> Graph {
+    let n = g.nodes.len();
+    let mut live = vec![false; n];
+    let mut stack: Vec<NodeId> = Vec::new();
+
+    let mark = |id: NodeId, live: &mut Vec<bool>, stack: &mut Vec<NodeId>| {
+        if !live[id as usize] {
+            live[id as usize] = true;
+            stack.push(id);
+        }
+    };
+
+    for (_, o) in &g.outputs {
+        mark(*o, &mut live, &mut stack);
+    }
+    // Inputs are interface: live by definition.
+    for p in &g.inputs {
+        mark(p.node, &mut live, &mut stack);
+    }
+    while let Some(id) = stack.pop() {
+        let node = &g.nodes[id as usize];
+        for &a in &node.args {
+            mark(a, &mut live, &mut stack);
+        }
+        // A live register keeps its next-state cone alive.
+        if let NodeKind::Reg(r) = node.kind {
+            mark(g.regs[r as usize].next, &mut live, &mut stack);
+        }
+    }
+
+    // Rebuild with only live nodes. Maps dead nodes to u32::MAX (never read).
+    let mut out = Graph::new(&g.name);
+    let mut map = vec![u32::MAX; n];
+    for id in 0..n {
+        if !live[id] {
+            continue;
+        }
+        let node = &g.nodes[id];
+        let new_id = match node.kind {
+            NodeKind::Const(c) => out.konst(c, node.width),
+            NodeKind::Input(_) => out.input(node.name.as_deref().unwrap_or("in"), node.width),
+            NodeKind::Reg(r) => {
+                let def = &g.regs[r as usize];
+                out.reg(&def.name, def.width, def.init)
+            }
+            NodeKind::Prim(op) => {
+                let args: Vec<NodeId> = node.args.iter().map(|&a| map[a as usize]).collect();
+                let nid = out.prim_w(op, &args, node.width);
+                if let Some(name) = &node.name {
+                    out.name_node(nid, name);
+                }
+                nid
+            }
+        };
+        map[id] = new_id;
+    }
+    // Reconnect live registers.
+    for def in &g.regs {
+        if live[def.node as usize] {
+            let new_node = map[def.node as usize];
+            if let NodeKind::Reg(new_ri) = out.nodes[new_node as usize].kind {
+                out.regs[new_ri as usize].next = map[def.next as usize];
+            }
+        }
+    }
+    for (name, o) in &g.outputs {
+        out.outputs.push((name.clone(), map[*o as usize]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::PrimOp;
+    use crate::graph::{Graph, RefSim};
+
+    #[test]
+    fn drops_unreachable_ops() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", 8);
+        let _dead = g.prim(PrimOp::Not, &[a]);
+        let live = g.prim(PrimOp::Neg, &[a]);
+        g.output("o", live);
+        let out = run(&g);
+        assert_eq!(out.num_ops(), 1);
+    }
+
+    #[test]
+    fn keeps_register_feedback_cones() {
+        let mut g = Graph::new("t");
+        let r = g.reg("r", 8, 1);
+        let one = g.konst(1, 8);
+        let nxt = g.prim_w(PrimOp::Add, &[r, one], 8);
+        g.connect_reg(r, nxt);
+        g.output("o", r);
+        let out = run(&g);
+        assert_eq!(out.num_ops(), 1);
+        assert_eq!(out.regs.len(), 1);
+        let mut s = RefSim::new(out);
+        s.step(&[]);
+        s.step(&[]);
+        assert_eq!(s.outputs()[0].1, 3);
+    }
+
+    #[test]
+    fn drops_unobserved_register() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", 8);
+        let r = g.reg("dead_reg", 8, 0);
+        let nxt = g.prim_w(PrimOp::Add, &[r, a], 8);
+        g.connect_reg(r, nxt);
+        g.output("o", a); // register never observed
+        let out = run(&g);
+        assert_eq!(out.regs.len(), 0);
+        assert_eq!(out.num_ops(), 0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Dataflow-graph optimization passes (paper §6.1 and Box 1, bold entries).
+//!
+//! * [`copy_prop`] — copy propagation (data level)
+//! * [`const_fold`] — constant folding/propagation (data level)
+//! * [`cse`] — common-subexpression elimination (data level; enables the
+//!   dedup-style reuse described in Box 1)
+//! * [`mux_fusion`] — mux-chain extraction (cascade-level operator fusion)
+//! * [`dce`] — dead code elimination
+//!
+//! Every pass is a semantics-preserving graph→graph rewrite (property-tested
+//! against the reference interpreter in `tests/passes_equiv.rs`).
+
+pub mod const_fold;
+pub mod copy_prop;
+pub mod cse;
+pub mod dce;
+pub mod mux_fusion;
+
+use super::{Graph, NodeId, NodeKind};
+
+/// Shared machinery for streaming rewrites over a graph in topological
+/// (node-id) order. Keeps port/register indices consistent in the output.
+pub struct Rewriter {
+    pub out: Graph,
+    /// old node id -> new node id
+    pub map: Vec<NodeId>,
+}
+
+impl Rewriter {
+    pub fn new(g: &Graph) -> Self {
+        let out = Graph::new(&g.name);
+        Rewriter { out, map: Vec::with_capacity(g.nodes.len()) }
+    }
+
+    /// Default translation of a node: push an equivalent node into `out`
+    /// with remapped args. Sources keep their port/register index spaces
+    /// dense and in order.
+    pub fn emit_default(&mut self, g: &Graph, id: NodeId) -> NodeId {
+        let node = &g.nodes[id as usize];
+        let new_args: Vec<NodeId> = node.args.iter().map(|&a| self.map[a as usize]).collect();
+        match node.kind {
+            NodeKind::Const(c) => self.out.konst(c, node.width),
+            NodeKind::Input(_) => {
+                let name = node.name.as_deref().unwrap_or("in");
+                self.out.input(name, node.width)
+            }
+            NodeKind::Reg(r) => {
+                let def = &g.regs[r as usize];
+                self.out.reg(&def.name, def.width, def.init)
+            }
+            NodeKind::Prim(op) => {
+                let nid = self.out.prim_w(op, &new_args, node.width);
+                if let Some(name) = &node.name {
+                    self.out.name_node(nid, name);
+                }
+                nid
+            }
+        }
+    }
+
+    /// Finish: connect registers and outputs through the map.
+    /// `reg_live` optionally drops registers (DCE); inputs are always kept.
+    pub fn finish(mut self, g: &Graph) -> Graph {
+        // regs were re-created in order by emit; connect their nexts
+        for (ri, def) in g.regs.iter().enumerate() {
+            // find the new reg node via the map of its old node
+            let new_node = self.map[def.node as usize];
+            if let NodeKind::Reg(new_ri) = self.out.nodes[new_node as usize].kind {
+                let _ = ri;
+                let new_next = self.map[def.next as usize];
+                self.out.regs[new_ri as usize].next = new_next;
+            }
+        }
+        for (name, o) in &g.outputs {
+            let new_o = self.map[*o as usize];
+            self.out.outputs.push((name.clone(), new_o));
+        }
+        self.out
+    }
+}
+
+/// Streaming rewrite: `f(rw, g, id)` must return the new node id for `id`
+/// (either by emitting or by forwarding to an existing new node).
+pub fn rewrite(g: &Graph, mut f: impl FnMut(&mut Rewriter, &Graph, NodeId) -> NodeId) -> Graph {
+    let mut rw = Rewriter::new(g);
+    for id in 0..g.nodes.len() as NodeId {
+        let new_id = f(&mut rw, g, id);
+        rw.map.push(new_id);
+    }
+    rw.finish(g)
+}
+
+/// Count uses of each node (args + register nexts + outputs).
+pub fn use_counts(g: &Graph) -> Vec<u32> {
+    let mut uses = vec![0u32; g.nodes.len()];
+    for n in &g.nodes {
+        for &a in &n.args {
+            uses[a as usize] += 1;
+        }
+    }
+    for r in &g.regs {
+        uses[r.next as usize] += 1;
+    }
+    for (_, o) in &g.outputs {
+        uses[*o as usize] += 1;
+    }
+    uses
+}
+
+/// Per-pass statistics for compile reports.
+#[derive(Debug, Clone)]
+pub struct PassReport {
+    pub pass: &'static str,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+}
+
+/// The standard optimization pipeline (paper Fig 14, "dataflow graph
+/// optimizations"). Returns the optimized graph plus a per-pass report.
+pub fn optimize(g: &Graph) -> (Graph, Vec<PassReport>) {
+    let mut reports = Vec::new();
+    let mut cur = g.clone();
+    // Two rounds: folding exposes copies, CSE exposes dead code, and
+    // mux fusion benefits from a cleaned graph.
+    for round in 0..2 {
+        for (name, pass) in [
+            ("copy_prop", copy_prop::run as fn(&Graph) -> Graph),
+            ("const_fold", const_fold::run),
+            ("cse", cse::run),
+            ("mux_fusion", mux_fusion::run),
+            ("dce", dce::run),
+        ] {
+            // mux fusion only on the final round so CSE sees plain muxes
+            if name == "mux_fusion" && round == 0 {
+                continue;
+            }
+            let before = cur.nodes.len();
+            cur = pass(&cur);
+            reports.push(PassReport { pass: name, nodes_before: before, nodes_after: cur.nodes.len() });
+            debug_assert!(cur.validate().is_empty(), "{name} broke the graph: {:?}", cur.validate());
+        }
+    }
+    (cur, reports)
+}
+
+/// Lightweight pipeline used where mux fusion must be disabled (e.g.
+/// waveform mode keeps individual muxes visible).
+pub fn optimize_no_fusion(g: &Graph) -> Graph {
+    let mut cur = copy_prop::run(g);
+    cur = const_fold::run(&cur);
+    cur = cse::run(&cur);
+    dce::run(&cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::{random_circuit, random_inputs};
+    use crate::graph::RefSim;
+    use crate::util::prng::Rng;
+
+    /// The full pipeline must preserve I/O behaviour on random circuits.
+    #[test]
+    fn optimize_preserves_semantics() {
+        for seed in 0..12 {
+            let mut rng = Rng::new(100 + seed);
+            let g = random_circuit(&mut rng, 80);
+            let (opt, _) = optimize(&g);
+            assert!(opt.validate().is_empty());
+            let mut a = RefSim::new(g);
+            let mut b = RefSim::new(opt);
+            for cycle in 0..16 {
+                let inputs = random_inputs(&mut rng, &a.graph);
+                a.step(&inputs);
+                b.step(&inputs);
+                assert_eq!(a.outputs(), b.outputs(), "seed {seed} cycle {cycle}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimize_reduces_node_count() {
+        let mut rng = Rng::new(7);
+        let g = random_circuit(&mut rng, 200);
+        let (opt, reports) = optimize(&g);
+        assert!(opt.nodes.len() <= g.nodes.len());
+        assert!(!reports.is_empty());
+    }
+}

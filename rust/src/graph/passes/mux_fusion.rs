@@ -1,0 +1,121 @@
+//! Operator fusion (paper §B.1, cascade level): extract mux chains —
+//! priority-select ladders of the form
+//! `mux(s0, v0, mux(s1, v1, mux(s2, v2, d)))` — into a single fused
+//! [`PrimOp::MuxChain`] operation. Real designs are dominated by these
+//! ladders (`when`/`elsewhen` lowering), and fusing them removes the
+//! intermediate layer-to-layer traffic the paper attributes to mux chains.
+
+use crate::graph::ops::PrimOp;
+use crate::graph::{Graph, NodeId, NodeKind};
+
+/// Maximum fused chain length (keeps `MuxChain` arity bounded).
+pub const MAX_CHAIN: usize = 24;
+
+pub fn run(g: &Graph) -> Graph {
+    let uses = super::use_counts(g);
+    // A mux is *absorbable* if it is the false-arm of exactly one user and
+    // nothing else observes it.
+    let is_mux = |id: NodeId| matches!(g.nodes[id as usize].kind, NodeKind::Prim(PrimOp::Mux));
+
+    super::rewrite(g, |rw, g, id| {
+        let node = &g.nodes[id as usize];
+        if !matches!(node.kind, NodeKind::Prim(PrimOp::Mux)) {
+            return rw.emit_default(g, id);
+        }
+        // Walk the false-arm chain in the *old* graph.
+        let mut sels_vals: Vec<(NodeId, NodeId)> = vec![(node.args[0], node.args[1])];
+        let mut tail = node.args[2];
+        while is_mux(tail) && uses[tail as usize] == 1 && sels_vals.len() < MAX_CHAIN {
+            let t = &g.nodes[tail as usize];
+            sels_vals.push((t.args[0], t.args[1]));
+            tail = t.args[2];
+        }
+        if sels_vals.len() < 2 {
+            return rw.emit_default(g, id);
+        }
+        let mut new_args: Vec<NodeId> = Vec::with_capacity(sels_vals.len() * 2 + 1);
+        for (s, v) in &sels_vals {
+            new_args.push(rw.map[*s as usize]);
+            new_args.push(rw.map[*v as usize]);
+        }
+        new_args.push(rw.map[tail as usize]);
+        let fused = rw.out.prim_w(PrimOp::MuxChain(sels_vals.len() as u8), &new_args, node.width);
+        if let Some(name) = &node.name {
+            rw.out.name_node(fused, name);
+        }
+        fused
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::passes::dce;
+    use crate::graph::{builder, Graph, RefSim};
+    use crate::util::prng::Rng;
+
+    fn ladder(depth: usize) -> Graph {
+        let mut g = Graph::new("ladder");
+        let mut sels = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..depth {
+            sels.push(g.input(&format!("s{i}"), 1));
+            vals.push(g.input(&format!("v{i}"), 8));
+        }
+        let d = g.input("d", 8);
+        let mut cur = d;
+        for i in (0..depth).rev() {
+            cur = g.prim(PrimOp::Mux, &[sels[i], vals[i], cur]);
+        }
+        g.output("o", cur);
+        g
+    }
+
+    #[test]
+    fn fuses_ladder_into_single_chain() {
+        let g = ladder(5);
+        let fused = dce::run(&run(&g));
+        assert_eq!(fused.num_ops(), 1);
+        match fused.nodes.iter().find_map(|n| match n.kind {
+            NodeKind::Prim(PrimOp::MuxChain(k)) => Some(k),
+            _ => None,
+        }) {
+            Some(k) => assert_eq!(k, 5),
+            None => panic!("no MuxChain produced"),
+        }
+    }
+
+    #[test]
+    fn chain_semantics_match() {
+        let g = ladder(6);
+        let fused = dce::run(&run(&g));
+        let mut rng = Rng::new(17);
+        let mut s1 = RefSim::new(g);
+        let mut s2 = RefSim::new(fused);
+        for _ in 0..40 {
+            let inputs = builder::random_inputs(&mut rng, &s1.graph);
+            s1.step(&inputs);
+            s2.step(&inputs);
+            assert_eq!(s1.outputs(), s2.outputs());
+        }
+    }
+
+    #[test]
+    fn shared_inner_mux_not_fused() {
+        // The inner mux has two users -> must stay separate.
+        let mut g = Graph::new("t");
+        let s0 = g.input("s0", 1);
+        let s1 = g.input("s1", 1);
+        let a = g.input("a", 4);
+        let b = g.input("b", 4);
+        let inner = g.prim(PrimOp::Mux, &[s1, a, b]);
+        let outer = g.prim(PrimOp::Mux, &[s0, b, inner]);
+        g.output("o1", outer);
+        g.output("o2", inner); // second use
+        let fused = run(&g);
+        assert_eq!(
+            fused.nodes.iter().filter(|n| matches!(n.kind, NodeKind::Prim(PrimOp::Mux))).count(),
+            2
+        );
+    }
+}

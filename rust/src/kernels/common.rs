@@ -1,0 +1,171 @@
+//! Shared kernel machinery: the LI slot file with input/commit handling,
+//! and the generic per-operation evaluator used by the rolled kernels'
+//! case dispatch (the paper's Algorithm 2 `op_r[n]` case statement).
+
+use crate::graph::ops::mask;
+use crate::tensor::ir::{KOp, LayerIr};
+
+/// The LI slot file plus cycle boundary plumbing (testbench inputs at the
+/// start of a cycle; register commits — the `◇ : i ≡ I` connects — at the
+/// end).
+#[derive(Clone, Debug)]
+pub struct Driver {
+    pub v: Vec<u64>,
+    pub input_slots: Vec<u32>,
+    pub input_masks: Vec<u64>,
+    pub commits: Vec<(u32, u32, u64)>,
+    pub outputs: Vec<(String, u32)>,
+}
+
+impl Driver {
+    pub fn new(ir: &LayerIr) -> Self {
+        Driver {
+            v: ir.initial_slots(),
+            input_slots: ir.input_slots.clone(),
+            input_masks: ir.input_widths.iter().map(|&w| mask(w)).collect(),
+            commits: ir.commits.clone(),
+            outputs: ir.output_slots.clone(),
+        }
+    }
+
+    #[inline]
+    pub fn set_inputs(&mut self, inputs: &[u64]) {
+        debug_assert_eq!(inputs.len(), self.input_slots.len());
+        for i in 0..self.input_slots.len() {
+            self.v[self.input_slots[i] as usize] = inputs[i] & self.input_masks[i];
+        }
+    }
+
+    #[inline]
+    pub fn commit(&mut self) {
+        for &(reg, next, m) in &self.commits {
+            self.v[reg as usize] = self.v[next as usize] & m;
+        }
+    }
+
+    pub fn named_outputs(&self) -> Vec<(String, u64)> {
+        self.outputs.iter().map(|(n, s)| (n.clone(), self.v[*s as usize])).collect()
+    }
+}
+
+/// Generic operation evaluation over gathered operand values — the big
+/// case statement of Algorithm 2. Rolled kernels (RU/OU) dispatch through
+/// this per element; more unrolled kernels hoist the dispatch out.
+#[inline(always)]
+pub fn eval_op(op: KOp, operands: &[u64], imm: u8, m: u64, aux: u64) -> u64 {
+    let a = operands[0];
+    let raw = match op {
+        KOp::Add => a.wrapping_add(operands[1]),
+        KOp::Sub => a.wrapping_sub(operands[1]),
+        KOp::Mul => a.wrapping_mul(operands[1]),
+        KOp::Div => {
+            let b = operands[1];
+            if b == 0 {
+                0
+            } else {
+                a / b
+            }
+        }
+        KOp::Rem => {
+            let b = operands[1];
+            if b == 0 {
+                0
+            } else {
+                a % b
+            }
+        }
+        KOp::Lt => (a < operands[1]) as u64,
+        KOp::Leq => (a <= operands[1]) as u64,
+        KOp::Gt => (a > operands[1]) as u64,
+        KOp::Geq => (a >= operands[1]) as u64,
+        KOp::Eq => (a == operands[1]) as u64,
+        KOp::Neq => (a != operands[1]) as u64,
+        KOp::And => a & operands[1],
+        KOp::Or => a | operands[1],
+        KOp::Xor => a ^ operands[1],
+        KOp::Not => !a,
+        KOp::Neg => a.wrapping_neg(),
+        KOp::AndrK => (a == aux) as u64,
+        KOp::Orr => (a != 0) as u64,
+        KOp::Xorr => (a.count_ones() & 1) as u64,
+        KOp::ShlI => a << imm,
+        KOp::ShrI => a >> imm,
+        KOp::Dshl => {
+            let b = operands[1];
+            if b >= 64 {
+                0
+            } else {
+                a << b
+            }
+        }
+        KOp::Dshr => {
+            let b = operands[1];
+            if b >= 64 {
+                0
+            } else {
+                a >> b
+            }
+        }
+        KOp::Cat => (a << imm) | operands[1],
+        KOp::Mux => {
+            if a != 0 {
+                operands[1]
+            } else {
+                operands[2]
+            }
+        }
+        KOp::Copy => a,
+        KOp::MuxChain => {
+            let k = imm as usize;
+            let mut v = operands[2 * k];
+            for i in (0..k).rev() {
+                if operands[2 * i] != 0 {
+                    v = operands[2 * i + 1];
+                }
+            }
+            v
+        }
+    };
+    raw & m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_op_matches_eval_rec() {
+        use crate::tensor::ir::{eval_rec, OpRec};
+        // spot-check agreement between the gathered-operand evaluator and
+        // the slot-indexed evaluator
+        let li = [0u64, 13, 5, 1, 7, 9];
+        for (op, arity, imm, aux) in [
+            (KOp::Add, 2, 0, 0),
+            (KOp::Sub, 2, 0, 0),
+            (KOp::Cat, 2, 3, 0),
+            (KOp::AndrK, 1, 0, 13),
+            (KOp::ShrI, 1, 2, 0),
+            (KOp::Mux, 3, 0, 0),
+        ] {
+            let rec = OpRec {
+                out: 0,
+                a: 1,
+                b: 2,
+                c: 4,
+                mask: 0xFF,
+                aux,
+                op: op as u8,
+                arity,
+                imm,
+                _pad: 0,
+                ext: 0,
+            };
+            let slots: Vec<u64> = [1u32, 2, 4][..arity as usize].iter().map(|&i| li[i as usize]).collect();
+            assert_eq!(
+                eval_rec(&rec, &li, &[]),
+                eval_op(op, &slots, imm, 0xFF, aux),
+                "{op:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! **IU** — I-rank-unrolled kernel (paper §5.2).
+//!
+//! Completely unrolls the iterative rank I: the per-layer loop structure is
+//! compiled away into a flat *group-command program* in which only
+//! non-empty (layer, op-type) groups appear — eliminating both the
+//! per-layer loop overhead and NU/PSU's zero-iteration S loops. The group
+//! table becomes part of the program (code, in the paper's terms), while
+//! coordinates remain data. Includes PSU's partial S unrolling.
+
+use super::common::Driver;
+use super::nu::run_group;
+use super::SimKernel;
+use crate::tensor::ir::{LayerIr, NUM_KOPS};
+use crate::tensor::oim::Oim;
+
+/// One command of the flattened program.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Cmd {
+    /// Evaluate `cnt` ops of type `n` with precomputed cursors.
+    Group { n: u8, cnt: u32, op_idx: u32, r_idx: u32, lo_pos: u32 },
+    /// Write `cnt` layer outputs back to LI starting at `wb_idx`.
+    Writeback { wb_idx: u32, cnt: u32 },
+}
+
+pub struct IuKernel {
+    d: Driver,
+    oim: Oim,
+    program: Vec<Cmd>,
+    lo: Vec<u64>,
+    chain_buf: Vec<u64>,
+}
+
+impl IuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim) -> Self {
+        // Precompute all cursors (this is IU's "compile" step: layer
+        // structure fixed into the program).
+        let mut program = Vec::new();
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        let mut wb_idx = 0usize;
+        for layer in 0..oim.i_payload.len() {
+            let mut lo_pos = 0usize;
+            for n in 0..NUM_KOPS {
+                let cnt = oim.n_payload[layer * NUM_KOPS + n] as usize;
+                if cnt == 0 {
+                    continue; // empty groups never enter the program
+                }
+                program.push(Cmd::Group {
+                    n: n as u8,
+                    cnt: cnt as u32,
+                    op_idx: op_idx as u32,
+                    r_idx: r_idx as u32,
+                    lo_pos: lo_pos as u32,
+                });
+                let operands: usize =
+                    oim.c.arity[op_idx..op_idx + cnt].iter().map(|&a| a as usize).sum();
+                op_idx += cnt;
+                r_idx += operands;
+                lo_pos += cnt;
+            }
+            let cnt = oim.i_payload[layer] as usize;
+            program.push(Cmd::Writeback { wb_idx: wb_idx as u32, cnt: cnt as u32 });
+            wb_idx += cnt;
+        }
+        let max_arity = oim.c.arity.iter().copied().max().unwrap_or(1) as usize;
+        IuKernel {
+            d: Driver::new(ir),
+            oim: oim.clone(),
+            program,
+            lo: vec![0; ir.max_layer_ops()],
+            chain_buf: vec![0; max_arity.max(3)],
+        }
+    }
+
+    pub(crate) fn num_groups(&self) -> usize {
+        self.program.iter().filter(|c| matches!(c, Cmd::Group { .. })).count()
+    }
+}
+
+impl SimKernel for IuKernel {
+    fn config_name(&self) -> &'static str {
+        "IU"
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        for cmd in &self.program {
+            match *cmd {
+                Cmd::Group { n, cnt, op_idx, r_idx, lo_pos } => {
+                    let (cnt, op_idx, r_idx, lo_pos) =
+                        (cnt as usize, op_idx as usize, r_idx as usize, lo_pos as usize);
+                    run_group::<8>(
+                        n,
+                        v,
+                        &mut self.lo,
+                        lo_pos,
+                        cnt,
+                        &o.c.r_coords[r_idx..],
+                        &o.c.imm[op_idx..],
+                        &o.c.mask[op_idx..],
+                        &o.c.aux[op_idx..],
+                        &o.c.arity[op_idx..],
+                        &mut self.chain_buf,
+                    );
+                }
+                Cmd::Writeback { wb_idx, cnt } => {
+                    let (wb_idx, cnt) = (wb_idx as usize, cnt as usize);
+                    let s = &o.c.s_coords[wb_idx..wb_idx + cnt];
+                    let mut k = 0usize;
+                    while k + 24 <= cnt {
+                        for j in 0..24 {
+                            v[s[k + j] as usize] = self.lo[k + j];
+                        }
+                        k += 24;
+                    }
+                    for i in k..cnt {
+                        v[s[i] as usize] = self.lo[i];
+                    }
+                }
+            }
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.d.named_outputs()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.d.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        crate::perf::binsize::iu_code_bytes(self.num_groups(), &self.oim)
+    }
+
+    fn data_bytes(&self) -> usize {
+        crate::perf::binsize::kernel_data_bytes(super::KernelConfig::IU, &self.oim)
+    }
+}

@@ -1,0 +1,364 @@
+//! **NU / PSU** — N-rank-unrolled kernels (paper §5.2, Algorithm 4).
+//!
+//! Mapping-level change: the S and N ranks are swizzled (`[I, N, S, O, R]`
+//! loop order) so outputs computed by the same operation type are grouped;
+//! the OIM uses format C (Fig 12c: uncompressed N with per-layer counts).
+//! The N rank is then fully unrolled: the case statement is replaced by a
+//! separate tight loop per operation type, hoisting dispatch out of the
+//! S loop. Note the uncompressed N rank means *every* op type is visited
+//! in every layer, including zero-count ones — exactly the "zero-iteration
+//! S loops" that IU later eliminates.
+//!
+//! `UNROLL` is the partial S unroll factor: `NuKernel<1>` is the paper's
+//! NU, `NuKernel<8>` is PSU (S loops chunked by 8, writeback by 24).
+
+use super::common::Driver;
+use super::SimKernel;
+use crate::tensor::ir::{KOp, LayerIr, NUM_KOPS};
+use crate::tensor::oim::Oim;
+
+pub struct NuKernel<const UNROLL: usize> {
+    d: Driver,
+    oim: Oim,
+    lo: Vec<u64>,
+    chain_buf: Vec<u64>,
+}
+
+impl<const UNROLL: usize> NuKernel<UNROLL> {
+    pub fn new(ir: &LayerIr, oim: &Oim) -> Self {
+        let max_arity = oim.c.arity.iter().copied().max().unwrap_or(1) as usize;
+        NuKernel {
+            d: Driver::new(ir),
+            oim: oim.clone(),
+            lo: vec![0; ir.max_layer_ops()],
+            chain_buf: vec![0; max_arity.max(3)],
+        }
+    }
+}
+
+/// Tight per-op-type loop over a group of unary ops, chunked by `U`.
+#[inline(always)]
+pub(crate) fn group1<const U: usize>(
+    v: &[u64],
+    lo: &mut [u64],
+    lo_pos: usize,
+    cnt: usize,
+    r: &[u32],
+    imm: &[u8],
+    msk: &[u64],
+    aux: &[u64],
+    f: impl Fn(u64, u8, u64) -> u64,
+) {
+    let mut k = 0usize;
+    while k + U <= cnt {
+        // fixed-trip inner loop: the compiler fully unrolls it
+        for j in 0..U {
+            let i = k + j;
+            lo[lo_pos + i] = f(v[r[i] as usize], imm[i], aux[i]) & msk[i];
+        }
+        k += U;
+    }
+    for i in k..cnt {
+        lo[lo_pos + i] = f(v[r[i] as usize], imm[i], aux[i]) & msk[i];
+    }
+}
+
+/// Tight loop over a group of binary ops.
+#[inline(always)]
+pub(crate) fn group2<const U: usize>(
+    v: &[u64],
+    lo: &mut [u64],
+    lo_pos: usize,
+    cnt: usize,
+    r: &[u32],
+    imm: &[u8],
+    msk: &[u64],
+    f: impl Fn(u64, u64, u8) -> u64,
+) {
+    let mut k = 0usize;
+    while k + U <= cnt {
+        for j in 0..U {
+            let i = k + j;
+            lo[lo_pos + i] = f(v[r[2 * i] as usize], v[r[2 * i + 1] as usize], imm[i]) & msk[i];
+        }
+        k += U;
+    }
+    for i in k..cnt {
+        lo[lo_pos + i] = f(v[r[2 * i] as usize], v[r[2 * i + 1] as usize], imm[i]) & msk[i];
+    }
+}
+
+/// Tight loop over a group of 3-operand muxes.
+#[inline(always)]
+pub(crate) fn group_mux<const U: usize>(
+    v: &[u64],
+    lo: &mut [u64],
+    lo_pos: usize,
+    cnt: usize,
+    r: &[u32],
+    msk: &[u64],
+) {
+    let mut k = 0usize;
+    while k + U <= cnt {
+        for j in 0..U {
+            let i = k + j;
+            let sel = v[r[3 * i] as usize];
+            lo[lo_pos + i] =
+                (if sel != 0 { v[r[3 * i + 1] as usize] } else { v[r[3 * i + 2] as usize] }) & msk[i];
+        }
+        k += U;
+    }
+    for i in k..cnt {
+        let sel = v[r[3 * i] as usize];
+        lo[lo_pos + i] =
+            (if sel != 0 { v[r[3 * i + 1] as usize] } else { v[r[3 * i + 2] as usize] }) & msk[i];
+    }
+}
+
+/// Variable-arity mux chains (fused select ops): gather + priority scan.
+#[inline(always)]
+pub(crate) fn group_chain(
+    v: &[u64],
+    lo: &mut [u64],
+    lo_pos: usize,
+    cnt: usize,
+    r: &[u32],
+    imm: &[u8],
+    msk: &[u64],
+    arity: &[u8],
+    buf: &mut [u64],
+) -> usize {
+    let mut r_off = 0usize;
+    for i in 0..cnt {
+        let ar = arity[i] as usize;
+        for o in 0..ar {
+            buf[o] = v[r[r_off + o] as usize];
+        }
+        let k = imm[i] as usize;
+        let mut val = buf[2 * k];
+        for j in (0..k).rev() {
+            if buf[2 * j] != 0 {
+                val = buf[2 * j + 1];
+            }
+        }
+        lo[lo_pos + i] = val & msk[i];
+        r_off += ar;
+    }
+    r_off
+}
+
+/// Dispatch one (op type, group) to its tight loop. Shared by NU/PSU/IU.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_group<const U: usize>(
+    n: u8,
+    v: &[u64],
+    lo: &mut [u64],
+    lo_pos: usize,
+    cnt: usize,
+    r: &[u32],
+    imm: &[u8],
+    msk: &[u64],
+    aux: &[u64],
+    arity: &[u8],
+    chain_buf: &mut [u64],
+) -> usize {
+    // returns #operand slots consumed
+    match KOp::from_u8(n) {
+        KOp::Add => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| a.wrapping_add(b));
+            2 * cnt
+        }
+        KOp::Sub => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| a.wrapping_sub(b));
+            2 * cnt
+        }
+        KOp::Mul => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| a.wrapping_mul(b));
+            2 * cnt
+        }
+        KOp::Div => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| if b == 0 { 0 } else { a / b });
+            2 * cnt
+        }
+        KOp::Rem => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| if b == 0 { 0 } else { a % b });
+            2 * cnt
+        }
+        KOp::Lt => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| (a < b) as u64);
+            2 * cnt
+        }
+        KOp::Leq => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| (a <= b) as u64);
+            2 * cnt
+        }
+        KOp::Gt => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| (a > b) as u64);
+            2 * cnt
+        }
+        KOp::Geq => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| (a >= b) as u64);
+            2 * cnt
+        }
+        KOp::Eq => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| (a == b) as u64);
+            2 * cnt
+        }
+        KOp::Neq => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| (a != b) as u64);
+            2 * cnt
+        }
+        KOp::And => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| a & b);
+            2 * cnt
+        }
+        KOp::Or => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| a | b);
+            2 * cnt
+        }
+        KOp::Xor => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| a ^ b);
+            2 * cnt
+        }
+        KOp::Not => {
+            group1::<U>(v, lo, lo_pos, cnt, r, imm, msk, aux, |a, _, _| !a);
+            cnt
+        }
+        KOp::Neg => {
+            group1::<U>(v, lo, lo_pos, cnt, r, imm, msk, aux, |a, _, _| a.wrapping_neg());
+            cnt
+        }
+        KOp::AndrK => {
+            group1::<U>(v, lo, lo_pos, cnt, r, imm, msk, aux, |a, _, x| (a == x) as u64);
+            cnt
+        }
+        KOp::Orr => {
+            group1::<U>(v, lo, lo_pos, cnt, r, imm, msk, aux, |a, _, _| (a != 0) as u64);
+            cnt
+        }
+        KOp::Xorr => {
+            group1::<U>(v, lo, lo_pos, cnt, r, imm, msk, aux, |a, _, _| (a.count_ones() & 1) as u64);
+            cnt
+        }
+        KOp::ShlI => {
+            group1::<U>(v, lo, lo_pos, cnt, r, imm, msk, aux, |a, s, _| a << s);
+            cnt
+        }
+        KOp::ShrI => {
+            group1::<U>(v, lo, lo_pos, cnt, r, imm, msk, aux, |a, s, _| a >> s);
+            cnt
+        }
+        KOp::Dshl => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| if b >= 64 { 0 } else { a << b });
+            2 * cnt
+        }
+        KOp::Dshr => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, _| if b >= 64 { 0 } else { a >> b });
+            2 * cnt
+        }
+        KOp::Cat => {
+            group2::<U>(v, lo, lo_pos, cnt, r, imm, msk, |a, b, s| (a << s) | b);
+            2 * cnt
+        }
+        KOp::Mux => {
+            group_mux::<U>(v, lo, lo_pos, cnt, r, msk);
+            3 * cnt
+        }
+        KOp::Copy => {
+            group1::<U>(v, lo, lo_pos, cnt, r, imm, msk, aux, |a, _, _| a);
+            cnt
+        }
+        KOp::MuxChain => group_chain(v, lo, lo_pos, cnt, r, imm, msk, arity, chain_buf),
+    }
+}
+
+impl<const UNROLL: usize> SimKernel for NuKernel<UNROLL> {
+    fn config_name(&self) -> &'static str {
+        if UNROLL == 1 {
+            "NU"
+        } else {
+            "PSU"
+        }
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        let mut wb_idx = 0usize;
+        let layers = o.i_payload.len();
+        for layer in 0..layers {
+            let mut lo_pos = 0usize;
+            // ---- unrolled rank N: one (possibly empty) group per op type ----
+            for n in 0..NUM_KOPS {
+                let cnt = o.n_payload[layer * NUM_KOPS + n] as usize;
+                if cnt == 0 {
+                    continue; // the "zero-iteration S loop" overhead of NU/PSU
+                }
+                let consumed = run_group::<UNROLL>(
+                    n as u8,
+                    v,
+                    &mut self.lo,
+                    lo_pos,
+                    cnt,
+                    &o.c.r_coords[r_idx..],
+                    &o.c.imm[op_idx..],
+                    &o.c.mask[op_idx..],
+                    &o.c.aux[op_idx..],
+                    &o.c.arity[op_idx..],
+                    &mut self.chain_buf,
+                );
+                r_idx += consumed;
+                op_idx += cnt;
+                lo_pos += cnt;
+            }
+            // ---- writeback, chunked by 24 when partially unrolled ----
+            let cnt = o.i_payload[layer] as usize;
+            let s = &o.c.s_coords[wb_idx..wb_idx + cnt];
+            if UNROLL > 1 {
+                let mut k = 0usize;
+                while k + 24 <= cnt {
+                    for j in 0..24 {
+                        v[s[k + j] as usize] = self.lo[k + j];
+                    }
+                    k += 24;
+                }
+                for i in k..cnt {
+                    v[s[i] as usize] = self.lo[i];
+                }
+            } else {
+                for i in 0..cnt {
+                    v[s[i] as usize] = self.lo[i];
+                }
+            }
+            wb_idx += cnt;
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.d.named_outputs()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.d.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        let cfg = if UNROLL == 1 { super::KernelConfig::NU } else { super::KernelConfig::PSU };
+        crate::perf::binsize::kernel_code_bytes(cfg, &self.oim)
+    }
+
+    fn data_bytes(&self) -> usize {
+        let cfg = if UNROLL == 1 { super::KernelConfig::NU } else { super::KernelConfig::PSU };
+        crate::perf::binsize::kernel_data_bytes(cfg, &self.oim)
+    }
+}

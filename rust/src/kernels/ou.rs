@@ -1,0 +1,107 @@
+//! **OU** — O-rank-unrolled kernel (paper §5.2).
+//!
+//! Same loop order and format-B metadata as RU, but the operand loop is
+//! completely unrolled: operands are fetched inline by arity (no `O` loop
+//! body, no `sel_inputs` staging buffer for the common arities), which
+//! removes redundant data movement and loop overhead. Format unchanged —
+//! the O rank had no explicit metadata to begin with (Fig 12b).
+
+use super::common::{eval_op, Driver};
+use super::SimKernel;
+use crate::tensor::ir::{KOp, LayerIr};
+use crate::tensor::oim::Oim;
+
+pub struct OuKernel {
+    d: Driver,
+    oim: Oim,
+    lo: Vec<u64>,
+    chain_buf: Vec<u64>,
+}
+
+impl OuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim) -> Self {
+        let max_arity = oim.b.arity.iter().copied().max().unwrap_or(1) as usize;
+        OuKernel {
+            d: Driver::new(ir),
+            oim: oim.clone(),
+            lo: vec![0; ir.max_layer_ops()],
+            chain_buf: vec![0; max_arity.max(3)],
+        }
+    }
+}
+
+impl SimKernel for OuKernel {
+    fn config_name(&self) -> &'static str {
+        "OU"
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        let mut wb_idx = 0usize;
+        for &cnt in &o.i_payload {
+            for s in 0..cnt as usize {
+                let n = KOp::from_u8(o.b.opcode[op_idx]);
+                let arity = o.b.arity[op_idx] as usize;
+                let imm = o.b.imm[op_idx];
+                let m = o.b.mask[op_idx];
+                // O unrolled: direct fetches, no operand loop for arity<=3.
+                self.lo[s] = match arity {
+                    1 => {
+                        let a = v[o.b.r_coords[r_idx] as usize];
+                        eval_op(n, &[a], imm, m, o.b.aux[op_idx])
+                    }
+                    2 => {
+                        let a = v[o.b.r_coords[r_idx] as usize];
+                        let b = v[o.b.r_coords[r_idx + 1] as usize];
+                        eval_op(n, &[a, b], imm, m, o.b.aux[op_idx])
+                    }
+                    3 => {
+                        let a = v[o.b.r_coords[r_idx] as usize];
+                        let b = v[o.b.r_coords[r_idx + 1] as usize];
+                        let c = v[o.b.r_coords[r_idx + 2] as usize];
+                        eval_op(n, &[a, b, c], imm, m, o.b.aux[op_idx])
+                    }
+                    _ => {
+                        // MuxChain: variable arity still gathers
+                        for oo in 0..arity {
+                            self.chain_buf[oo] = v[o.b.r_coords[r_idx + oo] as usize];
+                        }
+                        eval_op(n, &self.chain_buf[..arity], imm, m, o.b.aux[op_idx])
+                    }
+                };
+                r_idx += arity;
+                op_idx += 1;
+            }
+            for s in 0..cnt as usize {
+                v[o.b.s_coords[wb_idx + s] as usize] = self.lo[s];
+            }
+            wb_idx += cnt as usize;
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.d.named_outputs()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.d.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        crate::perf::binsize::kernel_code_bytes(super::KernelConfig::OU, &self.oim)
+    }
+
+    fn data_bytes(&self) -> usize {
+        crate::perf::binsize::kernel_data_bytes(super::KernelConfig::OU, &self.oim)
+    }
+}

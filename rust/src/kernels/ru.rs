@@ -1,0 +1,99 @@
+//! **RU** — R-rank-unrolled kernel (paper Algorithm 3).
+//!
+//! The mostly rolled extreme: traverses the format-B OIM arrays
+//! (`[I, S, N, O, R]` loop order) with cursors, dispatching through the
+//! `op_r[n]` case statement *per operation* and looping over operands
+//! (only the one-hot R rank is "unrolled", i.e. there is no R loop).
+//! Minimal program size, maximal metadata traffic — the tensor-algebra
+//! default the paper starts from.
+
+use super::common::{eval_op, Driver};
+use super::SimKernel;
+use crate::tensor::ir::{KOp, LayerIr};
+use crate::tensor::oim::Oim;
+
+pub struct RuKernel {
+    d: Driver,
+    oim: Oim,
+    /// LO buffer (layer-output tensor), reused across layers.
+    lo: Vec<u64>,
+    /// operand gather buffer (`sel_inputs` in Algorithm 3)
+    operands: Vec<u64>,
+}
+
+impl RuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim) -> Self {
+        let max_layer = ir.max_layer_ops();
+        let max_arity = oim.b.arity.iter().copied().max().unwrap_or(1) as usize;
+        RuKernel {
+            d: Driver::new(ir),
+            oim: oim.clone(),
+            lo: vec![0; max_layer],
+            operands: vec![0; max_arity.max(3)],
+        }
+    }
+}
+
+impl SimKernel for RuKernel {
+    fn config_name(&self) -> &'static str {
+        "RU"
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        let mut wb_idx = 0usize;
+        for &cnt in &o.i_payload {
+            // ---- rank S loop (rolled) ----
+            for s in 0..cnt as usize {
+                // rank N: read the op type coordinate
+                let n = o.b.opcode[op_idx];
+                let arity = o.b.arity[op_idx] as usize;
+                // ---- rank O loop (rolled; R one-hot, fetched inline) ----
+                for oo in 0..arity {
+                    self.operands[oo] = v[o.b.r_coords[r_idx + oo] as usize];
+                }
+                // case dispatch (op_u/op_r/op_s fused per Algorithm 2/3)
+                self.lo[s] = eval_op(
+                    KOp::from_u8(n),
+                    &self.operands[..arity],
+                    o.b.imm[op_idx],
+                    o.b.mask[op_idx],
+                    o.b.aux[op_idx],
+                );
+                r_idx += arity;
+                op_idx += 1;
+            }
+            // ---- writeback: LI_{i+1,s} = LO_{i,s} (final cascade Einsum) ----
+            for s in 0..cnt as usize {
+                v[o.b.s_coords[wb_idx + s] as usize] = self.lo[s];
+            }
+            wb_idx += cnt as usize;
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.d.named_outputs()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.d.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        crate::perf::binsize::kernel_code_bytes(super::KernelConfig::RU, &self.oim)
+    }
+
+    fn data_bytes(&self) -> usize {
+        crate::perf::binsize::kernel_data_bytes(super::KernelConfig::RU, &self.oim)
+    }
+}

@@ -1,0 +1,115 @@
+//! **SU** — S-rank-unrolled kernel (paper §5.2).
+//!
+//! Completely unrolls the S rank: the OIM is fully embedded in the
+//! program as a straight-line *tape* of self-contained op records — no
+//! coordinate/payload arrays are traversed at run time (data → code, the
+//! right end of the binding spectrum). Layer writebacks are unrolled into
+//! the tape as well. The modeled program size is the tape (paper Table 4:
+//! 6.0 MB at rocket-8c); metadata traffic drops to zero.
+
+use super::common::Driver;
+use super::SimKernel;
+use crate::tensor::ir::{eval_rec, LayerIr, OpRec};
+use crate::tensor::oim::Oim;
+
+/// A tape op: the op record plus its LO position.
+#[derive(Clone, Copy, Debug)]
+struct TapeOp {
+    rec: OpRec,
+    lo_pos: u32,
+}
+
+/// Layer segment boundaries in the tape.
+#[derive(Clone, Copy, Debug)]
+struct Segment {
+    op_start: u32,
+    op_end: u32,
+    wb_start: u32,
+    wb_end: u32,
+}
+
+pub struct SuKernel {
+    d: Driver,
+    tape: Vec<TapeOp>,
+    /// writeback records: (LI slot, LO position)
+    wb: Vec<(u32, u32)>,
+    segments: Vec<Segment>,
+    ext_args: Vec<u32>,
+    lo: Vec<u64>,
+    total_ops: usize,
+}
+
+impl SuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim) -> Self {
+        let (layers, ext_args) = oim.op_recs();
+        let mut tape = Vec::with_capacity(oim.total_ops());
+        let mut wb = Vec::with_capacity(oim.total_ops());
+        let mut segments = Vec::with_capacity(layers.len());
+        for layer in &layers {
+            let op_start = tape.len() as u32;
+            let wb_start = wb.len() as u32;
+            for (pos, rec) in layer.iter().enumerate() {
+                tape.push(TapeOp { rec: *rec, lo_pos: pos as u32 });
+                wb.push((rec.out, pos as u32));
+            }
+            segments.push(Segment {
+                op_start,
+                op_end: tape.len() as u32,
+                wb_start,
+                wb_end: wb.len() as u32,
+            });
+        }
+        SuKernel {
+            d: Driver::new(ir),
+            tape,
+            wb,
+            segments,
+            ext_args,
+            lo: vec![0; ir.max_layer_ops()],
+            total_ops: oim.total_ops(),
+        }
+    }
+}
+
+impl SimKernel for SuKernel {
+    fn config_name(&self) -> &'static str {
+        "SU"
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let v = &mut self.d.v;
+        for seg in &self.segments {
+            // straight-line op records (OIM embedded in the "code")
+            for t in &self.tape[seg.op_start as usize..seg.op_end as usize] {
+                self.lo[t.lo_pos as usize] = eval_rec(&t.rec, v, &self.ext_args);
+            }
+            // unrolled writeback records
+            for &(slot, lo_pos) in &self.wb[seg.wb_start as usize..seg.wb_end as usize] {
+                v[slot as usize] = self.lo[lo_pos as usize];
+            }
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.d.named_outputs()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.d.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        crate::perf::binsize::su_code_bytes(self.total_ops)
+    }
+
+    fn data_bytes(&self) -> usize {
+        0 // OIM fully embedded in the program
+    }
+}

@@ -1,0 +1,163 @@
+//! **TI** — tensor-inlining kernel (paper §5.2).
+//!
+//! The fully unrolled extreme: beyond SU, the LI/LO array indirection is
+//! removed — every op is bound to a *precompiled per-opcode function* with
+//! its operand/output slots baked in, writing results directly to the slot
+//! file (no LO staging, no writeback pass). This is the interpreter analog
+//! of the paper's "replace arrays with individual C++ variables, giving
+//! the compiler maximum flexibility to bind values to registers": each
+//! tape entry is (code pointer, inlined operands), i.e. the OIM lives
+//! entirely inside the code objects.
+//!
+//! Direct writes are safe for the same reason tensor inlining is:
+//! levelization guarantees no op reads a same-layer output, and distinct
+//! out-slots never alias.
+
+use super::common::Driver;
+use super::SimKernel;
+use crate::tensor::ir::{KOp, LayerIr, OpRec};
+
+type TiFn = fn(&mut [u64], &OpRec, &[u32]);
+
+pub struct TiKernel {
+    d: Driver,
+    tape: Vec<(TiFn, OpRec)>,
+    ext_args: Vec<u32>,
+}
+
+macro_rules! ti_bin {
+    ($name:ident, |$a:ident, $b:ident| $expr:expr) => {
+        fn $name(v: &mut [u64], r: &OpRec, _e: &[u32]) {
+            let $a = v[r.a as usize];
+            let $b = v[r.b as usize];
+            v[r.out as usize] = ($expr) & r.mask;
+        }
+    };
+}
+macro_rules! ti_un {
+    ($name:ident, |$a:ident, $r:ident| $expr:expr) => {
+        fn $name(v: &mut [u64], $r: &OpRec, _e: &[u32]) {
+            let $a = v[$r.a as usize];
+            v[$r.out as usize] = ($expr) & $r.mask;
+        }
+    };
+}
+
+ti_bin!(ti_add, |a, b| a.wrapping_add(b));
+ti_bin!(ti_sub, |a, b| a.wrapping_sub(b));
+ti_bin!(ti_mul, |a, b| a.wrapping_mul(b));
+ti_bin!(ti_div, |a, b| if b == 0 { 0 } else { a / b });
+ti_bin!(ti_rem, |a, b| if b == 0 { 0 } else { a % b });
+ti_bin!(ti_lt, |a, b| (a < b) as u64);
+ti_bin!(ti_leq, |a, b| (a <= b) as u64);
+ti_bin!(ti_gt, |a, b| (a > b) as u64);
+ti_bin!(ti_geq, |a, b| (a >= b) as u64);
+ti_bin!(ti_eq, |a, b| (a == b) as u64);
+ti_bin!(ti_neq, |a, b| (a != b) as u64);
+ti_bin!(ti_and, |a, b| a & b);
+ti_bin!(ti_or, |a, b| a | b);
+ti_bin!(ti_xor, |a, b| a ^ b);
+ti_bin!(ti_dshl, |a, b| if b >= 64 { 0 } else { a << b });
+ti_bin!(ti_dshr, |a, b| if b >= 64 { 0 } else { a >> b });
+ti_un!(ti_not, |a, _r| !a);
+ti_un!(ti_neg, |a, _r| a.wrapping_neg());
+ti_un!(ti_andr, |a, r| (a == r.aux) as u64);
+ti_un!(ti_orr, |a, _r| (a != 0) as u64);
+ti_un!(ti_xorr, |a, _r| (a.count_ones() & 1) as u64);
+ti_un!(ti_shli, |a, r| a << r.imm);
+ti_un!(ti_shri, |a, r| a >> r.imm);
+ti_un!(ti_copy, |a, _r| a);
+
+fn ti_cat(v: &mut [u64], r: &OpRec, _e: &[u32]) {
+    v[r.out as usize] = ((v[r.a as usize] << r.imm) | v[r.b as usize]) & r.mask;
+}
+fn ti_mux(v: &mut [u64], r: &OpRec, _e: &[u32]) {
+    let x = if v[r.a as usize] != 0 { v[r.b as usize] } else { v[r.c as usize] };
+    v[r.out as usize] = x & r.mask;
+}
+fn ti_muxchain(v: &mut [u64], r: &OpRec, e: &[u32]) {
+    v[r.out as usize] = crate::tensor::ir::eval_rec(r, v, e);
+}
+
+fn ti_fn(op: KOp) -> TiFn {
+    match op {
+        KOp::Add => ti_add,
+        KOp::Sub => ti_sub,
+        KOp::Mul => ti_mul,
+        KOp::Div => ti_div,
+        KOp::Rem => ti_rem,
+        KOp::Lt => ti_lt,
+        KOp::Leq => ti_leq,
+        KOp::Gt => ti_gt,
+        KOp::Geq => ti_geq,
+        KOp::Eq => ti_eq,
+        KOp::Neq => ti_neq,
+        KOp::And => ti_and,
+        KOp::Or => ti_or,
+        KOp::Xor => ti_xor,
+        KOp::Not => ti_not,
+        KOp::Neg => ti_neg,
+        KOp::AndrK => ti_andr,
+        KOp::Orr => ti_orr,
+        KOp::Xorr => ti_xorr,
+        KOp::ShlI => ti_shli,
+        KOp::ShrI => ti_shri,
+        KOp::Dshl => ti_dshl,
+        KOp::Dshr => ti_dshr,
+        KOp::Cat => ti_cat,
+        KOp::Mux => ti_mux,
+        KOp::Copy => ti_copy,
+        KOp::MuxChain => ti_muxchain,
+    }
+}
+
+impl TiKernel {
+    /// Build from the swizzled (format-C) op order — TI inherits all of
+    /// SU's optimizations per §5.2.
+    pub fn new(ir: &LayerIr, oim: &crate::tensor::oim::Oim) -> Self {
+        let (layers, ext_args) = oim.op_recs();
+        let mut tape = Vec::with_capacity(ir.total_ops());
+        for layer in &layers {
+            for rec in layer {
+                tape.push((ti_fn(rec.kop()), *rec));
+            }
+        }
+        TiKernel { d: Driver::new(ir), tape, ext_args }
+    }
+}
+
+impl SimKernel for TiKernel {
+    fn config_name(&self) -> &'static str {
+        "TI"
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let v = &mut self.d.v;
+        for (f, rec) in &self.tape {
+            f(v, rec, &self.ext_args);
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.d.named_outputs()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.d.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        crate::perf::binsize::ti_code_bytes(self.tape.len())
+    }
+
+    fn data_bytes(&self) -> usize {
+        0
+    }
+}

@@ -1,0 +1,121 @@
+//! Unoptimized kernel variant — the `clang -O0` analog (paper §7.4).
+//!
+//! The paper studies how much each simulator depends on aggressive
+//! compiler optimization by rebuilding everything at `-O0`. Our executors
+//! are compiled once, so the analog is an executor written the way `-O0`
+//! code behaves: every intermediate value round-trips through memory, each
+//! op re-derives everything from scratch (fresh operand `Vec` per op —
+//! an allocation per operation), dispatch goes through a boxed callable
+//! (no inlining), and nothing is grouped or chunked.
+
+use super::common::{eval_op, Driver};
+use super::SimKernel;
+use crate::tensor::ir::{KOp, LayerIr};
+use crate::tensor::oim::Oim;
+
+type DynOp = Box<dyn Fn(&[u64], u8, u64, u64) -> u64 + Send + Sync>;
+
+pub struct UnoptKernel {
+    d: Driver,
+    oim: Oim,
+    /// one boxed evaluator per op type — the un-inlined dispatch table
+    table: Vec<DynOp>,
+}
+
+impl UnoptKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim) -> Self {
+        let table: Vec<DynOp> = (0..crate::tensor::ir::NUM_KOPS as u8)
+            .map(|n| {
+                let op = KOp::from_u8(n);
+                Box::new(move |operands: &[u64], imm: u8, mask: u64, aux: u64| {
+                    eval_op(op, operands, imm, mask, aux)
+                }) as DynOp
+            })
+            .collect();
+        UnoptKernel { d: Driver::new(ir), oim: oim.clone(), table }
+    }
+}
+
+impl SimKernel for UnoptKernel {
+    fn config_name(&self) -> &'static str {
+        "PSU-O0"
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let o = &self.oim;
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        let mut wb_idx = 0usize;
+        for &cnt in &o.i_payload {
+            // LO allocated fresh every layer (-O0 keeps temporaries in memory)
+            let mut lo: Vec<u64> = Vec::with_capacity(cnt as usize);
+            for _ in 0..cnt {
+                let arity = o.b.arity[op_idx] as usize;
+                // fresh operand vector per op: the malloc-per-op behaviour
+                let mut operands: Vec<u64> = Vec::with_capacity(arity);
+                for oo in 0..arity {
+                    operands.push(self.d.v[o.b.r_coords[r_idx + oo] as usize]);
+                }
+                let f = &self.table[o.b.opcode[op_idx] as usize];
+                lo.push(f(&operands, o.b.imm[op_idx], o.b.mask[op_idx], o.b.aux[op_idx]));
+                r_idx += arity;
+                op_idx += 1;
+            }
+            for (s, val) in lo.iter().enumerate() {
+                self.d.v[o.b.s_coords[wb_idx + s] as usize] = *val;
+            }
+            wb_idx += cnt as usize;
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn outputs(&self) -> Vec<(String, u64)> {
+        self.d.named_outputs()
+    }
+
+
+    fn poke(&mut self, slot: u32, value: u64) {
+        self.d.v[slot as usize] = value;
+    }
+
+    fn program_bytes(&self) -> usize {
+        // -O0 binaries are a few x larger than -O2/-O3 for the same code
+        crate::perf::binsize::kernel_code_bytes(super::KernelConfig::PSU, &self.oim) * 3
+    }
+
+    fn data_bytes(&self) -> usize {
+        crate::perf::binsize::kernel_data_bytes(super::KernelConfig::PSU, &self.oim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::{random_circuit, random_inputs};
+    use crate::graph::passes::optimize;
+    use crate::graph::RefSim;
+    use crate::tensor::ir::lower;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn unopt_matches_reference() {
+        let mut rng = Rng::new(60_001);
+        let g = random_circuit(&mut rng, 70);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let mut reference = RefSim::new(opt.clone());
+        let mut k = UnoptKernel::new(&ir, &oim);
+        for _ in 0..10 {
+            let inputs = random_inputs(&mut rng, &reference.graph);
+            reference.step(&inputs);
+            k.step(&inputs);
+            assert_eq!(k.outputs(), reference.outputs());
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! # RTeAAL Sim — RTL simulation as sparse tensor algebra
+//!
+//! Reproduction of *"RTeAAL Sim: Using Tensor Algebra to Represent and
+//! Accelerate RTL Simulation"* (Zhu, Chen, Fletcher, Nayak; CS.AR 2026).
+//!
+//! The library reformulates full-cycle RTL simulation as the evaluation of a
+//! cascade of extended Einsums over a sparse 5-rank tensor `OIM` (ranks
+//! `I`/`S`/`N`/`O`/`R`), and provides seven progressively-unrolled kernel
+//! executors (`RU`..`TI`) spanning the binding spectrum studied in the paper.
+//!
+//! Pipeline:
+//!
+//! ```text
+//! FIRRTL text ──firrtl::parse──▶ Circuit AST ──firrtl::lower──▶ graph::Graph
+//!    ──graph::passes──▶ optimized graph ──graph::levelize──▶ layers
+//!    ──tensor::oim──▶ OIM (per-rank formats) ──kernels::compile──▶ executor
+//!    ──sim::Simulator──▶ cycles (+ VCD, DMI, perf counters)
+//! ```
+//!
+//! See `DESIGN.md` for the architecture and experiment index, and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod util;
+pub mod firrtl;
+pub mod graph;
+pub mod tensor;
+pub mod einsum;
+pub mod kernels;
+pub mod baselines;
+pub mod perf;
+pub mod sim;
+pub mod designs;
+pub mod runtime;
+pub mod coordinator;
+
+/// Library version string (matches Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,13 @@
+//! RTeAAL Sim command-line interface (leader entrypoint).
+//!
+//! Subcommands are routed to `coordinator::cli` — see `rteaal help`.
+
+rteaal::install_tracking_alloc!();
+
+fn main() {
+    let args = rteaal::util::cli::Args::from_env();
+    if let Err(e) = rteaal::coordinator::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Program ("binary") size and metadata ("data") size model per kernel
+//! configuration — the code/data split that drives the paper's I-cache vs
+//! D-cache pressure story (Tables 4 & 6).
+//!
+//! Calibration: constants are fitted to paper Table 4 (8-core RocketChip,
+//! ≈139 K effectual operations): RU/OU/NU/PSU ≈ 0.35 MB (dominated by the
+//! fixed binary base), IU 0.91 MB (per-group code), SU 6.0 MB (≈40 B of
+//! straight-line code per op), TI 5.3 MB (≈36 B/op — better register
+//! binding shrinks each op's code).
+
+use crate::kernels::KernelConfig;
+use crate::tensor::oim::Oim;
+
+/// Fixed binary base: runtime + harness + the rolled kernel bodies
+/// (paper's rolled kernels are ~0.35 MB total).
+pub const BASE_BYTES: usize = 330 * 1024;
+
+/// Straight-line code bytes per op for SU / TI.
+pub const SU_BYTES_PER_OP: usize = 40;
+pub const TI_BYTES_PER_OP: usize = 36;
+/// Per-(layer, op-type) group code for IU.
+pub const IU_BYTES_PER_GROUP: usize = 48;
+
+/// Modeled program bytes for a kernel configuration.
+pub fn kernel_code_bytes(cfg: KernelConfig, oim: &Oim) -> usize {
+    match cfg {
+        KernelConfig::RU => BASE_BYTES + 6 * 1024,
+        KernelConfig::OU => BASE_BYTES + 7 * 1024,
+        // per-op-type loops are individually tiny and share the case
+        // bodies the rolled kernels carried anyway
+        KernelConfig::NU => BASE_BYTES + 5 * 1024,
+        KernelConfig::PSU => BASE_BYTES + 12 * 1024,
+        KernelConfig::IU => iu_code_bytes(nonzero_groups(oim), oim),
+        KernelConfig::SU => su_code_bytes(oim.total_ops()),
+        KernelConfig::TI => ti_code_bytes(oim.total_ops()),
+    }
+}
+
+pub fn iu_code_bytes(groups: usize, _oim: &Oim) -> usize {
+    BASE_BYTES + 12 * 1024 + groups * IU_BYTES_PER_GROUP
+}
+
+pub fn su_code_bytes(total_ops: usize) -> usize {
+    BASE_BYTES + 4 * 1024 + total_ops * SU_BYTES_PER_OP
+}
+
+pub fn ti_code_bytes(total_ops: usize) -> usize {
+    BASE_BYTES + 4 * 1024 + total_ops * TI_BYTES_PER_OP
+}
+
+/// Non-empty (layer, op type) groups — IU's program length.
+pub fn nonzero_groups(oim: &Oim) -> usize {
+    oim.n_payload.iter().filter(|&&c| c != 0).count()
+}
+
+/// Modeled metadata bytes the kernel streams from the D-cache each cycle
+/// (the OIM arrays in the format that configuration traverses).
+pub fn kernel_data_bytes(cfg: KernelConfig, oim: &Oim) -> usize {
+    let ops = oim.total_ops();
+    let operands = oim.b.r_coords.len();
+    let params = ops * (1 + 8 + 8 + 1); // imm + mask + aux + arity
+    match cfg {
+        // format B: i_payload(u32) + s(u32) + n(u8) + r(u32) + params
+        KernelConfig::RU | KernelConfig::OU => {
+            oim.i_payload.len() * 4 + ops * 4 + ops + operands * 4 + params
+        }
+        // format C: n_payload(u32 per layer*optype) + s(u32) + r(u32) + params
+        KernelConfig::NU | KernelConfig::PSU => {
+            oim.n_payload.len() * 4 + ops * 4 + operands * 4 + params
+        }
+        // group table moved into the program; coordinates remain data
+        KernelConfig::IU => ops * 4 + operands * 4 + params,
+        // OIM fully embedded in code
+        KernelConfig::SU | KernelConfig::TI => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::random_circuit;
+    use crate::tensor::ir::lower;
+    use crate::util::prng::Rng;
+
+    fn sample(size: usize) -> Oim {
+        let mut rng = Rng::new(123);
+        let g = random_circuit(&mut rng, size);
+        Oim::from_ir(&lower(&g))
+    }
+
+    #[test]
+    fn code_size_ordering_matches_paper() {
+        let o = sample(2000);
+        let b = |c| kernel_code_bytes(c, &o);
+        // rolled kernels are all near BASE; IU > rolled; SU/TI dominate
+        assert!(b(KernelConfig::IU) > b(KernelConfig::PSU));
+        assert!(b(KernelConfig::SU) > b(KernelConfig::IU));
+        assert!(b(KernelConfig::TI) < b(KernelConfig::SU));
+        assert!(b(KernelConfig::TI) > b(KernelConfig::IU));
+    }
+
+    #[test]
+    fn data_size_ordering() {
+        let o = sample(2000);
+        let d = |c| kernel_data_bytes(c, &o);
+        assert!(d(KernelConfig::RU) >= d(KernelConfig::NU));
+        assert!(d(KernelConfig::NU) >= d(KernelConfig::IU));
+        assert_eq!(d(KernelConfig::SU), 0);
+        assert_eq!(d(KernelConfig::TI), 0);
+    }
+
+    #[test]
+    fn table4_calibration_scale() {
+        // at ~139K ops SU should be ~6 MB, TI ~5.3 MB (paper Table 4)
+        assert!((su_code_bytes(139_000) as f64 - 6.0e6).abs() < 0.7e6);
+        assert!((ti_code_bytes(139_000) as f64 - 5.3e6).abs() < 0.7e6);
+    }
+}

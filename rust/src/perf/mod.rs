@@ -1,0 +1,23 @@
+//! Microarchitectural performance model.
+//!
+//! The paper's counter-level results (top-down breakdowns, MPKI, IPC,
+//! LLC sensitivity) come from hardware PMUs on four machines. This
+//! substrate reproduces their *shapes* from first principles:
+//!
+//! * [`binsize`] — program vs metadata footprint per kernel configuration;
+//! * [`machine`] — the four host models of paper Table 2 (cache
+//!   geometries, fetch/miss penalties, branch predictor size);
+//! * [`cache`] — a set-associative, multi-level cache simulator;
+//! * [`branch`] — a bimodal branch predictor model;
+//! * [`trace`] — instrumented walkers that replay a kernel configuration's
+//!   per-cycle instruction/memory/branch behaviour into the models;
+//! * [`topdown`] — a top-down (Yasin) slot accounting built from the
+//!   modeled miss/mispredict rates, giving frontend-bound/bad-speculation
+//!   fractions and an IPC estimate.
+
+pub mod binsize;
+pub mod machine;
+pub mod cache;
+pub mod branch;
+pub mod trace;
+pub mod topdown;

@@ -1,0 +1,109 @@
+//! Top-down slot accounting (Yasin, ISPASS'14 — paper Fig 7 / §7.2) built
+//! from the modeled miss and mispredict counts, plus an IPC / wall-time
+//! estimator used for the per-machine performance projections.
+
+use super::machine::Machine;
+use super::trace::Profile;
+
+/// Top-down breakdown + derived rates for one profile on one machine.
+#[derive(Debug, Clone)]
+pub struct TopDown {
+    pub frontend_bound: f64,
+    pub bad_speculation: f64,
+    pub retiring: f64,
+    pub backend_bound: f64,
+    pub ipc: f64,
+    /// modeled core cycles per simulated RTL cycle
+    pub cycles_per_sim_cycle: f64,
+    pub l1i_mpki: f64,
+    pub l1d_mpki: f64,
+    pub mispredict_rate: f64,
+}
+
+/// Build the top-down view of a profile.
+pub fn analyze(p: &Profile, m: &Machine) -> TopDown {
+    let insts = p.instructions as f64;
+    let issue = m.issue_width as f64;
+    // cycle composition
+    let base_cycles = insts / issue;
+    let fetch_cycles = p.fetch_stall_cycles as f64;
+    let spec_cycles = p.mispredicts as f64 * m.mispredict_penalty as f64;
+    let data_cycles = p.data_stall_cycles as f64;
+    let cycles = base_cycles + fetch_cycles + spec_cycles + data_cycles;
+
+    TopDown {
+        frontend_bound: fetch_cycles / cycles,
+        bad_speculation: spec_cycles / cycles,
+        retiring: base_cycles / cycles,
+        backend_bound: data_cycles / cycles,
+        ipc: insts / cycles,
+        cycles_per_sim_cycle: cycles / p.cycles_sampled as f64,
+        l1i_mpki: p.l1i_mpki(),
+        l1d_mpki: p.l1d_mpki(),
+        mispredict_rate: p.mispredict_rate(),
+    }
+}
+
+/// Modeled wall-clock seconds to simulate `sim_cycles` RTL cycles on `m`.
+pub fn modeled_sim_time(td: &TopDown, m: &Machine, sim_cycles: u64) -> f64 {
+    td.cycles_per_sim_cycle * sim_cycles as f64 / (m.ghz * 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::random_circuit;
+    use crate::graph::passes::optimize;
+    use crate::kernels::KernelConfig;
+    use crate::perf::machine;
+    use crate::perf::trace::{profile, SimStyle};
+    use crate::tensor::ir::lower;
+    use crate::tensor::oim::Oim;
+    use crate::util::prng::Rng;
+
+    fn oim(size: usize) -> Oim {
+        let mut rng = Rng::new(11);
+        let g = random_circuit(&mut rng, size);
+        let (opt, _) = optimize(&g);
+        Oim::from_ir(&lower(&opt))
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let o = oim(500);
+        let m = machine::intel_xeon();
+        for cfg in crate::kernels::ALL_KERNELS {
+            let p = profile(SimStyle::Kernel(cfg), &o, &m, 2);
+            let td = analyze(&p, &m);
+            let sum = td.frontend_bound + td.bad_speculation + td.retiring + td.backend_bound;
+            assert!((sum - 1.0).abs() < 1e-9, "{}: {sum}", cfg.name());
+            assert!(td.ipc > 0.0 && td.ipc <= m.issue_width as f64);
+        }
+    }
+
+    #[test]
+    fn su_is_more_frontend_bound_than_psu_on_xeon() {
+        // the paper's central §7.2 observation: ~5% frontend for PSU vs
+        // ~80% for SU on the Xeon (big design); shapes must match
+        let o = oim(4000);
+        let m = machine::intel_xeon();
+        let psu = analyze(&profile(SimStyle::Kernel(KernelConfig::PSU), &o, &m, 2), &m);
+        let su = analyze(&profile(SimStyle::Kernel(KernelConfig::SU), &o, &m, 2), &m);
+        assert!(
+            su.frontend_bound > psu.frontend_bound * 3.0,
+            "SU {} vs PSU {}",
+            su.frontend_bound,
+            psu.frontend_bound
+        );
+    }
+
+    #[test]
+    fn modeled_time_scales_with_cycles() {
+        let o = oim(300);
+        let m = machine::amd_ryzen();
+        let td = analyze(&profile(SimStyle::Kernel(KernelConfig::PSU), &o, &m, 2), &m);
+        let t1 = modeled_sim_time(&td, &m, 1000);
+        let t2 = modeled_sim_time(&td, &m, 2000);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,372 @@
+//! Instrumented replay: walks a simulator configuration's per-cycle
+//! instruction-fetch / data-access / branch behaviour into the cache and
+//! branch models, producing the counter-level profile the paper reads off
+//! hardware PMUs.
+//!
+//! The walker replays the *same iteration the executor performs* (format-B
+//! order for RU/OU and the compiled baselines; format-C order for
+//! NU/PSU/IU/SU/TI), with a simulated address map:
+//!
+//! ```text
+//! 0x0000_0000  code  (per-style layout; unrolled styles get per-op sites)
+//! 0x4x00_0000  OIM metadata arrays (one base per array)
+//! 0x8000_0000  LI slot file (8 B per slot)
+//! 0x9000_0000  LO layer-output buffer
+//! ```
+
+use super::branch::Predictor;
+use super::cache::Hierarchy;
+use super::machine::Machine;
+use crate::kernels::KernelConfig;
+use crate::tensor::ir::NUM_KOPS;
+use crate::tensor::oim::Oim;
+use crate::util::prng::Rng;
+
+/// What is being profiled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimStyle {
+    Kernel(KernelConfig),
+    /// Compiled per-node branchy code (Verilator-class).
+    Verilator,
+    /// Fully unrolled straight-line code (ESSENT-class, -O2).
+    Essent,
+}
+
+impl SimStyle {
+    pub fn name(&self) -> String {
+        match self {
+            SimStyle::Kernel(k) => k.name().to_string(),
+            SimStyle::Verilator => "verilator-like".into(),
+            SimStyle::Essent => "essent-like".into(),
+        }
+    }
+}
+
+/// Counter-level profile over the sampled cycles.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub style: String,
+    pub cycles_sampled: u64,
+    pub instructions: u64,
+    pub l1i_accesses: u64,
+    pub l1i_misses: u64,
+    pub l1d_loads: u64,
+    pub l1d_stores: u64,
+    pub l1d_misses: u64,
+    pub llc_misses: u64,
+    pub branches: u64,
+    pub mispredicts: u64,
+    pub fetch_stall_cycles: u64,
+    pub data_stall_cycles: u64,
+}
+
+impl Profile {
+    pub fn mispredict_rate(&self) -> f64 {
+        if self.branches == 0 {
+            0.0
+        } else {
+            self.mispredicts as f64 / self.branches as f64
+        }
+    }
+    pub fn l1i_mpki(&self) -> f64 {
+        self.l1i_misses as f64 / (self.instructions as f64 / 1000.0)
+    }
+    pub fn l1d_mpki(&self) -> f64 {
+        self.l1d_misses as f64 / (self.instructions as f64 / 1000.0)
+    }
+}
+
+// ---- simulated address map ----
+const CODE: u64 = 0x0000_0000;
+const UNROLLED_CODE: u64 = 0x0100_0000; // per-op code sites for IU/SU/TI
+const I_PAYLOAD: u64 = 0x4000_0000;
+const N_PAYLOAD: u64 = 0x4100_0000;
+const S_COORDS: u64 = 0x4200_0000;
+const N_COORDS: u64 = 0x4300_0000;
+const R_COORDS: u64 = 0x4400_0000;
+const IMM: u64 = 0x4500_0000;
+const MASKA: u64 = 0x4600_0000;
+const ARITY: u64 = 0x4800_0000;
+const LI: u64 = 0x8000_0000;
+const LO: u64 = 0x9000_0000;
+
+/// Modeled dynamic instructions per op for each style (loop + fetch +
+/// compute + store overheads; calibrated to reproduce the RU→TI dynamic
+/// instruction decline of paper Table 5).
+fn insts_per_op(style: SimStyle, arity: usize) -> u64 {
+    let a = arity as u64;
+    match style {
+        SimStyle::Kernel(KernelConfig::RU) => 18 + 4 * a,
+        SimStyle::Kernel(KernelConfig::OU) => 12 + 3 * a,
+        SimStyle::Kernel(KernelConfig::NU) => 8 + 2 * a,
+        SimStyle::Kernel(KernelConfig::PSU) => 6 + 2 * a,
+        SimStyle::Kernel(KernelConfig::IU) => 5 + 2 * a,
+        SimStyle::Kernel(KernelConfig::SU) => 4 + 2 * a,
+        SimStyle::Kernel(KernelConfig::TI) => 3 + a,
+        SimStyle::Verilator => 10 + 3 * a, // branchy compiled code
+        SimStyle::Essent => 2 + a,         // aggressively optimized straight line
+    }
+}
+
+/// Writeback instructions per op.
+fn wb_insts_per_op(style: SimStyle) -> u64 {
+    match style {
+        SimStyle::Kernel(KernelConfig::RU | KernelConfig::OU | KernelConfig::NU) => 4,
+        SimStyle::Kernel(KernelConfig::PSU | KernelConfig::IU) => 2,
+        SimStyle::Kernel(KernelConfig::SU) => 2,
+        // TI / baselines write slots directly
+        _ => 0,
+    }
+}
+
+/// Straight-line code bytes per op (I-footprint of unrolled styles).
+fn code_bytes_per_op(style: SimStyle) -> u64 {
+    match style {
+        SimStyle::Kernel(KernelConfig::SU) => super::binsize::SU_BYTES_PER_OP as u64,
+        SimStyle::Kernel(KernelConfig::TI) => super::binsize::TI_BYTES_PER_OP as u64,
+        SimStyle::Verilator => 68, // compiled, moderately optimized, branchy
+        SimStyle::Essent => 40,    // compiled, heavily optimized
+        _ => 0,
+    }
+}
+
+/// Profile one simulator style over `sample_cycles` (plus warm-up).
+pub fn profile(style: SimStyle, oim: &Oim, machine: &Machine, sample_cycles: usize) -> Profile {
+    let mut hier = Hierarchy::new(machine);
+    let mut pred = Predictor::for_machine(machine);
+    let mut insts = 0u64;
+    // warm-up cycle fills the caches/predictors, then reset counters
+    replay_cycle(style, oim, &mut hier, &mut pred, &mut insts, 0);
+    hier.reset_stats();
+    pred.cond.predictions = 0;
+    pred.cond.mispredicts = 0;
+    pred.ind.predictions = 0;
+    pred.ind.mispredicts = 0;
+    insts = 0;
+    for cycle in 1..=sample_cycles {
+        replay_cycle(style, oim, &mut hier, &mut pred, &mut insts, cycle as u64);
+    }
+    Profile {
+        style: style.name(),
+        cycles_sampled: sample_cycles as u64,
+        instructions: insts,
+        l1i_accesses: hier.stats.ifetches,
+        l1i_misses: hier.stats.l1i_misses,
+        l1d_loads: hier.stats.dloads,
+        l1d_stores: hier.stats.dstores,
+        l1d_misses: hier.stats.l1d_misses,
+        llc_misses: hier.stats.llc_misses,
+        branches: pred.total_branches(),
+        mispredicts: pred.total_mispredicts(),
+        fetch_stall_cycles: hier.stats.fetch_stall_cycles,
+        data_stall_cycles: hier.stats.data_stall_cycles,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn replay_cycle(
+    style: SimStyle,
+    oim: &Oim,
+    hier: &mut Hierarchy,
+    pred: &mut Predictor,
+    insts: &mut u64,
+    cycle: u64,
+) {
+    use KernelConfig::*;
+    let c_order = matches!(
+        style,
+        SimStyle::Kernel(NU) | SimStyle::Kernel(PSU) | SimStyle::Kernel(IU) | SimStyle::Kernel(SU) | SimStyle::Kernel(TI)
+    );
+    let arrays = if c_order { &oim.c } else { &oim.b };
+    let meta = !matches!(style, SimStyle::Kernel(SU) | SimStyle::Kernel(TI) | SimStyle::Verilator | SimStyle::Essent);
+    let uses_lo = wb_insts_per_op(style) > 0;
+    // per-op data-dependent branch outcomes for the Verilator model:
+    // branch conditions follow signal values, which are mostly stable
+    // cycle-to-cycle; a small fraction flip each cycle.
+    let mut flip_rng = Rng::new(0xBAD5EED ^ cycle);
+
+    let mut op_idx = 0usize;
+    let mut r_idx = 0usize;
+    let mut group_idx = 0usize;
+    *insts += 50; // cycle prologue/epilogue (inputs + commit)
+
+    for (layer, &cnt) in oim.i_payload.iter().enumerate() {
+        let cnt = cnt as usize;
+        if meta && !c_order {
+            hier.daccess(I_PAYLOAD + layer as u64 * 4, false);
+        }
+        if meta && c_order && !matches!(style, SimStyle::Kernel(IU)) {
+            // NU/PSU scan all op types per layer (n_payload loads)
+            for n in 0..NUM_KOPS {
+                hier.daccess(N_PAYLOAD + ((layer * NUM_KOPS + n) as u64) * 4, false);
+                *insts += 2; // the zero-iteration check overhead
+            }
+        }
+        let layer_start = op_idx;
+        for s in 0..cnt {
+            let i = layer_start + s;
+            let opcode = arrays.opcode[i];
+            let arity = arrays.arity[i] as usize;
+            *insts += insts_per_op(style, arity);
+
+            // ---- instruction fetch ----
+            match style {
+                SimStyle::Kernel(RU) | SimStyle::Kernel(OU) => {
+                    // shared loop body + per-opcode case body
+                    hier.ifetch(CODE + 0x8000);
+                    hier.ifetch(CODE + opcode as u64 * 128);
+                    // the case dispatch is an indirect jump whose target is
+                    // the opcode's case body
+                    pred.ind.jump(CODE + 0x8000, opcode as u64);
+                }
+                SimStyle::Kernel(NU) | SimStyle::Kernel(PSU) | SimStyle::Kernel(IU) => {
+                    // group bodies: reused within a group
+                    hier.ifetch(CODE + opcode as u64 * 512);
+                }
+                SimStyle::Kernel(SU) | SimStyle::Kernel(TI) | SimStyle::Essent => {
+                    // straight-line: every op has its own code site
+                    let per = code_bytes_per_op(style).max(36);
+                    let site = UNROLLED_CODE + i as u64 * per;
+                    hier.ifetch(site);
+                    if (site / 64) != ((site + per - 1) / 64) {
+                        hier.ifetch(site + per - 1);
+                    }
+                    if matches!(style, SimStyle::Kernel(TI)) {
+                        // indirect call into the shared per-opcode fn
+                        hier.ifetch(CODE + opcode as u64 * 128);
+                    }
+                }
+                SimStyle::Verilator => {
+                    let per = code_bytes_per_op(style);
+                    let site = UNROLLED_CODE + i as u64 * per;
+                    hier.ifetch(site);
+                    if (site / 64) != ((site + per - 1) / 64) {
+                        hier.ifetch(site + per - 1);
+                    }
+                    // two data-dependent conditional branches per op,
+                    // mostly stable across cycles
+                    for b in 0..2u64 {
+                        let stable = ((i as u64).wrapping_mul(0x9E37) >> b) & 1 != 0;
+                        let taken = if flip_rng.chance(0.08) { !stable } else { stable };
+                        if !pred.cond.branch(site + b * 8, taken) {
+                            *insts += 2;
+                        }
+                    }
+                }
+            }
+
+            // ---- metadata loads ----
+            if meta {
+                if !c_order {
+                    hier.daccess(N_COORDS + i as u64, false);
+                }
+                hier.daccess(ARITY + i as u64, false);
+                hier.daccess(IMM + i as u64, false);
+                hier.daccess(MASKA + i as u64 * 8, false);
+                for o in 0..arity {
+                    hier.daccess(R_COORDS + (r_idx + o) as u64 * 4, false);
+                }
+            }
+
+            // ---- LI operand loads ----
+            for o in 0..arity {
+                let slot = arrays.r_coords[r_idx + o] as u64;
+                hier.daccess(LI + slot * 8, false);
+            }
+            // ---- result ----
+            if uses_lo {
+                hier.daccess(LO + s as u64 * 8, true);
+            } else {
+                hier.daccess(LI + arrays.s_coords[i] as u64 * 8, true);
+            }
+            r_idx += arity;
+        }
+        op_idx += cnt;
+
+        // ---- writeback pass ----
+        if uses_lo {
+            for s in 0..cnt {
+                let i = layer_start + s;
+                *insts += wb_insts_per_op(style);
+                if meta || matches!(style, SimStyle::Kernel(SU)) {
+                    // s_coords load (SU bakes them in code; approximate as code)
+                    if meta {
+                        hier.daccess(S_COORDS + i as u64 * 4, false);
+                    }
+                }
+                hier.daccess(LO + s as u64 * 8, false);
+                hier.daccess(LI + arrays.s_coords[i] as u64 * 8, true);
+            }
+        }
+
+        // loop branches: layer backedge (well-predicted)
+        pred.cond.branch(CODE + 0x40, true);
+        *insts += 4;
+        let _ = group_idx;
+        group_idx += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::random_circuit;
+    use crate::graph::passes::optimize;
+    use crate::perf::machine;
+    use crate::tensor::ir::lower;
+    use crate::util::prng::Rng;
+
+    fn sample_oim(size: usize) -> Oim {
+        let mut rng = Rng::new(7);
+        let g = random_circuit(&mut rng, size);
+        let (opt, _) = optimize(&g);
+        Oim::from_ir(&lower(&opt))
+    }
+
+    #[test]
+    fn dynamic_instructions_decline_with_unrolling() {
+        let oim = sample_oim(800);
+        let m = machine::intel_xeon();
+        let mut prev = u64::MAX;
+        for cfg in crate::kernels::ALL_KERNELS {
+            let p = profile(SimStyle::Kernel(cfg), &oim, &m, 2);
+            assert!(
+                p.instructions <= prev,
+                "{}: {} > previous {}",
+                cfg.name(),
+                p.instructions,
+                prev
+            );
+            prev = p.instructions;
+        }
+    }
+
+    #[test]
+    fn unrolled_kernels_touch_more_icache() {
+        let oim = sample_oim(3000);
+        let m = machine::intel_xeon();
+        let psu = profile(SimStyle::Kernel(crate::kernels::KernelConfig::PSU), &oim, &m, 2);
+        let su = profile(SimStyle::Kernel(crate::kernels::KernelConfig::SU), &oim, &m, 2);
+        assert!(
+            su.l1i_misses > psu.l1i_misses * 5,
+            "SU {} vs PSU {}",
+            su.l1i_misses,
+            psu.l1i_misses
+        );
+        // and fewer D-loads (paper Table 6)
+        assert!(su.l1d_loads < psu.l1d_loads);
+    }
+
+    #[test]
+    fn verilator_mispredicts_on_x86_not_graviton() {
+        let oim = sample_oim(2000);
+        let x86 = profile(SimStyle::Verilator, &oim, &machine::intel_xeon(), 3);
+        let arm = profile(SimStyle::Verilator, &oim, &machine::aws_graviton4(), 3);
+        assert!(x86.mispredict_rate() > 0.04, "x86 rate {}", x86.mispredict_rate());
+        // ESSENT-class straight line barely mispredicts anywhere
+        let ess = profile(SimStyle::Essent, &oim, &machine::intel_xeon(), 3);
+        assert!(ess.mispredict_rate() < 0.01, "essent rate {}", ess.mispredict_rate());
+        // graviton's history predictor does no worse than x86
+        assert!(arm.mispredict_rate() <= x86.mispredict_rate());
+    }
+}

@@ -1,0 +1,9 @@
+//! XLA/PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the simulation path with
+//! **no Python anywhere** — the L3↔L2 boundary of the three-layer
+//! architecture.
+
+pub mod pjrt;
+pub mod xla_backend;
+
+pub use xla_backend::XlaBackend;

@@ -1,0 +1,34 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: HLO *text* in,
+//! compiled executable out (see /opt/xla-example and DESIGN.md — HLO text
+//! is the interchange format because jax ≥ 0.5 emits 64-bit-id protos
+//! that xla_extension 0.5.1 rejects).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client + compiled executables.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+    }
+}

@@ -1,0 +1,81 @@
+//! DMI-style host–DUT channel (paper §6.2): "RTeAAL Sim connects the
+//! frontend server and the DUT by reading and updating DTM signals in the
+//! LI at the end of each simulation cycle."
+//!
+//! [`DmiHost`] is a minimal FESVR analog for `tiny_cpu`: it drives the
+//! `dmi_*` input ports to write words into DUT RAM before releasing the
+//! core, and reads results back through `dmi_rdata` after completion.
+
+use crate::kernels::SimKernel;
+
+/// Input port order expected from `designs::tiny_cpu`:
+/// `[dmi_wen, dmi_addr, dmi_wdata, dmi_raddr]`.
+pub struct DmiHost;
+
+impl DmiHost {
+    /// Write `words` into DUT RAM starting at `base` (one word per cycle).
+    pub fn load(kernel: &mut dyn SimKernel, base: u32, words: &[u32]) {
+        for (i, &w) in words.iter().enumerate() {
+            kernel.step(&[1, (base + i as u32) as u64, w as u64, 0]);
+        }
+        // settle cycle with DMI idle
+        kernel.step(&[0, 0, 0, 0]);
+    }
+
+    /// Read one word of DUT RAM via the DMI read port.
+    pub fn peek(kernel: &mut dyn SimKernel, addr: u32) -> u64 {
+        // drive raddr; the read is combinational, visible after the step
+        kernel.step(&[0, 0, 0, addr as u64]);
+        kernel
+            .outputs()
+            .into_iter()
+            .find(|(n, _)| n == "dmi_rdata")
+            .map(|(_, v)| v)
+            .expect("design exposes dmi_rdata")
+    }
+
+    /// Run until the DUT raises `halted` (returns cycles, None on timeout).
+    pub fn run_to_halt(kernel: &mut dyn SimKernel, max_cycles: u64) -> Option<u64> {
+        for c in 0..max_cycles {
+            kernel.step(&[0, 0, 0, 0]);
+            if kernel.outputs().iter().any(|(n, v)| n == "halted" && *v == 1) {
+                return Some(c + 1);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::designs::tiny_cpu::{self, addi, beq, halt, lw, sw};
+    use crate::graph::passes::optimize;
+    use crate::kernels::{build, KernelConfig};
+    use crate::tensor::ir::lower;
+
+    /// Full host-DUT session: the DUT spin-waits on a mailbox flag, the
+    /// host preloads data + raises the flag via DMI, the program consumes
+    /// it, and the host reads the result back via DMI — the FESVR pattern.
+    #[test]
+    fn fesvr_style_session() {
+        let prog = vec![
+            lw(2, 0, 11),  // 0: r2 = flag
+            beq(2, 0, 0),  // 1: spin until host raises it
+            lw(1, 0, 10),  // 2: r1 = mailbox data
+            addi(1, 1, 7), // 3: r1 += 7
+            sw(1, 0, 0),   // 4: RAM[0] = r1
+            halt(),        // 5
+        ];
+        let g = tiny_cpu::tiny_cpu(&prog);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let mut kernel = build(KernelConfig::PSU, &ir);
+        // host writes 35 into the mailbox, then raises the flag
+        DmiHost::load(kernel.as_mut(), 10, &[35]);
+        DmiHost::load(kernel.as_mut(), 11, &[1]);
+        let cycles = DmiHost::run_to_halt(kernel.as_mut(), 100).expect("halts");
+        assert!(cycles < 50);
+        assert_eq!(DmiHost::peek(kernel.as_mut(), 0), 42);
+    }
+}

@@ -1,0 +1,9 @@
+//! Simulation infrastructure: the cycle driver ([`simulator`]), VCD
+//! waveform generation ([`vcd`], paper §6.2) and the DMI-style host–DUT
+//! channel ([`dmi`], paper §6.2).
+
+pub mod simulator;
+pub mod vcd;
+pub mod dmi;
+
+pub use simulator::{SimStats, Simulator};

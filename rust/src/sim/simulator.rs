@@ -1,0 +1,132 @@
+//! The cycle-level simulation driver: connects a stimulus source to any
+//! [`SimKernel`] (RTeAAL kernels or baselines), with optional waveform
+//! capture and throughput statistics.
+
+use std::time::Instant;
+
+use crate::kernels::SimKernel;
+use crate::sim::vcd::VcdWriter;
+use crate::tensor::ir::LayerIr;
+
+/// Results of a simulation run.
+#[derive(Debug, Clone)]
+pub struct SimStats {
+    pub cycles: u64,
+    pub wall: std::time::Duration,
+    /// simulated cycles per second
+    pub hz: f64,
+}
+
+impl SimStats {
+    pub fn khz(&self) -> f64 {
+        self.hz / 1e3
+    }
+}
+
+/// Driver owning a kernel + stimulus.
+pub struct Simulator {
+    pub kernel: Box<dyn SimKernel>,
+    stimulus: Box<dyn FnMut(u64) -> Vec<u64>>,
+    vcd: Option<VcdWriter>,
+    cycle: u64,
+}
+
+impl Simulator {
+    pub fn new(kernel: Box<dyn SimKernel>, stimulus: Box<dyn FnMut(u64) -> Vec<u64>>) -> Self {
+        Simulator { kernel, stimulus, vcd: None, cycle: 0 }
+    }
+
+    /// Attach a VCD waveform writer (paper §6.2: optimizations that would
+    /// eliminate signals are disabled by the caller compiling with
+    /// `optimize_no_fusion` + naming).
+    pub fn with_vcd(mut self, ir: &LayerIr, path: &std::path::Path) -> std::io::Result<Self> {
+        self.vcd = Some(VcdWriter::create(ir, path)?);
+        Ok(self)
+    }
+
+    /// Run for `cycles`, returning throughput statistics.
+    pub fn run(&mut self, cycles: u64) -> SimStats {
+        let t0 = Instant::now();
+        for _ in 0..cycles {
+            let inputs = (self.stimulus)(self.cycle);
+            self.kernel.step(&inputs);
+            self.cycle += 1;
+            if let Some(vcd) = &mut self.vcd {
+                vcd.sample(self.cycle, self.kernel.slots());
+            }
+        }
+        let wall = t0.elapsed();
+        SimStats { cycles, wall, hz: cycles as f64 / wall.as_secs_f64().max(1e-12) }
+    }
+
+    /// Run until `pred(outputs)` is true or `max_cycles` elapse. Returns
+    /// the cycle count at which the predicate fired (None on timeout).
+    pub fn run_until(
+        &mut self,
+        max_cycles: u64,
+        mut pred: impl FnMut(&[(String, u64)]) -> bool,
+    ) -> Option<u64> {
+        for _ in 0..max_cycles {
+            let inputs = (self.stimulus)(self.cycle);
+            self.kernel.step(&inputs);
+            self.cycle += 1;
+            if let Some(vcd) = &mut self.vcd {
+                vcd.sample(self.cycle, self.kernel.slots());
+            }
+            if pred(&self.kernel.outputs()) {
+                return Some(self.cycle);
+            }
+        }
+        None
+    }
+
+    pub fn outputs(&self) -> Vec<(String, u64)> {
+        self.kernel.outputs()
+    }
+
+    /// Finish any waveform output.
+    pub fn finish(mut self) -> std::io::Result<()> {
+        if let Some(vcd) = self.vcd.take() {
+            vcd.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::designs::catalog;
+    use crate::kernels::{build, KernelConfig};
+    use crate::tensor::ir::lower;
+    use crate::graph::passes::optimize;
+
+    #[test]
+    fn runs_counter_design() {
+        let d = catalog("counter").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let kernel = build(KernelConfig::PSU, &ir);
+        let mut sim = Simulator::new(kernel, d.make_stimulus());
+        let stats = sim.run(1000);
+        assert_eq!(stats.cycles, 1000);
+        assert!(stats.hz > 0.0);
+    }
+
+    #[test]
+    fn run_until_tiny_cpu_halts() {
+        let d = catalog("tiny_cpu").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let kernel = build(KernelConfig::TI, &ir);
+        let mut sim = Simulator::new(kernel, d.make_stimulus());
+        let halted = sim.run_until(10_000, |outs| {
+            outs.iter().any(|(n, v)| n == "halted" && *v == 1)
+        });
+        assert!(halted.is_some());
+        let prog = crate::designs::tiny_cpu::dhrystone_like(40);
+        let (golden, _) = crate::designs::tiny_cpu::golden_run(&prog, 1_000_000);
+        let outs: std::collections::HashMap<String, u64> = sim.outputs().into_iter().collect();
+        assert_eq!(outs["checksum"], golden as u64);
+    }
+}

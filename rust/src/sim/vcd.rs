@@ -1,0 +1,116 @@
+//! VCD waveform writer (paper §6.2): every *named* slot becomes a VCD
+//! variable; on each sampled cycle only signals whose value changed since
+//! the previous cycle are emitted (the change-detection scheme the paper
+//! describes).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::tensor::ir::LayerIr;
+
+pub struct VcdWriter {
+    out: BufWriter<File>,
+    /// (slot, id string, width)
+    vars: Vec<(u32, String, u8)>,
+    last: Vec<u64>,
+    first: bool,
+}
+
+/// VCD identifier codes: printable chars from '!' (33) to '~' (126).
+fn id_code(mut n: usize) -> String {
+    let mut s = String::new();
+    loop {
+        s.push((33 + (n % 94)) as u8 as char);
+        n /= 94;
+        if n == 0 {
+            break;
+        }
+    }
+    s
+}
+
+impl VcdWriter {
+    pub fn create(ir: &LayerIr, path: &Path) -> std::io::Result<Self> {
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "$date today $end")?;
+        writeln!(out, "$version rteaal {} $end", crate::VERSION)?;
+        writeln!(out, "$timescale 1ns $end")?;
+        writeln!(out, "$scope module {} $end", if ir.name.is_empty() { "top" } else { &ir.name })?;
+        let mut vars = Vec::new();
+        for (slot, name) in ir.slot_names.iter().enumerate() {
+            if let Some(name) = name {
+                let code = id_code(vars.len());
+                let width = ir.slot_widths[slot];
+                writeln!(out, "$var wire {width} {code} {name} $end")?;
+                vars.push((slot as u32, code, width));
+            }
+        }
+        writeln!(out, "$upscope $end")?;
+        writeln!(out, "$enddefinitions $end")?;
+        Ok(VcdWriter { out, vars, last: Vec::new(), first: true })
+    }
+
+    /// Emit changed signals at time `cycle`.
+    pub fn sample(&mut self, cycle: u64, slots: &[u64]) {
+        let _ = writeln!(self.out, "#{cycle}");
+        if self.first {
+            self.first = false;
+            self.last = vec![u64::MAX; self.vars.len()];
+        }
+        for (i, (slot, code, width)) in self.vars.iter().enumerate() {
+            let v = slots[*slot as usize];
+            if self.last[i] != v {
+                self.last[i] = v;
+                if *width == 1 {
+                    let _ = writeln!(self.out, "{}{}", v & 1, code);
+                } else {
+                    let _ = writeln!(self.out, "b{:b} {}", v, code);
+                }
+            }
+        }
+    }
+
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::designs::simple::counter;
+    use crate::tensor::ir::{lower, IrSim};
+
+    #[test]
+    fn writes_valid_vcd_with_change_detection() {
+        let g = counter(4);
+        let ir = lower(&g);
+        let dir = std::env::temp_dir().join("rteaal_vcd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("counter.vcd");
+        let mut w = VcdWriter::create(&ir, &path).unwrap();
+        let mut sim = IrSim::new(ir);
+        for c in 1..=4u64 {
+            sim.step(&[1, 0]);
+            w.sample(c, &sim.slots);
+        }
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("$enddefinitions"));
+        assert!(text.contains("$var wire 4"));
+        assert!(text.contains("#1"));
+        assert!(text.contains("#4"));
+        // count changes every cycle: 4 samples emit 4 values for it
+        let count_lines = text.lines().filter(|l| l.starts_with('b')).count();
+        assert!(count_lines >= 4, "{text}");
+    }
+
+    #[test]
+    fn id_codes_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..500 {
+            assert!(seen.insert(id_code(i)));
+        }
+    }
+}

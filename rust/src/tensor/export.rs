@@ -1,0 +1,251 @@
+//! Dense tensor-ISA export for the XLA/PJRT backend.
+//!
+//! The L2 jax model (`python/compile/model.py`) consumes this encoding at
+//! AOT time and lowers one full simulation cycle to HLO. The encoding is
+//! the *dense* instantiation of the cascade: per layer, padded arrays
+//! `opcode/a/b/c/imm/mask/aux` of shape `[num_layers, max_ops]`; a cycle
+//! is `gather → multi-op ALU (the L1 Pallas kernel) → contiguous update`
+//! per layer, then the register commit.
+//!
+//! **Slot layout (scatter-free contract with L2).** xla_extension 0.5.1
+//! (the version the `xla` crate binds) mis-executes the scatter ops newer
+//! jax emits for `state.at[idx].set`, so the export renumbers slots such
+//! that every state update is a contiguous `dynamic_update_slice`:
+//!
+//! ```text
+//! [0, n_inputs)                      input ports (row update at 0)
+//! [n_inputs, +n_regs)                registers   (commit update here)
+//! [.., +n_consts)                    constants
+//! [sources_end + i*max_ops, +max_ops)  layer i outputs (one DUS per layer)
+//! ```
+//!
+//! `max_ops` is padded to a multiple of the Pallas block (128); padding
+//! lanes are mask-0 copies of slot 0 writing their own (dead) lane slot.
+//!
+//! Constraints (checked): all signal widths ≤ 32 (u32 tensor values) and
+//! no fused mux chains (export from the `optimize_no_fusion` pipeline).
+
+use crate::tensor::ir::{KOp, LayerIr};
+use crate::util::json::{arr_str, arr_u32, obj, Json};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ExportError {
+    #[error("design has a signal of width {0} > 32; XLA backend is u32")]
+    TooWide(u8),
+    #[error("design contains fused mux chains; export from optimize_no_fusion")]
+    HasMuxChain,
+}
+
+/// Dense encoding of a design for the XLA backend.
+#[derive(Debug, Clone)]
+pub struct DenseDesign {
+    pub name: String,
+    pub num_slots: usize,
+    pub num_layers: usize,
+    pub max_ops: usize,
+    /// start of the layer-output region (== number of source slots)
+    pub sources_end: usize,
+    pub num_inputs: usize,
+    pub num_regs: usize,
+    pub opcode: Vec<u32>,
+    pub a: Vec<u32>,
+    pub b: Vec<u32>,
+    pub c: Vec<u32>,
+    pub imm: Vec<u32>,
+    pub mask: Vec<u32>,
+    pub aux: Vec<u32>,
+    /// next-state slot per register (commit = gather + DUS at n_inputs)
+    pub commit_next: Vec<u32>,
+    pub commit_mask: Vec<u32>,
+    pub input_widths: Vec<u32>,
+    pub init_slots: Vec<u32>,
+    pub init_vals: Vec<u32>,
+    pub output_slots: Vec<u32>,
+    pub output_names: Vec<String>,
+}
+
+/// Lower a LayerIr to the dense scatter-free encoding. `pad_to` rounds
+/// `max_ops` up (Pallas block tiling).
+pub fn to_dense(ir: &LayerIr, pad_to: usize) -> Result<DenseDesign, ExportError> {
+    for &w in &ir.slot_widths {
+        if w > 32 {
+            return Err(ExportError::TooWide(w));
+        }
+    }
+    let num_layers = ir.depth().max(1);
+    let raw_max = ir.max_layer_ops().max(1);
+    let max_ops = raw_max.div_ceil(pad_to.max(1)) * pad_to.max(1);
+
+    // ---- slot renumbering ----
+    let n_inputs = ir.input_slots.len();
+    let n_regs = ir.commits.len();
+    let mut map: Vec<Option<u32>> = vec![None; ir.num_slots];
+    let mut next = 0u32;
+    for &s in &ir.input_slots {
+        map[s as usize] = Some(next);
+        next += 1;
+    }
+    for &(reg, _, _) in &ir.commits {
+        map[reg as usize] = Some(next);
+        next += 1;
+    }
+    // constants (and any register-init slots already mapped above)
+    for &(slot, _) in &ir.init {
+        if map[slot as usize].is_none() {
+            map[slot as usize] = Some(next);
+            next += 1;
+        }
+    }
+    let sources_end = next as usize;
+    for (li, layer) in ir.layers.iter().enumerate() {
+        for (pos, rec) in layer.iter().enumerate() {
+            map[rec.out as usize] = Some((sources_end + li * max_ops + pos) as u32);
+        }
+    }
+    let num_slots = sources_end + num_layers * max_ops;
+    let remap = |old: u32| -> u32 {
+        map[old as usize].unwrap_or_else(|| panic!("slot {old} unmapped (unused source?)"))
+    };
+
+    let n = num_layers * max_ops;
+    let mut d = DenseDesign {
+        name: ir.name.clone(),
+        num_slots,
+        num_layers,
+        max_ops,
+        sources_end,
+        num_inputs: n_inputs,
+        num_regs: n_regs,
+        opcode: vec![KOp::Copy as u8 as u32; n],
+        a: vec![0; n],
+        b: vec![0; n],
+        c: vec![0; n],
+        imm: vec![0; n],
+        mask: vec![0; n],
+        aux: vec![0; n],
+        commit_next: ir.commits.iter().map(|c| remap(c.1)).collect(),
+        commit_mask: ir.commits.iter().map(|c| c.2 as u32).collect(),
+        input_widths: ir.input_widths.iter().map(|&w| w as u32).collect(),
+        init_slots: Vec::new(),
+        init_vals: Vec::new(),
+        output_slots: ir.output_slots.iter().map(|o| remap(o.1)).collect(),
+        output_names: ir.output_slots.iter().map(|o| o.0.clone()).collect(),
+    };
+    for &(slot, val) in &ir.init {
+        d.init_slots.push(remap(slot));
+        d.init_vals.push(val as u32);
+    }
+    for (li, layer) in ir.layers.iter().enumerate() {
+        for (pos, rec) in layer.iter().enumerate() {
+            if rec.kop() == KOp::MuxChain {
+                return Err(ExportError::HasMuxChain);
+            }
+            let idx = li * max_ops + pos;
+            d.opcode[idx] = rec.op as u32;
+            d.a[idx] = remap(rec.a);
+            d.b[idx] = if rec.arity >= 2 { remap(rec.b) } else { 0 };
+            d.c[idx] = if rec.arity >= 3 { remap(rec.c) } else { 0 };
+            d.imm[idx] = rec.imm as u32;
+            d.mask[idx] = rec.mask as u32;
+            d.aux[idx] = rec.aux as u32;
+        }
+    }
+    Ok(d)
+}
+
+impl DenseDesign {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("num_slots", Json::Int(self.num_slots as i64)),
+            ("num_layers", Json::Int(self.num_layers as i64)),
+            ("max_ops", Json::Int(self.max_ops as i64)),
+            ("sources_end", Json::Int(self.sources_end as i64)),
+            ("num_inputs", Json::Int(self.num_inputs as i64)),
+            ("num_regs", Json::Int(self.num_regs as i64)),
+            ("opcode", arr_u32(&self.opcode)),
+            ("a", arr_u32(&self.a)),
+            ("b", arr_u32(&self.b)),
+            ("c", arr_u32(&self.c)),
+            ("imm", arr_u32(&self.imm)),
+            ("mask", arr_u32(&self.mask)),
+            ("aux", arr_u32(&self.aux)),
+            ("commit_next", arr_u32(&self.commit_next)),
+            ("commit_mask", arr_u32(&self.commit_mask)),
+            ("input_widths", arr_u32(&self.input_widths)),
+            ("init_slots", arr_u32(&self.init_slots)),
+            ("init_vals", arr_u32(&self.init_vals)),
+            ("output_slots", arr_u32(&self.output_slots)),
+            ("output_names", arr_str(&self.output_names)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::random_circuit;
+    use crate::graph::ops::PrimOp;
+    use crate::graph::passes::optimize_no_fusion;
+    use crate::tensor::ir::lower;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn export_layout_is_contiguous() {
+        let mut rng = Rng::new(50);
+        let g = random_circuit(&mut rng, 60);
+        let opt = optimize_no_fusion(&g);
+        let ir = lower(&opt);
+        let d = to_dense(&ir, 8).unwrap();
+        assert_eq!(d.opcode.len(), d.num_layers * d.max_ops);
+        assert_eq!(d.max_ops % 8, 0);
+        assert_eq!(d.num_slots, d.sources_end + d.num_layers * d.max_ops);
+        // operands always reference earlier slots (sources or earlier layers)
+        for li in 0..d.num_layers {
+            let layer_base = (d.sources_end + li * d.max_ops) as u32;
+            for pos in 0..d.max_ops {
+                let i = li * d.max_ops + pos;
+                assert!(d.a[i] < layer_base, "layer {li} op {pos} reads its own layer");
+                assert!(d.b[i] < layer_base);
+                assert!(d.c[i] < layer_base);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wide_designs() {
+        let mut g = crate::graph::Graph::new("wide");
+        let a = g.input("a", 40);
+        let n = g.prim(PrimOp::Not, &[a]);
+        g.output("o", n);
+        let ir = lower(&g);
+        assert!(matches!(to_dense(&ir, 8), Err(ExportError::TooWide(40))));
+    }
+
+    #[test]
+    fn rejects_mux_chains() {
+        let mut g = crate::graph::Graph::new("mc");
+        let s0 = g.input("s0", 1);
+        let v0 = g.input("v0", 4);
+        let s1 = g.input("s1", 1);
+        let v1 = g.input("v1", 4);
+        let d0 = g.input("d", 4);
+        let m = g.prim(PrimOp::MuxChain(2), &[s0, v0, s1, v1, d0]);
+        g.output("o", m);
+        let ir = lower(&g);
+        assert!(matches!(to_dense(&ir, 8), Err(ExportError::HasMuxChain)));
+    }
+
+    #[test]
+    fn json_has_all_fields() {
+        let mut rng = Rng::new(51);
+        let g = random_circuit(&mut rng, 30);
+        let opt = optimize_no_fusion(&g);
+        let d = to_dense(&lower(&opt), 8).unwrap();
+        let j = crate::util::json::parse(&d.to_json().to_string()).unwrap();
+        for f in ["opcode", "a", "b", "c", "imm", "mask", "aux", "commit_next", "sources_end"] {
+            assert!(j.get(f).is_some(), "missing {f}");
+        }
+        assert_eq!(j.req_usize("max_ops").unwrap(), d.max_ops);
+    }
+}

@@ -1,0 +1,139 @@
+//! The fibertree abstraction (paper §2.2, after Sze et al.).
+//!
+//! A tensor is a tree of [`Fiber`]s, one level per rank; each fiber maps
+//! coordinates to payloads, and a payload is either a scalar (leaf) or a
+//! reference to the next-level fiber. Sparse fibers simply omit empty
+//! coordinates. This representation is deliberately *abstract* — concrete
+//! formats (coordinate/payload arrays, cbits/pbits) live in
+//! [`super::format`] — and is used by the Einsum cascade evaluator
+//! (`crate::einsum`), i.e. on the specification/oracle path, never on the
+//! simulation hot path.
+
+use std::collections::BTreeMap;
+
+/// Payload: scalar at the leaf rank, sub-fiber otherwise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Val(u64),
+    Sub(Fiber),
+}
+
+impl Payload {
+    pub fn as_val(&self) -> u64 {
+        match self {
+            Payload::Val(v) => *v,
+            Payload::Sub(_) => panic!("expected leaf payload"),
+        }
+    }
+    pub fn as_fiber(&self) -> &Fiber {
+        match self {
+            Payload::Sub(f) => f,
+            Payload::Val(_) => panic!("expected sub-fiber payload"),
+        }
+    }
+}
+
+/// A fiber: ordered (coordinate → payload) with a declared shape.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Fiber {
+    /// Number of possible coordinates (paper: "shape").
+    pub shape: usize,
+    pub entries: BTreeMap<usize, Payload>,
+}
+
+impl Fiber {
+    pub fn new(shape: usize) -> Self {
+        Fiber { shape, entries: BTreeMap::new() }
+    }
+
+    /// Paper: "occupancy" — number of non-empty coordinates.
+    pub fn occupancy(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn get(&self, coord: usize) -> Option<&Payload> {
+        self.entries.get(&coord)
+    }
+
+    pub fn set(&mut self, coord: usize, p: Payload) {
+        debug_assert!(coord < self.shape, "coordinate {coord} out of shape {}", self.shape);
+        self.entries.insert(coord, p);
+    }
+
+    /// Set a leaf value at a path of coordinates, creating intermediate
+    /// fibers (with the given shapes) as needed.
+    pub fn set_path(&mut self, path: &[usize], shapes: &[usize], v: u64) {
+        debug_assert_eq!(path.len(), shapes.len() + 1);
+        if path.len() == 1 {
+            self.set(path[0], Payload::Val(v));
+            return;
+        }
+        let entry = self
+            .entries
+            .entry(path[0])
+            .or_insert_with(|| Payload::Sub(Fiber::new(shapes[0])));
+        match entry {
+            Payload::Sub(f) => f.set_path(&path[1..], &shapes[1..], v),
+            Payload::Val(_) => panic!("leaf/sub mismatch at coordinate {}", path[0]),
+        }
+    }
+
+    /// Leaf value at a full path (None if any coordinate is empty).
+    pub fn get_path(&self, path: &[usize]) -> Option<u64> {
+        let p = self.get(path[0])?;
+        if path.len() == 1 {
+            Some(p.as_val())
+        } else {
+            p.as_fiber().get_path(&path[1..])
+        }
+    }
+
+    /// Iterate (coordinate, payload) in coordinate-ascending order — the
+    /// traversal-order guarantee the O rank relies on (§4.1).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &Payload)> {
+        self.entries.iter().map(|(c, p)| (*c, p))
+    }
+
+    /// Count leaves (points with scalar values) in the whole subtree.
+    pub fn count_leaves(&self) -> usize {
+        self.entries
+            .values()
+            .map(|p| match p {
+                Payload::Val(_) => 1,
+                Payload::Sub(f) => f.count_leaves(),
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_figure2_example() {
+        // Matrix A (M=3, K=3) with A[0,2]=1, A[2,0]=2, A[2,1]=3, A[2,2]=4:
+        // rank M: one fiber shape 3 occupancy 2; rank K: fibers occ 1 and 3.
+        let mut a = Fiber::new(3);
+        a.set_path(&[0, 2], &[3], 1);
+        a.set_path(&[2, 0], &[3], 2);
+        a.set_path(&[2, 1], &[3], 3);
+        a.set_path(&[2, 2], &[3], 4);
+        assert_eq!(a.occupancy(), 2);
+        assert_eq!(a.get(0).unwrap().as_fiber().occupancy(), 1);
+        assert_eq!(a.get(2).unwrap().as_fiber().occupancy(), 3);
+        assert_eq!(a.get_path(&[2, 1]), Some(3));
+        assert_eq!(a.get_path(&[1, 1]), None);
+        assert_eq!(a.count_leaves(), 4);
+    }
+
+    #[test]
+    fn ascending_iteration() {
+        let mut f = Fiber::new(10);
+        for c in [7, 1, 4] {
+            f.set(c, Payload::Val(c as u64));
+        }
+        let coords: Vec<usize> = f.iter().map(|(c, _)| c).collect();
+        assert_eq!(coords, vec![1, 4, 7]);
+    }
+}

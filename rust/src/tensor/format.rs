@@ -1,0 +1,100 @@
+//! Per-rank concrete tensor formats (paper §2.5.2 and Fig 12).
+//!
+//! A rank's format is `(un)compressed` + coordinate bitwidth (`cbits`) +
+//! payload bitwidth (`pbits`); setting a bitwidth to zero elides that
+//! array. [`FormatSpec`] describes one lowering of the OIM onto arrays and
+//! computes its storage cost — this drives the paper's format-optimization
+//! story (Fig 12 a→b→c) and the D-cache footprint model.
+
+use crate::util::fmt_bytes;
+
+/// Bits needed to encode values in `0..=max`.
+pub fn bits_for(max: u64) -> u8 {
+    (64 - max.leading_zeros()).max(1) as u8
+}
+
+/// One rank of a format specification.
+#[derive(Clone, Debug)]
+pub struct RankFormat {
+    pub rank: &'static str,
+    /// Compressed (size ∝ occupancy) or uncompressed (size ∝ shape).
+    pub compressed: bool,
+    pub cbits: u8,
+    pub pbits: u8,
+    /// Number of stored entries (occupancy for compressed ranks, shape for
+    /// uncompressed ones).
+    pub entries: usize,
+}
+
+impl RankFormat {
+    pub fn bytes(&self) -> usize {
+        // Arrays are stored separately; each is byte-aligned as a whole.
+        let coord = (self.entries * self.cbits as usize + 7) / 8;
+        let payload = (self.entries * self.pbits as usize + 7) / 8;
+        coord + payload
+    }
+}
+
+/// A complete format specification for a tensor.
+#[derive(Clone, Debug)]
+pub struct FormatSpec {
+    pub name: String,
+    pub ranks: Vec<RankFormat>,
+    /// Side metadata not part of the rank arrays (operation parameters:
+    /// imm/mask/aux). The paper's toy op set has none; FIRRTL's does.
+    pub param_bytes: usize,
+}
+
+impl FormatSpec {
+    pub fn total_bytes(&self) -> usize {
+        self.ranks.iter().map(|r| r.bytes()).sum::<usize>() + self.param_bytes
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = crate::util::tables::Table::new(
+            &format!("format {} — {}", self.name, fmt_bytes(self.total_bytes())),
+            &["rank", "C/U", "cbits", "pbits", "entries", "bytes"],
+        );
+        for r in &self.ranks {
+            t.row(vec![
+                r.rank.to_string(),
+                if r.compressed { "C" } else { "U" }.to_string(),
+                r.cbits.to_string(),
+                r.pbits.to_string(),
+                r.entries.to_string(),
+                r.bytes().to_string(),
+            ]);
+        }
+        if self.param_bytes > 0 {
+            t.row(vec!["(params)".into(), "-".into(), "-".into(), "-".into(), "-".into(), self.param_bytes.to_string()]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_for_boundaries() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 2);
+        assert_eq!(bits_for(255), 8);
+        assert_eq!(bits_for(256), 9);
+        assert_eq!(bits_for(u64::MAX), 64);
+    }
+
+    #[test]
+    fn zero_bits_elides_array() {
+        let r = RankFormat { rank: "O", compressed: false, cbits: 0, pbits: 0, entries: 1000 };
+        assert_eq!(r.bytes(), 0);
+    }
+
+    #[test]
+    fn byte_rounding() {
+        let r = RankFormat { rank: "S", compressed: true, cbits: 10, pbits: 0, entries: 3 };
+        assert_eq!(r.bytes(), 4); // 30 bits -> 4 bytes
+    }
+}

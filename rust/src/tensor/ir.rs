@@ -1,0 +1,551 @@
+//! Lowered layer IR: the logical content of the `LI`/`OIM`/`LO` tensors.
+//!
+//! Lowering (from a levelized graph):
+//! * every graph node gets a *slot* in the flat value file `LI` (identity
+//!   elision, §4.3: source and destination coordinates match, so identity
+//!   ops vanish);
+//! * each primitive op becomes an [`OpRec`] with a normalized executor
+//!   opcode ([`KOp`]): width-dependent FIRRTL ops (`bits`, `head`, `tail`,
+//!   `pad`, `andr`, `cat`) are rewritten into shift/mask/compare form with
+//!   precomputed immediates so kernels never consult operand widths;
+//! * ops within a layer stay in natural S order (the format-B order);
+//!   the S/N swizzle of §5.2 (format C) is materialized by
+//!   [`crate::tensor::oim::Oim`].
+
+use crate::graph::levelize::{levelize, Levelized};
+use crate::graph::ops::{mask, PrimOp};
+use crate::graph::{Graph, NodeKind};
+
+/// Executor opcode. Every variant's semantics are fully determined by the
+/// record's operands + immediates (no width lookups at run time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum KOp {
+    Add = 0,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Lt,
+    Leq,
+    Gt,
+    Geq,
+    Eq,
+    Neq,
+    And,
+    Or,
+    Xor,
+    Not,
+    Neg,
+    /// `out = (a == aux)` — and-reduction against a precomputed full mask.
+    AndrK,
+    Orr,
+    Xorr,
+    /// `out = a << imm`
+    ShlI,
+    /// `out = a >> imm`
+    ShrI,
+    Dshl,
+    Dshr,
+    /// `out = (a << imm) | b` (imm = width of b)
+    Cat,
+    /// `out = a ? b : c`
+    Mux,
+    /// `out = a & mask` (absorbs id/pad/tail/bits-with-zero-shift)
+    Copy,
+    /// Fused mux chain; operands beyond the first 3 live in `ext_args`.
+    MuxChain,
+}
+
+pub const NUM_KOPS: usize = 27;
+
+impl KOp {
+    pub fn from_u8(v: u8) -> KOp {
+        assert!((v as usize) < NUM_KOPS);
+        // SAFETY: repr(u8), contiguous discriminants checked above.
+        unsafe { std::mem::transmute(v) }
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            KOp::Add => "add",
+            KOp::Sub => "sub",
+            KOp::Mul => "mul",
+            KOp::Div => "div",
+            KOp::Rem => "rem",
+            KOp::Lt => "lt",
+            KOp::Leq => "leq",
+            KOp::Gt => "gt",
+            KOp::Geq => "geq",
+            KOp::Eq => "eq",
+            KOp::Neq => "neq",
+            KOp::And => "and",
+            KOp::Or => "or",
+            KOp::Xor => "xor",
+            KOp::Not => "not",
+            KOp::Neg => "neg",
+            KOp::AndrK => "andr",
+            KOp::Orr => "orr",
+            KOp::Xorr => "xorr",
+            KOp::ShlI => "shli",
+            KOp::ShrI => "shri",
+            KOp::Dshl => "dshl",
+            KOp::Dshr => "dshr",
+            KOp::Cat => "cat",
+            KOp::Mux => "mux",
+            KOp::Copy => "copy",
+            KOp::MuxChain => "muxchain",
+        }
+    }
+
+    /// Number of slot operands read from `LI` (MuxChain reads `imm*2+1`).
+    pub fn arity(self) -> usize {
+        match self {
+            KOp::Not | KOp::Neg | KOp::AndrK | KOp::Orr | KOp::Xorr | KOp::ShlI | KOp::ShrI | KOp::Copy => 1,
+            KOp::Mux => 3,
+            KOp::MuxChain => usize::MAX, // variable; use OpRec::arity
+            _ => 2,
+        }
+    }
+}
+
+/// One operation record: the paper's `(s, n, {o→r})` OIM entry plus the
+/// normalized immediates. 48 bytes, cache-line friendly.
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct OpRec {
+    /// Output slot (the S coordinate after identity elision).
+    pub out: u32,
+    /// First three operand slots (R coordinates in O order).
+    pub a: u32,
+    pub b: u32,
+    pub c: u32,
+    /// Result mask (`mask(out_width)`, possibly tightened by bits/tail).
+    pub mask: u64,
+    /// AndrK compare value.
+    pub aux: u64,
+    /// Opcode (KOp as u8).
+    pub op: u8,
+    /// Operand count (for MuxChain: 2k+1).
+    pub arity: u8,
+    /// Shift amount / cat's b-width / muxchain k.
+    pub imm: u8,
+    pub _pad: u8,
+    /// Offset into `LayerIr::ext_args` for operands beyond 3 (MuxChain).
+    pub ext: u32,
+}
+
+impl OpRec {
+    pub fn kop(&self) -> KOp {
+        KOp::from_u8(self.op)
+    }
+}
+
+/// Evaluate one op record against the slot file. The single definition
+/// shared by all kernels' scalar paths.
+#[inline(always)]
+pub fn eval_rec(rec: &OpRec, li: &[u64], ext_args: &[u32]) -> u64 {
+    let a = li[rec.a as usize];
+    let raw = match rec.kop() {
+        KOp::Add => a.wrapping_add(li[rec.b as usize]),
+        KOp::Sub => a.wrapping_sub(li[rec.b as usize]),
+        KOp::Mul => a.wrapping_mul(li[rec.b as usize]),
+        KOp::Div => {
+            let b = li[rec.b as usize];
+            if b == 0 {
+                0
+            } else {
+                a / b
+            }
+        }
+        KOp::Rem => {
+            let b = li[rec.b as usize];
+            if b == 0 {
+                0
+            } else {
+                a % b
+            }
+        }
+        KOp::Lt => (a < li[rec.b as usize]) as u64,
+        KOp::Leq => (a <= li[rec.b as usize]) as u64,
+        KOp::Gt => (a > li[rec.b as usize]) as u64,
+        KOp::Geq => (a >= li[rec.b as usize]) as u64,
+        KOp::Eq => (a == li[rec.b as usize]) as u64,
+        KOp::Neq => (a != li[rec.b as usize]) as u64,
+        KOp::And => a & li[rec.b as usize],
+        KOp::Or => a | li[rec.b as usize],
+        KOp::Xor => a ^ li[rec.b as usize],
+        KOp::Not => !a,
+        KOp::Neg => a.wrapping_neg(),
+        KOp::AndrK => (a == rec.aux) as u64,
+        KOp::Orr => (a != 0) as u64,
+        KOp::Xorr => (a.count_ones() & 1) as u64,
+        KOp::ShlI => a << rec.imm,
+        KOp::ShrI => a >> rec.imm,
+        KOp::Dshl => {
+            let b = li[rec.b as usize];
+            if b >= 64 {
+                0
+            } else {
+                a << b
+            }
+        }
+        KOp::Dshr => {
+            let b = li[rec.b as usize];
+            if b >= 64 {
+                0
+            } else {
+                a >> b
+            }
+        }
+        KOp::Cat => (a << rec.imm) | li[rec.b as usize],
+        KOp::Mux => {
+            if a != 0 {
+                li[rec.b as usize]
+            } else {
+                li[rec.c as usize]
+            }
+        }
+        KOp::Copy => a,
+        KOp::MuxChain => {
+            let k = rec.imm as usize;
+            // operands: sel0=a, v0=b, then ext (sel1,v1,...,default)
+            if a != 0 {
+                li[rec.b as usize]
+            } else {
+                let ext = &ext_args[rec.ext as usize..rec.ext as usize + 2 * k - 1];
+                let mut v = li[ext[2 * k - 2] as usize]; // default
+                for i in (0..k - 1).rev() {
+                    if li[ext[2 * i] as usize] != 0 {
+                        v = li[ext[2 * i + 1] as usize];
+                    }
+                }
+                v
+            }
+        }
+    };
+    raw & rec.mask
+}
+
+/// The lowered design: everything a kernel needs to simulate cycles.
+#[derive(Clone, Debug)]
+pub struct LayerIr {
+    pub name: String,
+    /// Slot-file size (== node count of the lowered graph).
+    pub num_slots: usize,
+    /// Per-layer op records, each layer sorted by (opcode, out).
+    pub layers: Vec<Vec<OpRec>>,
+    /// Extra operands for MuxChain records.
+    pub ext_args: Vec<u32>,
+    /// Register commits: (register slot, next-state slot, width mask).
+    pub commits: Vec<(u32, u32, u64)>,
+    /// Input port slots (testbench writes these between cycles).
+    pub input_slots: Vec<u32>,
+    /// Input port widths (masking applied by the testbench driver).
+    pub input_widths: Vec<u8>,
+    /// Named outputs.
+    pub output_slots: Vec<(String, u32)>,
+    /// Initial slot values: constants + register init values.
+    pub init: Vec<(u32, u64)>,
+    /// Per-slot signal names (waveforms); parallel to slots, may be empty.
+    pub slot_names: Vec<Option<Box<str>>>,
+    /// Per-slot widths (VCD + export).
+    pub slot_widths: Vec<u8>,
+    /// Identity-op count from levelization (Table 1 reporting).
+    pub identity_ops: usize,
+}
+
+impl LayerIr {
+    /// Total effectual operations.
+    pub fn total_ops(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+
+    /// Depth of the dataflow graph (shape of rank I).
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Widest layer (shape of rank S).
+    pub fn max_layer_ops(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+
+    /// Fresh slot file with constants and register initial values applied.
+    pub fn initial_slots(&self) -> Vec<u64> {
+        let mut v = vec![0u64; self.num_slots];
+        for &(slot, val) in &self.init {
+            v[slot as usize] = val;
+        }
+        v
+    }
+}
+
+/// Lower a graph to layer IR (levelize + normalize + sort).
+pub fn lower(g: &Graph) -> LayerIr {
+    let lv: Levelized = levelize(g);
+    let mut layers: Vec<Vec<OpRec>> = vec![Vec::new(); lv.depth()];
+    let mut ext_args: Vec<u32> = Vec::new();
+
+    for (li, layer) in lv.layers.iter().enumerate() {
+        for &nid in layer {
+            let node = &g.nodes[nid as usize];
+            let NodeKind::Prim(op) = node.kind else { unreachable!() };
+            let arg_w: Vec<u8> = node.args.iter().map(|&a| g.width(a)).collect();
+            let rec = normalize(op, &node.args, &arg_w, node.width, nid, &mut ext_args);
+            layers[li].push(rec);
+        }
+    }
+
+    let mut init: Vec<(u32, u64)> = Vec::new();
+    for (i, n) in g.nodes.iter().enumerate() {
+        if let NodeKind::Const(c) = n.kind {
+            init.push((i as u32, c));
+        }
+    }
+    for r in &g.regs {
+        init.push((r.node, r.init));
+    }
+
+    LayerIr {
+        name: g.name.clone(),
+        num_slots: g.nodes.len(),
+        layers,
+        ext_args,
+        commits: g.regs.iter().map(|r| (r.node, r.next, mask(r.width))).collect(),
+        input_slots: g.inputs.iter().map(|p| p.node).collect(),
+        input_widths: g.inputs.iter().map(|p| p.width).collect(),
+        output_slots: g.outputs.clone(),
+        init,
+        slot_names: g.nodes.iter().map(|n| n.name.clone()).collect(),
+        slot_widths: g.nodes.iter().map(|n| n.width).collect(),
+        identity_ops: lv.identity_ops,
+    }
+}
+
+/// Normalize a graph primitive into an executor record.
+fn normalize(
+    op: PrimOp,
+    args: &[u32],
+    arg_w: &[u8],
+    out_w: u8,
+    out: u32,
+    ext_args: &mut Vec<u32>,
+) -> OpRec {
+    let m = mask(out_w);
+    let mut rec = OpRec {
+        out,
+        a: args.first().copied().unwrap_or(0),
+        b: args.get(1).copied().unwrap_or(0),
+        c: args.get(2).copied().unwrap_or(0),
+        mask: m,
+        aux: 0,
+        op: 0,
+        arity: args.len().min(255) as u8,
+        imm: 0,
+        _pad: 0,
+        ext: 0,
+    };
+    let kop = match op {
+        PrimOp::Add => KOp::Add,
+        PrimOp::Sub => KOp::Sub,
+        PrimOp::Mul => KOp::Mul,
+        PrimOp::Div => KOp::Div,
+        PrimOp::Rem => KOp::Rem,
+        PrimOp::Lt => KOp::Lt,
+        PrimOp::Leq => KOp::Leq,
+        PrimOp::Gt => KOp::Gt,
+        PrimOp::Geq => KOp::Geq,
+        PrimOp::Eq => KOp::Eq,
+        PrimOp::Neq => KOp::Neq,
+        PrimOp::And => KOp::And,
+        PrimOp::Or => KOp::Or,
+        PrimOp::Xor => KOp::Xor,
+        PrimOp::Not => KOp::Not,
+        PrimOp::Neg => KOp::Neg,
+        PrimOp::Orr => KOp::Orr,
+        PrimOp::Xorr => KOp::Xorr,
+        PrimOp::Dshl => KOp::Dshl,
+        PrimOp::Dshr => KOp::Dshr,
+        PrimOp::Mux => KOp::Mux,
+        PrimOp::Andr => {
+            rec.aux = mask(arg_w[0]);
+            KOp::AndrK
+        }
+        PrimOp::Shl(n) => {
+            if n == 0 {
+                KOp::Copy
+            } else if n >= 64 {
+                rec.mask = 0;
+                KOp::Copy
+            } else {
+                rec.imm = n;
+                KOp::ShlI
+            }
+        }
+        PrimOp::Shr(n) => {
+            if n == 0 {
+                KOp::Copy
+            } else if n >= 64 {
+                rec.mask = 0;
+                KOp::Copy
+            } else {
+                rec.imm = n;
+                KOp::ShrI
+            }
+        }
+        PrimOp::Cat => {
+            rec.imm = arg_w[1];
+            if arg_w[1] >= 64 {
+                // degenerate: b occupies the whole word; out = b
+                rec.a = rec.b;
+                KOp::Copy
+            } else {
+                KOp::Cat
+            }
+        }
+        PrimOp::Bits(hi, lo) => {
+            rec.mask = m & mask(hi - lo + 1);
+            if lo == 0 {
+                KOp::Copy
+            } else {
+                rec.imm = lo;
+                KOp::ShrI
+            }
+        }
+        PrimOp::Head(n) => {
+            let shift = arg_w[0] - n;
+            rec.mask = m & mask(n);
+            if shift == 0 {
+                KOp::Copy
+            } else {
+                rec.imm = shift;
+                KOp::ShrI
+            }
+        }
+        PrimOp::Tail(n) => {
+            rec.mask = m & mask(arg_w[0] - n);
+            KOp::Copy
+        }
+        PrimOp::Pad(_) | PrimOp::Id => KOp::Copy,
+        PrimOp::MuxChain(k) => {
+            rec.imm = k;
+            rec.arity = (2 * k + 1).min(255);
+            // a = sel0, b = v0; rest to ext_args
+            rec.ext = ext_args.len() as u32;
+            ext_args.extend_from_slice(&args[2..]);
+            KOp::MuxChain
+        }
+    };
+    rec.op = kop as u8;
+    rec
+}
+
+/// Slot-file simulator over the layer IR — the "semantic bridge" between
+/// the graph world and the kernel world (kernels must match this exactly,
+/// and this must match `graph::RefSim`).
+pub struct IrSim {
+    pub ir: LayerIr,
+    pub slots: Vec<u64>,
+}
+
+impl IrSim {
+    pub fn new(ir: LayerIr) -> Self {
+        let slots = ir.initial_slots();
+        Self { ir, slots }
+    }
+
+    pub fn step(&mut self, inputs: &[u64]) {
+        for (i, &slot) in self.ir.input_slots.iter().enumerate() {
+            self.slots[slot as usize] = inputs[i] & mask(self.ir.input_widths[i]);
+        }
+        for layer in &self.ir.layers {
+            for rec in layer {
+                self.slots[rec.out as usize] = eval_rec(rec, &self.slots, &self.ir.ext_args);
+            }
+        }
+        for &(reg, next, m) in &self.ir.commits {
+            self.slots[reg as usize] = self.slots[next as usize] & m;
+        }
+    }
+
+    pub fn outputs(&self) -> Vec<(String, u64)> {
+        self.ir.output_slots.iter().map(|(n, s)| (n.clone(), self.slots[*s as usize])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::{random_circuit, random_inputs};
+    use crate::graph::passes::optimize;
+    use crate::graph::RefSim;
+    use crate::util::prng::Rng;
+
+    /// IR lowering preserves semantics vs the graph interpreter, both on
+    /// raw and optimized graphs (which contain MuxChain records).
+    #[test]
+    fn ir_sim_matches_ref() {
+        for seed in 0..15 {
+            let mut rng = Rng::new(9000 + seed);
+            let g = random_circuit(&mut rng, 70);
+            let (opt, _) = optimize(&g);
+            let mut r = RefSim::new(g.clone());
+            let mut a = IrSim::new(lower(&g));
+            let mut b = IrSim::new(lower(&opt));
+            for cycle in 0..12 {
+                let inputs = random_inputs(&mut rng, &r.graph);
+                r.step(&inputs);
+                a.step(&inputs);
+                b.step(&inputs);
+                assert_eq!(r.outputs(), a.outputs(), "raw ir seed {seed} cycle {cycle}");
+                assert_eq!(r.outputs(), b.outputs(), "opt ir seed {seed} cycle {cycle}");
+            }
+        }
+    }
+
+    #[test]
+    fn layers_respect_slot_order() {
+        let mut rng = Rng::new(77);
+        let g = random_circuit(&mut rng, 100);
+        let ir = lower(&g);
+        for layer in &ir.layers {
+            for w in layer.windows(2) {
+                assert!(w[0].out < w[1].out, "format-B natural S order");
+            }
+        }
+    }
+
+    #[test]
+    fn normalization_removes_width_dependence() {
+        // bits/head/tail/pad become shift+mask records
+        let mut g = crate::graph::Graph::new("t");
+        let a = g.input("a", 12);
+        let b1 = g.prim(PrimOp::Bits(7, 2), &[a]);
+        let h = g.prim(PrimOp::Head(3), &[a]);
+        let t = g.prim(PrimOp::Tail(4), &[a]);
+        let p = g.prim(PrimOp::Pad(16), &[a]);
+        let c = g.prim(PrimOp::Cat, &[b1, h]);
+        g.output("b", b1);
+        g.output("h", h);
+        g.output("t", t);
+        g.output("p", p);
+        g.output("c", c);
+        let ir = lower(&g);
+        let mut sim = IrSim::new(ir);
+        sim.step(&[0b1010_1101_0110]);
+        let o: std::collections::HashMap<String, u64> = sim.outputs().into_iter().collect();
+        assert_eq!(o["b"], 0b110101);
+        assert_eq!(o["h"], 0b101);
+        assert_eq!(o["t"], 0b1101_0110);
+        assert_eq!(o["p"], 0b1010_1101_0110);
+        assert_eq!(o["c"], (0b110101 << 3) | 0b101);
+    }
+
+    #[test]
+    fn opcode_roundtrip() {
+        for v in 0..NUM_KOPS as u8 {
+            assert_eq!(KOp::from_u8(v) as u8, v);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Tensor representation of the RTL dataflow graph (paper §4–§5).
+//!
+//! * [`ir`] — the lowered layer IR: levelized operations with normalized
+//!   executor opcodes ([`ir::KOp`]) and packed records ([`ir::OpRec`]).
+//!   This is the *logical content* of the `LI`/`OIM`/`LO` tensors.
+//! * [`fibertree`] — the fibertree abstraction of Sze et al. (paper §2.2),
+//!   used by the Einsum cascade evaluator and for format reasoning.
+//! * [`format`] — per-rank concrete formats: (un)compressed, cbits/pbits
+//!   (paper §2.5.2 and Fig 12), and the three OIM format instantiations.
+//! * [`oim`] — the OIM tensor builder: rank coordinate/payload arrays in
+//!   format B ([I,S,N,O,R]) and format C (swizzled [I,N,S,O,R]), plus JSON
+//!   import/export (the paper stores OIM as JSON).
+//! * [`export`] — dense tensor-ISA export for the XLA/PJRT backend (the L2
+//!   jax model consumes this encoding at AOT time).
+
+pub mod ir;
+pub mod fibertree;
+pub mod format;
+pub mod oim;
+pub mod export;

@@ -1,0 +1,357 @@
+//! Concrete OIM tensor: the coordinate/payload arrays the rolled kernels
+//! traverse (paper §5.1, Figs 12–13), plus JSON import/export (§6.1: "the
+//! OIM tensor is stored in JSON files and loaded at runtime").
+//!
+//! Two concrete lowerings are materialized, matching the paper's formats:
+//!
+//! * **Format B** `[I, S, N, O, R]` (Fig 12b): ops in natural S order.
+//!   `i_payload` (uncompressed I, payload = ops/layer), `s_coords`
+//!   (compressed, coords only), `n_coords` (compressed, coords only —
+//!   payloads elided because the op type determines the O occupancy),
+//!   O implicit, `r_coords` (coords only — OIM is a mask, so R payloads
+//!   are elided). Used by RU/OU.
+//! * **Format C** `[I, N, S, O, R]` (Fig 12c, after the S/N swizzle): ops
+//!   re-ordered so each layer groups by op type; `n_payload` (uncompressed
+//!   N per layer, payload = ops of that type) replaces `n_coords` and makes
+//!   `i_payload` redundant. Used by NU/PSU/IU (and the SU/TI tapes, which
+//!   inherit the swizzle).
+//!
+//! Operation parameters (`imm`, `mask`, `aux`) ride in side arrays — the
+//! FIRRTL op set needs them; they are counted in every format's footprint.
+
+use crate::tensor::format::{bits_for, FormatSpec, RankFormat};
+use crate::tensor::ir::{KOp, LayerIr, OpRec, NUM_KOPS};
+use crate::util::json::{arr_u32, arr_u64, obj, Json, JsonError};
+
+/// One order's flat per-op arrays.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OimArrays {
+    /// out slot per op (rank S coords)
+    pub s_coords: Vec<u32>,
+    /// operand slots, flat in (op, o) order (rank R coords)
+    pub r_coords: Vec<u32>,
+    /// operand count per op (derived from opcode except MuxChain)
+    pub arity: Vec<u8>,
+    /// opcode per op (needed by both orders to execute; only format B
+    /// *stores* it as rank-N coordinates)
+    pub opcode: Vec<u8>,
+    // --- operation parameter arrays ---
+    pub imm: Vec<u8>,
+    pub mask: Vec<u64>,
+    pub aux: Vec<u64>,
+}
+
+impl OimArrays {
+    fn push(&mut self, rec: &OpRec, ext_args: &[u32]) {
+        self.s_coords.push(rec.out);
+        self.opcode.push(rec.op);
+        self.arity.push(rec.arity);
+        self.imm.push(rec.imm);
+        self.mask.push(rec.mask);
+        self.aux.push(rec.aux);
+        for r in operand_slots(rec, ext_args) {
+            self.r_coords.push(r);
+        }
+    }
+}
+
+/// The concrete OIM: shared rank-I payloads plus both format lowerings.
+#[derive(Clone, Debug, Default)]
+pub struct Oim {
+    /// ops per layer (format B: payload array of rank I)
+    pub i_payload: Vec<u32>,
+    /// format B arrays (natural S order)
+    pub b: OimArrays,
+    /// format C arrays (each layer sorted by opcode)
+    pub c: OimArrays,
+    /// ops per (layer, opcode) — format C: payload array of uncompressed N
+    pub n_payload: Vec<u32>,
+    /// number of slots in LI
+    pub num_slots: u32,
+}
+
+impl Oim {
+    pub fn from_ir(ir: &LayerIr) -> Self {
+        let mut o = Oim { num_slots: ir.num_slots as u32, ..Default::default() };
+        for layer in &ir.layers {
+            o.i_payload.push(layer.len() as u32);
+            // format B: natural order
+            for rec in layer {
+                o.b.push(rec, &ir.ext_args);
+            }
+            // format C: stable-sort by opcode (the S/N swizzle)
+            let mut sorted: Vec<&OpRec> = layer.iter().collect();
+            sorted.sort_by_key(|r| r.op);
+            let mut per_op = vec![0u32; NUM_KOPS];
+            for rec in sorted {
+                per_op[rec.op as usize] += 1;
+                o.c.push(rec, &ir.ext_args);
+            }
+            o.n_payload.extend_from_slice(&per_op);
+        }
+        o
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.b.s_coords.len()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.i_payload.len()
+    }
+
+    /// Format specification per Fig 12a: every rank keeps explicit
+    /// coordinate + payload arrays (the unoptimized lowering).
+    pub fn format_a(&self) -> FormatSpec {
+        let ops = self.total_ops();
+        let operands = self.b.r_coords.len();
+        let layers = self.num_layers();
+        let slot_bits = bits_for(self.num_slots.saturating_sub(1) as u64);
+        let op_bits = bits_for((NUM_KOPS - 1) as u64);
+        let max_arity = self.b.arity.iter().copied().max().unwrap_or(1);
+        FormatSpec {
+            name: "A (unoptimized)".into(),
+            ranks: vec![
+                RankFormat { rank: "I", compressed: false, cbits: 0, pbits: bits_for(ops as u64), entries: layers },
+                RankFormat { rank: "S", compressed: true, cbits: slot_bits, pbits: bits_for(1), entries: ops },
+                RankFormat { rank: "N", compressed: true, cbits: op_bits, pbits: bits_for(max_arity as u64), entries: ops },
+                RankFormat { rank: "O", compressed: false, cbits: bits_for(max_arity as u64), pbits: bits_for(1), entries: operands },
+                RankFormat { rank: "R", compressed: true, cbits: slot_bits, pbits: 1, entries: operands },
+            ],
+            param_bytes: self.param_bytes(),
+        }
+    }
+
+    /// Format specification per Fig 12b (optimized, loop order [I,S,N,O,R]).
+    pub fn format_b(&self) -> FormatSpec {
+        let ops = self.total_ops();
+        let operands = self.b.r_coords.len();
+        let layers = self.num_layers();
+        let slot_bits = bits_for(self.num_slots.saturating_sub(1) as u64);
+        let op_bits = bits_for((NUM_KOPS - 1) as u64);
+        FormatSpec {
+            name: "B [I,S,N,O,R]".into(),
+            ranks: vec![
+                RankFormat { rank: "I", compressed: false, cbits: 0, pbits: bits_for(ops as u64), entries: layers },
+                RankFormat { rank: "S", compressed: true, cbits: slot_bits, pbits: 0, entries: ops },
+                RankFormat { rank: "N", compressed: true, cbits: op_bits, pbits: 0, entries: ops },
+                RankFormat { rank: "O", compressed: false, cbits: 0, pbits: 0, entries: operands },
+                RankFormat { rank: "R", compressed: true, cbits: slot_bits, pbits: 0, entries: operands },
+            ],
+            param_bytes: self.param_bytes(),
+        }
+    }
+
+    /// Format specification per Fig 12c (swizzled, loop order [I,N,S,O,R]).
+    pub fn format_c(&self) -> FormatSpec {
+        let ops = self.total_ops();
+        let operands = self.c.r_coords.len();
+        let layers = self.num_layers();
+        let slot_bits = bits_for(self.num_slots.saturating_sub(1) as u64);
+        let max_cnt = self.n_payload.iter().copied().max().unwrap_or(1);
+        FormatSpec {
+            name: "C [I,N,S,O,R]".into(),
+            ranks: vec![
+                // I payloads redundant: N is uncompressed with constant occupancy.
+                RankFormat { rank: "I", compressed: false, cbits: 0, pbits: 0, entries: layers },
+                RankFormat { rank: "N", compressed: false, cbits: 0, pbits: bits_for(max_cnt as u64), entries: layers * NUM_KOPS },
+                RankFormat { rank: "S", compressed: true, cbits: slot_bits, pbits: 0, entries: ops },
+                RankFormat { rank: "O", compressed: false, cbits: 0, pbits: 0, entries: operands },
+                RankFormat { rank: "R", compressed: true, cbits: slot_bits, pbits: 0, entries: operands },
+            ],
+            param_bytes: self.param_bytes(),
+        }
+    }
+
+    /// Bytes of the operation-parameter side arrays (imm/mask/aux),
+    /// stored at the widths actually required.
+    fn param_bytes(&self) -> usize {
+        let ops = self.total_ops();
+        let mask_bits = bits_for(self.b.mask.iter().copied().max().unwrap_or(1));
+        let n_aux = self.b.aux.iter().filter(|&&a| a != 0).count();
+        let aux_bits = bits_for(self.b.aux.iter().copied().max().unwrap_or(0).max(1));
+        (ops * 8 + 7) / 8 // imm (u8)
+            + (ops * mask_bits as usize + 7) / 8
+            + (n_aux * aux_bits as usize + 7) / 8
+    }
+
+    /// Serialize as JSON (paper §6.1 stores OIM as JSON files). Format B
+    /// arrays are authoritative; format C is re-derived on load.
+    pub fn to_json(&self) -> Json {
+        let u8arr = |xs: &[u8]| Json::Arr(xs.iter().map(|&v| Json::Int(v as i64)).collect());
+        obj(vec![
+            ("num_slots", Json::Int(self.num_slots as i64)),
+            ("i_payload", arr_u32(&self.i_payload)),
+            ("s_coords", arr_u32(&self.b.s_coords)),
+            ("n_coords", u8arr(&self.b.opcode)),
+            ("r_coords", arr_u32(&self.b.r_coords)),
+            ("arity", u8arr(&self.b.arity)),
+            ("imm", u8arr(&self.b.imm)),
+            ("mask", arr_u64(&self.b.mask)),
+            ("aux", arr_u64(&self.b.aux)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        let b8 = |key: &str| -> Result<Vec<u8>, JsonError> {
+            Ok(j.req_u64_vec(key)?.into_iter().map(|v| v as u8).collect())
+        };
+        let b = OimArrays {
+            s_coords: j.req_u32_vec("s_coords")?,
+            r_coords: j.req_u32_vec("r_coords")?,
+            arity: b8("arity")?,
+            opcode: b8("n_coords")?,
+            imm: b8("imm")?,
+            mask: j.req_u64_vec("mask")?,
+            aux: j.req_u64_vec("aux")?,
+        };
+        let i_payload = j.req_u32_vec("i_payload")?;
+        let num_slots = j.req_u64("num_slots")? as u32;
+        // Re-derive format C from B.
+        let (layers, ext) = recs_from_arrays(&i_payload, &b);
+        let mut o = Oim { num_slots, i_payload: i_payload.clone(), b, ..Default::default() };
+        for layer in &layers {
+            let mut sorted: Vec<&OpRec> = layer.iter().collect();
+            sorted.sort_by_key(|r| r.op);
+            let mut per_op = vec![0u32; NUM_KOPS];
+            for rec in sorted {
+                per_op[rec.op as usize] += 1;
+                o.c.push(rec, &ext);
+            }
+            o.n_payload.extend_from_slice(&per_op);
+        }
+        Ok(o)
+    }
+
+    /// Per-op records in format-C (swizzled) order — the SU/TI tape source.
+    pub fn op_recs(&self) -> (Vec<Vec<OpRec>>, Vec<u32>) {
+        recs_from_arrays(&self.i_payload, &self.c)
+    }
+}
+
+/// Rebuild AoS records from one order's arrays.
+fn recs_from_arrays(i_payload: &[u32], a: &OimArrays) -> (Vec<Vec<OpRec>>, Vec<u32>) {
+    let mut layers = Vec::with_capacity(i_payload.len());
+    let mut ext_args: Vec<u32> = Vec::new();
+    let mut op_idx = 0usize;
+    let mut r_idx = 0usize;
+    for &cnt in i_payload {
+        let mut layer = Vec::with_capacity(cnt as usize);
+        for _ in 0..cnt {
+            let ar = a.arity[op_idx] as usize;
+            let slots = &a.r_coords[r_idx..r_idx + ar];
+            let mut rec = OpRec {
+                out: a.s_coords[op_idx],
+                a: slots.first().copied().unwrap_or(0),
+                b: slots.get(1).copied().unwrap_or(0),
+                c: slots.get(2).copied().unwrap_or(0),
+                mask: a.mask[op_idx],
+                aux: a.aux[op_idx],
+                op: a.opcode[op_idx],
+                arity: ar as u8,
+                imm: a.imm[op_idx],
+                _pad: 0,
+                ext: 0,
+            };
+            if rec.kop() == KOp::MuxChain {
+                rec.ext = ext_args.len() as u32;
+                ext_args.extend_from_slice(&slots[2..]);
+            }
+            layer.push(rec);
+            op_idx += 1;
+            r_idx += ar;
+        }
+        layers.push(layer);
+    }
+    (layers, ext_args)
+}
+
+/// Ordered operand slots of a record.
+pub fn operand_slots(rec: &OpRec, ext_args: &[u32]) -> Vec<u32> {
+    let ar = rec.arity as usize;
+    match rec.kop() {
+        KOp::MuxChain => {
+            let mut v = vec![rec.a, rec.b];
+            v.extend_from_slice(&ext_args[rec.ext as usize..rec.ext as usize + ar - 2]);
+            v
+        }
+        _ => [rec.a, rec.b, rec.c][..ar].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::random_circuit;
+    use crate::graph::passes::optimize;
+    use crate::tensor::ir::lower;
+    use crate::util::prng::Rng;
+
+    fn sample_oim(seed: u64, size: usize) -> (Oim, crate::tensor::ir::LayerIr) {
+        let mut rng = Rng::new(seed);
+        let g = random_circuit(&mut rng, size);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        (Oim::from_ir(&ir), ir)
+    }
+
+    #[test]
+    fn arrays_are_consistent() {
+        let (o, ir) = sample_oim(42, 120);
+        assert_eq!(o.total_ops(), ir.total_ops());
+        assert_eq!(o.i_payload.iter().sum::<u32>() as usize, o.total_ops());
+        assert_eq!(o.n_payload.iter().sum::<u32>() as usize, o.total_ops());
+        assert_eq!(o.b.r_coords.len(), o.c.r_coords.len());
+        assert_eq!(o.n_payload.len(), o.num_layers() * NUM_KOPS);
+        // C order is grouped by opcode within each layer
+        let mut idx = 0usize;
+        for &cnt in &o.i_payload {
+            let ops = &o.c.opcode[idx..idx + cnt as usize];
+            for w in ops.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            idx += cnt as usize;
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_rebuilds_c() {
+        let (o, _) = sample_oim(43, 80);
+        let j = o.to_json();
+        let o2 = Oim::from_json(&crate::util::json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(o.b, o2.b);
+        assert_eq!(o.c, o2.c);
+        assert_eq!(o.n_payload, o2.n_payload);
+        assert_eq!(o.num_slots, o2.num_slots);
+    }
+
+    #[test]
+    fn op_recs_roundtrip_semantics() {
+        use crate::tensor::ir::IrSim;
+        let mut rng = Rng::new(44);
+        let g = random_circuit(&mut rng, 80);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let (layers, ext) = oim.op_recs();
+        let mut ir2 = ir.clone();
+        ir2.layers = layers;
+        ir2.ext_args = ext;
+        let mut a = IrSim::new(ir);
+        let mut b = IrSim::new(ir2);
+        for _ in 0..10 {
+            let inputs = crate::graph::builder::random_inputs(&mut rng, &opt);
+            a.step(&inputs);
+            b.step(&inputs);
+            assert_eq!(a.outputs(), b.outputs());
+        }
+    }
+
+    #[test]
+    fn format_sizes_shrink_a_to_b() {
+        let (o, _) = sample_oim(45, 200);
+        let a = o.format_a().total_bytes();
+        let b = o.format_b().total_bytes();
+        assert!(b < a, "expected B ({b}) < A ({a})");
+    }
+}

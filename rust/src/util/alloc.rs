@@ -1,0 +1,80 @@
+//! Heap usage tracking — replaces /usr/bin/time-style peak-RSS measurement
+//! for the paper's compile-memory experiments (Figs 8/15, Table 7b).
+//!
+//! A wrapping global allocator keeps live/peak byte counters; experiments
+//! bracket a compile phase with [`reset_peak`]/[`peak_bytes`] to report peak
+//! heap in that phase. Binaries and benches opt in with
+//! `rteaal::util::alloc::install!();` at crate root.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub static LIVE: AtomicUsize = AtomicUsize::new(0);
+pub static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// Tracking allocator; wraps the system allocator.
+pub struct TrackingAlloc;
+
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                let live = LIVE.fetch_add(new_size - layout.size(), Ordering::Relaxed) + new_size
+                    - layout.size();
+                PEAK.fetch_max(live, Ordering::Relaxed);
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+/// Install the tracking allocator in a binary/bench crate.
+#[macro_export]
+macro_rules! install_tracking_alloc {
+    () => {
+        #[global_allocator]
+        static GLOBAL_ALLOC: $crate::util::alloc::TrackingAlloc =
+            $crate::util::alloc::TrackingAlloc;
+    };
+}
+
+/// Current live heap bytes.
+pub fn live_bytes() -> usize {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// Peak heap bytes since the last [`reset_peak`].
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Reset the peak to the current live count (phase bracketing).
+pub fn reset_peak() {
+    PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Measure peak heap growth across `f`, returning `(result, peak_delta)`.
+/// Only meaningful when the tracking allocator is installed; otherwise
+/// returns 0 delta.
+pub fn measure_peak<T>(f: impl FnOnce() -> T) -> (T, usize) {
+    let before_live = live_bytes();
+    reset_peak();
+    let r = f();
+    let delta = peak_bytes().saturating_sub(before_live);
+    (r, delta)
+}

@@ -1,0 +1,110 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Provides warmup + repeated timed runs with median/mean/min reporting,
+//! and a black-box sink to defeat dead-code elimination.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Statistics over a set of timed samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<Duration>) -> Self {
+        assert!(!xs.is_empty());
+        xs.sort();
+        let total: Duration = xs.iter().sum();
+        Stats {
+            samples: xs.len(),
+            min: xs[0],
+            median: xs[xs.len() / 2],
+            mean: total / xs.len() as u32,
+            max: *xs.last().unwrap(),
+        }
+    }
+}
+
+/// Benchmark runner configuration. Defaults favour short total runtime:
+/// experiments here are *shape* reproductions, not publication timings.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // RTEAAL_BENCH_SAMPLES / RTEAAL_BENCH_WARMUP override for longer runs.
+        let samples = std::env::var("RTEAAL_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        let warmup = std::env::var("RTEAAL_BENCH_WARMUP")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1);
+        Self { warmup, samples }
+    }
+}
+
+impl Bencher {
+    /// Time `f()` (which should perform one full measured workload).
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        Stats::from_samples(samples)
+    }
+
+    /// Time a single run (for expensive workloads like full compiles).
+    pub fn once<T>(&self, f: impl FnOnce() -> T) -> (T, Duration) {
+        let t0 = Instant::now();
+        let r = f();
+        (r, t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(3),
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        ]);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.max, Duration::from_millis(3));
+        assert_eq!(s.mean, Duration::from_millis(2));
+    }
+
+    #[test]
+    fn run_counts() {
+        let b = Bencher { warmup: 2, samples: 5 };
+        let mut calls = 0;
+        let s = b.run(|| calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.samples, 5);
+    }
+}

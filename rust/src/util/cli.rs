@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `command [--flag] [--key value] [positional...]` with typed
+//! accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub flags: Vec<String>,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-flag token is the subcommand.
+    pub fn parse(argv: &[String]) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value`, `--key value`, or boolean `--flag`
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap().clone();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok.clone();
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.opt_u64(name, default as u64)? as usize)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.opt(name).ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&v(&["sim", "--design", "rocket", "--cycles=100", "--vcd", "out.vcd", "pos1"]));
+        assert_eq!(a.command, "sim");
+        assert_eq!(a.opt("design"), Some("rocket"));
+        assert_eq!(a.opt_u64("cycles", 0).unwrap(), 100);
+        assert_eq!(a.opt("vcd"), Some("out.vcd"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = Args::parse(&v(&["report", "--verbose", "--fast"]));
+        assert!(a.flag("verbose"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse(&v(&["x", "--n", "abc"]));
+        assert!(a.opt_u64("n", 1).is_err());
+        assert!(a.require("missing").is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Offline utility substrates.
+//!
+//! The offline crate registry for this build lacks `serde_json`, `clap`,
+//! `rand`, `proptest` and `criterion`; these small modules stand in for them
+//! so the rest of the library has no external dependencies beyond `xla`.
+
+pub mod json;
+pub mod prng;
+pub mod cli;
+pub mod tables;
+pub mod alloc;
+pub mod bench;
+pub mod propcheck;
+
+/// Format a byte count human-readably (e.g. `1.25 MB`).
+pub fn fmt_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{:.2} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.00 MB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(std::time::Duration::from_secs(2)), "2.00 s");
+        assert_eq!(fmt_duration(std::time::Duration::from_micros(1500)), "1.50 ms");
+    }
+}

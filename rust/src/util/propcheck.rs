@@ -1,0 +1,85 @@
+//! Minimal property-testing harness (no `proptest` offline).
+//!
+//! A property is a closure over a seeded [`crate::util::prng::Rng`]; the
+//! harness runs it for N seeds and reports the first failing seed so a
+//! failure is reproducible with `check_seed`. Shrinking is delegated to the
+//! generators: they take a `size` parameter that the harness sweeps from
+//! small to large, so the first failure tends to be near-minimal.
+
+use crate::util::prng::Rng;
+
+/// Number of cases per property (override with RTEAAL_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("RTEAAL_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(48)
+}
+
+/// Run `prop(rng, size)` for `cases` seeds with sizes ramping up.
+/// Panics with the failing seed + size on the first failure.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng, usize) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // sizes ramp 1..=max so early failures are small
+        let size = 1 + case * 24 / cases.max(1);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {size}):\n{msg}\n\
+                 reproduce with propcheck::check_seed(\"{name}\", {seed:#x}, {size}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_seed(
+    name: &str,
+    seed: u64,
+    size: usize,
+    mut prop: impl FnMut(&mut Rng, usize) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng, size) {
+        panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assert helper that produces a `Result<(), String>` for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Equality assertion with context.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)+) => {{
+        let (av, bv) = (&$a, &$b);
+        if av != bv {
+            return Err(format!("{} != {} ({})", stringify!($a), stringify!($b), format!($($fmt)+)));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64-roundtrip", 16, |rng, _size| {
+            let x = rng.next_u64();
+            prop_assert!(x.wrapping_add(1).wrapping_sub(1) == x, "wrap failed for {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 4, |_rng, _size| Err("nope".into()));
+    }
+}

@@ -1,0 +1,144 @@
+//! End-to-end design suites: the real designs do their real jobs under
+//! every kernel configuration.
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::designs::keccak::{keccak_f_sw, keccak_round_datapath};
+use rteaal::designs::tiny_cpu::{dhrystone_like, golden_run, tiny_cpu};
+use rteaal::designs::{catalog, Design, Stimulus};
+use rteaal::kernels::{build_with_oim, KernelConfig, ALL_KERNELS};
+
+/// tiny_cpu runs its program to the golden checksum under all 7 kernels.
+#[test]
+fn tiny_cpu_checksum_under_every_kernel() {
+    let prog = dhrystone_like(12);
+    let (golden, steps) = golden_run(&prog, 100_000);
+    let d = Design {
+        name: "tiny".into(),
+        graph: tiny_cpu(&prog),
+        stimulus: Stimulus::Zero,
+        default_cycles: 0,
+    };
+    let c = compile_design(&d, CompileOpts::default());
+    for cfg in ALL_KERNELS {
+        let mut k = build_with_oim(cfg, &c.ir, &c.oim);
+        let mut halted_at = None;
+        for cycle in 0..10_000u64 {
+            k.step(&[0, 0, 0, 0]);
+            if k.outputs().iter().any(|(n, v)| n == "halted" && *v == 1) {
+                halted_at = Some(cycle + 1);
+                break;
+            }
+        }
+        let halted_at = halted_at.unwrap_or_else(|| panic!("{} never halted", cfg.name()));
+        assert_eq!(halted_at, steps as u64 + 1, "{} cycle count", cfg.name());
+        let checksum =
+            k.outputs().iter().find(|(n, _)| n == "checksum").map(|(_, v)| *v).unwrap();
+        assert_eq!(checksum, golden as u64, "{} checksum", cfg.name());
+    }
+}
+
+/// The keccak datapath computes true Keccak-f[1600] permutations under
+/// rolled and unrolled kernels (two full permutations back to back).
+#[test]
+fn keccak_double_permutation_under_kernels() {
+    let d = Design {
+        name: "keccak".into(),
+        graph: keccak_round_datapath(),
+        stimulus: Stimulus::Zero,
+        default_cycles: 0,
+    };
+    let c = compile_design(&d, CompileOpts::default());
+    let ins: [u64; 5] = [0x1111, 0x2222, 0x3333, 0x4444, 0x5555];
+    let mut golden = [[0u64; 5]; 5];
+    for x in 0..5 {
+        for y in 0..5 {
+            golden[x][y] = ins[x].rotate_left((y * 7) as u32) ^ y as u64;
+        }
+    }
+    keccak_f_sw(&mut golden);
+
+    for cfg in [KernelConfig::RU, KernelConfig::PSU, KernelConfig::TI] {
+        let mut k = build_with_oim(cfg, &c.ir, &c.oim);
+        let mut load = vec![1u64, 0];
+        load.extend_from_slice(&ins);
+        k.step(&load);
+        let go = vec![0u64, 1, 0, 0, 0, 0, 0];
+        for _ in 0..24 {
+            k.step(&go);
+        }
+        let outs: std::collections::HashMap<String, u64> = k.outputs().into_iter().collect();
+        assert_eq!(outs["lane00"], golden[0][0], "{}", cfg.name());
+        assert_eq!(outs["lane12"], golden[1][2], "{}", cfg.name());
+        assert_eq!(outs["lane44"], golden[4][4], "{}", cfg.name());
+    }
+}
+
+/// Every catalog design simulates deterministically: the same stimulus
+/// seed gives the same outputs under different kernels.
+#[test]
+fn catalog_designs_cross_kernel_determinism() {
+    for name in ["counter", "alu32", "fir8", "gemmini_like_4", "rocket_like_1c", "boom_like_1c"] {
+        let d = catalog(name).unwrap();
+        let c = compile_design(&d, CompileOpts::default());
+        let mut psu = build_with_oim(KernelConfig::PSU, &c.ir, &c.oim);
+        let mut ti = build_with_oim(KernelConfig::TI, &c.ir, &c.oim);
+        let mut ru = build_with_oim(KernelConfig::RU, &c.ir, &c.oim);
+        let mut stim = d.make_stimulus();
+        for cycle in 0..50u64 {
+            let inputs = stim(cycle);
+            psu.step(&inputs);
+            ti.step(&inputs);
+            ru.step(&inputs);
+            assert_eq!(psu.outputs(), ti.outputs(), "{name} cycle {cycle}");
+            assert_eq!(psu.outputs(), ru.outputs(), "{name} cycle {cycle}");
+        }
+    }
+}
+
+/// Waveform capture produces consistent VCD output across kernels
+/// (value-change records depend only on design behaviour).
+#[test]
+fn vcd_identical_across_kernels() {
+    use rteaal::sim::vcd::VcdWriter;
+    let d = catalog("counter").unwrap();
+    let c = compile_design(&d, CompileOpts { fuse: false });
+    let dir = std::env::temp_dir().join("rteaal_vcd_x");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut texts = Vec::new();
+    for cfg in [KernelConfig::OU, KernelConfig::SU] {
+        let mut k = build_with_oim(cfg, &c.ir, &c.oim);
+        let path = dir.join(format!("{}.vcd", cfg.name()));
+        let mut w = VcdWriter::create(&c.ir, &path).unwrap();
+        let mut stim = d.make_stimulus();
+        for cycle in 1..=40u64 {
+            k.step(&stim(cycle - 1));
+            w.sample(cycle, k.slots());
+        }
+        w.finish().unwrap();
+        texts.push(std::fs::read_to_string(&path).unwrap());
+    }
+    assert_eq!(texts[0], texts[1]);
+}
+
+/// Compile costs scale roughly linearly in design size (the paper's
+/// headline compile claim is near-constant cost vs baselines' blowup).
+#[test]
+fn compile_cost_scales_linearly() {
+    let t1 = {
+        let d = catalog("rocket_like_1c").unwrap();
+        let c = compile_design(&d, CompileOpts::default());
+        (c.compile_time, c.ir.total_ops())
+    };
+    let t4 = {
+        let d = catalog("rocket_like_4c").unwrap();
+        let c = compile_design(&d, CompileOpts::default());
+        (c.compile_time, c.ir.total_ops())
+    };
+    let ops_ratio = t4.1 as f64 / t1.1 as f64;
+    let time_ratio = t4.0.as_secs_f64() / t1.0.as_secs_f64().max(1e-9);
+    // allow generous slack (allocator noise) but catch superlinear blowup
+    assert!(
+        time_ratio < ops_ratio * 4.0,
+        "compile time ratio {time_ratio:.1} vs ops ratio {ops_ratio:.1}"
+    );
+}

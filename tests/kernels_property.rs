@@ -1,0 +1,155 @@
+//! Cross-cutting property suite: every execution engine in the repo —
+//! graph interpreter, slot-file IrSim, the Einsum cascade evaluator, all
+//! seven kernels, the -O0 variant, all baselines, and the partitioned
+//! simulator — must agree on random circuits and random stimulus, before
+//! and after every optimization pipeline.
+
+use rteaal::baselines::{essent_like::EssentLike, event_driven::EventDriven, verilator_like::VerilatorLike};
+use rteaal::einsum::CascadeSim;
+use rteaal::graph::builder::{random_circuit, random_inputs};
+use rteaal::graph::passes;
+use rteaal::graph::RefSim;
+use rteaal::kernels::{build_with_oim, unopt::UnoptKernel, SimKernel, ALL_KERNELS};
+use rteaal::tensor::ir::lower;
+use rteaal::tensor::oim::Oim;
+use rteaal::util::propcheck;
+
+/// The flagship property: 13 engines, one answer.
+#[test]
+fn all_engines_agree_on_random_circuits() {
+    propcheck::check("all-engines-agree", 14, |rng, size| {
+        let g = random_circuit(rng, 20 + size * 6);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+
+        let mut reference = RefSim::new(opt.clone());
+        let mut cascade = CascadeSim::new(&ir);
+        let mut engines: Vec<Box<dyn SimKernel>> = ALL_KERNELS
+            .iter()
+            .map(|&k| build_with_oim(k, &ir, &oim))
+            .collect();
+        engines.push(Box::new(UnoptKernel::new(&ir, &oim)));
+        engines.push(Box::new(VerilatorLike::new(&ir, false)));
+        engines.push(Box::new(VerilatorLike::new(&ir, true)));
+        engines.push(Box::new(EssentLike::new(&ir, false)));
+        engines.push(Box::new(EssentLike::new(&ir, true)));
+        engines.push(Box::new(EventDriven::new(&ir)));
+
+        for cycle in 0..8 {
+            let inputs = random_inputs(rng, &reference.graph);
+            reference.step(&inputs);
+            cascade.step(&inputs);
+            let want = reference.outputs();
+            if cascade.outputs() != want {
+                return Err(format!("cascade diverged at cycle {cycle}"));
+            }
+            for e in &mut engines {
+                e.step(&inputs);
+                if e.outputs() != want {
+                    return Err(format!("{} diverged at cycle {cycle}", e.config_name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Optimization pipelines preserve behaviour including register state
+/// visible through outputs over long runs.
+#[test]
+fn optimization_pipelines_preserve_long_run_behaviour() {
+    propcheck::check("passes-preserve", 10, |rng, size| {
+        let g = random_circuit(rng, 30 + size * 8);
+        let (fused, _) = passes::optimize(&g);
+        let unfused = passes::optimize_no_fusion(&g);
+        let mut a = RefSim::new(g);
+        let mut b = RefSim::new(fused);
+        let mut c = RefSim::new(unfused);
+        for cycle in 0..32 {
+            let inputs = random_inputs(rng, &a.graph);
+            a.step(&inputs);
+            b.step(&inputs);
+            c.step(&inputs);
+            if a.outputs() != b.outputs() || a.outputs() != c.outputs() {
+                return Err(format!("pipelines diverged at cycle {cycle}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The partitioned (RepCut-style) simulator agrees with single-threaded
+/// execution for any partition count.
+#[test]
+fn partitioned_simulation_agrees() {
+    propcheck::check("partitioned-agrees", 8, |rng, size| {
+        let g = random_circuit(rng, 40 + size * 8);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let n = 2 + rng.index(3);
+        let mut par =
+            rteaal::coordinator::parallel::ParallelSim::new(&ir, rteaal::kernels::KernelConfig::TI, n);
+        let mut single = build_with_oim(rteaal::kernels::KernelConfig::TI, &ir, &oim);
+        for cycle in 0..12 {
+            let inputs = random_inputs(rng, &opt);
+            single.step(&inputs);
+            par.step(&inputs);
+            if par.outputs() != single.outputs() {
+                return Err(format!("partitioned ({n}) diverged at cycle {cycle}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// FIRRTL print→parse→compile→simulate round trip through the whole
+/// front half of the pipeline.
+#[test]
+fn firrtl_roundtrip_through_kernels() {
+    propcheck::check("firrtl-roundtrip-kernels", 8, |rng, size| {
+        let g = random_circuit(rng, 20 + size * 5);
+        let text = rteaal::firrtl::print(&g);
+        let g2 = rteaal::firrtl::parse(&text).map_err(|e| e.to_string())?;
+        let ir = lower(&g2);
+        let oim = Oim::from_ir(&ir);
+        let mut reference = RefSim::new(g);
+        let mut kernel = build_with_oim(rteaal::kernels::KernelConfig::PSU, &ir, &oim);
+        for cycle in 0..8 {
+            let inputs = random_inputs(rng, &reference.graph);
+            reference.step(&inputs);
+            kernel.step(&inputs);
+            if kernel.outputs() != reference.outputs() {
+                return Err(format!("roundtrip kernel diverged at cycle {cycle}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// OIM JSON round trip preserves kernel behaviour (the paper's runtime
+/// flow: OIM is stored as JSON and loaded at simulation time, §6.1).
+#[test]
+fn oim_json_roundtrip_preserves_behaviour() {
+    propcheck::check("oim-json-kernels", 8, |rng, size| {
+        let g = random_circuit(rng, 20 + size * 5);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let json = oim.to_json().to_string();
+        let oim2 = Oim::from_json(&rteaal::util::json::parse(&json).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        let mut a = build_with_oim(rteaal::kernels::KernelConfig::NU, &ir, &oim);
+        let mut b = build_with_oim(rteaal::kernels::KernelConfig::NU, &ir, &oim2);
+        for _ in 0..8 {
+            let inputs = random_inputs(rng, &opt);
+            a.step(&inputs);
+            b.step(&inputs);
+            if a.outputs() != b.outputs() {
+                return Err("json-roundtripped OIM diverged".into());
+            }
+        }
+        Ok(())
+    });
+}

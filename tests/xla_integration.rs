@@ -1,0 +1,92 @@
+//! Cross-layer integration: the AOT XLA/PJRT backend must agree bit-exactly
+//! with the native interpreter kernels on the same design + stimulus.
+//!
+//! Requires `make artifacts` (tests self-skip when artifacts are absent,
+//! e.g. in a bare `cargo test` before the first build).
+
+use std::path::Path;
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::designs::catalog;
+use rteaal::kernels::{build_with_oim, KernelConfig};
+use rteaal::runtime::pjrt::PjrtRuntime;
+use rteaal::runtime::XlaBackend;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("tiny_cpu.hlo.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn xla_backend_matches_interpreter_tiny_cpu() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let mut xla = XlaBackend::load(&rt, dir, "tiny_cpu").expect("load artifacts");
+
+    // native interpreter on the same (unfused) compile
+    let d = catalog("tiny_cpu").unwrap();
+    let c = compile_design(&d, CompileOpts { fuse: false });
+    let mut native = build_with_oim(KernelConfig::PSU, &c.ir, &c.oim);
+
+    // run whole chunks in lockstep; compare outputs at chunk boundaries
+    let cycles = 8 * xla.chunk as u64;
+    let mut stim = d.make_stimulus();
+    let mut inputs_at = |c: u64| stim(c);
+    let mut native_outs_at_boundary = Vec::new();
+    for cyc in 0..cycles {
+        native.step(&inputs_at(cyc));
+        if (cyc + 1) % xla.chunk as u64 == 0 {
+            native_outs_at_boundary.push(native.outputs());
+        }
+    }
+    let mut stim2 = d.make_stimulus();
+    let mut boundary = 0usize;
+    for cyc in 0..cycles {
+        let flushed = xla.step(&stim2(cyc)).expect("xla step");
+        if flushed {
+            assert_eq!(
+                xla.outputs(),
+                native_outs_at_boundary[boundary],
+                "chunk boundary {boundary}"
+            );
+            boundary += 1;
+        }
+    }
+    assert_eq!(boundary, 8);
+}
+
+#[test]
+fn xla_backend_matches_interpreter_rocket_xs() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !dir.join("rocket_like_xs.hlo.txt").exists() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let mut xla = XlaBackend::load(&rt, dir, "rocket_like_xs").expect("load artifacts");
+    let d = catalog("rocket_like_xs").unwrap();
+    let c = compile_design(&d, CompileOpts { fuse: false });
+    let mut native = build_with_oim(KernelConfig::TI, &c.ir, &c.oim);
+
+    let cycles = 4 * xla.chunk as u64;
+    let mut stim = d.make_stimulus();
+    let mut native_boundaries = Vec::new();
+    for cyc in 0..cycles {
+        native.step(&stim(cyc));
+        if (cyc + 1) % xla.chunk as u64 == 0 {
+            native_boundaries.push(native.outputs());
+        }
+    }
+    let mut stim2 = d.make_stimulus();
+    let mut boundary = 0usize;
+    for cyc in 0..cycles {
+        if xla.step(&stim2(cyc)).expect("xla step") {
+            assert_eq!(xla.outputs(), native_boundaries[boundary], "boundary {boundary}");
+            boundary += 1;
+        }
+    }
+}
