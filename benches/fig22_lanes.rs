@@ -1,0 +1,44 @@
+//! Bench: Fig 22 lane-batched throughput sweep (ours, beyond the paper —
+//! see coordinator::report). Quick by default; set RTEAAL_FULL=1 for
+//! full-length runs.
+//!
+//! Acceptance check built in: batching must pay on the unrolled end —
+//! the TI kernel's B=8 *aggregate* lane-cycles/sec must exceed its B=1
+//! throughput (one tape walk amortized over 8 lanes).
+
+rteaal::install_tracking_alloc!();
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::coordinator::sweep;
+use rteaal::designs::catalog;
+use rteaal::kernels::KernelConfig;
+
+fn main() {
+    let ctx = rteaal::coordinator::report::Ctx::from_env();
+    let tables = rteaal::coordinator::report::run_experiment("fig22", &ctx).expect("known experiment");
+    for t in tables {
+        println!("{}", t.render());
+        if let Ok(p) = t.save_csv("fig22") {
+            eprintln!("csv: {}", p.display());
+        }
+    }
+
+    // acceptance: B=8 aggregate > B=1 on the TI kernel
+    let d = catalog("rocket_like_1c").expect("catalog design");
+    let c = compile_design(&d, CompileOpts::default());
+    let cycles = 1000;
+    let b1 = sweep::measure_kernel_lanes(&d, &c, KernelConfig::TI, 1, cycles);
+    let b8 = sweep::measure_kernel_lanes(&d, &c, KernelConfig::TI, 8, cycles);
+    println!(
+        "TI aggregate throughput: B=1 {:.2} M lane-cyc/s, B=8 {:.2} M lane-cyc/s ({:.2}x)",
+        b1.hz / 1e6,
+        b8.hz / 1e6,
+        b8.hz / b1.hz
+    );
+    assert!(
+        b8.hz > b1.hz,
+        "B=8 aggregate throughput ({:.2e}) should exceed B=1 ({:.2e}) on TI",
+        b8.hz,
+        b1.hz
+    );
+}

@@ -7,7 +7,7 @@ use anyhow::{bail, Context, Result};
 use super::compile::{compile_design, CompileOpts};
 use super::report;
 use crate::designs::catalog;
-use crate::kernels::KernelConfig;
+use crate::kernels::{BatchKernel as _, KernelConfig};
 use crate::sim::Simulator;
 use crate::tensor::export;
 use crate::util::cli::Args;
@@ -28,6 +28,9 @@ COMMANDS:
             [--kernel K]       RU|OU|NU|PSU|IU|SU|TI (default PSU)
             [--backend B]      interp|verilator|essent|event|parallel (default interp)
             [--threads N]      partitions for --backend parallel
+            [--lanes B]        lane-batched run: B decorrelated stimulus
+                               lanes per OIM walk (kernels RU|NU|PSU|TI);
+                               reports aggregate lane-cycles/sec
             [--cycles N]       cycle count (default: design default)
             [--vcd F]          write waveforms
   xla-sim   --design D         simulate via the AOT XLA/PJRT artifact
@@ -105,7 +108,46 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let d = design_arg(args)?;
     let cycles = args.opt_u64("cycles", d.default_cycles)?;
     let backend = args.opt_or("backend", "interp");
+    let lanes = args.opt_usize("lanes", 1)?;
+    if lanes == 0 {
+        bail!("--lanes must be >= 1");
+    }
     let c = compile_design(&d, CompileOpts { fuse: args.opt("vcd").is_none() });
+
+    if lanes > 1 {
+        if backend != "interp" {
+            bail!("--lanes requires --backend interp (got '{backend}')");
+        }
+        if args.opt("vcd").is_some() {
+            bail!("--lanes does not support --vcd (waveforms are per-lane)");
+        }
+        let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
+        if !crate::kernels::supports_batch(cfg) {
+            bail!(
+                "kernel {} has no lane-batched executor (use RU|NU|PSU|TI)",
+                cfg.name()
+            );
+        }
+        let mut kernel = crate::kernels::build_batch(cfg, &c.ir, &c.oim, lanes);
+        let mut stim = d.make_lane_stimulus(lanes);
+        let t0 = std::time::Instant::now();
+        for cyc in 0..cycles {
+            kernel.step(&stim(cyc));
+        }
+        let dt = t0.elapsed();
+        let aggregate = (cycles as f64 * lanes as f64) / dt.as_secs_f64().max(1e-12);
+        println!(
+            "{} x{lanes} lanes: {cycles} cycles/lane in {} ({:.2} M lane-cyc/s aggregate, {:.2} Mcyc/s per lane)",
+            cfg.name(),
+            crate::util::fmt_duration(dt),
+            aggregate / 1e6,
+            aggregate / lanes as f64 / 1e6
+        );
+        for (oname, v) in kernel.lane_outputs(0) {
+            println!("  lane0 out {oname} = {v:#x}");
+        }
+        return Ok(());
+    }
 
     if backend == "parallel" {
         let threads = args.opt_usize("threads", 4)?;

@@ -472,6 +472,30 @@ pub fn fig21_llc() -> Table {
     t
 }
 
+// ---------------------------------------------------------------- Fig 22
+
+/// Fig 22 (ours, beyond the paper): lane-batched throughput sweep.
+/// Aggregate lane-cycles/sec for `B ∈ {1, 2, 4, 8, 16}` on the three
+/// batched binding levels — the "simulate many users/test-vectors at
+/// once" scale axis enabled by the tensor form.
+pub fn fig22_lanes(ctx: &Ctx) -> Table {
+    let (d, c) = compiled("rocket_like_1c");
+    let cycles = ctx.cycles(d.default_cycles).max(200);
+    let mut t = Table::new(
+        &format!("Fig 22 — lane-batched aggregate throughput (rocket_like_1c, {cycles} cycles/lane, M lane-cyc/s)"),
+        &["kernel", "B=1", "B=2", "B=4", "B=8", "B=16"],
+    );
+    for cfg in [KernelConfig::RU, KernelConfig::PSU, KernelConfig::TI] {
+        let mut row = vec![cfg.name().to_string()];
+        for lanes in [1usize, 2, 4, 8, 16] {
+            let p = sweep::measure_kernel_lanes(&d, &c, cfg, lanes, cycles);
+            row.push(format!("{:.2}", p.hz / 1e6));
+        }
+        t.row(row);
+    }
+    t
+}
+
 /// Run an experiment by id; returns rendered text.
 pub fn run_experiment(id: &str, ctx: &Ctx) -> Option<Vec<Table>> {
     let tables = match id {
@@ -488,12 +512,13 @@ pub fn run_experiment(id: &str, ctx: &Ctx) -> Option<Vec<Table>> {
         "tab07" => vec![tab07_compile_scaling(ctx)],
         "fig20" => vec![fig20_main_eval(ctx), fig20_best_kernel_matrix()],
         "fig21" => vec![fig21_llc()],
+        "fig22" => vec![fig22_lanes(ctx)],
         _ => return None,
     };
     Some(tables)
 }
 
-pub const ALL_EXPERIMENTS: [&str; 13] = [
+pub const ALL_EXPERIMENTS: [&str; 14] = [
     "setup", "tab01", "fig07", "fig08", "fig15", "tab05", "fig16", "fig17", "fig18", "fig19",
-    "tab07", "fig20", "fig21",
+    "tab07", "fig20", "fig21", "fig22",
 ];

@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use super::compile::Compiled;
 use crate::designs::Design;
-use crate::kernels::KernelConfig;
+use crate::kernels::{BatchKernel as _, KernelConfig};
 use crate::perf::machine::Machine;
 use crate::perf::topdown::{self, TopDown};
 use crate::perf::trace::{self, SimStyle};
@@ -39,6 +39,40 @@ pub fn measure_kernel(design: &Design, compiled: &Compiled, cfg: KernelConfig, c
         wall: stats.wall,
         cycles,
         hz: stats.hz,
+        program_bytes,
+        data_bytes,
+    }
+}
+
+/// Run `cycles` of `design` under a lane-batched kernel with `lanes`
+/// stimulus lanes. `hz` reports **aggregate lane-cycles per second**
+/// (`cycles * lanes / wall`) — the throughput axis the batch dimension
+/// scales; per-lane latency is `hz / lanes`.
+pub fn measure_kernel_lanes(
+    design: &Design,
+    compiled: &Compiled,
+    cfg: KernelConfig,
+    lanes: usize,
+    cycles: u64,
+) -> SweepPoint {
+    let mut kernel = crate::kernels::build_batch(cfg, &compiled.ir, &compiled.oim, lanes);
+    let program_bytes = crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim);
+    let data_bytes = crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim);
+    let mut stim = design.make_lane_stimulus(lanes);
+    // warm-up then measure
+    for c in 0..cycles.min(64) {
+        kernel.step(&stim(c));
+    }
+    let t0 = std::time::Instant::now();
+    for c in 0..cycles {
+        kernel.step(&stim(c));
+    }
+    let wall = t0.elapsed();
+    SweepPoint {
+        label: format!("{}/B{}", cfg.name(), lanes),
+        wall,
+        cycles,
+        hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
         program_bytes,
         data_bytes,
     }

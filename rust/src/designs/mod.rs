@@ -48,6 +48,13 @@ pub struct Design {
     pub default_cycles: u64,
 }
 
+/// Deterministic per-lane stimulus seed: lane 0 keeps the design's base
+/// seed (so a 1-lane batched run replays the single-lane stimulus), later
+/// lanes decorrelate via a golden-ratio stride through seed space.
+pub fn lane_seed(seed: u64, lane: usize) -> u64 {
+    seed.wrapping_add((lane as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
 impl Design {
     /// Produce the input vector for a cycle.
     pub fn make_stimulus(&self) -> Box<dyn FnMut(u64) -> Vec<u64>> {
@@ -59,6 +66,46 @@ impl Design {
                 Box::new(move |_cycle| widths.iter().map(|&w| rng.bits(w)).collect())
             }
             Stimulus::Zero => Box::new(move |_cycle| vec![0u64; n_inputs]),
+        }
+    }
+
+    /// The single-lane stimulus stream of one batch lane (used to replay a
+    /// batched lane on a scalar kernel).
+    pub fn make_stimulus_for_lane(&self, lane: usize) -> Box<dyn FnMut(u64) -> Vec<u64>> {
+        let n_inputs = self.graph.inputs.len();
+        let widths: Vec<u8> = self.graph.inputs.iter().map(|p| p.width).collect();
+        match self.stimulus {
+            Stimulus::Random(seed) => {
+                let mut rng = Rng::new(lane_seed(seed, lane));
+                Box::new(move |_cycle| widths.iter().map(|&w| rng.bits(w)).collect())
+            }
+            Stimulus::Zero => Box::new(move |_cycle| vec![0u64; n_inputs]),
+        }
+    }
+
+    /// Produce lane-major input vectors for a `lanes`-wide batched run:
+    /// the result has `inputs[i * lanes + lane]` = input port `i` of
+    /// `lane`. Lane `l`'s stream equals [`Design::make_stimulus_for_lane`]
+    /// with the same `l` (and lane 0 equals [`Design::make_stimulus`]).
+    pub fn make_lane_stimulus(&self, lanes: usize) -> Box<dyn FnMut(u64) -> Vec<u64>> {
+        assert!(lanes >= 1);
+        let n_inputs = self.graph.inputs.len();
+        let widths: Vec<u8> = self.graph.inputs.iter().map(|p| p.width).collect();
+        match self.stimulus {
+            Stimulus::Random(seed) => {
+                let mut rngs: Vec<Rng> =
+                    (0..lanes).map(|l| Rng::new(lane_seed(seed, l))).collect();
+                Box::new(move |_cycle| {
+                    let mut out = vec![0u64; widths.len() * lanes];
+                    for (l, rng) in rngs.iter_mut().enumerate() {
+                        for (i, &w) in widths.iter().enumerate() {
+                            out[i * lanes + l] = rng.bits(w);
+                        }
+                    }
+                    out
+                })
+            }
+            Stimulus::Zero => Box::new(move |_cycle| vec![0u64; n_inputs * lanes]),
         }
     }
 }
@@ -171,6 +218,34 @@ mod tests {
             assert!(d.graph.num_ops() > 0);
         }
         assert!(catalog("nonexistent").is_none());
+    }
+
+    #[test]
+    fn lane_stimulus_is_consistent_and_decorrelated() {
+        let d = catalog("alu32").unwrap();
+        let lanes = 4usize;
+        let n = d.graph.inputs.len();
+        let mut batched = d.make_lane_stimulus(lanes);
+        let mut singles: Vec<_> = (0..lanes).map(|l| d.make_stimulus_for_lane(l)).collect();
+        let mut base = d.make_stimulus();
+        let mut lanes_differ = false;
+        for cycle in 0..16u64 {
+            let flat = batched(cycle);
+            assert_eq!(flat.len(), n * lanes);
+            let b = base(cycle);
+            for (l, s) in singles.iter_mut().enumerate() {
+                let want = s(cycle);
+                for i in 0..n {
+                    assert_eq!(flat[i * lanes + l], want[i], "lane {l} port {i}");
+                }
+                if l == 0 {
+                    assert_eq!(want, b, "lane 0 must replay the base stimulus");
+                } else if want != b {
+                    lanes_differ = true;
+                }
+            }
+        }
+        assert!(lanes_differ, "lanes 1.. must be decorrelated from lane 0");
     }
 
     #[test]

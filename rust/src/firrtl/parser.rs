@@ -8,12 +8,19 @@ use super::lexer::{lex, Spanned, Tok};
 use crate::graph::ops::{mask, PrimOp};
 use crate::graph::{Graph, NodeId, NodeKind};
 
-#[derive(Debug, thiserror::Error)]
-#[error("firrtl parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: u32,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "firrtl parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse FIRRTL text into a dataflow graph.
 pub fn parse(src: &str) -> Result<Graph, ParseError> {

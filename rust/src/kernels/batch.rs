@@ -1,0 +1,579 @@
+//! Lane-batched kernel executors (throughput simulation).
+//!
+//! One walk of the OIM metadata (or of the SU/TI-style tape) steps `B`
+//! independent stimulus lanes at once: the per-op metadata fetch, dispatch
+//! and cursor arithmetic are paid once per operation instead of once per
+//! (operation, lane). Slot files are **lane-major** (`v[s * B + lane]`, see
+//! [`super::common::BatchDriver`]) so the innermost lane loop is a
+//! contiguous streaming loop the compiler can vectorize.
+//!
+//! Three binding levels bracket the design space (mirroring the scalar
+//! kernels they batch):
+//!
+//! * [`BatchRuKernel`] — format-B cursor walk, case dispatch per op
+//!   (batched RU): the rolled extreme, where batching amortizes the most
+//!   metadata traffic per lane.
+//! * [`BatchNuKernel`] — format-C group walk with dispatch hoisted out of
+//!   the S loop (batched NU; the PSU flavour shares it, differing only in
+//!   name — the lane loop replaces the scalar partial S unroll).
+//! * [`BatchTiKernel`] — tape of precompiled per-opcode functions with
+//!   operand slots baked in (batched TI): the unrolled extreme, where
+//!   batching amortizes the tape walk itself.
+//!
+//! Lanes never interact: a `B`-lane batched run is bit-identical to `B`
+//! independent single-lane runs of the corresponding scalar kernel
+//! (property-tested in `tests/kernels_property.rs`).
+
+use super::common::{eval_op, BatchDriver};
+use super::BatchKernel;
+use crate::tensor::ir::{KOp, LayerIr, OpRec, NUM_KOPS};
+use crate::tensor::oim::Oim;
+
+// --------------------------------------------------------------- RU (batched)
+
+/// Batched **RU**: traverses the format-B arrays with cursors, dispatching
+/// through the `op_r[n]` case statement once per operation and evaluating
+/// all lanes inside the dispatch.
+pub struct BatchRuKernel {
+    d: BatchDriver,
+    oim: Oim,
+    /// lane-major LO buffer (`max_layer_ops * lanes`)
+    lo: Vec<u64>,
+    /// per-lane operand gather buffer
+    operands: Vec<u64>,
+}
+
+impl BatchRuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        let max_arity = oim.b.arity.iter().copied().max().unwrap_or(1) as usize;
+        BatchRuKernel {
+            d: BatchDriver::new(ir, lanes),
+            oim: oim.clone(),
+            lo: vec![0; ir.max_layer_ops() * lanes],
+            operands: vec![0; max_arity.max(3)],
+        }
+    }
+}
+
+impl BatchKernel for BatchRuKernel {
+    fn config_name(&self) -> &'static str {
+        "RU"
+    }
+
+    fn lanes(&self) -> usize {
+        self.d.lanes
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let lanes = self.d.lanes;
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        let mut wb_idx = 0usize;
+        for &cnt in &o.i_payload {
+            for s in 0..cnt as usize {
+                let n = KOp::from_u8(o.b.opcode[op_idx]);
+                let arity = o.b.arity[op_idx] as usize;
+                let imm = o.b.imm[op_idx];
+                let m = o.b.mask[op_idx];
+                let aux = o.b.aux[op_idx];
+                let ob = s * lanes;
+                for l in 0..lanes {
+                    for oo in 0..arity {
+                        self.operands[oo] = v[o.b.r_coords[r_idx + oo] as usize * lanes + l];
+                    }
+                    self.lo[ob + l] = eval_op(n, &self.operands[..arity], imm, m, aux);
+                }
+                r_idx += arity;
+                op_idx += 1;
+            }
+            for s in 0..cnt as usize {
+                let sb = o.b.s_coords[wb_idx + s] as usize * lanes;
+                let lb = s * lanes;
+                for l in 0..lanes {
+                    v[sb + l] = self.lo[lb + l];
+                }
+            }
+            wb_idx += cnt as usize;
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        self.d.lane_outputs(lane)
+    }
+}
+
+// ---------------------------------------------------- NU / PSU (batched)
+
+/// Scalar op body used by the batched group loops: the dispatch happens
+/// once per (layer, op-type) group, then the group loop iterates
+/// (element, lane) through one of these shapes.
+enum LaneOp {
+    /// `(a, imm, aux) -> out`
+    Un(fn(u64, u8, u64) -> u64),
+    /// `(a, b, imm) -> out`
+    Bin(fn(u64, u64, u8) -> u64),
+    Mux,
+    Chain,
+}
+
+fn lane_op(n: KOp) -> LaneOp {
+    match n {
+        KOp::Add => LaneOp::Bin(|a, b, _| a.wrapping_add(b)),
+        KOp::Sub => LaneOp::Bin(|a, b, _| a.wrapping_sub(b)),
+        KOp::Mul => LaneOp::Bin(|a, b, _| a.wrapping_mul(b)),
+        KOp::Div => LaneOp::Bin(|a, b, _| if b == 0 { 0 } else { a / b }),
+        KOp::Rem => LaneOp::Bin(|a, b, _| if b == 0 { 0 } else { a % b }),
+        KOp::Lt => LaneOp::Bin(|a, b, _| (a < b) as u64),
+        KOp::Leq => LaneOp::Bin(|a, b, _| (a <= b) as u64),
+        KOp::Gt => LaneOp::Bin(|a, b, _| (a > b) as u64),
+        KOp::Geq => LaneOp::Bin(|a, b, _| (a >= b) as u64),
+        KOp::Eq => LaneOp::Bin(|a, b, _| (a == b) as u64),
+        KOp::Neq => LaneOp::Bin(|a, b, _| (a != b) as u64),
+        KOp::And => LaneOp::Bin(|a, b, _| a & b),
+        KOp::Or => LaneOp::Bin(|a, b, _| a | b),
+        KOp::Xor => LaneOp::Bin(|a, b, _| a ^ b),
+        KOp::Not => LaneOp::Un(|a, _, _| !a),
+        KOp::Neg => LaneOp::Un(|a, _, _| a.wrapping_neg()),
+        KOp::AndrK => LaneOp::Un(|a, _, x| (a == x) as u64),
+        KOp::Orr => LaneOp::Un(|a, _, _| (a != 0) as u64),
+        KOp::Xorr => LaneOp::Un(|a, _, _| (a.count_ones() & 1) as u64),
+        KOp::ShlI => LaneOp::Un(|a, s, _| a << s),
+        KOp::ShrI => LaneOp::Un(|a, s, _| a >> s),
+        KOp::Dshl => LaneOp::Bin(|a, b, _| if b >= 64 { 0 } else { a << b }),
+        KOp::Dshr => LaneOp::Bin(|a, b, _| if b >= 64 { 0 } else { a >> b }),
+        KOp::Cat => LaneOp::Bin(|a, b, s| (a << s) | b),
+        KOp::Mux => LaneOp::Mux,
+        KOp::Copy => LaneOp::Un(|a, _, _| a),
+        KOp::MuxChain => LaneOp::Chain,
+    }
+}
+
+/// Evaluate one (op type, group) over all lanes. Returns the number of
+/// operand-slot entries consumed (as `run_group` does for the scalar path).
+#[allow(clippy::too_many_arguments)]
+fn run_group_lanes(
+    n: u8,
+    lanes: usize,
+    v: &[u64],
+    lo: &mut [u64],
+    lo_pos: usize,
+    cnt: usize,
+    r: &[u32],
+    imm: &[u8],
+    msk: &[u64],
+    aux: &[u64],
+    arity: &[u8],
+    chain_buf: &mut [u64],
+) -> usize {
+    match lane_op(KOp::from_u8(n)) {
+        LaneOp::Un(f) => {
+            for i in 0..cnt {
+                let ab = r[i] as usize * lanes;
+                let ob = (lo_pos + i) * lanes;
+                for l in 0..lanes {
+                    lo[ob + l] = f(v[ab + l], imm[i], aux[i]) & msk[i];
+                }
+            }
+            cnt
+        }
+        LaneOp::Bin(f) => {
+            for i in 0..cnt {
+                let ab = r[2 * i] as usize * lanes;
+                let bb = r[2 * i + 1] as usize * lanes;
+                let ob = (lo_pos + i) * lanes;
+                for l in 0..lanes {
+                    lo[ob + l] = f(v[ab + l], v[bb + l], imm[i]) & msk[i];
+                }
+            }
+            2 * cnt
+        }
+        LaneOp::Mux => {
+            for i in 0..cnt {
+                let sb = r[3 * i] as usize * lanes;
+                let tb = r[3 * i + 1] as usize * lanes;
+                let fb = r[3 * i + 2] as usize * lanes;
+                let ob = (lo_pos + i) * lanes;
+                for l in 0..lanes {
+                    lo[ob + l] =
+                        (if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] }) & msk[i];
+                }
+            }
+            3 * cnt
+        }
+        LaneOp::Chain => {
+            let mut r_off = 0usize;
+            for i in 0..cnt {
+                let ar = arity[i] as usize;
+                let ob = (lo_pos + i) * lanes;
+                let k = imm[i] as usize;
+                for l in 0..lanes {
+                    for o in 0..ar {
+                        chain_buf[o] = v[r[r_off + o] as usize * lanes + l];
+                    }
+                    let mut val = chain_buf[2 * k];
+                    for j in (0..k).rev() {
+                        if chain_buf[2 * j] != 0 {
+                            val = chain_buf[2 * j + 1];
+                        }
+                    }
+                    lo[ob + l] = val & msk[i];
+                }
+                r_off += ar;
+            }
+            r_off
+        }
+    }
+}
+
+/// Batched **NU / PSU**: format-C group walk with per-op-type dispatch
+/// hoisted out of the (S, lane) loops. In the batched executors the lane
+/// loop takes the place of the scalar PSU's partial S unroll as the
+/// innermost fixed-trip loop, so the NU and PSU flavours share one
+/// executor and differ only in the reported name.
+pub struct BatchNuKernel {
+    name: &'static str,
+    d: BatchDriver,
+    oim: Oim,
+    lo: Vec<u64>,
+    chain_buf: Vec<u64>,
+}
+
+impl BatchNuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize, name: &'static str) -> Self {
+        let max_arity = oim.c.arity.iter().copied().max().unwrap_or(1) as usize;
+        BatchNuKernel {
+            name,
+            d: BatchDriver::new(ir, lanes),
+            oim: oim.clone(),
+            lo: vec![0; ir.max_layer_ops() * lanes],
+            chain_buf: vec![0; max_arity.max(3)],
+        }
+    }
+}
+
+impl BatchKernel for BatchNuKernel {
+    fn config_name(&self) -> &'static str {
+        self.name
+    }
+
+    fn lanes(&self) -> usize {
+        self.d.lanes
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let lanes = self.d.lanes;
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        let mut wb_idx = 0usize;
+        let layers = o.i_payload.len();
+        for layer in 0..layers {
+            let mut lo_pos = 0usize;
+            for n in 0..NUM_KOPS {
+                let cnt = o.n_payload[layer * NUM_KOPS + n] as usize;
+                if cnt == 0 {
+                    continue;
+                }
+                let consumed = run_group_lanes(
+                    n as u8,
+                    lanes,
+                    v,
+                    &mut self.lo,
+                    lo_pos,
+                    cnt,
+                    &o.c.r_coords[r_idx..],
+                    &o.c.imm[op_idx..],
+                    &o.c.mask[op_idx..],
+                    &o.c.aux[op_idx..],
+                    &o.c.arity[op_idx..],
+                    &mut self.chain_buf,
+                );
+                r_idx += consumed;
+                op_idx += cnt;
+                lo_pos += cnt;
+            }
+            let cnt = o.i_payload[layer] as usize;
+            let s = &o.c.s_coords[wb_idx..wb_idx + cnt];
+            for (i, &slot) in s.iter().enumerate() {
+                let sb = slot as usize * lanes;
+                let lb = i * lanes;
+                for l in 0..lanes {
+                    v[sb + l] = self.lo[lb + l];
+                }
+            }
+            wb_idx += cnt;
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        self.d.lane_outputs(lane)
+    }
+}
+
+// --------------------------------------------------------------- TI (batched)
+
+type BtFn = fn(&mut [u64], &OpRec, &[u32], usize);
+
+macro_rules! bt_bin {
+    ($name:ident, |$a:ident, $b:ident| $expr:expr) => {
+        fn $name(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
+            let ab = r.a as usize * lanes;
+            let bb = r.b as usize * lanes;
+            let ob = r.out as usize * lanes;
+            for l in 0..lanes {
+                let $a = v[ab + l];
+                let $b = v[bb + l];
+                v[ob + l] = ($expr) & r.mask;
+            }
+        }
+    };
+}
+macro_rules! bt_un {
+    ($name:ident, |$a:ident, $r:ident| $expr:expr) => {
+        fn $name(v: &mut [u64], $r: &OpRec, _e: &[u32], lanes: usize) {
+            let ab = $r.a as usize * lanes;
+            let ob = $r.out as usize * lanes;
+            for l in 0..lanes {
+                let $a = v[ab + l];
+                v[ob + l] = ($expr) & $r.mask;
+            }
+        }
+    };
+}
+
+bt_bin!(bt_add, |a, b| a.wrapping_add(b));
+bt_bin!(bt_sub, |a, b| a.wrapping_sub(b));
+bt_bin!(bt_mul, |a, b| a.wrapping_mul(b));
+bt_bin!(bt_div, |a, b| if b == 0 { 0 } else { a / b });
+bt_bin!(bt_rem, |a, b| if b == 0 { 0 } else { a % b });
+bt_bin!(bt_lt, |a, b| (a < b) as u64);
+bt_bin!(bt_leq, |a, b| (a <= b) as u64);
+bt_bin!(bt_gt, |a, b| (a > b) as u64);
+bt_bin!(bt_geq, |a, b| (a >= b) as u64);
+bt_bin!(bt_eq, |a, b| (a == b) as u64);
+bt_bin!(bt_neq, |a, b| (a != b) as u64);
+bt_bin!(bt_and, |a, b| a & b);
+bt_bin!(bt_or, |a, b| a | b);
+bt_bin!(bt_xor, |a, b| a ^ b);
+bt_bin!(bt_dshl, |a, b| if b >= 64 { 0 } else { a << b });
+bt_bin!(bt_dshr, |a, b| if b >= 64 { 0 } else { a >> b });
+bt_un!(bt_not, |a, _r| !a);
+bt_un!(bt_neg, |a, _r| a.wrapping_neg());
+bt_un!(bt_andr, |a, r| (a == r.aux) as u64);
+bt_un!(bt_orr, |a, _r| (a != 0) as u64);
+bt_un!(bt_xorr, |a, _r| (a.count_ones() & 1) as u64);
+bt_un!(bt_shli, |a, r| a << r.imm);
+bt_un!(bt_shri, |a, r| a >> r.imm);
+bt_un!(bt_copy, |a, _r| a);
+
+fn bt_cat(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
+    let ab = r.a as usize * lanes;
+    let bb = r.b as usize * lanes;
+    let ob = r.out as usize * lanes;
+    for l in 0..lanes {
+        v[ob + l] = ((v[ab + l] << r.imm) | v[bb + l]) & r.mask;
+    }
+}
+
+fn bt_mux(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
+    let sb = r.a as usize * lanes;
+    let tb = r.b as usize * lanes;
+    let fb = r.c as usize * lanes;
+    let ob = r.out as usize * lanes;
+    for l in 0..lanes {
+        let x = if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] };
+        v[ob + l] = x & r.mask;
+    }
+}
+
+/// Lane-strided mirror of `tensor::ir::eval_rec`'s MuxChain case:
+/// operands are `sel0 = a`, `v0 = b`, then `ext` holds
+/// `(sel1, v1, .., default)` — first true selector wins.
+fn bt_muxchain(v: &mut [u64], r: &OpRec, e: &[u32], lanes: usize) {
+    let k = r.imm as usize;
+    let ob = r.out as usize * lanes;
+    let ext = &e[r.ext as usize..r.ext as usize + 2 * k - 1];
+    for l in 0..lanes {
+        let val = if v[r.a as usize * lanes + l] != 0 {
+            v[r.b as usize * lanes + l]
+        } else {
+            let mut x = v[ext[2 * k - 2] as usize * lanes + l];
+            for i in (0..k - 1).rev() {
+                if v[ext[2 * i] as usize * lanes + l] != 0 {
+                    x = v[ext[2 * i + 1] as usize * lanes + l];
+                }
+            }
+            x
+        };
+        v[ob + l] = val & r.mask;
+    }
+}
+
+fn bt_fn(op: KOp) -> BtFn {
+    match op {
+        KOp::Add => bt_add,
+        KOp::Sub => bt_sub,
+        KOp::Mul => bt_mul,
+        KOp::Div => bt_div,
+        KOp::Rem => bt_rem,
+        KOp::Lt => bt_lt,
+        KOp::Leq => bt_leq,
+        KOp::Gt => bt_gt,
+        KOp::Geq => bt_geq,
+        KOp::Eq => bt_eq,
+        KOp::Neq => bt_neq,
+        KOp::And => bt_and,
+        KOp::Or => bt_or,
+        KOp::Xor => bt_xor,
+        KOp::Not => bt_not,
+        KOp::Neg => bt_neg,
+        KOp::AndrK => bt_andr,
+        KOp::Orr => bt_orr,
+        KOp::Xorr => bt_xorr,
+        KOp::ShlI => bt_shli,
+        KOp::ShrI => bt_shri,
+        KOp::Dshl => bt_dshl,
+        KOp::Dshr => bt_dshr,
+        KOp::Cat => bt_cat,
+        KOp::Mux => bt_mux,
+        KOp::Copy => bt_copy,
+        KOp::MuxChain => bt_muxchain,
+    }
+}
+
+/// Batched **TI**: tape of precompiled per-opcode functions with operand
+/// slots baked into each record; each tape entry evaluates all lanes with
+/// direct lane-major slot writes (no LO staging). Batching amortizes the
+/// tape walk — the code-pointer and record fetches — across lanes, which
+/// is exactly the frontend pressure the paper charges to the unrolled
+/// kernels.
+pub struct BatchTiKernel {
+    d: BatchDriver,
+    tape: Vec<(BtFn, OpRec)>,
+    ext_args: Vec<u32>,
+}
+
+impl BatchTiKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        let (layers, ext_args) = oim.op_recs();
+        let mut tape = Vec::with_capacity(ir.total_ops());
+        for layer in &layers {
+            for rec in layer {
+                tape.push((bt_fn(rec.kop()), *rec));
+            }
+        }
+        BatchTiKernel { d: BatchDriver::new(ir, lanes), tape, ext_args }
+    }
+}
+
+impl BatchKernel for BatchTiKernel {
+    fn config_name(&self) -> &'static str {
+        "TI"
+    }
+
+    fn lanes(&self) -> usize {
+        self.d.lanes
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let lanes = self.d.lanes;
+        let v = &mut self.d.v;
+        for (f, rec) in &self.tape {
+            f(v, rec, &self.ext_args, lanes);
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        self.d.lane_outputs(lane)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{build_batch, build_with_oim, BatchKernel, SimKernel, BATCHED_KERNELS};
+    use crate::graph::builder::{random_circuit, random_inputs};
+    use crate::graph::passes::optimize;
+    use crate::tensor::ir::lower;
+    use crate::tensor::oim::Oim;
+    use crate::util::prng::Rng;
+
+    /// Quick in-module smoke test (the heavyweight differential property
+    /// lives in `tests/kernels_property.rs`): a 4-lane batched run matches
+    /// 4 scalar runs on a random circuit.
+    #[test]
+    fn batched_matches_scalar_lanes() {
+        let mut rng = Rng::new(88_001);
+        let g = random_circuit(&mut rng, 60);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let lanes = 4usize;
+        for cfg in BATCHED_KERNELS {
+            let mut batched = build_batch(cfg, &ir, &oim, lanes);
+            let mut singles: Vec<_> =
+                (0..lanes).map(|_| build_with_oim(cfg, &ir, &oim)).collect();
+            for cycle in 0..6 {
+                let per_lane: Vec<Vec<u64>> =
+                    (0..lanes).map(|_| random_inputs(&mut rng, &opt)).collect();
+                let mut flat = vec![0u64; opt.inputs.len() * lanes];
+                for (l, inp) in per_lane.iter().enumerate() {
+                    for (i, &val) in inp.iter().enumerate() {
+                        flat[i * lanes + l] = val;
+                    }
+                }
+                batched.step(&flat);
+                for (l, s) in singles.iter_mut().enumerate() {
+                    s.step(&per_lane[l]);
+                    assert_eq!(
+                        batched.lane_outputs(l),
+                        s.outputs(),
+                        "{} lane {l} cycle {cycle}",
+                        cfg.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Lane-major layout invariant: slot `s` of lane `l` lives at
+    /// `s * lanes + l`, and all lanes start identical.
+    #[test]
+    fn lane_major_layout_and_initial_state() {
+        let mut rng = Rng::new(88_002);
+        let g = random_circuit(&mut rng, 30);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let lanes = 3usize;
+        let k = build_batch(crate::kernels::KernelConfig::TI, &ir, &oim, lanes);
+        assert_eq!(k.lanes(), lanes);
+        assert_eq!(k.slots().len(), ir.num_slots * lanes);
+        let init = ir.initial_slots();
+        for (s, &val) in init.iter().enumerate() {
+            for l in 0..lanes {
+                assert_eq!(k.slots()[s * lanes + l], val, "slot {s} lane {l}");
+            }
+        }
+    }
+}

@@ -1,6 +1,7 @@
-//! Shared kernel machinery: the LI slot file with input/commit handling,
-//! and the generic per-operation evaluator used by the rolled kernels'
-//! case dispatch (the paper's Algorithm 2 `op_r[n]` case statement).
+//! Shared kernel machinery: the LI slot file with input/commit handling
+//! (scalar [`Driver`] and lane-batched [`BatchDriver`]), and the generic
+//! per-operation evaluator used by the rolled kernels' case dispatch (the
+//! paper's Algorithm 2 `op_r[n]` case statement).
 
 use crate::graph::ops::mask;
 use crate::tensor::ir::{KOp, LayerIr};
@@ -45,6 +46,81 @@ impl Driver {
 
     pub fn named_outputs(&self) -> Vec<(String, u64)> {
         self.outputs.iter().map(|(n, s)| (n.clone(), self.v[*s as usize])).collect()
+    }
+}
+
+/// Lane-batched LI slot file: `B` independent stimulus lanes share one OIM
+/// walk, with the slot file stored **lane-major** (`v[s * B + lane]`) so
+/// the per-op lane loop touches contiguous memory.
+///
+/// All lanes start from the same initial slot values (constants + register
+/// init); they diverge only through their per-lane inputs.
+#[derive(Clone, Debug)]
+pub struct BatchDriver {
+    /// Number of lanes `B` (>= 1).
+    pub lanes: usize,
+    /// Lane-major slot file, `num_slots * lanes` entries.
+    pub v: Vec<u64>,
+    pub input_slots: Vec<u32>,
+    pub input_masks: Vec<u64>,
+    pub commits: Vec<(u32, u32, u64)>,
+    pub outputs: Vec<(String, u32)>,
+}
+
+impl BatchDriver {
+    pub fn new(ir: &LayerIr, lanes: usize) -> Self {
+        assert!(lanes >= 1, "lanes must be >= 1");
+        let init = ir.initial_slots();
+        let mut v = vec![0u64; init.len() * lanes];
+        for (s, &val) in init.iter().enumerate() {
+            for l in 0..lanes {
+                v[s * lanes + l] = val;
+            }
+        }
+        BatchDriver {
+            lanes,
+            v,
+            input_slots: ir.input_slots.clone(),
+            input_masks: ir.input_widths.iter().map(|&w| mask(w)).collect(),
+            commits: ir.commits.clone(),
+            outputs: ir.output_slots.clone(),
+        }
+    }
+
+    /// Drive all lanes' inputs. `inputs` is lane-major:
+    /// `inputs[i * lanes + lane]` is input port `i` for `lane`.
+    #[inline]
+    pub fn set_inputs(&mut self, inputs: &[u64]) {
+        debug_assert_eq!(inputs.len(), self.input_slots.len() * self.lanes);
+        for i in 0..self.input_slots.len() {
+            let m = self.input_masks[i];
+            let base = self.input_slots[i] as usize * self.lanes;
+            for l in 0..self.lanes {
+                self.v[base + l] = inputs[i * self.lanes + l] & m;
+            }
+        }
+    }
+
+    /// Register commits for every lane (the `◇ : i ≡ I` connects).
+    #[inline]
+    pub fn commit(&mut self) {
+        for ci in 0..self.commits.len() {
+            let (reg, next, m) = self.commits[ci];
+            let rb = reg as usize * self.lanes;
+            let nb = next as usize * self.lanes;
+            for l in 0..self.lanes {
+                self.v[rb + l] = self.v[nb + l] & m;
+            }
+        }
+    }
+
+    /// Named design outputs as seen by one lane.
+    pub fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        assert!(lane < self.lanes, "lane {lane} out of range (lanes = {})", self.lanes);
+        self.outputs
+            .iter()
+            .map(|(n, s)| (n.clone(), self.v[*s as usize * self.lanes + lane]))
+            .collect()
     }
 }
 

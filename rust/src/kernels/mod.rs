@@ -19,6 +19,27 @@
 //!
 //! All kernels implement [`SimKernel`] and are property-tested to agree
 //! with `graph::RefSim` and the Einsum cascade evaluator.
+//!
+//! ## Lane batching (throughput simulation)
+//!
+//! Because the tensor form decouples behaviour (the OIM) from the program,
+//! one walk of the metadata can step `B` independent stimulus lanes at
+//! once — many users / test vectors simulated per pass, amortizing the
+//! per-op metadata traffic and dispatch that dominate the rolled kernels
+//! and the tape walk that dominates the unrolled ones. Batched executors
+//! implement [`BatchKernel`] and store every slot file **lane-major**:
+//!
+//! ```text
+//! slots[s * B + lane]   // lane runs fastest: contiguous inner loops
+//! ```
+//!
+//! Inputs follow the same convention (`inputs[i * B + lane]`). Lanes are
+//! fully independent: a `B`-lane batched run is bit-identical to `B`
+//! single-lane runs of the corresponding scalar kernel (differential
+//! property test in `tests/kernels_property.rs`). Batched executors exist
+//! for the three binding levels that bracket the spectrum — RU, NU/PSU
+//! and TI (see [`BATCHED_KERNELS`] and [`batch`]); `rteaal sim --lanes B`
+//! and `benches/fig22_lanes.rs` drive them.
 
 pub mod common;
 pub mod ru;
@@ -28,6 +49,7 @@ pub mod iu;
 pub mod su;
 pub mod ti;
 pub mod unopt;
+pub mod batch;
 
 use crate::tensor::ir::LayerIr;
 use crate::tensor::oim::Oim;
@@ -116,6 +138,53 @@ pub fn build_with_oim(config: KernelConfig, ir: &LayerIr, oim: &Oim) -> Box<dyn 
         KernelConfig::IU => Box::new(iu::IuKernel::new(ir, oim)),
         KernelConfig::SU => Box::new(su::SuKernel::new(ir, oim)),
         KernelConfig::TI => Box::new(ti::TiKernel::new(ir, oim)),
+    }
+}
+
+/// A lane-batched simulation kernel: `B` independent stimulus lanes step
+/// together through one walk of the OIM metadata / tape. Slot files and
+/// inputs are lane-major (see the module docs).
+pub trait BatchKernel: Send {
+    fn config_name(&self) -> &'static str;
+    /// Number of lanes `B`.
+    fn lanes(&self) -> usize;
+    /// Simulate one cycle for every lane. `inputs[i * lanes + lane]` is
+    /// input port `i` of `lane` (masked by the kernel).
+    fn step(&mut self, inputs: &[u64]);
+    /// The lane-major LI slot file (`slots[s * lanes + lane]`).
+    fn slots(&self) -> &[u64];
+    /// Named design outputs as observed by one lane.
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)>;
+}
+
+/// The kernel configurations with lane-batched executors — the three
+/// binding levels bracketing the design space (PSU shares NU's batched
+/// group bodies).
+pub const BATCHED_KERNELS: [KernelConfig; 4] =
+    [KernelConfig::RU, KernelConfig::NU, KernelConfig::PSU, KernelConfig::TI];
+
+/// Whether `config` has a lane-batched executor.
+pub fn supports_batch(config: KernelConfig) -> bool {
+    BATCHED_KERNELS.contains(&config)
+}
+
+/// Build a lane-batched kernel. Panics for configurations without a
+/// batched executor — gate on [`supports_batch`] first.
+pub fn build_batch(
+    config: KernelConfig,
+    ir: &LayerIr,
+    oim: &Oim,
+    lanes: usize,
+) -> Box<dyn BatchKernel> {
+    match config {
+        KernelConfig::RU => Box::new(batch::BatchRuKernel::new(ir, oim, lanes)),
+        KernelConfig::NU => Box::new(batch::BatchNuKernel::new(ir, oim, lanes, "NU")),
+        KernelConfig::PSU => Box::new(batch::BatchNuKernel::new(ir, oim, lanes, "PSU")),
+        KernelConfig::TI => Box::new(batch::BatchTiKernel::new(ir, oim, lanes)),
+        other => panic!(
+            "kernel {} has no lane-batched executor (supported: RU, NU, PSU, TI)",
+            other.name()
+        ),
     }
 }
 

@@ -26,18 +26,31 @@
 //! no fused mux chains (export from the `optimize_no_fusion` pipeline).
 
 use crate::tensor::ir::{KOp, LayerIr};
-use crate::util::json::{arr_str, arr_u32, obj, Json};
+use crate::util::json::{arr_str, arr_u32, obj, Json, JsonError};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ExportError {
-    #[error("design has a signal of width {0} > 32; XLA backend is u32")]
     TooWide(u8),
-    #[error("design contains fused mux chains; export from optimize_no_fusion")]
     HasMuxChain,
 }
 
+impl std::fmt::Display for ExportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExportError::TooWide(w) => {
+                write!(f, "design has a signal of width {w} > 32; XLA backend is u32")
+            }
+            ExportError::HasMuxChain => {
+                write!(f, "design contains fused mux chains; export from optimize_no_fusion")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExportError {}
+
 /// Dense encoding of a design for the XLA backend.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DenseDesign {
     pub name: String,
     pub num_slots: usize,
@@ -179,6 +192,43 @@ impl DenseDesign {
             ("output_names", arr_str(&self.output_names)),
         ])
     }
+
+    /// Inverse of [`DenseDesign::to_json`] (the encoding the Python AOT
+    /// side reads; round-trip property-tested in `tests/kernels_property`).
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        let output_names = j
+            .req_arr("output_names")?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| JsonError::Schema("output_names element not a string".into()))
+            })
+            .collect::<Result<Vec<String>, JsonError>>()?;
+        Ok(DenseDesign {
+            name: j.req_str("name")?.to_string(),
+            num_slots: j.req_usize("num_slots")?,
+            num_layers: j.req_usize("num_layers")?,
+            max_ops: j.req_usize("max_ops")?,
+            sources_end: j.req_usize("sources_end")?,
+            num_inputs: j.req_usize("num_inputs")?,
+            num_regs: j.req_usize("num_regs")?,
+            opcode: j.req_u32_vec("opcode")?,
+            a: j.req_u32_vec("a")?,
+            b: j.req_u32_vec("b")?,
+            c: j.req_u32_vec("c")?,
+            imm: j.req_u32_vec("imm")?,
+            mask: j.req_u32_vec("mask")?,
+            aux: j.req_u32_vec("aux")?,
+            commit_next: j.req_u32_vec("commit_next")?,
+            commit_mask: j.req_u32_vec("commit_mask")?,
+            input_widths: j.req_u32_vec("input_widths")?,
+            init_slots: j.req_u32_vec("init_slots")?,
+            init_vals: j.req_u32_vec("init_vals")?,
+            output_slots: j.req_u32_vec("output_slots")?,
+            output_names,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +284,26 @@ mod tests {
         g.output("o", m);
         let ir = lower(&g);
         assert!(matches!(to_dense(&ir, 8), Err(ExportError::HasMuxChain)));
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut rng = Rng::new(52);
+        let mut checked = 0;
+        for _ in 0..20 {
+            let g = random_circuit(&mut rng, 40);
+            let opt = optimize_no_fusion(&g);
+            let ir = lower(&opt);
+            if ir.slot_widths.iter().any(|&w| w > 32) {
+                continue; // dense export is u32-only
+            }
+            let d = to_dense(&ir, 8).unwrap();
+            let j = crate::util::json::parse(&d.to_json().to_string()).unwrap();
+            let d2 = DenseDesign::from_json(&j).unwrap();
+            assert_eq!(d, d2);
+            checked += 1;
+        }
+        assert!(checked > 0, "no 32-bit-safe sample circuit found");
     }
 
     #[test]

@@ -173,13 +173,22 @@ pub fn arr_str(xs: &[String]) -> Json {
     Json::Arr(xs.iter().map(|x| Json::Str(x.clone())).collect())
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json schema error: {0}")]
     Schema(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse(pos, msg) => write!(f, "json parse error at byte {pos}: {msg}"),
+            JsonError::Schema(msg) => write!(f, "json schema error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 /// Parse a JSON document.
 pub fn parse(input: &str) -> Result<Json, JsonError> {

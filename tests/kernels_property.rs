@@ -9,7 +9,10 @@ use rteaal::einsum::CascadeSim;
 use rteaal::graph::builder::{random_circuit, random_inputs};
 use rteaal::graph::passes;
 use rteaal::graph::RefSim;
-use rteaal::kernels::{build_with_oim, unopt::UnoptKernel, SimKernel, ALL_KERNELS};
+use rteaal::kernels::{
+    build_batch, build_with_oim, unopt::UnoptKernel, BatchKernel, KernelConfig, SimKernel,
+    ALL_KERNELS, BATCHED_KERNELS,
+};
 use rteaal::tensor::ir::lower;
 use rteaal::tensor::oim::Oim;
 use rteaal::util::propcheck;
@@ -122,6 +125,126 @@ fn firrtl_roundtrip_through_kernels() {
             kernel.step(&inputs);
             if kernel.outputs() != reference.outputs() {
                 return Err(format!("roundtrip kernel diverged at cycle {cycle}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The differential batching property: a `B`-lane batched run is
+/// bit-identical to `B` independent single-lane runs of the corresponding
+/// scalar kernel, for every batched kernel and `B ∈ {1, 3, 8}` — lanes
+/// share one OIM walk but must never interact.
+#[test]
+fn batched_kernels_match_sequential_lanes() {
+    propcheck::check("batched-vs-sequential", 6, |rng, size| {
+        let g = random_circuit(rng, 15 + size * 4);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        for &lanes in &[1usize, 3, 8] {
+            for cfg in BATCHED_KERNELS {
+                let mut batched = build_batch(cfg, &ir, &oim, lanes);
+                let mut singles: Vec<Box<dyn SimKernel>> =
+                    (0..lanes).map(|_| build_with_oim(cfg, &ir, &oim)).collect();
+                for cycle in 0..5 {
+                    let per_lane: Vec<Vec<u64>> =
+                        (0..lanes).map(|_| random_inputs(rng, &opt)).collect();
+                    let mut flat = vec![0u64; opt.inputs.len() * lanes];
+                    for (l, inp) in per_lane.iter().enumerate() {
+                        for (i, &v) in inp.iter().enumerate() {
+                            flat[i * lanes + l] = v;
+                        }
+                    }
+                    batched.step(&flat);
+                    for (l, s) in singles.iter_mut().enumerate() {
+                        s.step(&per_lane[l]);
+                        if batched.lane_outputs(l) != s.outputs() {
+                            return Err(format!(
+                                "{} lane {l}/{lanes} diverged at cycle {cycle}",
+                                cfg.name()
+                            ));
+                        }
+                    }
+                }
+                // the full lane-major slot files must agree too, not just
+                // the named outputs
+                let want: Vec<u64> = {
+                    let mut v = vec![0u64; ir.num_slots * lanes];
+                    for (l, s) in singles.iter().enumerate() {
+                        for (slot, &val) in s.slots().iter().enumerate() {
+                            v[slot * lanes + l] = val;
+                        }
+                    }
+                    v
+                };
+                if batched.slots() != &want[..] {
+                    return Err(format!("{} lane-major slot file diverged", cfg.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// OIM serialization is array-exact: export → JSON → re-import preserves
+/// the format-B arrays and the re-derived format-C arrays bit for bit,
+/// and kernels built from the re-imported OIM still agree with the graph
+/// reference interpreter; the dense tensor export round-trips through its
+/// JSON too.
+#[test]
+fn oim_serialization_roundtrip_is_exact() {
+    propcheck::check("oim-serialization", 8, |rng, size| {
+        let g = random_circuit(rng, 20 + size * 5);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let json = oim.to_json().to_string();
+        let oim2 = Oim::from_json(&rteaal::util::json::parse(&json).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        if oim.b != oim2.b {
+            return Err("re-imported format-B arrays differ".into());
+        }
+        if oim.c != oim2.c || oim.n_payload != oim2.n_payload {
+            return Err("re-derived format-C arrays differ".into());
+        }
+        if oim.i_payload != oim2.i_payload || oim.num_slots != oim2.num_slots {
+            return Err("re-imported shapes differ".into());
+        }
+
+        let mut reference = RefSim::new(opt.clone());
+        let mut kernels: Vec<Box<dyn SimKernel>> =
+            [KernelConfig::RU, KernelConfig::PSU, KernelConfig::TI]
+                .iter()
+                .map(|&k| build_with_oim(k, &ir, &oim2))
+                .collect();
+        for cycle in 0..6 {
+            let inputs = random_inputs(rng, &reference.graph);
+            reference.step(&inputs);
+            let want = reference.outputs();
+            for k in &mut kernels {
+                k.step(&inputs);
+                if k.outputs() != want {
+                    return Err(format!(
+                        "{} from re-imported OIM diverged at cycle {cycle}",
+                        k.config_name()
+                    ));
+                }
+            }
+        }
+
+        // dense export (u32-only, unfused) JSON round trip
+        let unfused = passes::optimize_no_fusion(&g);
+        let uir = lower(&unfused);
+        if uir.slot_widths.iter().all(|&w| w <= 32) {
+            let dense =
+                rteaal::tensor::export::to_dense(&uir, 16).map_err(|e| e.to_string())?;
+            let dj = rteaal::util::json::parse(&dense.to_json().to_string())
+                .map_err(|e| e.to_string())?;
+            let dense2 = rteaal::tensor::export::DenseDesign::from_json(&dj)
+                .map_err(|e| e.to_string())?;
+            if dense != dense2 {
+                return Err("dense export JSON round trip differs".into());
             }
         }
         Ok(())
