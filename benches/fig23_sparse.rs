@@ -1,0 +1,102 @@
+//! Bench: Fig 23 sparse activity-masked batching sweep (ours, beyond the
+//! paper — see coordinator::report::fig23_sparse). Quick by default; set
+//! RTEAAL_FULL=1 for full-length runs.
+//!
+//! The grid is measured **once** (`report::fig23_measure`) and reused for
+//! both the rendered table and the per-design skip-statistics JSON dump
+//! (`results/fig23_skip.json`).
+//!
+//! Acceptance check built in: dynamic sparsity must pay on the unrolled
+//! end — at a 5% per-lane toggle rate the sparse TI kernel's aggregate
+//! lane-cycles/sec must exceed the dense TI kernel's under the same
+//! stimulus, with a reported skip-rate above 50% (the bookkeeping
+//! amortizes over B = 64 lanes on the shallow `alu_farm_64` workload).
+
+rteaal::install_tracking_alloc!();
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::coordinator::report::{self, FIG23_LANES};
+use rteaal::coordinator::sweep;
+use rteaal::designs::catalog;
+use rteaal::kernels::KernelConfig;
+use rteaal::util::json::{obj, Json};
+
+fn main() {
+    let ctx = report::Ctx::from_env();
+    let points = report::fig23_measure(&ctx);
+    let table = report::fig23_table(&points);
+    println!("{}", table.render());
+    if let Ok(p) = table.save_csv("fig23") {
+        eprintln!("csv: {}", p.display());
+    }
+
+    // per-design skip statistics as JSON, from the same measurements
+    let mut designs_json: std::collections::BTreeMap<String, Json> = Default::default();
+    for p in &points {
+        let per_kernel = designs_json
+            .entry(p.design.to_string())
+            .or_insert_with(|| Json::Obj(Default::default()));
+        let Json::Obj(kernels) = per_kernel else { unreachable!() };
+        let rates: std::collections::BTreeMap<String, Json> = p
+            .sparse
+            .iter()
+            .map(|(rate, sp)| {
+                let key = if p.toggleable {
+                    format!("toggle_{:.0}pct", rate * 100.0)
+                } else {
+                    "idle".to_string()
+                };
+                let cell = Json::Obj(
+                    [
+                        ("skip_rate".to_string(), Json::Num(sp.skip_rate.unwrap_or(0.0))),
+                        ("lane_cycles_per_sec".to_string(), Json::Num(sp.hz)),
+                        ("dense_lane_cycles_per_sec".to_string(), Json::Num(p.dense.hz)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                );
+                (key, cell)
+            })
+            .collect();
+        kernels.insert(p.kernel.name().to_string(), Json::Obj(rates));
+    }
+    let root = obj(vec![
+        ("lanes", Json::Int(FIG23_LANES as i64)),
+        ("designs", Json::Obj(designs_json)),
+    ]);
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join("fig23_skip.json");
+        if std::fs::write(&path, root.to_string()).is_ok() {
+            eprintln!("json: {}", path.display());
+        }
+    }
+
+    // acceptance: sparse TI beats dense TI at a 5% toggle rate with a
+    // skip-rate above 50% (alu_farm_64, B = 64)
+    let d = catalog("alu_farm_64").expect("catalog design");
+    let c = compile_design(&d, CompileOpts::default());
+    let lanes = 64;
+    let cycles = 1000;
+    let rate = 0.05;
+    let dense = sweep::measure_kernel_lanes_toggle(&d, &c, KernelConfig::TI, lanes, cycles, rate);
+    let sparse = sweep::measure_kernel_lanes_sparse(&d, &c, KernelConfig::TI, lanes, cycles, rate);
+    let skip = sparse.skip_rate.unwrap_or(0.0);
+    println!(
+        "TI @5% toggle, B={lanes}: dense {:.2} M lane-cyc/s, sparse {:.2} M lane-cyc/s ({:.2}x), skip-rate {:.1}%",
+        dense.hz / 1e6,
+        sparse.hz / 1e6,
+        sparse.hz / dense.hz,
+        100.0 * skip
+    );
+    assert!(
+        skip > 0.5,
+        "skip-rate {skip:.3} should exceed 0.5 at a 5% per-lane toggle rate"
+    );
+    assert!(
+        sparse.hz > dense.hz,
+        "sparse TI aggregate throughput ({:.2e}) should exceed dense TI ({:.2e}) at 5% toggle",
+        sparse.hz,
+        dense.hz
+    );
+}

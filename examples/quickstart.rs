@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         graph,
         stimulus: Stimulus::Random(7),
         default_cycles: 100_000,
+        lane_init: vec![],
     };
     let compiled = compile_design(&design, CompileOpts::default());
     println!(

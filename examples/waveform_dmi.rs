@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         graph,
         stimulus: Stimulus::Zero,
         default_cycles: 100,
+        lane_init: vec![],
     };
     // waveform mode: no mux fusion so named signals survive (§6.2)
     let c = compile_design(&design, CompileOpts { fuse: false });

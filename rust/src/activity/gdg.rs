@@ -1,0 +1,242 @@
+//! The group dependency graph (GDG): compile-time dataflow between the
+//! format-C (layer, op-type) groups and the cycle-boundary sources that
+//! can change their inputs.
+//!
+//! Built once from the OIM's format-C arrays: a single pass over
+//! `c.r_coords` classifies every operand slot of every group as (a) the
+//! output of an upstream group (`c.s_coords` tells us which group wrote
+//! it), (b) a testbench input port, (c) a register slot (written by a
+//! commit at the end of the previous cycle), or (d) a constant — which can
+//! never change and contributes no edge. Levelization guarantees an
+//! operand is produced strictly before the consuming group runs, so group
+//! indices are already a topological order and the runtime mask
+//! propagation ([`super::mask::ActivityTracker`]) is a single forward
+//! sweep over `group_deps`.
+
+use crate::tensor::ir::{LayerIr, NUM_KOPS};
+use crate::tensor::oim::Oim;
+
+/// One (layer, op-type) group of the format-C walk, addressed by its flat
+/// op range in the format-C arrays (`c.s_coords[op_start..op_end]` are its
+/// output slots; its operand slots start at `c.r_coords[r_start]`).
+#[derive(Clone, Copy, Debug)]
+pub struct Group {
+    pub layer: u32,
+    pub opcode: u8,
+    pub op_start: u32,
+    pub op_end: u32,
+    pub r_start: u32,
+}
+
+impl Group {
+    /// Operations in the group.
+    #[inline]
+    pub fn ops(&self) -> usize {
+        (self.op_end - self.op_start) as usize
+    }
+}
+
+/// The compile-time dependency structure driving activity propagation.
+/// All dependency lists are sorted and deduplicated.
+#[derive(Clone, Debug, Default)]
+pub struct GroupDepGraph {
+    /// Groups in execution (topological) order.
+    pub groups: Vec<Group>,
+    /// Upstream groups per group (indices into `groups`, all `< g`).
+    pub group_deps: Vec<Vec<u32>>,
+    /// Input-port indices per group (indices into `LayerIr::input_slots`).
+    pub input_deps: Vec<Vec<u32>>,
+    /// Commit indices per group (indices into `LayerIr::commits`).
+    pub reg_deps: Vec<Vec<u32>>,
+    /// Total direct dependency edges (group + input + register).
+    pub num_edges: usize,
+    /// Total effectual operations across all groups.
+    pub total_ops: usize,
+}
+
+impl GroupDepGraph {
+    pub fn build(ir: &LayerIr, oim: &Oim) -> Self {
+        let num_slots = oim.num_slots as usize;
+        const NONE: u32 = u32::MAX;
+        // slot classification maps
+        let mut writer = vec![NONE; num_slots];
+        let mut input_of = vec![NONE; num_slots];
+        for (i, &s) in ir.input_slots.iter().enumerate() {
+            input_of[s as usize] = i as u32;
+        }
+        let mut commit_of = vec![NONE; num_slots];
+        for (ci, &(reg, _, _)) in ir.commits.iter().enumerate() {
+            commit_of[reg as usize] = ci as u32;
+        }
+
+        let mut g = GroupDepGraph::default();
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        for layer in 0..oim.num_layers() {
+            for n in 0..NUM_KOPS {
+                let cnt = oim.n_payload[layer * NUM_KOPS + n] as usize;
+                if cnt == 0 {
+                    continue;
+                }
+                let gid = g.groups.len() as u32;
+                let group = Group {
+                    layer: layer as u32,
+                    opcode: n as u8,
+                    op_start: op_idx as u32,
+                    op_end: (op_idx + cnt) as u32,
+                    r_start: r_idx as u32,
+                };
+                let mut gdeps: Vec<u32> = Vec::new();
+                let mut ideps: Vec<u32> = Vec::new();
+                let mut rdeps: Vec<u32> = Vec::new();
+                for _ in 0..cnt {
+                    let ar = oim.c.arity[op_idx] as usize;
+                    for o in 0..ar {
+                        let slot = oim.c.r_coords[r_idx + o] as usize;
+                        let w = writer[slot];
+                        if w != NONE {
+                            debug_assert!(w < gid, "operand produced in the same layer");
+                            gdeps.push(w);
+                        } else if input_of[slot] != NONE {
+                            ideps.push(input_of[slot]);
+                        } else if commit_of[slot] != NONE {
+                            rdeps.push(commit_of[slot]);
+                        }
+                        // else: constant — never changes, no edge
+                    }
+                    r_idx += ar;
+                    op_idx += 1;
+                }
+                // register this group as the writer of its output slots
+                for op in group.op_start..group.op_end {
+                    writer[oim.c.s_coords[op as usize] as usize] = gid;
+                }
+                for d in [&mut gdeps, &mut ideps, &mut rdeps] {
+                    d.sort_unstable();
+                    d.dedup();
+                }
+                g.num_edges += gdeps.len() + ideps.len() + rdeps.len();
+                g.total_ops += cnt;
+                g.groups.push(group);
+                g.group_deps.push(gdeps);
+                g.input_deps.push(ideps);
+                g.reg_deps.push(rdeps);
+            }
+        }
+        debug_assert_eq!(g.total_ops, oim.total_ops());
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::random_circuit;
+    use crate::graph::passes::optimize;
+    use crate::tensor::ir::lower;
+    use crate::util::prng::Rng;
+
+    fn sample(seed: u64, size: usize) -> (GroupDepGraph, LayerIr, Oim) {
+        let mut rng = Rng::new(seed);
+        let g = random_circuit(&mut rng, size);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let gdg = GroupDepGraph::build(&ir, &oim);
+        (gdg, ir, oim)
+    }
+
+    /// Groups tile the format-C op/r arrays exactly, in topological order,
+    /// and every dependency points strictly upward.
+    #[test]
+    fn groups_tile_format_c_and_deps_are_topological() {
+        let (gdg, ir, oim) = sample(31_001, 120);
+        assert_eq!(gdg.total_ops, ir.total_ops());
+        let mut expect_op = 0u32;
+        for (gi, grp) in gdg.groups.iter().enumerate() {
+            assert_eq!(grp.op_start, expect_op, "group {gi} op range is contiguous");
+            assert!(grp.op_end > grp.op_start);
+            expect_op = grp.op_end;
+            for op in grp.op_start..grp.op_end {
+                assert_eq!(oim.c.opcode[op as usize], grp.opcode);
+            }
+            if gi > 0 {
+                assert!(grp.layer >= gdg.groups[gi - 1].layer, "layer order");
+            }
+            for &d in &gdg.group_deps[gi] {
+                assert!((d as usize) < gi, "dep {d} of group {gi} not upstream");
+                assert!(gdg.groups[d as usize].layer < grp.layer, "dep in earlier layer");
+            }
+            for &i in &gdg.input_deps[gi] {
+                assert!((i as usize) < ir.input_slots.len());
+            }
+            for &c in &gdg.reg_deps[gi] {
+                assert!((c as usize) < ir.commits.len());
+            }
+        }
+        assert_eq!(expect_op as usize, oim.total_ops());
+    }
+
+    /// Every non-constant operand slot of every op yields its **specific**
+    /// dependency edge: an op-output operand must put its writer group in
+    /// `group_deps`, an input-port operand its port index in `input_deps`,
+    /// a register operand its commit index in `reg_deps` — and constants
+    /// contribute nothing. A single dropped edge here would make the
+    /// sparse executors skip live work.
+    #[test]
+    fn every_operand_yields_its_exact_edge() {
+        let (gdg, ir, oim) = sample(31_002, 150);
+        use std::collections::HashMap;
+        let input_of: HashMap<u32, u32> = ir
+            .input_slots
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (s, i as u32))
+            .collect();
+        let commit_of: HashMap<u32, u32> = ir
+            .commits
+            .iter()
+            .enumerate()
+            .map(|(ci, &(r, _, _))| (r, ci as u32))
+            .collect();
+        // writer map rebuilt incrementally, groups in topological order
+        let mut writer: HashMap<u32, u32> = HashMap::new();
+        let mut r_idx = 0usize;
+        for (gi, grp) in gdg.groups.iter().enumerate() {
+            assert_eq!(grp.r_start as usize, r_idx, "group {gi} r range is contiguous");
+            for op in grp.op_start..grp.op_end {
+                let ar = oim.c.arity[op as usize] as usize;
+                for o in 0..ar {
+                    let slot = oim.c.r_coords[r_idx + o];
+                    if let Some(&w) = writer.get(&slot) {
+                        assert!(
+                            gdg.group_deps[gi].binary_search(&w).is_ok(),
+                            "group {gi} reads slot {slot} written by group {w}, edge missing"
+                        );
+                    } else if let Some(&i) = input_of.get(&slot) {
+                        assert!(
+                            gdg.input_deps[gi].binary_search(&i).is_ok(),
+                            "group {gi} reads input port {i} (slot {slot}), edge missing"
+                        );
+                    } else if let Some(&ci) = commit_of.get(&slot) {
+                        assert!(
+                            gdg.reg_deps[gi].binary_search(&ci).is_ok(),
+                            "group {gi} reads register commit {ci} (slot {slot}), edge missing"
+                        );
+                    }
+                    // else: constant — correctly contributes no edge
+                }
+                r_idx += ar;
+            }
+            for op in grp.op_start..grp.op_end {
+                writer.insert(oim.c.s_coords[op as usize], gi as u32);
+            }
+        }
+        // and no phantom edges: every listed dep is justified by some operand
+        for (gi, deps) in gdg.group_deps.iter().enumerate() {
+            for &d in deps {
+                assert!((d as usize) < gi, "group {gi} has non-topological dep {d}");
+            }
+        }
+    }
+}

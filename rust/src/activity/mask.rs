@@ -1,0 +1,193 @@
+//! Runtime lane activity masks: one `u64` per group, one bit per lane.
+//!
+//! Change detection happens only at the cycle boundaries — the batched
+//! driver's tracked input writes and register commits fill the
+//! `input_changed` / `reg_changed` masks (see
+//! [`crate::kernels::common::BatchDriver::set_inputs_tracked`] /
+//! [`commit_tracked`](crate::kernels::common::BatchDriver::commit_tracked)).
+//! [`ActivityTracker::begin_cycle`] then propagates them through the GDG
+//! in one forward sweep: a group's mask is the OR of its direct input /
+//! register sources and its upstream groups' masks (already computed —
+//! the GDG is in topological order). This is conservative (a changed
+//! source does not guarantee a changed output) but never misses work, and
+//! it costs `O(edges)` per cycle regardless of `B`.
+
+use super::gdg::GroupDepGraph;
+use super::{full_mask, ActivityStats};
+
+/// Per-cycle activity state for one sparse batched kernel instance.
+#[derive(Clone, Debug)]
+pub struct ActivityTracker {
+    pub gdg: GroupDepGraph,
+    pub lanes: usize,
+    /// The all-lanes mask (`lanes` low bits set).
+    pub full: u64,
+    /// Lanes whose value changed, per input port (filled by the driver).
+    pub input_changed: Vec<u64>,
+    /// Lanes whose register changed at the last commit, per commit index.
+    pub reg_changed: Vec<u64>,
+    /// Active lanes per group, recomputed each cycle.
+    pub active: Vec<u64>,
+    /// First cycle (or post-poke): run everything once to establish all
+    /// combinational slot values.
+    cold: bool,
+    stats: ActivityStats,
+}
+
+impl ActivityTracker {
+    /// `num_inputs` / `num_commits` are the design's input-port and
+    /// register-commit counts (`LayerIr::input_slots` / `commits` lengths).
+    pub fn new(gdg: GroupDepGraph, num_inputs: usize, num_commits: usize, lanes: usize) -> Self {
+        let full = full_mask(lanes);
+        let groups = gdg.groups.len();
+        ActivityTracker {
+            gdg,
+            lanes,
+            full,
+            input_changed: vec![0; num_inputs],
+            reg_changed: vec![0; num_commits],
+            active: vec![0; groups],
+            cold: true,
+            stats: ActivityStats::default(),
+        }
+    }
+
+    /// Compute this cycle's per-group activity masks from the boundary
+    /// change masks, then clear them for the next cycle. Call after the
+    /// tracked input write and before walking the groups.
+    pub fn begin_cycle(&mut self) {
+        if self.cold {
+            self.cold = false;
+            for a in &mut self.active {
+                *a = self.full;
+            }
+        } else {
+            for g in 0..self.gdg.groups.len() {
+                let mut m = 0u64;
+                for &i in &self.gdg.input_deps[g] {
+                    m |= self.input_changed[i as usize];
+                }
+                for &c in &self.gdg.reg_deps[g] {
+                    m |= self.reg_changed[c as usize];
+                }
+                for &h in &self.gdg.group_deps[g] {
+                    m |= self.active[h as usize];
+                }
+                self.active[g] = m;
+            }
+        }
+        for x in &mut self.input_changed {
+            *x = 0;
+        }
+        for x in &mut self.reg_changed {
+            *x = 0;
+        }
+        self.stats.cycles += 1;
+        self.stats.total_op_lanes += (self.gdg.total_ops * self.lanes) as u64;
+        for (g, &m) in self.active.iter().enumerate() {
+            self.stats.evaluated_op_lanes +=
+                m.count_ones() as u64 * self.gdg.groups[g].ops() as u64;
+        }
+    }
+
+    /// Invalidate all cached slot values: the next cycle runs every group
+    /// in every lane. Used after out-of-band slot writes (`poke_lane`),
+    /// which bypass boundary change detection.
+    pub fn force_recold(&mut self) {
+        self.cold = true;
+    }
+
+    pub fn stats(&self) -> ActivityStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::PrimOp;
+    use crate::graph::Graph;
+    use crate::tensor::ir::lower;
+    use crate::tensor::oim::Oim;
+
+    /// Two independent input cones plus one register cone: masks follow
+    /// exactly the sources that changed, per lane.
+    #[test]
+    fn masks_follow_sources_per_lane() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", 8);
+        let b = g.input("b", 8);
+        let na = g.prim(PrimOp::Not, &[a]); // cone A: depends on input 0
+        let nb = g.prim(PrimOp::Neg, &[b]); // cone B: depends on input 1
+        let r = g.reg("r", 8, 0);
+        let nr = g.prim(PrimOp::Orr, &[r]); // cone R: depends on the register
+        g.connect_reg(r, na);
+        g.output("x", na);
+        g.output("y", nb);
+        g.output("z", nr);
+        let ir = lower(&g);
+        let oim = Oim::from_ir(&ir);
+        let gdg = GroupDepGraph::build(&ir, &oim);
+        // three single-op groups in layer 0 (Not, Neg, Orr — any order)
+        assert_eq!(gdg.groups.len(), 3);
+        let find = |op: crate::tensor::ir::KOp| {
+            gdg.groups.iter().position(|grp| grp.opcode == op as u8).unwrap()
+        };
+        let ga = find(crate::tensor::ir::KOp::Not);
+        let gb = find(crate::tensor::ir::KOp::Neg);
+        let gr = find(crate::tensor::ir::KOp::Orr);
+
+        let mut t = ActivityTracker::new(gdg, ir.input_slots.len(), ir.commits.len(), 4);
+        // cold cycle: everything active in every lane
+        t.begin_cycle();
+        assert_eq!(t.active, vec![0b1111; 3]);
+
+        // input 0 changed in lane 2 only; nothing else
+        t.input_changed[0] = 0b0100;
+        t.begin_cycle();
+        assert_eq!(t.active[ga], 0b0100);
+        assert_eq!(t.active[gb], 0);
+        assert_eq!(t.active[gr], 0);
+
+        // register commit changed in lanes 0 and 3
+        t.reg_changed[0] = 0b1001;
+        t.begin_cycle();
+        assert_eq!(t.active[ga], 0);
+        assert_eq!(t.active[gb], 0);
+        assert_eq!(t.active[gr], 0b1001);
+
+        // stats: 3 cold-cycle groups × 4 lanes + 1 + 2 op-lanes after
+        let s = t.stats();
+        assert_eq!(s.cycles, 3);
+        assert_eq!(s.total_op_lanes, 3 * 4 * 3);
+        assert_eq!(s.evaluated_op_lanes, 12 + 1 + 2);
+
+        // recold forces a full cycle again
+        t.force_recold();
+        t.begin_cycle();
+        assert_eq!(t.active, vec![0b1111; 3]);
+    }
+
+    /// A chained design propagates activity transitively through
+    /// group-to-group edges within the cycle.
+    #[test]
+    fn masks_propagate_through_group_chain() {
+        let mut g = Graph::new("chain");
+        let a = g.input("a", 8);
+        let x = g.prim(PrimOp::Not, &[a]);
+        let y = g.prim(PrimOp::Neg, &[x]);
+        let z = g.prim(PrimOp::Orr, &[y]);
+        g.output("z", z);
+        let ir = lower(&g);
+        let oim = Oim::from_ir(&ir);
+        let gdg = GroupDepGraph::build(&ir, &oim);
+        assert_eq!(gdg.groups.len(), 3);
+        let mut t = ActivityTracker::new(gdg, ir.input_slots.len(), ir.commits.len(), 2);
+        t.begin_cycle(); // cold
+        t.input_changed[0] = 0b10;
+        t.begin_cycle();
+        assert_eq!(t.active, vec![0b10; 3], "change reaches every downstream group");
+        t.begin_cycle();
+        assert_eq!(t.active, vec![0; 3], "quiescent with no boundary changes");
+    }
+}

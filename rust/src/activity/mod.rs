@@ -1,0 +1,120 @@
+//! Activity subsystem: lane-masked sparse batched execution.
+//!
+//! The OIM exploits the *static* sparsity of the design (which (layer,
+//! slot, op, operand) coordinates are occupied); this module adds the
+//! *dynamic* sparsity of real workloads — most signals do not toggle most
+//! cycles. Event-driven skipping is classically unprofitable per scalar
+//! run ([`crate::baselines::event_driven`]): the per-op dirty bookkeeping
+//! outweighs the skipped work. Lifted to the lane-batched executors the
+//! trade flips, because one activity decision is amortized over `B ≤ 64`
+//! lanes and the bookkeeping granularity is a whole (layer, op-type)
+//! *group*, not an op:
+//!
+//! * [`gdg::GroupDepGraph`] — the **group dependency graph**, derived once
+//!   at compile time from the format-C group walk (`r_coords` /
+//!   `s_coords`): for every (layer, op-type) group, the upstream groups,
+//!   input ports and register slots whose writes can change its inputs.
+//! * [`mask::ActivityTracker`] — the per-group **lane activity mask**, one
+//!   `u64` with one bit per lane. Change detection happens only at the
+//!   cycle boundaries (testbench input writes and register commits);
+//!   masks then propagate through the GDG in topological (layer) order,
+//!   so a group is active in lane `l` exactly when some boundary source
+//!   it transitively depends on changed in lane `l`.
+//!
+//! A group whose mask is zero is skipped entirely by the sparse batched
+//! executors ([`crate::kernels::batch_sparse`]); a partial mask runs only
+//! the active lanes via bit iteration. Because every operation is a pure
+//! function of its operand slots, a skipped (group, lane) necessarily
+//! holds its previous — still correct — slot values, so sparse execution
+//! is bit-identical to dense batched execution (property-tested in
+//! `tests/kernels_property.rs`).
+
+pub mod gdg;
+pub mod mask;
+
+pub use gdg::GroupDepGraph;
+pub use mask::ActivityTracker;
+
+/// Cumulative activity accounting of a sparse batched run. One *op-lane*
+/// is one operation evaluated in one lane — the unit of work the dense
+/// batched executors spend `total_op_lanes` of per run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ActivityStats {
+    /// Cycles stepped.
+    pub cycles: u64,
+    /// (op, lane) work units actually evaluated.
+    pub evaluated_op_lanes: u64,
+    /// (op, lane) work units a dense run would evaluate.
+    pub total_op_lanes: u64,
+}
+
+impl ActivityStats {
+    /// Fraction of op-lanes skipped (0 = dense-equivalent, →1 = idle).
+    pub fn skip_rate(&self) -> f64 {
+        if self.total_op_lanes == 0 {
+            0.0
+        } else {
+            1.0 - self.evaluated_op_lanes as f64 / self.total_op_lanes as f64
+        }
+    }
+
+    /// Stats accumulated since an earlier snapshot `base` of the same run.
+    pub fn since(&self, base: &ActivityStats) -> ActivityStats {
+        ActivityStats {
+            cycles: self.cycles - base.cycles,
+            evaluated_op_lanes: self.evaluated_op_lanes - base.evaluated_op_lanes,
+            total_op_lanes: self.total_op_lanes - base.total_op_lanes,
+        }
+    }
+}
+
+/// The all-lanes-active mask for a `lanes`-wide batch (`lanes ≤ 64`).
+#[inline]
+pub fn full_mask(lanes: usize) -> u64 {
+    assert!(
+        (1..=64).contains(&lanes),
+        "lane activity masks are u64 bitmasks: lanes must be in 1..=64 (got {lanes})"
+    );
+    if lanes == 64 {
+        u64::MAX
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mask_widths() {
+        assert_eq!(full_mask(1), 1);
+        assert_eq!(full_mask(3), 0b111);
+        assert_eq!(full_mask(64), u64::MAX);
+    }
+
+    #[test]
+    #[should_panic]
+    fn full_mask_rejects_zero() {
+        full_mask(0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn full_mask_rejects_over_64() {
+        full_mask(65);
+    }
+
+    #[test]
+    fn skip_rate_arithmetic() {
+        let a = ActivityStats { cycles: 10, evaluated_op_lanes: 25, total_op_lanes: 100 };
+        assert!((a.skip_rate() - 0.75).abs() < 1e-12);
+        let b = ActivityStats { cycles: 4, evaluated_op_lanes: 25, total_op_lanes: 40 };
+        let d = a.since(&b);
+        assert_eq!(d.cycles, 6);
+        assert_eq!(d.evaluated_op_lanes, 0);
+        assert_eq!(d.total_op_lanes, 60);
+        assert!((d.skip_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(ActivityStats::default().skip_rate(), 0.0);
+    }
+}

@@ -29,8 +29,15 @@ COMMANDS:
             [--backend B]      interp|verilator|essent|event|parallel (default interp)
             [--threads N]      partitions for --backend parallel
             [--lanes B]        lane-batched run: B decorrelated stimulus
-                               lanes per OIM walk (kernels RU|NU|PSU|TI);
+                               lanes per OIM walk (kernels RU|OU|NU|PSU|TI);
                                reports aggregate lane-cycles/sec
+            [--sparse]         activity-masked sparse batched run (kernels
+                               NU|PSU|TI, B <= 64): groups whose inputs
+                               changed in no lane are skipped; reports
+                               skip-rate alongside throughput
+            [--toggle R]       with --sparse: drive toggle-rate-controlled
+                               stimulus (lane inputs change with
+                               probability R per cycle; default random)
             [--cycles N]       cycle count (default: design default)
             [--vcd F]          write waveforms
   xla-sim   --design D         simulate via the AOT XLA/PJRT artifact
@@ -60,7 +67,7 @@ pub fn run(args: Args) -> Result<()> {
                     d.default_cycles
                 );
             }
-            println!("  (+ counter, alu32, fir8, rocket_like_Nc, boom_like_Nc, gemmini_like_N, rocket_like_xs)");
+            println!("  (+ counter, alu32, fir8, alu_farm_N, rocket_like_Nc, boom_like_Nc, gemmini_like_N, rocket_like_xs)");
             Ok(())
         }
         "compile" => cmd_compile(&args),
@@ -104,32 +111,75 @@ fn cmd_compile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Lane-count validation for `sim` (unit-tested below): `--lanes 0` is
+/// always invalid, and the sparse executors' activity masks carry one bit
+/// per lane in a `u64`, so `--sparse` caps `--lanes` at 64 (anything
+/// larger would overflow the mask; 0 lanes would underflow it).
+fn validate_lanes(lanes: usize, sparse: bool) -> Result<()> {
+    if lanes == 0 {
+        bail!("--lanes must be >= 1 (got 0)");
+    }
+    if sparse && lanes > 64 {
+        bail!("--sparse supports at most 64 lanes (one u64 activity-mask bit per lane; got {lanes})");
+    }
+    Ok(())
+}
+
 fn cmd_sim(args: &Args) -> Result<()> {
     let d = design_arg(args)?;
     let cycles = args.opt_u64("cycles", d.default_cycles)?;
     let backend = args.opt_or("backend", "interp");
     let lanes = args.opt_usize("lanes", 1)?;
-    if lanes == 0 {
-        bail!("--lanes must be >= 1");
-    }
+    let sparse = args.flag("sparse");
+    validate_lanes(lanes, sparse)?;
     let c = compile_design(&d, CompileOpts { fuse: args.opt("vcd").is_none() });
 
-    if lanes > 1 {
+    if lanes > 1 || sparse {
         if backend != "interp" {
-            bail!("--lanes requires --backend interp (got '{backend}')");
+            bail!("--lanes/--sparse require --backend interp (got '{backend}')");
         }
         if args.opt("vcd").is_some() {
             bail!("--lanes does not support --vcd (waveforms are per-lane)");
         }
         let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
-        if !crate::kernels::supports_batch(cfg) {
-            bail!(
-                "kernel {} has no lane-batched executor (use RU|NU|PSU|TI)",
-                cfg.name()
-            );
-        }
-        let mut kernel = crate::kernels::build_batch(cfg, &c.ir, &c.oim, lanes);
-        let mut stim = d.make_lane_stimulus(lanes);
+        // validate --toggle before paying for kernel construction
+        let toggle = match args.opt("toggle") {
+            Some(_) if !sparse => bail!("--toggle requires --sparse"),
+            Some(_) if matches!(d.stimulus, crate::designs::Stimulus::Zero) => bail!(
+                "--toggle has no effect on '{}': its stimulus is all-zero (self-driving design)",
+                d.name
+            ),
+            Some(_) => {
+                let rate = args.opt_f64("toggle", 0.05)?;
+                if !(0.0..=1.0).contains(&rate) {
+                    bail!("--toggle expects a rate in [0, 1], got {rate}");
+                }
+                Some(rate)
+            }
+            None => None,
+        };
+        let mut kernel = if sparse {
+            if !crate::kernels::supports_sparse(cfg) {
+                bail!(
+                    "kernel {} has no sparse batched executor (use NU|PSU|TI)",
+                    cfg.name()
+                );
+            }
+            crate::kernels::build_sparse(cfg, &c.ir, &c.oim, lanes)
+        } else {
+            if !crate::kernels::supports_batch(cfg) {
+                bail!(
+                    "kernel {} has no lane-batched executor (use RU|OU|NU|PSU|TI)",
+                    cfg.name()
+                );
+            }
+            crate::kernels::build_batch(cfg, &c.ir, &c.oim, lanes)
+        };
+        d.apply_lane_init(&c.graph, kernel.as_mut());
+        let mut stim = match toggle {
+            Some(rate) => d.make_lane_stimulus_toggle(lanes, rate),
+            None => d.make_lane_stimulus(lanes),
+        };
         let t0 = std::time::Instant::now();
         for cyc in 0..cycles {
             kernel.step(&stim(cyc));
@@ -143,6 +193,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
             aggregate / 1e6,
             aggregate / lanes as f64 / 1e6
         );
+        if let Some(stats) = kernel.activity_stats() {
+            println!(
+                "  sparse: skip-rate {:.1}% ({} of {} op-lanes evaluated)",
+                100.0 * stats.skip_rate(),
+                stats.evaluated_op_lanes,
+                stats.total_op_lanes
+            );
+        }
         for (oname, v) in kernel.lane_outputs(0) {
             println!("  lane0 out {oname} = {v:#x}");
         }
@@ -267,4 +325,48 @@ fn cmd_report(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// The `--lanes 0` underflow and the `--sparse --lanes > 64` mask
+    /// overflow are rejected with proper errors instead of panicking or
+    /// wrapping in the mask arithmetic.
+    #[test]
+    fn lane_validation_rejects_mask_underflow_and_overflow() {
+        assert!(validate_lanes(0, false).is_err());
+        assert!(validate_lanes(0, true).is_err());
+        assert!(validate_lanes(1, false).is_ok());
+        assert!(validate_lanes(1, true).is_ok());
+        assert!(validate_lanes(64, true).is_ok());
+        assert!(validate_lanes(65, true).is_err());
+        assert!(validate_lanes(65, false).is_ok(), "dense batching has no 64-lane cap");
+        let msg = validate_lanes(65, true).unwrap_err().to_string();
+        assert!(msg.contains("64"), "error names the cap: {msg}");
+    }
+
+    /// `sim --lanes B --sparse` argument shapes parse the way `cmd_sim`
+    /// consumes them.
+    #[test]
+    fn sim_sparse_arguments_parse() {
+        let a = Args::parse(&v(&[
+            "sim", "--design", "alu32", "--lanes", "8", "--sparse", "--toggle", "0.05",
+        ]));
+        assert_eq!(a.command, "sim");
+        assert!(a.flag("sparse"));
+        assert_eq!(a.opt_usize("lanes", 1).unwrap(), 8);
+        assert_eq!(a.opt_f64("toggle", 0.0).unwrap(), 0.05);
+        assert!(validate_lanes(a.opt_usize("lanes", 1).unwrap(), a.flag("sparse")).is_ok());
+
+        let bad = Args::parse(&v(&["sim", "--design", "alu32", "--lanes", "0"]));
+        assert!(validate_lanes(bad.opt_usize("lanes", 1).unwrap(), bad.flag("sparse")).is_err());
+        let bad = Args::parse(&v(&["sim", "--design", "alu32", "--lanes", "65", "--sparse"]));
+        assert!(validate_lanes(bad.opt_usize("lanes", 1).unwrap(), bad.flag("sparse")).is_err());
+    }
 }

@@ -449,6 +449,7 @@ pub fn fig21_llc() -> Table {
         graph: crate::designs::boom_like::boom_like(8, 0.5),
         stimulus: crate::designs::Stimulus::Random(21),
         default_cycles: 0,
+        lane_init: vec![],
     };
     let c = compile_design(&d, CompileOpts::default());
     let mut t = Table::new(
@@ -475,7 +476,7 @@ pub fn fig21_llc() -> Table {
 // ---------------------------------------------------------------- Fig 22
 
 /// Fig 22 (ours, beyond the paper): lane-batched throughput sweep.
-/// Aggregate lane-cycles/sec for `B ∈ {1, 2, 4, 8, 16}` on the three
+/// Aggregate lane-cycles/sec for `B ∈ {1, 2, 4, 8, 16}` on the four
 /// batched binding levels — the "simulate many users/test-vectors at
 /// once" scale axis enabled by the tensor form.
 pub fn fig22_lanes(ctx: &Ctx) -> Table {
@@ -485,7 +486,7 @@ pub fn fig22_lanes(ctx: &Ctx) -> Table {
         &format!("Fig 22 — lane-batched aggregate throughput (rocket_like_1c, {cycles} cycles/lane, M lane-cyc/s)"),
         &["kernel", "B=1", "B=2", "B=4", "B=8", "B=16"],
     );
-    for cfg in [KernelConfig::RU, KernelConfig::PSU, KernelConfig::TI] {
+    for cfg in [KernelConfig::RU, KernelConfig::OU, KernelConfig::PSU, KernelConfig::TI] {
         let mut row = vec![cfg.name().to_string()];
         for lanes in [1usize, 2, 4, 8, 16] {
             let p = sweep::measure_kernel_lanes(&d, &c, cfg, lanes, cycles);
@@ -494,6 +495,103 @@ pub fn fig22_lanes(ctx: &Ctx) -> Table {
         t.row(row);
     }
     t
+}
+
+// ---------------------------------------------------------------- Fig 23
+
+/// The (design, kernel, lane-count) grid of the sparse activity sweep —
+/// shared by the fig23 table and the bench's JSON skip-statistics dump.
+pub const FIG23_DESIGNS: [&str; 3] = ["alu_farm_64", "fir8", "tiny_cpu"];
+pub const FIG23_RATES: [f64; 4] = [0.0, 0.05, 0.5, 1.0];
+pub const FIG23_LANES: usize = 16;
+
+/// One (design, kernel) row of the fig23 grid: the dense comparison
+/// point plus one sparse point per toggle rate. For self-driving
+/// (all-zero-stimulus) designs the toggle rate has no effect, so only a
+/// single sparse point is measured (`sparse.len() == 1`) and the row is
+/// labeled `[idle]`.
+pub struct Fig23Point {
+    pub design: &'static str,
+    pub kernel: KernelConfig,
+    /// whether the stimulus actually responds to the toggle rate
+    pub toggleable: bool,
+    pub dense: sweep::SweepPoint,
+    /// (toggle rate, sparse measurement)
+    pub sparse: Vec<(f64, sweep::SweepPoint)>,
+}
+
+/// Measure the fig23 grid once — shared by the rendered table and the
+/// bench's JSON skip-statistics dump, so nothing is simulated twice.
+pub fn fig23_measure(ctx: &Ctx) -> Vec<Fig23Point> {
+    let lanes = FIG23_LANES;
+    let mut points = Vec::new();
+    for name in FIG23_DESIGNS {
+        let (d, c) = compiled(name);
+        let cycles = ctx.cycles(d.default_cycles).max(200);
+        let toggleable = !matches!(d.stimulus, crate::designs::Stimulus::Zero);
+        for cfg in [KernelConfig::PSU, KernelConfig::TI] {
+            let dense = sweep::measure_kernel_lanes_toggle(&d, &c, cfg, lanes, cycles, 0.05);
+            let rates: &[f64] = if toggleable { &FIG23_RATES } else { &FIG23_RATES[..1] };
+            let sparse = rates
+                .iter()
+                .map(|&rate| {
+                    (rate, sweep::measure_kernel_lanes_sparse(&d, &c, cfg, lanes, cycles, rate))
+                })
+                .collect();
+            points.push(Fig23Point { design: name, kernel: cfg, toggleable, dense, sparse });
+        }
+    }
+    points
+}
+
+/// Render measured fig23 points as the report table.
+pub fn fig23_table(points: &[Fig23Point]) -> Table {
+    let mut header =
+        vec!["design".to_string(), "kernel".to_string(), "dense Mlc/s".to_string()];
+    header.extend(
+        FIG23_RATES.iter().map(|r| format!("sparse@{:.0}% Mlc/s (skip)", r * 100.0)),
+    );
+    let mut t = Table::new(
+        &format!(
+            "Fig 23 — sparse activity-masked batching (B={}, toggle-rate stimulus)",
+            FIG23_LANES
+        ),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for p in points {
+        let design = if p.toggleable {
+            p.design.to_string()
+        } else {
+            // self-driving design: the stimulus is all-zero regardless of
+            // the column's toggle rate, so only one cell is real
+            format!("{} [idle]", p.design)
+        };
+        let mut row =
+            vec![design, p.kernel.name().to_string(), format!("{:.2}", p.dense.hz / 1e6)];
+        for (i, _) in FIG23_RATES.iter().enumerate() {
+            row.push(match p.sparse.get(i) {
+                Some((_, sp)) => format!(
+                    "{:.2} ({:.0}%)",
+                    sp.hz / 1e6,
+                    100.0 * sp.skip_rate.unwrap_or(0.0)
+                ),
+                None => "—".to_string(),
+            });
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig 23 (ours, beyond the paper): sparse activity-masked batched
+/// execution vs dense batched execution across toggle rates. Dense
+/// columns use the same toggle-controlled stimulus; sparse cells report
+/// aggregate lane-cycles/sec plus the realized skip-rate. `alu_farm_64`
+/// is the shallow high-lane-sparsity workload, `fir8` carries changes
+/// through a deep delay line, and `tiny_cpu` is self-driving (idle
+/// stimulus; it goes fully quiescent after HALT).
+pub fn fig23_sparse(ctx: &Ctx) -> Table {
+    fig23_table(&fig23_measure(ctx))
 }
 
 /// Run an experiment by id; returns rendered text.
@@ -513,12 +611,13 @@ pub fn run_experiment(id: &str, ctx: &Ctx) -> Option<Vec<Table>> {
         "fig20" => vec![fig20_main_eval(ctx), fig20_best_kernel_matrix()],
         "fig21" => vec![fig21_llc()],
         "fig22" => vec![fig22_lanes(ctx)],
+        "fig23" => vec![fig23_sparse(ctx)],
         _ => return None,
     };
     Some(tables)
 }
 
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+pub const ALL_EXPERIMENTS: [&str; 15] = [
     "setup", "tab01", "fig07", "fig08", "fig15", "tab05", "fig16", "fig17", "fig18", "fig19",
-    "tab07", "fig20", "fig21", "fig22",
+    "tab07", "fig20", "fig21", "fig22", "fig23",
 ];

@@ -23,6 +23,9 @@ pub struct SweepPoint {
     /// modeled program/data footprint
     pub program_bytes: usize,
     pub data_bytes: usize,
+    /// fraction of (op, lane) work skipped by activity masking
+    /// (sparse batched runs only)
+    pub skip_rate: Option<f64>,
 }
 
 /// Run `cycles` of `design` under one kernel config; measured wall-clock.
@@ -41,6 +44,7 @@ pub fn measure_kernel(design: &Design, compiled: &Compiled, cfg: KernelConfig, c
         hz: stats.hz,
         program_bytes,
         data_bytes,
+        skip_rate: None,
     }
 }
 
@@ -75,6 +79,78 @@ pub fn measure_kernel_lanes(
         hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
         program_bytes,
         data_bytes,
+        skip_rate: None,
+    }
+}
+
+/// [`measure_kernel_lanes`] but under toggle-rate-controlled stimulus
+/// (`Design::make_lane_stimulus_toggle`) — the dense comparison point for
+/// the sparse measurements, paying the identical stimulus-generation cost.
+pub fn measure_kernel_lanes_toggle(
+    design: &Design,
+    compiled: &Compiled,
+    cfg: KernelConfig,
+    lanes: usize,
+    cycles: u64,
+    toggle_rate: f64,
+) -> SweepPoint {
+    let mut kernel = crate::kernels::build_batch(cfg, &compiled.ir, &compiled.oim, lanes);
+    design.apply_lane_init(&compiled.graph, kernel.as_mut());
+    let mut stim = design.make_lane_stimulus_toggle(lanes, toggle_rate);
+    for c in 0..cycles.min(64) {
+        kernel.step(&stim(c));
+    }
+    let t0 = std::time::Instant::now();
+    for c in 0..cycles {
+        kernel.step(&stim(c));
+    }
+    let wall = t0.elapsed();
+    SweepPoint {
+        label: format!("{}/B{}@{:.0}%", cfg.name(), lanes, toggle_rate * 100.0),
+        wall,
+        cycles,
+        hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
+        program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
+        data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
+        skip_rate: None,
+    }
+}
+
+/// Run `cycles` of `design` under a **sparse** (activity-masked) batched
+/// kernel with `lanes ≤ 64` stimulus lanes at the given toggle rate.
+/// `hz` is aggregate lane-cycles/sec as in [`measure_kernel_lanes`];
+/// `skip_rate` reports the fraction of (op, lane) work units the activity
+/// masks skipped during the measured window (warm-up excluded).
+pub fn measure_kernel_lanes_sparse(
+    design: &Design,
+    compiled: &Compiled,
+    cfg: KernelConfig,
+    lanes: usize,
+    cycles: u64,
+    toggle_rate: f64,
+) -> SweepPoint {
+    let mut kernel = crate::kernels::build_sparse(cfg, &compiled.ir, &compiled.oim, lanes);
+    design.apply_lane_init(&compiled.graph, kernel.as_mut());
+    let mut stim = design.make_lane_stimulus_toggle(lanes, toggle_rate);
+    // warm-up (absorbs the cold full-evaluation cycle), then measure
+    for c in 0..cycles.min(64) {
+        kernel.step(&stim(c));
+    }
+    let warm = kernel.activity_stats().expect("sparse kernels report activity");
+    let t0 = std::time::Instant::now();
+    for c in 0..cycles {
+        kernel.step(&stim(c));
+    }
+    let wall = t0.elapsed();
+    let stats = kernel.activity_stats().expect("sparse kernels report activity").since(&warm);
+    SweepPoint {
+        label: format!("{}/B{}/sparse@{:.0}%", cfg.name(), lanes, toggle_rate * 100.0),
+        wall,
+        cycles,
+        hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
+        program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
+        data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
+        skip_rate: Some(stats.skip_rate()),
     }
 }
 
@@ -101,6 +177,7 @@ pub fn measure_baseline(design: &Design, compiled: &Compiled, which: &str, cycle
         hz: stats.hz,
         program_bytes,
         data_bytes,
+        skip_rate: None,
     }
 }
 

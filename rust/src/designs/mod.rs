@@ -29,6 +29,7 @@ pub mod keccak;
 pub mod tiny_cpu;
 
 use crate::graph::Graph;
+use crate::kernels::BatchKernel;
 use crate::util::prng::Rng;
 
 /// How a design is driven during benchmarking.
@@ -46,6 +47,12 @@ pub struct Design {
     pub stimulus: Stimulus,
     /// Default simulated cycles for headline runs (Table 3 analog).
     pub default_cycles: u64,
+    /// Divergent-lane initialization: (register name, per-lane values).
+    /// Lane `l` of a batched run starts the named register at
+    /// `values[l % values.len()]` instead of the graph's init value (see
+    /// [`Design::apply_lane_init`]); e.g. per-lane instruction ROMs for
+    /// [`tiny_cpu::tiny_cpu_divergent`]. Empty for ordinary designs.
+    pub lane_init: Vec<(String, Vec<u64>)>,
 }
 
 /// Deterministic per-lane stimulus seed: lane 0 keeps the design's base
@@ -108,11 +115,81 @@ impl Design {
             Stimulus::Zero => Box::new(move |_cycle| vec![0u64; n_inputs * lanes]),
         }
     }
+
+    /// Toggle-rate-controlled lane-major stimulus: each lane draws a
+    /// random input vector on cycle 0, then *holds* it; with probability
+    /// `rate` per (lane, cycle) the lane's inputs change — every port is
+    /// XOR-ed with a random nonzero delta, so a toggling lane is
+    /// guaranteed to actually change on every port. `rate = 1.0` toggles
+    /// every lane every cycle; `rate = 0.0` freezes the stimulus after
+    /// cycle 0 (the idle workload). Lanes toggle independently with
+    /// decorrelated seeds. This is the dynamic-sparsity knob driving the
+    /// sparse activity-masked executors (`benches/fig23_sparse.rs`).
+    pub fn make_lane_stimulus_toggle(
+        &self,
+        lanes: usize,
+        rate: f64,
+    ) -> Box<dyn FnMut(u64) -> Vec<u64>> {
+        assert!(lanes >= 1);
+        assert!((0.0..=1.0).contains(&rate), "toggle rate must be in [0, 1] (got {rate})");
+        let n_inputs = self.graph.inputs.len();
+        let widths: Vec<u8> = self.graph.inputs.iter().map(|p| p.width).collect();
+        match self.stimulus {
+            Stimulus::Random(seed) => {
+                let mut rngs: Vec<Rng> =
+                    (0..lanes).map(|l| Rng::new(lane_seed(seed, l))).collect();
+                // lane-major held values, prev[i * lanes + l]
+                let mut prev = vec![0u64; n_inputs * lanes];
+                let mut started = false;
+                Box::new(move |_cycle| {
+                    if !started {
+                        started = true;
+                        for (l, rng) in rngs.iter_mut().enumerate() {
+                            for (i, &w) in widths.iter().enumerate() {
+                                prev[i * lanes + l] = rng.bits(w);
+                            }
+                        }
+                    } else {
+                        for (l, rng) in rngs.iter_mut().enumerate() {
+                            if rng.chance(rate) {
+                                for (i, &w) in widths.iter().enumerate() {
+                                    // nonzero delta: bit 0 always flips
+                                    prev[i * lanes + l] ^= rng.bits(w) | 1;
+                                }
+                            }
+                        }
+                    }
+                    prev.clone()
+                })
+            }
+            Stimulus::Zero => Box::new(move |_cycle| vec![0u64; n_inputs * lanes]),
+        }
+    }
+
+    /// Apply this design's divergent-lane initialization to a freshly
+    /// built batched kernel. `compiled_graph` must be the *optimized*
+    /// graph the kernel was lowered from (its node ids are the slot ids);
+    /// registers are resolved by name, which survives every pass.
+    pub fn apply_lane_init(&self, compiled_graph: &Graph, kernel: &mut dyn BatchKernel) {
+        let lanes = kernel.lanes();
+        for (name, values) in &self.lane_init {
+            assert!(!values.is_empty(), "lane_init for '{name}' has no values");
+            let reg = compiled_graph.regs.iter().find(|r| r.name == *name).unwrap_or_else(|| {
+                panic!("lane_init: no register named '{name}' in {}", self.name)
+            });
+            let m = crate::graph::ops::mask(reg.width);
+            for l in 0..lanes {
+                kernel.poke_lane(reg.node, l, values[l % values.len()] & m);
+            }
+        }
+    }
 }
 
 /// Build a design by name. Names: `counter`, `alu32`, `fir8`, `keccak`,
 /// `tiny_cpu`, `gemmini_like_{4,8,16}`, `rocket_like_{1,2,4,8,12,16,20,24}c`,
-/// `boom_like_{1,2,4,8}c`, plus `rocket_like_xs` (export-sized).
+/// `boom_like_{1,2,4,8}c`, `alu_farm_N` (N independent registered ALU
+/// blocks — the lane-sparsity workload for `--sparse` benchmarking),
+/// plus `rocket_like_xs` (export-sized).
 pub fn catalog(name: &str) -> Option<Design> {
     let d = match name {
         "counter" => Design {
@@ -120,18 +197,21 @@ pub fn catalog(name: &str) -> Option<Design> {
             graph: simple::counter(16),
             stimulus: Stimulus::Random(1),
             default_cycles: 10_000,
+            lane_init: vec![],
         },
         "alu32" => Design {
             name: name.into(),
             graph: simple::alu(32),
             stimulus: Stimulus::Random(2),
             default_cycles: 10_000,
+            lane_init: vec![],
         },
         "fir8" => Design {
             name: name.into(),
             graph: simple::fir(8, 16),
             stimulus: Stimulus::Random(3),
             default_cycles: 10_000,
+            lane_init: vec![],
         },
         "keccak" => Design {
             name: name.into(),
@@ -139,12 +219,14 @@ pub fn catalog(name: &str) -> Option<Design> {
             stimulus: Stimulus::Random(4),
             // paper Table 3: SHA3 runs 1.2M cycles; scaled 1/10
             default_cycles: 120_000,
+            lane_init: vec![],
         },
         "tiny_cpu" => Design {
             name: name.into(),
             graph: tiny_cpu::tiny_cpu(&tiny_cpu::dhrystone_like(40)),
             stimulus: Stimulus::Zero,
             default_cycles: 8_000,
+            lane_init: vec![],
         },
         _ => {
             if let Some(rest) = name.strip_prefix("rocket_like_") {
@@ -155,6 +237,7 @@ pub fn catalog(name: &str) -> Option<Design> {
                         graph: rocket_like::rocket_like(1, 0.01),
                         stimulus: Stimulus::Random(10),
                         default_cycles: 2_000,
+                        lane_init: vec![],
                     });
                 }
                 let cores: usize = rest.strip_suffix('c')?.parse().ok()?;
@@ -164,6 +247,7 @@ pub fn catalog(name: &str) -> Option<Design> {
                     stimulus: Stimulus::Random(11),
                     // paper Table 3: rocket runs 540K cycles; scaled 1/100
                     default_cycles: 5_400,
+                    lane_init: vec![],
                 });
             }
             if let Some(rest) = name.strip_prefix("boom_like_") {
@@ -173,6 +257,7 @@ pub fn catalog(name: &str) -> Option<Design> {
                     graph: boom_like::boom_like(cores, 0.1),
                     stimulus: Stimulus::Random(12),
                     default_cycles: 7_500,
+                    lane_init: vec![],
                 });
             }
             if let Some(rest) = name.strip_prefix("gemmini_like_") {
@@ -182,6 +267,20 @@ pub fn catalog(name: &str) -> Option<Design> {
                     graph: gemmini_like::gemmini_like(dim),
                     stimulus: Stimulus::Random(13),
                     default_cycles: 16_000,
+                    lane_init: vec![],
+                });
+            }
+            if let Some(rest) = name.strip_prefix("alu_farm_") {
+                let blocks: usize = rest.parse().ok()?;
+                if blocks == 0 {
+                    return None;
+                }
+                return Some(Design {
+                    name: name.into(),
+                    graph: simple::alu_farm(blocks, 32),
+                    stimulus: Stimulus::Random(14),
+                    default_cycles: 10_000,
+                    lane_init: vec![],
                 });
             }
             return None;
@@ -246,6 +345,38 @@ mod tests {
             }
         }
         assert!(lanes_differ, "lanes 1.. must be decorrelated from lane 0");
+    }
+
+    /// Toggle-stimulus semantics: rate 0.0 freezes every lane after
+    /// cycle 0; rate 1.0 changes every port of every lane every cycle.
+    #[test]
+    fn toggle_stimulus_rate_extremes() {
+        let d = catalog("alu32").unwrap();
+        let lanes = 3usize;
+        let n = d.graph.inputs.len();
+
+        let mut frozen = d.make_lane_stimulus_toggle(lanes, 0.0);
+        let first = frozen(0);
+        assert_eq!(first.len(), n * lanes);
+        for cycle in 1..8u64 {
+            assert_eq!(frozen(cycle), first, "rate 0.0 must hold after cycle 0");
+        }
+
+        let mut hot = d.make_lane_stimulus_toggle(lanes, 1.0);
+        let mut prev = hot(0);
+        for cycle in 1..8u64 {
+            let cur = hot(cycle);
+            for i in 0..n {
+                for l in 0..lanes {
+                    assert_ne!(
+                        cur[i * lanes + l],
+                        prev[i * lanes + l],
+                        "rate 1.0 must change port {i} lane {l} at cycle {cycle}"
+                    );
+                }
+            }
+            prev = cur;
+        }
     }
 
     #[test]

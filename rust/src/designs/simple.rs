@@ -19,14 +19,15 @@ pub fn counter(width: u8) -> Graph {
     g
 }
 
-/// A registered ALU: op-select over add/sub/and/or/xor/shift/compare.
-pub fn alu(width: u8) -> Graph {
-    let mut g = Graph::new("alu");
-    let a = g.input("a", width);
-    let b = g.input("b", width);
-    let op = g.input("op", 3);
-    let r = g.reg("result", width, 0);
-
+/// One ALU datapath: op-select mux ladder over
+/// add/sub/and/or/xor/shift/compare of `a` and `b`.
+fn alu_select(
+    g: &mut Graph,
+    a: crate::graph::NodeId,
+    b: crate::graph::NodeId,
+    op: crate::graph::NodeId,
+    width: u8,
+) -> crate::graph::NodeId {
     let add = g.prim_w(PrimOp::Add, &[a, b], width);
     let sub = g.prim_w(PrimOp::Sub, &[a, b], width);
     let and = g.prim(PrimOp::And, &[a, b]);
@@ -45,9 +46,45 @@ pub fn alu(width: u8) -> Graph {
         let eq = g.prim(PrimOp::Eq, &[op, k]);
         sel = g.prim(PrimOp::Mux, &[eq, c, sel]);
     }
-    let sel = crate::graph::builder::adapt_width(&mut g, sel, width);
+    crate::graph::builder::adapt_width(g, sel, width)
+}
+
+/// A registered ALU: op-select over add/sub/and/or/xor/shift/compare.
+pub fn alu(width: u8) -> Graph {
+    let mut g = Graph::new("alu");
+    let a = g.input("a", width);
+    let b = g.input("b", width);
+    let op = g.input("op", 3);
+    let r = g.reg("result", width, 0);
+    let sel = alu_select(&mut g, a, b, op, width);
     g.connect_reg(r, sel);
     g.output("result", r);
+    g
+}
+
+/// `blocks` independent registered ALUs, each with its own operand and
+/// op-select inputs. The lane-level dynamic-sparsity workload: the design
+/// is shallow (latency 2 cycles from input to settled state), so under a
+/// low per-lane toggle rate whole lanes are quiescent almost every cycle
+/// and the sparse batched executors skip nearly everything, while the
+/// design itself scales to an arbitrary op count (`benches/fig23_sparse.rs`).
+pub fn alu_farm(blocks: usize, width: u8) -> Graph {
+    assert!(blocks >= 1);
+    let mut g = Graph::new("alu_farm");
+    // declare all ports first, block-major, so port order is stable
+    let mut ports = Vec::with_capacity(blocks);
+    for k in 0..blocks {
+        let a = g.input(&format!("a{k}"), width);
+        let b = g.input(&format!("b{k}"), width);
+        let op = g.input(&format!("op{k}"), 3);
+        ports.push((a, b, op));
+    }
+    for (k, &(a, b, op)) in ports.iter().enumerate() {
+        let r = g.reg(&format!("res{k}"), width, 0);
+        let sel = alu_select(&mut g, a, b, op, width);
+        g.connect_reg(r, sel);
+        g.output(&format!("y{k}"), r);
+    }
     g
 }
 
@@ -107,6 +144,16 @@ mod tests {
         assert_eq!(sim.outputs()[0].1, 0b1000);
         sim.step(&[3, 5, 7]); // lt
         assert_eq!(sim.outputs()[0].1, 1);
+    }
+
+    #[test]
+    fn alu_farm_blocks_are_independent() {
+        let mut sim = RefSim::new(alu_farm(3, 16));
+        // block 0: 7 + 5, block 1: 9 - 4, block 2: 6 & 3
+        sim.step(&[7, 5, 0, 9, 4, 1, 6, 3, 2]);
+        assert_eq!(sim.outputs()[0].1, 12);
+        assert_eq!(sim.outputs()[1].1, 5);
+        assert_eq!(sim.outputs()[2].1, 2);
     }
 
     #[test]

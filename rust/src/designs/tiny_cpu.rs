@@ -170,6 +170,44 @@ pub fn golden_run(program: &[u32], max_steps: usize) -> (u32, usize) {
 /// RAM — takes priority over CPU stores), and `dmi_raddr[5]`.
 /// Outputs: `halted`, `checksum` (= RAM[0]), `pc`, `dmi_rdata`.
 pub fn tiny_cpu(program: &[u32]) -> Graph {
+    build_cpu(program, None)
+}
+
+/// Build the CPU with a *divergent-lane* instruction ROM: `rom_words`
+/// self-holding registers named `rom{i}` (next state = themselves), each
+/// initialized from `default_program` (padded with HALT). Because the ROM
+/// words are architectural state rather than constants, they survive the
+/// optimizer with stable names and can be re-initialized **per lane**
+/// through [`crate::designs::Design::lane_init`] /
+/// [`lane_rom_init`] — each lane of a batched run then executes a
+/// different program over one shared OIM walk.
+pub fn tiny_cpu_divergent(rom_words: usize, default_program: &[u32]) -> Graph {
+    build_cpu(default_program, Some(rom_words))
+}
+
+/// The `Design::lane_init` entries loading one program per lane into a
+/// [`tiny_cpu_divergent`] ROM (lane `l` runs `programs[l % programs.len()]`).
+/// `rom_words` must match the value passed to `tiny_cpu_divergent`.
+pub fn lane_rom_init(rom_words: usize, programs: &[Vec<u32>]) -> Vec<(String, Vec<u64>)> {
+    let n = rom_words.next_power_of_two();
+    assert!(!programs.is_empty());
+    for p in programs {
+        assert!(p.len() <= n, "program ({} words) exceeds ROM ({n} words)", p.len());
+    }
+    (0..n)
+        .map(|i| {
+            (
+                format!("rom{i}"),
+                programs
+                    .iter()
+                    .map(|p| p.get(i).copied().unwrap_or_else(halt) as u64)
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn build_cpu(program: &[u32], reg_rom_words: Option<usize>) -> Graph {
     assert!(program.len() <= 256, "ROM limit");
     let mut g = Graph::new("tiny_cpu");
     let dmi_wen = g.input("dmi_wen", 1);
@@ -188,7 +226,22 @@ pub fn tiny_cpu(program: &[u32]) -> Graph {
     }
 
     // ---- instruction ROM: mux tree over pc ----
-    let rom: Vec<NodeId> = program.iter().map(|&w| g.konst(w as u64, 32)).collect();
+    let rom: Vec<NodeId> = match reg_rom_words {
+        // constant ROM: words baked into the OIM as initial slot values
+        None => program.iter().map(|&w| g.konst(w as u64, 32)).collect(),
+        // divergent-lane ROM: self-holding registers (next = self, the
+        // default wiring of `Graph::reg`), re-initializable per lane
+        Some(words) => {
+            let n = words.next_power_of_two();
+            assert!(program.len() <= n, "program exceeds ROM ({n} words)");
+            (0..n)
+                .map(|i| {
+                    let w = program.get(i).copied().unwrap_or_else(halt);
+                    g.reg(&format!("rom{i}"), 32, w as u64)
+                })
+                .collect()
+        }
+    };
     let pc_idx_w = (64 - (rom.len().next_power_of_two() as u64 - 1).leading_zeros()).max(1) as u8;
     let pc_idx = g.prim(PrimOp::Bits(pc_idx_w.min(8) - 1, 0), &[pc]);
     let inst = bank_read(&mut g, &rom, pc_idx);

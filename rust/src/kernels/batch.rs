@@ -7,18 +7,24 @@
 //! [`super::common::BatchDriver`]) so the innermost lane loop is a
 //! contiguous streaming loop the compiler can vectorize.
 //!
-//! Three binding levels bracket the design space (mirroring the scalar
+//! Four binding levels cover the design space (mirroring the scalar
 //! kernels they batch):
 //!
 //! * [`BatchRuKernel`] — format-B cursor walk, case dispatch per op
 //!   (batched RU): the rolled extreme, where batching amortizes the most
 //!   metadata traffic per lane.
+//! * [`BatchOuKernel`] — format-B walk with the operand loop unrolled
+//!   (batched OU): fetch bases resolved inline by arity, no gather
+//!   buffer for the common arities.
 //! * [`BatchNuKernel`] — format-C group walk with dispatch hoisted out of
 //!   the S loop (batched NU; the PSU flavour shares it, differing only in
 //!   name — the lane loop replaces the scalar partial S unroll).
 //! * [`BatchTiKernel`] — tape of precompiled per-opcode functions with
 //!   operand slots baked in (batched TI): the unrolled extreme, where
 //!   batching amortizes the tape walk itself.
+//!
+//! The sparse (activity-masked) wrappers over these live in
+//! [`super::batch_sparse`].
 //!
 //! Lanes never interact: a `B`-lane batched run is bit-identical to `B`
 //! independent single-lane runs of the corresponding scalar kernel
@@ -108,14 +114,137 @@ impl BatchKernel for BatchRuKernel {
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         self.d.lane_outputs(lane)
     }
+
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.d.poke_lane(slot, lane, value);
+    }
+}
+
+// --------------------------------------------------------------- OU (batched)
+
+/// Batched **OU**: same format-B cursor walk as [`BatchRuKernel`], but the
+/// operand loop is unrolled — fetch bases are computed inline by arity and
+/// the per-lane gather buffer disappears for the common arities, exactly
+/// the redundant data movement the scalar OU removes from RU. The lane
+/// loop stays innermost and contiguous.
+pub struct BatchOuKernel {
+    d: BatchDriver,
+    oim: Oim,
+    /// lane-major LO buffer (`max_layer_ops * lanes`)
+    lo: Vec<u64>,
+    /// per-lane gather buffer (MuxChain only)
+    chain_buf: Vec<u64>,
+}
+
+impl BatchOuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        let max_arity = oim.b.arity.iter().copied().max().unwrap_or(1) as usize;
+        BatchOuKernel {
+            d: BatchDriver::new(ir, lanes),
+            oim: oim.clone(),
+            lo: vec![0; ir.max_layer_ops() * lanes],
+            chain_buf: vec![0; max_arity.max(3)],
+        }
+    }
+}
+
+impl BatchKernel for BatchOuKernel {
+    fn config_name(&self) -> &'static str {
+        "OU"
+    }
+
+    fn lanes(&self) -> usize {
+        self.d.lanes
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let lanes = self.d.lanes;
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        let mut wb_idx = 0usize;
+        for &cnt in &o.i_payload {
+            for s in 0..cnt as usize {
+                let n = KOp::from_u8(o.b.opcode[op_idx]);
+                let arity = o.b.arity[op_idx] as usize;
+                let imm = o.b.imm[op_idx];
+                let m = o.b.mask[op_idx];
+                let aux = o.b.aux[op_idx];
+                let ob = s * lanes;
+                // O unrolled: operand bases resolved once per op, no
+                // gather loop for arity <= 3.
+                match arity {
+                    1 => {
+                        let ab = o.b.r_coords[r_idx] as usize * lanes;
+                        for l in 0..lanes {
+                            self.lo[ob + l] = eval_op(n, &[v[ab + l]], imm, m, aux);
+                        }
+                    }
+                    2 => {
+                        let ab = o.b.r_coords[r_idx] as usize * lanes;
+                        let bb = o.b.r_coords[r_idx + 1] as usize * lanes;
+                        for l in 0..lanes {
+                            self.lo[ob + l] = eval_op(n, &[v[ab + l], v[bb + l]], imm, m, aux);
+                        }
+                    }
+                    3 => {
+                        let ab = o.b.r_coords[r_idx] as usize * lanes;
+                        let bb = o.b.r_coords[r_idx + 1] as usize * lanes;
+                        let cb = o.b.r_coords[r_idx + 2] as usize * lanes;
+                        for l in 0..lanes {
+                            self.lo[ob + l] =
+                                eval_op(n, &[v[ab + l], v[bb + l], v[cb + l]], imm, m, aux);
+                        }
+                    }
+                    _ => {
+                        // MuxChain: variable arity still gathers per lane
+                        for l in 0..lanes {
+                            for oo in 0..arity {
+                                self.chain_buf[oo] =
+                                    v[o.b.r_coords[r_idx + oo] as usize * lanes + l];
+                            }
+                            self.lo[ob + l] =
+                                eval_op(n, &self.chain_buf[..arity], imm, m, aux);
+                        }
+                    }
+                }
+                r_idx += arity;
+                op_idx += 1;
+            }
+            for s in 0..cnt as usize {
+                let sb = o.b.s_coords[wb_idx + s] as usize * lanes;
+                let lb = s * lanes;
+                for l in 0..lanes {
+                    v[sb + l] = self.lo[lb + l];
+                }
+            }
+            wb_idx += cnt as usize;
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        self.d.lane_outputs(lane)
+    }
+
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.d.poke_lane(slot, lane, value);
+    }
 }
 
 // ---------------------------------------------------- NU / PSU (batched)
 
 /// Scalar op body used by the batched group loops: the dispatch happens
 /// once per (layer, op-type) group, then the group loop iterates
-/// (element, lane) through one of these shapes.
-enum LaneOp {
+/// (element, lane) through one of these shapes. Shared with the sparse
+/// group walk in [`super::batch_sparse`].
+pub(super) enum LaneOp {
     /// `(a, imm, aux) -> out`
     Un(fn(u64, u8, u64) -> u64),
     /// `(a, b, imm) -> out`
@@ -124,7 +253,7 @@ enum LaneOp {
     Chain,
 }
 
-fn lane_op(n: KOp) -> LaneOp {
+pub(super) fn lane_op(n: KOp) -> LaneOp {
     match n {
         KOp::Add => LaneOp::Bin(|a, b, _| a.wrapping_add(b)),
         KOp::Sub => LaneOp::Bin(|a, b, _| a.wrapping_sub(b)),
@@ -323,6 +452,10 @@ impl BatchKernel for BatchNuKernel {
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         self.d.lane_outputs(lane)
     }
+
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.d.poke_lane(slot, lane, value);
+    }
 }
 
 // --------------------------------------------------------------- TI (batched)
@@ -506,6 +639,10 @@ impl BatchKernel for BatchTiKernel {
 
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         self.d.lane_outputs(lane)
+    }
+
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.d.poke_lane(slot, lane, value);
     }
 }
 

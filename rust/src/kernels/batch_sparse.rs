@@ -1,0 +1,509 @@
+//! Sparse (activity-masked) lane-batched executors.
+//!
+//! These wrap the lane-major slot files of the dense batched executors
+//! with the [`crate::activity`] subsystem: change detection at the cycle
+//! boundaries (tracked input writes and register commits), a per-group
+//! `u64` lane activity mask propagated through the group dependency
+//! graph, and group bodies that skip a zero-mask group entirely and
+//! iterate only the set bits of a partial mask.
+//!
+//! This is the event-driven idea ([`crate::baselines::event_driven`])
+//! lifted into the tensor/batch formulation where it finally pays: the
+//! activity decision is made once per (layer, op-type) *group* and
+//! amortized over `B ≤ 64` lanes, so the bookkeeping cost per skipped
+//! op-lane vanishes as `B` grows.
+//!
+//! Two binding levels are provided, bracketing the spectrum the dense
+//! batched executors cover:
+//!
+//! * [`SparseNuBatch`] — the format-C group walk of
+//!   [`super::batch::BatchNuKernel`] with per-group gating (the PSU
+//!   flavour shares it via [`SparseNuBatch::new_psu`], as in the dense
+//!   pair).
+//! * [`SparseTiBatch`] — the precompiled tape of
+//!   [`super::batch::BatchTiKernel`], cut into group segments so whole
+//!   tape runs are skipped.
+//!
+//! Skipping is exact: every operation is a pure function of its operand
+//! slots, and a group is only skipped in a lane when no transitive
+//! boundary source changed in that lane, so the stale slot values are
+//! exactly what re-evaluation would produce. Sparse runs are bit-identical
+//! to dense batched runs (property-tested in `tests/kernels_property.rs`).
+
+use super::batch::{lane_op, LaneOp};
+use super::common::BatchDriver;
+use super::BatchKernel;
+use crate::activity::gdg::Group;
+use crate::activity::{ActivityStats, ActivityTracker, GroupDepGraph};
+use crate::tensor::ir::{KOp, LayerIr, OpRec};
+use crate::tensor::oim::{Oim, OimArrays};
+
+/// Iterate the lane loop of one op: contiguous when every lane is active
+/// (`mask == full`, the vectorizable dense path), bit iteration otherwise.
+macro_rules! for_lanes {
+    ($mask:expr, $full:expr, $lanes:expr, $l:ident, $body:block) => {
+        if $mask == $full {
+            for $l in 0..$lanes {
+                $body
+            }
+        } else {
+            let mut rem = $mask;
+            while rem != 0 {
+                let $l = rem.trailing_zeros() as usize;
+                rem &= rem - 1;
+                $body
+            }
+        }
+    };
+}
+
+// ------------------------------------------------------ NU / PSU (sparse)
+
+/// Evaluate one (layer, op-type) group over the active lanes only,
+/// writing output slots directly (levelization guarantees no same-layer
+/// consumer, so the dense executors' LO staging is unnecessary).
+fn run_group_sparse(
+    grp: &Group,
+    mask: u64,
+    full: u64,
+    lanes: usize,
+    v: &mut [u64],
+    c: &OimArrays,
+    chain_buf: &mut [u64],
+) {
+    let op0 = grp.op_start as usize;
+    let cnt = grp.ops();
+    let r = &c.r_coords[grp.r_start as usize..];
+    let s = &c.s_coords[op0..op0 + cnt];
+    let imm = &c.imm[op0..];
+    let msk = &c.mask[op0..];
+    let aux = &c.aux[op0..];
+    let arity = &c.arity[op0..];
+    match lane_op(KOp::from_u8(grp.opcode)) {
+        LaneOp::Un(f) => {
+            for i in 0..cnt {
+                let ab = r[i] as usize * lanes;
+                let ob = s[i] as usize * lanes;
+                for_lanes!(mask, full, lanes, l, {
+                    v[ob + l] = f(v[ab + l], imm[i], aux[i]) & msk[i];
+                });
+            }
+        }
+        LaneOp::Bin(f) => {
+            for i in 0..cnt {
+                let ab = r[2 * i] as usize * lanes;
+                let bb = r[2 * i + 1] as usize * lanes;
+                let ob = s[i] as usize * lanes;
+                for_lanes!(mask, full, lanes, l, {
+                    v[ob + l] = f(v[ab + l], v[bb + l], imm[i]) & msk[i];
+                });
+            }
+        }
+        LaneOp::Mux => {
+            for i in 0..cnt {
+                let sb = r[3 * i] as usize * lanes;
+                let tb = r[3 * i + 1] as usize * lanes;
+                let fb = r[3 * i + 2] as usize * lanes;
+                let ob = s[i] as usize * lanes;
+                for_lanes!(mask, full, lanes, l, {
+                    v[ob + l] = (if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] }) & msk[i];
+                });
+            }
+        }
+        LaneOp::Chain => {
+            let mut r_off = 0usize;
+            for i in 0..cnt {
+                let ar = arity[i] as usize;
+                let k = imm[i] as usize;
+                let ob = s[i] as usize * lanes;
+                for_lanes!(mask, full, lanes, l, {
+                    for o in 0..ar {
+                        chain_buf[o] = v[r[r_off + o] as usize * lanes + l];
+                    }
+                    let mut val = chain_buf[2 * k];
+                    for j in (0..k).rev() {
+                        if chain_buf[2 * j] != 0 {
+                            val = chain_buf[2 * j + 1];
+                        }
+                    }
+                    v[ob + l] = val & msk[i];
+                });
+                r_off += ar;
+            }
+        }
+    }
+}
+
+/// Sparse **NU / PSU**: the format-C group walk gated by per-group lane
+/// activity masks. As in the dense pair, the NU and PSU flavours share
+/// one executor and differ only in the reported name.
+pub struct SparseNuBatch {
+    name: &'static str,
+    d: BatchDriver,
+    oim: Oim,
+    tracker: ActivityTracker,
+    chain_buf: Vec<u64>,
+}
+
+impl SparseNuBatch {
+    pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize, name: &'static str) -> Self {
+        let gdg = GroupDepGraph::build(ir, oim);
+        let tracker = ActivityTracker::new(gdg, ir.input_slots.len(), ir.commits.len(), lanes);
+        let max_arity = oim.c.arity.iter().copied().max().unwrap_or(1) as usize;
+        SparseNuBatch {
+            name,
+            d: BatchDriver::new(ir, lanes),
+            oim: oim.clone(),
+            tracker,
+            chain_buf: vec![0; max_arity.max(3)],
+        }
+    }
+
+    pub fn new_nu(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        Self::new(ir, oim, lanes, "NU")
+    }
+
+    pub fn new_psu(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        Self::new(ir, oim, lanes, "PSU")
+    }
+}
+
+impl BatchKernel for SparseNuBatch {
+    fn config_name(&self) -> &'static str {
+        self.name
+    }
+
+    fn lanes(&self) -> usize {
+        self.d.lanes
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs_tracked(inputs, &mut self.tracker.input_changed);
+        self.tracker.begin_cycle();
+        let lanes = self.d.lanes;
+        let full = self.tracker.full;
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        for (g, grp) in self.tracker.gdg.groups.iter().enumerate() {
+            let mask = self.tracker.active[g];
+            if mask == 0 {
+                continue;
+            }
+            run_group_sparse(grp, mask, full, lanes, v, &o.c, &mut self.chain_buf);
+        }
+        self.d.commit_tracked(&mut self.tracker.reg_changed);
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        self.d.lane_outputs(lane)
+    }
+
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.d.poke_lane(slot, lane, value);
+        self.tracker.force_recold();
+    }
+
+    fn activity_stats(&self) -> Option<ActivityStats> {
+        Some(self.tracker.stats())
+    }
+}
+
+// --------------------------------------------------------------- TI (sparse)
+
+/// Masked tape function: like the dense tape functions of
+/// [`super::batch`], plus the active-lane mask.
+type SpFn = fn(&mut [u64], &OpRec, &[u32], usize, u64, u64);
+
+// The sp_* bodies below intentionally mirror the dense bt_* set in
+// `super::batch` one for one (only the lane loop differs): the dense TI
+// hot path stays branch-free, and any semantic drift between the two
+// sets is caught by the sparse-vs-dense bit-identity property test at
+// toggle rate 1.0, where every mask is full.
+macro_rules! sp_bin {
+    ($name:ident, |$a:ident, $b:ident| $expr:expr) => {
+        fn $name(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u64) {
+            let ab = r.a as usize * lanes;
+            let bb = r.b as usize * lanes;
+            let ob = r.out as usize * lanes;
+            for_lanes!(mask, full, lanes, l, {
+                let $a = v[ab + l];
+                let $b = v[bb + l];
+                v[ob + l] = ($expr) & r.mask;
+            });
+        }
+    };
+}
+macro_rules! sp_un {
+    ($name:ident, |$a:ident, $r:ident| $expr:expr) => {
+        fn $name(v: &mut [u64], $r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u64) {
+            let ab = $r.a as usize * lanes;
+            let ob = $r.out as usize * lanes;
+            for_lanes!(mask, full, lanes, l, {
+                let $a = v[ab + l];
+                v[ob + l] = ($expr) & $r.mask;
+            });
+        }
+    };
+}
+
+sp_bin!(sp_add, |a, b| a.wrapping_add(b));
+sp_bin!(sp_sub, |a, b| a.wrapping_sub(b));
+sp_bin!(sp_mul, |a, b| a.wrapping_mul(b));
+sp_bin!(sp_div, |a, b| if b == 0 { 0 } else { a / b });
+sp_bin!(sp_rem, |a, b| if b == 0 { 0 } else { a % b });
+sp_bin!(sp_lt, |a, b| (a < b) as u64);
+sp_bin!(sp_leq, |a, b| (a <= b) as u64);
+sp_bin!(sp_gt, |a, b| (a > b) as u64);
+sp_bin!(sp_geq, |a, b| (a >= b) as u64);
+sp_bin!(sp_eq, |a, b| (a == b) as u64);
+sp_bin!(sp_neq, |a, b| (a != b) as u64);
+sp_bin!(sp_and, |a, b| a & b);
+sp_bin!(sp_or, |a, b| a | b);
+sp_bin!(sp_xor, |a, b| a ^ b);
+sp_bin!(sp_dshl, |a, b| if b >= 64 { 0 } else { a << b });
+sp_bin!(sp_dshr, |a, b| if b >= 64 { 0 } else { a >> b });
+sp_un!(sp_not, |a, _r| !a);
+sp_un!(sp_neg, |a, _r| a.wrapping_neg());
+sp_un!(sp_andr, |a, r| (a == r.aux) as u64);
+sp_un!(sp_orr, |a, _r| (a != 0) as u64);
+sp_un!(sp_xorr, |a, _r| (a.count_ones() & 1) as u64);
+sp_un!(sp_shli, |a, r| a << r.imm);
+sp_un!(sp_shri, |a, r| a >> r.imm);
+sp_un!(sp_copy, |a, _r| a);
+
+fn sp_cat(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u64) {
+    let ab = r.a as usize * lanes;
+    let bb = r.b as usize * lanes;
+    let ob = r.out as usize * lanes;
+    for_lanes!(mask, full, lanes, l, {
+        v[ob + l] = ((v[ab + l] << r.imm) | v[bb + l]) & r.mask;
+    });
+}
+
+fn sp_mux(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u64) {
+    let sb = r.a as usize * lanes;
+    let tb = r.b as usize * lanes;
+    let fb = r.c as usize * lanes;
+    let ob = r.out as usize * lanes;
+    for_lanes!(mask, full, lanes, l, {
+        v[ob + l] = (if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] }) & r.mask;
+    });
+}
+
+/// Masked mirror of the dense tape's MuxChain: operands are `sel0 = a`,
+/// `v0 = b`, then `ext` holds `(sel1, v1, .., default)`.
+fn sp_muxchain(v: &mut [u64], r: &OpRec, e: &[u32], lanes: usize, mask: u64, full: u64) {
+    let k = r.imm as usize;
+    let ob = r.out as usize * lanes;
+    let ext = &e[r.ext as usize..r.ext as usize + 2 * k - 1];
+    for_lanes!(mask, full, lanes, l, {
+        let val = if v[r.a as usize * lanes + l] != 0 {
+            v[r.b as usize * lanes + l]
+        } else {
+            let mut x = v[ext[2 * k - 2] as usize * lanes + l];
+            for i in (0..k - 1).rev() {
+                if v[ext[2 * i] as usize * lanes + l] != 0 {
+                    x = v[ext[2 * i + 1] as usize * lanes + l];
+                }
+            }
+            x
+        };
+        v[ob + l] = val & r.mask;
+    });
+}
+
+fn sp_fn(op: KOp) -> SpFn {
+    match op {
+        KOp::Add => sp_add,
+        KOp::Sub => sp_sub,
+        KOp::Mul => sp_mul,
+        KOp::Div => sp_div,
+        KOp::Rem => sp_rem,
+        KOp::Lt => sp_lt,
+        KOp::Leq => sp_leq,
+        KOp::Gt => sp_gt,
+        KOp::Geq => sp_geq,
+        KOp::Eq => sp_eq,
+        KOp::Neq => sp_neq,
+        KOp::And => sp_and,
+        KOp::Or => sp_or,
+        KOp::Xor => sp_xor,
+        KOp::Not => sp_not,
+        KOp::Neg => sp_neg,
+        KOp::AndrK => sp_andr,
+        KOp::Orr => sp_orr,
+        KOp::Xorr => sp_xorr,
+        KOp::ShlI => sp_shli,
+        KOp::ShrI => sp_shri,
+        KOp::Dshl => sp_dshl,
+        KOp::Dshr => sp_dshr,
+        KOp::Cat => sp_cat,
+        KOp::Mux => sp_mux,
+        KOp::Copy => sp_copy,
+        KOp::MuxChain => sp_muxchain,
+    }
+}
+
+/// Sparse **TI**: the precompiled per-opcode tape, cut into (layer,
+/// op-type) segments so a quiescent group skips its whole tape run; a
+/// partially active group replays its segment over the set mask bits
+/// only. The tape is in format-C order (as the dense tape is), so segment
+/// boundaries coincide with the GDG's group op ranges.
+pub struct SparseTiBatch {
+    d: BatchDriver,
+    tape: Vec<(SpFn, OpRec)>,
+    ext_args: Vec<u32>,
+    /// tape range per GDG group (parallel to `tracker.gdg.groups`)
+    ranges: Vec<(u32, u32)>,
+    tracker: ActivityTracker,
+}
+
+impl SparseTiBatch {
+    pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        let gdg = GroupDepGraph::build(ir, oim);
+        let (layers, ext_args) = oim.op_recs();
+        let mut tape = Vec::with_capacity(ir.total_ops());
+        for layer in &layers {
+            for rec in layer {
+                tape.push((sp_fn(rec.kop()), *rec));
+            }
+        }
+        let ranges: Vec<(u32, u32)> = gdg.groups.iter().map(|g| (g.op_start, g.op_end)).collect();
+        debug_assert_eq!(ranges.last().map(|&(_, e)| e as usize).unwrap_or(0), tape.len());
+        let tracker = ActivityTracker::new(gdg, ir.input_slots.len(), ir.commits.len(), lanes);
+        SparseTiBatch { d: BatchDriver::new(ir, lanes), tape, ext_args, ranges, tracker }
+    }
+}
+
+impl BatchKernel for SparseTiBatch {
+    fn config_name(&self) -> &'static str {
+        "TI"
+    }
+
+    fn lanes(&self) -> usize {
+        self.d.lanes
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs_tracked(inputs, &mut self.tracker.input_changed);
+        self.tracker.begin_cycle();
+        let lanes = self.d.lanes;
+        let full = self.tracker.full;
+        let v = &mut self.d.v;
+        for (g, &(start, end)) in self.ranges.iter().enumerate() {
+            let mask = self.tracker.active[g];
+            if mask == 0 {
+                continue;
+            }
+            for (f, rec) in &self.tape[start as usize..end as usize] {
+                f(v, rec, &self.ext_args, lanes, mask, full);
+            }
+        }
+        self.d.commit_tracked(&mut self.tracker.reg_changed);
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        self.d.lane_outputs(lane)
+    }
+
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.d.poke_lane(slot, lane, value);
+        self.tracker.force_recold();
+    }
+
+    fn activity_stats(&self) -> Option<ActivityStats> {
+        Some(self.tracker.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{build_batch, build_sparse, BatchKernel, SPARSE_KERNELS};
+    use crate::graph::builder::{random_circuit, random_inputs};
+    use crate::graph::passes::optimize;
+    use crate::tensor::ir::lower;
+    use crate::tensor::oim::Oim;
+    use crate::util::prng::Rng;
+
+    /// In-module smoke test (the toggle-rate matrix lives in
+    /// `tests/kernels_property.rs`): sparse executors match their dense
+    /// counterparts on a random circuit under random stimulus.
+    #[test]
+    fn sparse_matches_dense_smoke() {
+        let mut rng = Rng::new(88_010);
+        let g = random_circuit(&mut rng, 60);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let lanes = 5usize;
+        for cfg in SPARSE_KERNELS {
+            let mut dense = build_batch(cfg, &ir, &oim, lanes);
+            let mut sparse = build_sparse(cfg, &ir, &oim, lanes);
+            for cycle in 0..8 {
+                let mut flat = vec![0u64; opt.inputs.len() * lanes];
+                for l in 0..lanes {
+                    for (i, &val) in random_inputs(&mut rng, &opt).iter().enumerate() {
+                        flat[i * lanes + l] = val;
+                    }
+                }
+                dense.step(&flat);
+                sparse.step(&flat);
+                assert_eq!(
+                    sparse.slots(),
+                    dense.slots(),
+                    "{} slot files diverged at cycle {cycle}",
+                    cfg.name()
+                );
+            }
+            let stats = sparse.activity_stats().expect("sparse kernels report stats");
+            assert_eq!(stats.cycles, 8);
+            assert_eq!(stats.total_op_lanes, (ir.total_ops() * lanes * 8) as u64);
+        }
+    }
+
+    /// A design that goes idle drives the skip machinery: after the
+    /// stimulus freezes, whole cycles cost zero evaluated op-lanes, and a
+    /// change in one lane re-evaluates only that lane.
+    #[test]
+    fn quiescent_lanes_are_skipped() {
+        use crate::graph::ops::PrimOp;
+        let mut g = crate::graph::Graph::new("cone");
+        let a = g.input("a", 8);
+        let x = g.prim(PrimOp::Not, &[a]);
+        let y = g.prim(PrimOp::Neg, &[x]);
+        g.output("y", y);
+        let ir = lower(&g);
+        let oim = Oim::from_ir(&ir);
+        let lanes = 4usize;
+        let ops = ir.total_ops() as u64; // 2
+        for cfg in SPARSE_KERNELS {
+            let mut k = build_sparse(cfg, &ir, &oim, lanes);
+            let frozen = vec![7u64; lanes];
+            for _ in 0..10 {
+                k.step(&frozen);
+            }
+            let s = k.activity_stats().unwrap();
+            // only the cold first cycle evaluates anything
+            assert_eq!(s.evaluated_op_lanes, ops * lanes as u64, "{}", cfg.name());
+            assert_eq!(s.total_op_lanes, ops * lanes as u64 * 10, "{}", cfg.name());
+            assert!(s.skip_rate() > 0.85, "{}", cfg.name());
+            // waking one lane evaluates exactly that lane
+            let mut poke = frozen.clone();
+            poke[2] = 9;
+            k.step(&poke);
+            let after = k.activity_stats().unwrap().since(&s);
+            assert_eq!(after.evaluated_op_lanes, ops, "{} one active lane", cfg.name());
+            // and the woken lane's outputs are correct
+            assert_eq!(k.lane_outputs(2)[0].1, (!9u64).wrapping_neg() & 0xFF);
+            assert_eq!(k.lane_outputs(0)[0].1, (!7u64).wrapping_neg() & 0xFF);
+        }
+    }
+}

@@ -114,6 +114,59 @@ impl BatchDriver {
         }
     }
 
+    /// [`Self::set_inputs`] with per-lane change detection: lane `l` of
+    /// `changed[i]` is OR-ed in when input port `i` changed in lane `l`.
+    /// Only meaningful for `lanes ≤ 64` (one mask bit per lane).
+    #[inline]
+    pub fn set_inputs_tracked(&mut self, inputs: &[u64], changed: &mut [u64]) {
+        debug_assert_eq!(inputs.len(), self.input_slots.len() * self.lanes);
+        debug_assert_eq!(changed.len(), self.input_slots.len());
+        debug_assert!(self.lanes <= 64);
+        for i in 0..self.input_slots.len() {
+            let m = self.input_masks[i];
+            let base = self.input_slots[i] as usize * self.lanes;
+            let mut ch = 0u64;
+            for l in 0..self.lanes {
+                let nv = inputs[i * self.lanes + l] & m;
+                if self.v[base + l] != nv {
+                    self.v[base + l] = nv;
+                    ch |= 1u64 << l;
+                }
+            }
+            changed[i] |= ch;
+        }
+    }
+
+    /// [`Self::commit`] with per-lane change detection: lane `l` of
+    /// `changed[ci]` is OR-ed in when commit `ci`'s register changed in
+    /// lane `l`. Only meaningful for `lanes ≤ 64`.
+    #[inline]
+    pub fn commit_tracked(&mut self, changed: &mut [u64]) {
+        debug_assert_eq!(changed.len(), self.commits.len());
+        debug_assert!(self.lanes <= 64);
+        for ci in 0..self.commits.len() {
+            let (reg, next, m) = self.commits[ci];
+            let rb = reg as usize * self.lanes;
+            let nb = next as usize * self.lanes;
+            let mut ch = 0u64;
+            for l in 0..self.lanes {
+                let nv = self.v[nb + l] & m;
+                if self.v[rb + l] != nv {
+                    self.v[rb + l] = nv;
+                    ch |= 1u64 << l;
+                }
+            }
+            changed[ci] |= ch;
+        }
+    }
+
+    /// Write one lane of one slot directly (divergent-lane initialization).
+    #[inline]
+    pub fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        assert!(lane < self.lanes, "lane {lane} out of range (lanes = {})", self.lanes);
+        self.v[slot as usize * self.lanes + lane] = value;
+    }
+
     /// Named design outputs as seen by one lane.
     pub fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         assert!(lane < self.lanes, "lane {lane} out of range (lanes = {})", self.lanes);

@@ -37,9 +37,45 @@
 //! fully independent: a `B`-lane batched run is bit-identical to `B`
 //! single-lane runs of the corresponding scalar kernel (differential
 //! property test in `tests/kernels_property.rs`). Batched executors exist
-//! for the three binding levels that bracket the spectrum — RU, NU/PSU
-//! and TI (see [`BATCHED_KERNELS`] and [`batch`]); `rteaal sim --lanes B`
-//! and `benches/fig22_lanes.rs` drive them.
+//! for four binding levels spanning the spectrum — RU, OU, NU/PSU and TI
+//! (see [`BATCHED_KERNELS`] and [`batch`]); `rteaal sim --lanes B` and
+//! `benches/fig22_lanes.rs` drive them.
+//!
+//! ## Sparse activity masking (dynamic sparsity)
+//!
+//! The OIM occupancy is *static* sparsity; real workloads add *dynamic*
+//! sparsity — most signals don't toggle most cycles. The sparse batched
+//! executors ([`batch_sparse`], see [`SPARSE_KERNELS`] and
+//! [`build_sparse`]) exploit it with three pieces from the
+//! [`crate::activity`] subsystem:
+//!
+//! * **Group dependency graph (GDG)** — computed once at compile time
+//!   from the format-C `r_coords`/`s_coords`: for every (layer, op-type)
+//!   group, the upstream groups, input ports and register slots whose
+//!   writes can change its inputs.
+//! * **Lane activity masks** — one `u64` per group, one bit per lane
+//!   (`B ≤ 64`). Change detection happens only at the cycle boundaries:
+//!   the driver's tracked input writes and register commits compare old
+//!   vs new per lane and set the changed bits; masks then propagate
+//!   forward through the GDG, so a group is active in lane `l` exactly
+//!   when a boundary source it transitively depends on changed in `l`.
+//! * **Masked group bodies** — a zero-mask group is skipped outright; a
+//!   partial mask runs bit-iterated over the active lanes; a full mask
+//!   takes the same contiguous vectorizable loop as the dense executor.
+//!
+//! Skipping is exact, not approximate: operations are pure functions of
+//! their operand slots, so a (group, lane) with no changed transitive
+//! source holds slot values identical to what re-evaluation would
+//! produce. Sparse runs are therefore bit-identical to dense batched
+//! runs at any toggle rate (property-tested in
+//! `tests/kernels_property.rs`), and [`BatchKernel::activity_stats`]
+//! reports the realized skip rate (`rteaal sim --lanes B --sparse`,
+//! `benches/fig23_sparse.rs`).
+//!
+//! This is the classically-unprofitable event-driven idea
+//! ([`crate::baselines::event_driven`]) made profitable by the batch
+//! dimension: one activity decision per group amortizes over `B` lanes,
+//! and the per-op dirty worklist collapses into `O(groups)` mask words.
 
 pub mod common;
 pub mod ru;
@@ -50,6 +86,7 @@ pub mod su;
 pub mod ti;
 pub mod unopt;
 pub mod batch;
+pub mod batch_sparse;
 
 use crate::tensor::ir::LayerIr;
 use crate::tensor::oim::Oim;
@@ -155,13 +192,27 @@ pub trait BatchKernel: Send {
     fn slots(&self) -> &[u64];
     /// Named design outputs as observed by one lane.
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)>;
+    /// Write one lane of one slot directly — pre-run initialization of
+    /// divergent lanes ([`crate::designs::Design::lane_init`]). Sparse
+    /// executors additionally invalidate their activity state, so the
+    /// next cycle re-evaluates everything.
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64);
+    /// Activity accounting of a sparse executor; `None` on dense ones.
+    fn activity_stats(&self) -> Option<crate::activity::ActivityStats> {
+        None
+    }
 }
 
-/// The kernel configurations with lane-batched executors — the three
-/// binding levels bracketing the design space (PSU shares NU's batched
-/// group bodies).
-pub const BATCHED_KERNELS: [KernelConfig; 4] =
-    [KernelConfig::RU, KernelConfig::NU, KernelConfig::PSU, KernelConfig::TI];
+/// The kernel configurations with lane-batched executors — four binding
+/// levels spanning the design space (PSU shares NU's batched group
+/// bodies).
+pub const BATCHED_KERNELS: [KernelConfig; 5] = [
+    KernelConfig::RU,
+    KernelConfig::OU,
+    KernelConfig::NU,
+    KernelConfig::PSU,
+    KernelConfig::TI,
+];
 
 /// Whether `config` has a lane-batched executor.
 pub fn supports_batch(config: KernelConfig) -> bool {
@@ -178,11 +229,43 @@ pub fn build_batch(
 ) -> Box<dyn BatchKernel> {
     match config {
         KernelConfig::RU => Box::new(batch::BatchRuKernel::new(ir, oim, lanes)),
+        KernelConfig::OU => Box::new(batch::BatchOuKernel::new(ir, oim, lanes)),
         KernelConfig::NU => Box::new(batch::BatchNuKernel::new(ir, oim, lanes, "NU")),
         KernelConfig::PSU => Box::new(batch::BatchNuKernel::new(ir, oim, lanes, "PSU")),
         KernelConfig::TI => Box::new(batch::BatchTiKernel::new(ir, oim, lanes)),
         other => panic!(
-            "kernel {} has no lane-batched executor (supported: RU, NU, PSU, TI)",
+            "kernel {} has no lane-batched executor (supported: RU, OU, NU, PSU, TI)",
+            other.name()
+        ),
+    }
+}
+
+/// The kernel configurations with *sparse* (activity-masked) batched
+/// executors — the group-walk and tape binding levels, where a (layer,
+/// op-type) group is a contiguous unit that can be gated as a whole.
+pub const SPARSE_KERNELS: [KernelConfig; 3] =
+    [KernelConfig::NU, KernelConfig::PSU, KernelConfig::TI];
+
+/// Whether `config` has a sparse batched executor.
+pub fn supports_sparse(config: KernelConfig) -> bool {
+    SPARSE_KERNELS.contains(&config)
+}
+
+/// Build a sparse (activity-masked) lane-batched kernel; `lanes` must be
+/// in `1..=64` (one activity-mask bit per lane). Panics for
+/// configurations without one — gate on [`supports_sparse`] first.
+pub fn build_sparse(
+    config: KernelConfig,
+    ir: &LayerIr,
+    oim: &Oim,
+    lanes: usize,
+) -> Box<dyn BatchKernel> {
+    match config {
+        KernelConfig::NU => Box::new(batch_sparse::SparseNuBatch::new_nu(ir, oim, lanes)),
+        KernelConfig::PSU => Box::new(batch_sparse::SparseNuBatch::new_psu(ir, oim, lanes)),
+        KernelConfig::TI => Box::new(batch_sparse::SparseTiBatch::new(ir, oim, lanes)),
+        other => panic!(
+            "kernel {} has no sparse batched executor (supported: NU, PSU, TI)",
             other.name()
         ),
     }

@@ -25,6 +25,7 @@ pub mod firrtl;
 pub mod graph;
 pub mod tensor;
 pub mod einsum;
+pub mod activity;
 pub mod kernels;
 pub mod baselines;
 pub mod perf;

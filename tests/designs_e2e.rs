@@ -4,10 +4,14 @@
 use rteaal::coordinator::compile::{compile_design, CompileOpts};
 use rteaal::coordinator::parallel::ParallelSim;
 use rteaal::designs::keccak::{keccak_f_sw, keccak_round_datapath};
-use rteaal::designs::tiny_cpu::{dhrystone_like, golden_run, tiny_cpu};
+use rteaal::designs::tiny_cpu::{
+    dhrystone_like, golden_run, lane_rom_init, tiny_cpu, tiny_cpu_divergent,
+};
 use rteaal::designs::{catalog, Design, Stimulus};
 use rteaal::graph::RefSim;
-use rteaal::kernels::{build_batch, build_with_oim, BatchKernel, KernelConfig, ALL_KERNELS};
+use rteaal::kernels::{
+    build_batch, build_sparse, build_with_oim, BatchKernel, KernelConfig, ALL_KERNELS,
+};
 
 /// tiny_cpu runs its program to the golden checksum under all 7 kernels.
 #[test]
@@ -19,6 +23,7 @@ fn tiny_cpu_checksum_under_every_kernel() {
         graph: tiny_cpu(&prog),
         stimulus: Stimulus::Zero,
         default_cycles: 0,
+        lane_init: vec![],
     };
     let c = compile_design(&d, CompileOpts::default());
     for cfg in ALL_KERNELS {
@@ -48,6 +53,7 @@ fn keccak_double_permutation_under_kernels() {
         graph: keccak_round_datapath(),
         stimulus: Stimulus::Zero,
         default_cycles: 0,
+        lane_init: vec![],
     };
     let c = compile_design(&d, CompileOpts::default());
     let ins: [u64; 5] = [0x1111, 0x2222, 0x3333, 0x4444, 0x5555];
@@ -136,6 +142,7 @@ fn batched_ti_tiny_cpu_checksum_on_every_lane() {
         graph: tiny_cpu(&prog),
         stimulus: Stimulus::Zero,
         default_cycles: 0,
+        lane_init: vec![],
     };
     let c = compile_design(&d, CompileOpts::default());
     for lanes in [1usize, 3, 8] {
@@ -157,6 +164,86 @@ fn batched_ti_tiny_cpu_checksum_on_every_lane() {
             assert_eq!(outs["halted"], 1, "lane {lane} of {lanes} not halted");
             assert_eq!(outs["checksum"], golden as u64, "lane {lane} of {lanes} checksum");
         }
+    }
+}
+
+/// Divergent lanes: a register-ROM tiny_cpu with **two distinct per-lane
+/// programs** (via `Design::lane_init`) reaches each program's own golden
+/// checksum on the right lanes — one OIM walk, different software per
+/// lane. Runs under the dense batched TI executor and the sparse
+/// activity-masked one (which must survive the pre-run pokes).
+#[test]
+fn divergent_lane_roms_reach_their_own_golden_checksums() {
+    let prog_a = dhrystone_like(12);
+    let prog_b = dhrystone_like(7);
+    let (golden_a, steps_a) = golden_run(&prog_a, 100_000);
+    let (golden_b, steps_b) = golden_run(&prog_b, 100_000);
+    assert_ne!(golden_a, golden_b, "programs must be distinguishable");
+    assert_ne!(steps_a, steps_b);
+
+    let rom_words = 32;
+    let d = Design {
+        name: "tiny_divergent".into(),
+        graph: tiny_cpu_divergent(rom_words, &prog_a),
+        stimulus: Stimulus::Zero,
+        default_cycles: 0,
+        lane_init: lane_rom_init(rom_words, &[prog_a.clone(), prog_b.clone()]),
+    };
+    let c = compile_design(&d, CompileOpts::default());
+    let lanes = 4usize; // lanes 0, 2 run prog_a; lanes 1, 3 run prog_b
+    let max_cycles = 1 + steps_a.max(steps_b) as u64;
+    for sparse in [false, true] {
+        let mut k = if sparse {
+            build_sparse(KernelConfig::TI, &c.ir, &c.oim, lanes)
+        } else {
+            build_batch(KernelConfig::TI, &c.ir, &c.oim, lanes)
+        };
+        d.apply_lane_init(&c.graph, k.as_mut());
+        let zeros = vec![0u64; 4 * lanes];
+        for _ in 0..max_cycles + 4 {
+            k.step(&zeros);
+        }
+        for lane in 0..lanes {
+            let outs: std::collections::HashMap<String, u64> =
+                k.lane_outputs(lane).into_iter().collect();
+            let (golden, which) =
+                if lane % 2 == 0 { (golden_a, "A") } else { (golden_b, "B") };
+            assert_eq!(outs["halted"], 1, "sparse={sparse} lane {lane} not halted");
+            assert_eq!(
+                outs["checksum"], golden as u64,
+                "sparse={sparse} lane {lane} (program {which}) checksum"
+            );
+        }
+        if sparse {
+            // the two fast lanes halt early, so a real fraction of the
+            // op-lane work must have been skipped
+            let stats = k.activity_stats().unwrap();
+            assert!(stats.skip_rate() > 0.0, "divergent sparse run skipped nothing");
+        }
+    }
+}
+
+/// The divergent-ROM build with a single program behaves exactly like the
+/// constant-ROM build (same checksum, same halt cycle) — the register ROM
+/// is an encoding change, not a behaviour change.
+#[test]
+fn divergent_rom_build_matches_const_rom_build() {
+    let prog = dhrystone_like(5);
+    let (golden, steps) = golden_run(&prog, 100_000);
+    for graph in [tiny_cpu(&prog), tiny_cpu_divergent(32, &prog)] {
+        let mut sim = RefSim::new(graph);
+        let mut halted_at = None;
+        for cycle in 0..5_000u64 {
+            sim.step(&[0, 0, 0, 0]);
+            let outs: std::collections::HashMap<String, u64> =
+                sim.outputs().into_iter().collect();
+            if outs["halted"] == 1 {
+                assert_eq!(outs["checksum"], golden as u64);
+                halted_at = Some(cycle + 1);
+                break;
+            }
+        }
+        assert_eq!(halted_at, Some(steps as u64 + 1));
     }
 }
 

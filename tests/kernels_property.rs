@@ -5,13 +5,15 @@
 //! and after every optimization pipeline.
 
 use rteaal::baselines::{essent_like::EssentLike, event_driven::EventDriven, verilator_like::VerilatorLike};
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::designs::catalog;
 use rteaal::einsum::CascadeSim;
 use rteaal::graph::builder::{random_circuit, random_inputs};
 use rteaal::graph::passes;
 use rteaal::graph::RefSim;
 use rteaal::kernels::{
-    build_batch, build_with_oim, unopt::UnoptKernel, BatchKernel, KernelConfig, SimKernel,
-    ALL_KERNELS, BATCHED_KERNELS,
+    build_batch, build_sparse, build_with_oim, unopt::UnoptKernel, BatchKernel, KernelConfig,
+    SimKernel, ALL_KERNELS, BATCHED_KERNELS, SPARSE_KERNELS,
 };
 use rteaal::tensor::ir::lower;
 use rteaal::tensor::oim::Oim;
@@ -185,6 +187,119 @@ fn batched_kernels_match_sequential_lanes() {
         }
         Ok(())
     });
+}
+
+/// The sparsity correctness property: every sparse (activity-masked)
+/// batched kernel is **bit-identical** — named outputs *and* the full
+/// lane-major slot file — to its dense batched counterpart on random
+/// circuits, across toggle rates {0.0, 0.05, 0.5, 1.0} and
+/// `B ∈ {1, 8, 64}`. Skipping must be invisible: a (group, lane) is only
+/// skipped when recomputation would reproduce the very same values.
+#[test]
+fn sparse_batched_is_bit_identical_to_dense_batched() {
+    propcheck::check("sparse-vs-dense", 6, |rng, size| {
+        let g = random_circuit(rng, 15 + size * 4);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let n_inputs = opt.inputs.len();
+        let widths: Vec<u8> = opt.inputs.iter().map(|p| p.width).collect();
+        for &rate in &[0.0f64, 0.05, 0.5, 1.0] {
+            for &lanes in &[1usize, 8, 64] {
+                for cfg in SPARSE_KERNELS {
+                    let mut dense = build_batch(cfg, &ir, &oim, lanes);
+                    let mut sparse = build_sparse(cfg, &ir, &oim, lanes);
+                    // toggle-rate-controlled lane-major stimulus: draw on
+                    // cycle 0, then each lane changes (every port XORed
+                    // with a nonzero delta) with probability `rate`
+                    let mut held = vec![0u64; n_inputs * lanes];
+                    for cycle in 0..6 {
+                        for l in 0..lanes {
+                            if cycle == 0 {
+                                for (i, &w) in widths.iter().enumerate() {
+                                    held[i * lanes + l] = rng.bits(w);
+                                }
+                            } else if rng.chance(rate) {
+                                for (i, &w) in widths.iter().enumerate() {
+                                    held[i * lanes + l] ^= rng.bits(w) | 1;
+                                }
+                            }
+                        }
+                        dense.step(&held);
+                        sparse.step(&held);
+                        if sparse.slots() != dense.slots() {
+                            return Err(format!(
+                                "{} sparse slot file diverged (rate {rate}, B {lanes}, cycle {cycle})",
+                                cfg.name()
+                            ));
+                        }
+                        for l in [0, lanes - 1] {
+                            if sparse.lane_outputs(l) != dense.lane_outputs(l) {
+                                return Err(format!(
+                                    "{} sparse lane {l} outputs diverged (rate {rate}, B {lanes}, cycle {cycle})",
+                                    cfg.name()
+                                ));
+                            }
+                        }
+                    }
+                    let stats = sparse
+                        .activity_stats()
+                        .ok_or_else(|| "sparse kernel reports no activity stats".to_string())?;
+                    if stats.evaluated_op_lanes > stats.total_op_lanes {
+                        return Err("evaluated op-lanes exceed total".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Skip-rate bounds on designs with deterministic activity. Idle half:
+/// `fir8` with frozen inputs (toggle rate 0.0) goes quiescent once the
+/// delay line drains, so a substantial fraction of the op-lane work must
+/// be skipped. Saturated half: `alu32` at toggle rate 1.0 — every group
+/// transitively depends only on the inputs (its result register is a
+/// write-only sink, never read back), and every lane's inputs are forced
+/// to change every cycle, so the skip-rate must be **exactly zero**.
+#[test]
+fn sparse_skip_rate_is_positive_idle_and_zero_saturated() {
+    let lanes = 8usize;
+    let cycles = 64u64;
+    for cfg in SPARSE_KERNELS {
+        // idle: inputs freeze after cycle 0 → whole cycles go quiescent
+        let d = catalog("fir8").unwrap();
+        let c = compile_design(&d, CompileOpts::default());
+        let mut k = build_sparse(cfg, &c.ir, &c.oim, lanes);
+        let mut stim = d.make_lane_stimulus_toggle(lanes, 0.0);
+        for cyc in 0..cycles {
+            k.step(&stim(cyc));
+        }
+        let idle = k.activity_stats().unwrap();
+        assert!(
+            idle.skip_rate() > 0.5,
+            "{}: idle run skipped only {:.1}% of op-lanes",
+            cfg.name(),
+            100.0 * idle.skip_rate()
+        );
+
+        // saturated: every lane's inputs forced to change every cycle
+        let d = catalog("alu32").unwrap();
+        let c = compile_design(&d, CompileOpts::default());
+        let mut k = build_sparse(cfg, &c.ir, &c.oim, lanes);
+        let mut stim = d.make_lane_stimulus_toggle(lanes, 1.0);
+        for cyc in 0..cycles {
+            k.step(&stim(cyc));
+        }
+        let hot = k.activity_stats().unwrap();
+        assert_eq!(
+            hot.evaluated_op_lanes,
+            hot.total_op_lanes,
+            "{}: saturated run must have skip-rate exactly 0 (got {:.3})",
+            cfg.name(),
+            hot.skip_rate()
+        );
+    }
 }
 
 /// OIM serialization is array-exact: export → JSON → re-import preserves
