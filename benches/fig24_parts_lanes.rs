@@ -1,0 +1,122 @@
+//! Bench: Fig 24 partitions × lanes sweep (ours, beyond the paper — see
+//! coordinator::report::fig24_parts_lanes). Quick by default; set
+//! RTEAAL_FULL=1 for full-length runs.
+//!
+//! The grid is measured **once** (`report::fig24_measure`) and reused for
+//! both the rendered table and the JSON dump
+//! (`results/fig24_parts_lanes.json`), which additionally records the
+//! sparse (partition-skipping) measurement on `alu_farm_64`.
+//!
+//! Acceptance checks built in:
+//! * composing thread-level and data-level parallelism must pay — the TI
+//!   kernel at P=4 × B=8 must achieve higher *aggregate* lane-cycles/sec
+//!   than P=1 × B=1 on `gemmini_like_8` (wall-clock: authoritative on
+//!   quiet hardware, informational on shared CI runners);
+//! * the sparse ParallelSim must skip idle partitions — with the
+//!   stimulus frozen after cycle 0 on `alu_farm_64`, the partition-cycle
+//!   skip-rate must exceed 50% (deterministic; also enforced as a cargo
+//!   test in `coordinator::parallel`).
+
+rteaal::install_tracking_alloc!();
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::coordinator::report::{self, FIG24_DESIGN};
+use rteaal::coordinator::sweep;
+use rteaal::designs::catalog;
+use rteaal::kernels::KernelConfig;
+use rteaal::util::json::{obj, Json};
+
+fn main() {
+    let ctx = report::Ctx::from_env();
+    let points = report::fig24_measure(&ctx);
+    let table = report::fig24_table(&points);
+    println!("{}", table.render());
+    if let Ok(p) = table.save_csv("fig24_parts_lanes") {
+        eprintln!("csv: {}", p.display());
+    }
+
+    // sparse partition-skipping measurement on the mostly-quiescent farm
+    let farm = catalog("alu_farm_64").expect("catalog design");
+    let cfarm = compile_design(&farm, CompileOpts::default());
+    let (parts, lanes, cycles) = (4usize, 8usize, 1000u64);
+    let sparse = sweep::measure_kernel_parts_lanes_sparse(
+        &farm,
+        &cfarm,
+        KernelConfig::PSU,
+        parts,
+        lanes,
+        cycles,
+        0.0,
+    );
+    let dense =
+        sweep::measure_kernel_parts_lanes(&farm, &cfarm, KernelConfig::PSU, parts, lanes, cycles);
+
+    // the P × B grid plus the sparse farm point as JSON
+    let mut kernels_json: std::collections::BTreeMap<String, Json> = Default::default();
+    for p in &points {
+        let per_kernel = kernels_json
+            .entry(p.kernel.name().to_string())
+            .or_insert_with(|| Json::Obj(Default::default()));
+        let Json::Obj(cells) = per_kernel else { unreachable!() };
+        for (b, sp) in &p.cells {
+            cells.insert(
+                format!("P{}xB{}", p.parts, b),
+                Json::Num(sp.hz),
+            );
+        }
+    }
+    let root = obj(vec![
+        ("design", Json::Str(FIG24_DESIGN.to_string())),
+        ("lane_cycles_per_sec", Json::Obj(kernels_json)),
+        (
+            "sparse_alu_farm_64",
+            obj(vec![
+                ("parts", Json::Int(parts as i64)),
+                ("lanes", Json::Int(lanes as i64)),
+                ("toggle_rate", Json::Num(0.0)),
+                ("partition_skip_rate", Json::Num(sparse.skip_rate.unwrap_or(0.0))),
+                ("lane_cycles_per_sec", Json::Num(sparse.hz)),
+                ("dense_lane_cycles_per_sec", Json::Num(dense.hz)),
+            ]),
+        ),
+    ]);
+    let dir = std::path::Path::new("results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join("fig24_parts_lanes.json");
+        if std::fs::write(&path, root.to_string()).is_ok() {
+            eprintln!("json: {}", path.display());
+        }
+    }
+
+    // acceptance: P=4 × B=8 aggregate beats P=1 × B=1 on the TI kernel
+    let d = catalog(FIG24_DESIGN).expect("catalog design");
+    let c = compile_design(&d, CompileOpts::default());
+    let base = sweep::measure_kernel_parts_lanes(&d, &c, KernelConfig::TI, 1, 1, cycles);
+    let scaled = sweep::measure_kernel_parts_lanes(&d, &c, KernelConfig::TI, 4, 8, cycles);
+    println!(
+        "TI aggregate throughput on {FIG24_DESIGN}: P1xB1 {:.2} M lane-cyc/s, P4xB8 {:.2} M lane-cyc/s ({:.2}x)",
+        base.hz / 1e6,
+        scaled.hz / 1e6,
+        scaled.hz / base.hz
+    );
+    assert!(
+        scaled.hz > base.hz,
+        "P=4 x B=8 aggregate throughput ({:.2e}) should exceed P=1 x B=1 ({:.2e}) on TI",
+        scaled.hz,
+        base.hz
+    );
+
+    // acceptance: idle partitions are skipped on the frozen-stimulus farm
+    let skip = sparse.skip_rate.unwrap_or(0.0);
+    println!(
+        "sparse ParallelSim on alu_farm_64 (P={parts}, B={lanes}, frozen stimulus): \
+         skip-rate {:.1}%, {:.2} M lane-cyc/s vs dense {:.2} M lane-cyc/s",
+        100.0 * skip,
+        sparse.hz / 1e6,
+        dense.hz / 1e6
+    );
+    assert!(
+        skip > 0.5,
+        "partition skip-rate {skip:.3} should exceed 0.5 with frozen stimulus"
+    );
+}

@@ -28,12 +28,20 @@
 //! holds its previous — still correct — slot values, so sparse execution
 //! is bit-identical to dense batched execution (property-tested in
 //! `tests/kernels_property.rs`).
+//!
+//! The same idea lifts one level up to thread-level partitions:
+//! [`partition::PartitionTracker`] gates whole partitions of a
+//! RepCut-style partitioned batched run over the RUM cut (sparse
+//! [`crate::coordinator::parallel::BatchParallelSim`]), skipping a
+//! quiescent partition's entire kernel step.
 
 pub mod gdg;
 pub mod mask;
+pub mod partition;
 
 pub use gdg::GroupDepGraph;
 pub use mask::ActivityTracker;
+pub use partition::{PartitionActivity, PartitionTracker};
 
 /// Cumulative activity accounting of a sparse batched run. One *op-lane*
 /// is one operation evaluated in one lane — the unit of work the dense

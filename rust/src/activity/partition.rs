@@ -1,0 +1,213 @@
+//! Partition-level lane activity masks for the batched partitioned
+//! simulator ([`crate::coordinator::parallel::BatchParallelSim`]).
+//!
+//! Where [`super::mask::ActivityTracker`] gates individual (layer,
+//! op-type) groups inside one kernel, this tracker gates whole
+//! *partitions* of a RepCut-style partitioned run: a partition is skipped
+//! for a cycle when no input port it reads changed in any lane **and** no
+//! register it reads (its own or a RUM cut register) changed at the last
+//! commit. Because every combinational slot of a partition is a pure
+//! function of exactly those boundary sources, a skipped partition's slot
+//! file — including the registers it would have committed — is identical
+//! to what stepping it would produce, so skipping is exact.
+//!
+//! The coordinator supplies the two boundary signals: per-port input
+//! change masks (compared against the previous cycle's stimulus) before
+//! stepping, and per-register change masks (observed during the RUM
+//! exchange, which already compares old vs new lane values) after
+//! stepping. Register changes feed the *next* cycle's masks — matching
+//! register semantics, where a value committed at the end of cycle `k`
+//! is first visible in cycle `k + 1`.
+
+use super::full_mask;
+
+/// Cumulative partition-level activity accounting. One *partition-cycle*
+/// is one partition stepped (all lanes) in one cycle — the unit of work a
+/// dense partitioned run spends `total_partition_cycles` of.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PartitionActivity {
+    /// Cycles stepped.
+    pub cycles: u64,
+    /// (partition, cycle) units actually stepped.
+    pub stepped_partition_cycles: u64,
+    /// (partition, cycle) units a dense run would step.
+    pub total_partition_cycles: u64,
+}
+
+impl PartitionActivity {
+    /// Fraction of partition-cycles skipped (0 = dense, →1 = idle).
+    pub fn skip_rate(&self) -> f64 {
+        if self.total_partition_cycles == 0 {
+            0.0
+        } else {
+            1.0 - self.stepped_partition_cycles as f64 / self.total_partition_cycles as f64
+        }
+    }
+
+    /// Stats accumulated since an earlier snapshot `base` of the same run.
+    pub fn since(&self, base: &PartitionActivity) -> PartitionActivity {
+        PartitionActivity {
+            cycles: self.cycles - base.cycles,
+            stepped_partition_cycles: self.stepped_partition_cycles
+                - base.stepped_partition_cycles,
+            total_partition_cycles: self.total_partition_cycles - base.total_partition_cycles,
+        }
+    }
+}
+
+/// Per-cycle partition activity state (`lanes ≤ 64`, one mask bit per
+/// lane, as in [`super::mask::ActivityTracker`]).
+#[derive(Clone, Debug)]
+pub struct PartitionTracker {
+    pub lanes: usize,
+    /// The all-lanes mask (`lanes` low bits set).
+    pub full: u64,
+    /// Input-port indices read by each partition's cone.
+    input_deps: Vec<Vec<u32>>,
+    /// Register-change masks accumulated for the *next* cycle, per
+    /// partition (filled by [`Self::note_reg_change`] after stepping).
+    pending: Vec<u64>,
+    /// This cycle's active-lane mask per partition.
+    active: Vec<u64>,
+    /// First cycle (or post-poke): step everything once to establish all
+    /// combinational slot values.
+    cold: bool,
+    stats: PartitionActivity,
+}
+
+impl PartitionTracker {
+    /// `input_deps[p]` lists the input-port indices partition `p` reads.
+    pub fn new(input_deps: Vec<Vec<u32>>, lanes: usize) -> Self {
+        let full = full_mask(lanes);
+        let parts = input_deps.len();
+        PartitionTracker {
+            lanes,
+            full,
+            input_deps,
+            pending: vec![0; parts],
+            active: vec![0; parts],
+            cold: true,
+            stats: PartitionActivity::default(),
+        }
+    }
+
+    /// Compute this cycle's per-partition activity masks from the pending
+    /// register changes and the per-port input change masks. Call once per
+    /// cycle, before stepping the partitions.
+    pub fn begin_cycle(&mut self, input_changed: &[u64]) {
+        if self.cold {
+            self.cold = false;
+            for a in &mut self.active {
+                *a = self.full;
+            }
+        } else {
+            for p in 0..self.active.len() {
+                let mut m = self.pending[p];
+                for &i in &self.input_deps[p] {
+                    m |= input_changed[i as usize];
+                }
+                self.active[p] = m;
+            }
+        }
+        for x in &mut self.pending {
+            *x = 0;
+        }
+        self.stats.cycles += 1;
+        self.stats.total_partition_cycles += self.active.len() as u64;
+        self.stats.stepped_partition_cycles +=
+            self.active.iter().filter(|&&m| m != 0).count() as u64;
+    }
+
+    /// Whether partition `p` must step this cycle.
+    #[inline]
+    pub fn is_active(&self, p: usize) -> bool {
+        self.active[p] != 0
+    }
+
+    /// Record that a register read by `readers` changed in the lanes of
+    /// `mask` — those partitions must step next cycle.
+    pub fn note_reg_change(&mut self, readers: &[u32], mask: u64) {
+        for &r in readers {
+            self.pending[r as usize] |= mask;
+        }
+    }
+
+    /// Invalidate all cached slot values: the next cycle steps every
+    /// partition. Used after out-of-band slot writes (`poke_lane`), which
+    /// bypass boundary change detection.
+    pub fn force_recold(&mut self) {
+        self.cold = true;
+    }
+
+    pub fn stats(&self) -> PartitionActivity {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Masks follow exactly the boundary sources that changed: input
+    /// changes gate the partitions whose cones read the port this cycle,
+    /// register changes gate their readers the following cycle.
+    #[test]
+    fn masks_follow_inputs_and_registers() {
+        // partition 0 reads port 0, partition 1 reads port 1, partition 2
+        // reads no inputs (register-driven only)
+        let mut t = PartitionTracker::new(vec![vec![0], vec![1], vec![]], 4);
+        assert_eq!(t.full, 0b1111);
+
+        // cold cycle: everything steps
+        t.begin_cycle(&[0, 0]);
+        assert!(t.is_active(0) && t.is_active(1) && t.is_active(2));
+
+        // port 0 changed in lane 2 only → partition 0 alone
+        t.begin_cycle(&[0b0100, 0]);
+        assert!(t.is_active(0));
+        assert!(!t.is_active(1));
+        assert!(!t.is_active(2));
+
+        // a register read by partitions 1 and 2 changed in lanes 0, 3
+        t.note_reg_change(&[1, 2], 0b1001);
+        t.begin_cycle(&[0, 0]);
+        assert!(!t.is_active(0));
+        assert!(t.is_active(1));
+        assert!(t.is_active(2));
+
+        // quiescent
+        t.begin_cycle(&[0, 0]);
+        assert!(!t.is_active(0) && !t.is_active(1) && !t.is_active(2));
+
+        let s = t.stats();
+        assert_eq!(s.cycles, 4);
+        assert_eq!(s.total_partition_cycles, 12);
+        assert_eq!(s.stepped_partition_cycles, 3 + 1 + 2);
+        assert!((s.skip_rate() - 0.5).abs() < 1e-12);
+
+        // recold forces a full cycle again
+        t.force_recold();
+        t.begin_cycle(&[0, 0]);
+        assert!(t.is_active(0) && t.is_active(1) && t.is_active(2));
+    }
+
+    #[test]
+    fn partition_activity_since_arithmetic() {
+        let a = PartitionActivity {
+            cycles: 10,
+            stepped_partition_cycles: 5,
+            total_partition_cycles: 40,
+        };
+        let b = PartitionActivity {
+            cycles: 4,
+            stepped_partition_cycles: 5,
+            total_partition_cycles: 16,
+        };
+        let d = a.since(&b);
+        assert_eq!(d.cycles, 6);
+        assert_eq!(d.stepped_partition_cycles, 0);
+        assert_eq!(d.total_partition_cycles, 24);
+        assert!((d.skip_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(PartitionActivity::default().skip_rate(), 0.0);
+    }
+}

@@ -29,12 +29,20 @@ COMMANDS:
             [--backend B]      interp|verilator|essent|event|parallel (default interp)
             [--threads N]      partitions for --backend parallel
             [--lanes B]        lane-batched run: B decorrelated stimulus
-                               lanes per OIM walk (kernels RU|OU|NU|PSU|TI);
+                               lanes per OIM walk (all seven kernels);
                                reports aggregate lane-cycles/sec
-            [--sparse]         activity-masked sparse batched run (kernels
-                               NU|PSU|TI, B <= 64): groups whose inputs
-                               changed in no lane are skipped; reports
-                               skip-rate alongside throughput
+            [--parts P]        partitioned lane-batched run: P thread-level
+                               partitions x B lanes in one run (RepCut x
+                               batching); reports aggregate lane-cycles/sec,
+                               replication and cut size. With --sparse,
+                               quiescent partitions are skipped entirely
+                               (per-partition activity masks over the RUM
+                               cut, B <= 64) and the partition skip-rate is
+                               reported
+            [--sparse]         activity-masked sparse batched run (without
+                               --parts: kernels NU|PSU|TI, B <= 64 — groups
+                               whose inputs changed in no lane are skipped;
+                               reports skip-rate alongside throughput)
             [--toggle R]       with --sparse: drive toggle-rate-controlled
                                stimulus (lane inputs change with
                                probability R per cycle; default random)
@@ -125,14 +133,87 @@ fn validate_lanes(lanes: usize, sparse: bool) -> Result<()> {
     Ok(())
 }
 
+/// Validate and parse `--toggle`: requires `--sparse`, a rate in [0, 1],
+/// and a design whose stimulus actually responds to it.
+fn toggle_arg(args: &Args, d: &crate::designs::Design, sparse: bool) -> Result<Option<f64>> {
+    match args.opt("toggle") {
+        Some(_) if !sparse => bail!("--toggle requires --sparse"),
+        Some(_) if matches!(d.stimulus, crate::designs::Stimulus::Zero) => bail!(
+            "--toggle has no effect on '{}': its stimulus is all-zero (self-driving design)",
+            d.name
+        ),
+        Some(_) => {
+            let rate = args.opt_f64("toggle", 0.05)?;
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("--toggle expects a rate in [0, 1], got {rate}");
+            }
+            Ok(Some(rate))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_sim(args: &Args) -> Result<()> {
     let d = design_arg(args)?;
     let cycles = args.opt_u64("cycles", d.default_cycles)?;
     let backend = args.opt_or("backend", "interp");
     let lanes = args.opt_usize("lanes", 1)?;
+    let parts = args.opt_usize("parts", 1)?;
+    // an *explicit* --parts 1 still routes through BatchParallelSim, so a
+    // P ∈ {1, 2, 4} sweep keeps uniform semantics (same kernels accepted,
+    // same partition-level sparse metric) across every point
+    let parts_given = args.opt("parts").is_some();
+    if parts == 0 {
+        bail!("--parts must be >= 1 (got 0)");
+    }
     let sparse = args.flag("sparse");
     validate_lanes(lanes, sparse)?;
     let c = compile_design(&d, CompileOpts { fuse: args.opt("vcd").is_none() });
+
+    if parts_given {
+        if backend != "interp" {
+            bail!("--parts requires --backend interp (got '{backend}')");
+        }
+        if args.opt("vcd").is_some() {
+            bail!("--parts does not support --vcd (waveforms are per-lane)");
+        }
+        let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
+        let toggle = toggle_arg(args, &d, sparse)?;
+        let mut sim = super::parallel::BatchParallelSim::new(&c.ir, cfg, parts, lanes, sparse);
+        for (slot, lane, value) in d.resolved_lane_init(&c.graph, lanes) {
+            sim.poke_lane(slot, lane, value);
+        }
+        let mut stim = match toggle {
+            Some(rate) => d.make_lane_stimulus_toggle(lanes, rate),
+            None => d.make_lane_stimulus(lanes),
+        };
+        let t0 = std::time::Instant::now();
+        for cyc in 0..cycles {
+            sim.step(&stim(cyc));
+        }
+        let dt = t0.elapsed();
+        let aggregate = (cycles as f64 * lanes as f64) / dt.as_secs_f64().max(1e-12);
+        println!(
+            "{} x{parts} parts x{lanes} lanes: {cycles} cycles/lane in {} ({:.2} M lane-cyc/s aggregate), replication {:.2}x, cut {}",
+            cfg.name(),
+            crate::util::fmt_duration(dt),
+            aggregate / 1e6,
+            sim.replication_factor,
+            sim.cut_size()
+        );
+        if let Some(stats) = sim.activity_stats() {
+            println!(
+                "  sparse: partition skip-rate {:.1}% ({} of {} partition-cycles stepped)",
+                100.0 * stats.skip_rate(),
+                stats.stepped_partition_cycles,
+                stats.total_partition_cycles
+            );
+        }
+        for (oname, v) in sim.lane_outputs(0) {
+            println!("  lane0 out {oname} = {v:#x}");
+        }
+        return Ok(());
+    }
 
     if lanes > 1 || sparse {
         if backend != "interp" {
@@ -143,21 +224,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         }
         let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
         // validate --toggle before paying for kernel construction
-        let toggle = match args.opt("toggle") {
-            Some(_) if !sparse => bail!("--toggle requires --sparse"),
-            Some(_) if matches!(d.stimulus, crate::designs::Stimulus::Zero) => bail!(
-                "--toggle has no effect on '{}': its stimulus is all-zero (self-driving design)",
-                d.name
-            ),
-            Some(_) => {
-                let rate = args.opt_f64("toggle", 0.05)?;
-                if !(0.0..=1.0).contains(&rate) {
-                    bail!("--toggle expects a rate in [0, 1], got {rate}");
-                }
-                Some(rate)
-            }
-            None => None,
-        };
+        let toggle = toggle_arg(args, &d, sparse)?;
         let mut kernel = if sparse {
             if !crate::kernels::supports_sparse(cfg) {
                 bail!(
@@ -167,12 +234,6 @@ fn cmd_sim(args: &Args) -> Result<()> {
             }
             crate::kernels::build_sparse(cfg, &c.ir, &c.oim, lanes)
         } else {
-            if !crate::kernels::supports_batch(cfg) {
-                bail!(
-                    "kernel {} has no lane-batched executor (use RU|OU|NU|PSU|TI)",
-                    cfg.name()
-                );
-            }
             crate::kernels::build_batch(cfg, &c.ir, &c.oim, lanes)
         };
         d.apply_lane_init(&c.graph, kernel.as_mut());
@@ -368,5 +429,30 @@ mod tests {
         assert!(validate_lanes(bad.opt_usize("lanes", 1).unwrap(), bad.flag("sparse")).is_err());
         let bad = Args::parse(&v(&["sim", "--design", "alu32", "--lanes", "65", "--sparse"]));
         assert!(validate_lanes(bad.opt_usize("lanes", 1).unwrap(), bad.flag("sparse")).is_err());
+    }
+
+    /// `sim --parts P --lanes B [--sparse]` argument shapes parse the way
+    /// `cmd_sim` consumes them, and the sparse lane cap still applies to
+    /// the partitioned path.
+    #[test]
+    fn sim_parts_arguments_parse() {
+        let a = Args::parse(&v(&[
+            "sim", "--design", "gemmini_like_4", "--parts", "4", "--lanes", "8", "--sparse",
+        ]));
+        assert_eq!(a.command, "sim");
+        assert_eq!(a.opt_usize("parts", 1).unwrap(), 4);
+        assert_eq!(a.opt_usize("lanes", 1).unwrap(), 8);
+        assert!(a.flag("sparse"));
+        assert!(validate_lanes(a.opt_usize("lanes", 1).unwrap(), a.flag("sparse")).is_ok());
+
+        // --parts defaults to 1 (the unpartitioned batched path)
+        let b = Args::parse(&v(&["sim", "--design", "alu32", "--lanes", "8"]));
+        assert_eq!(b.opt_usize("parts", 1).unwrap(), 1);
+
+        // the mask cap binds P x B sparse runs exactly as unpartitioned ones
+        let c = Args::parse(&v(&[
+            "sim", "--design", "alu32", "--parts", "2", "--lanes", "65", "--sparse",
+        ]));
+        assert!(validate_lanes(c.opt_usize("lanes", 1).unwrap(), c.flag("sparse")).is_err());
     }
 }

@@ -1,5 +1,5 @@
 //! RepCut-style partitioned multi-threaded simulation (paper Cascade 2,
-//! Appendix C).
+//! Appendix C), composed with data-level lane batching.
 //!
 //! The graph's registers are partitioned; each partition owns the
 //! transitive fan-in cone of its registers' next-state logic (logic read
@@ -8,171 +8,460 @@
 //! scaling). At the end of each cycle, the **RUM** (register update map)
 //! propagates each committed register value to the partitions that read
 //! it — Cascade 2's final Einsum `LI_{c+1} = LI_c · RUM`.
+//!
+//! [`BatchParallelSim`] generalizes the whole machinery over `B` stimulus
+//! lanes: each partition holds one **lane-batched** kernel
+//! ([`crate::kernels::BatchKernel`], lane-major `slots[s * B + lane]`),
+//! and the RUM step moves `B` lanes of every cut register per cycle —
+//! thread-level (partitions `P`) × data-level (lanes `B`) parallelism in
+//! one run. The scalar [`ParallelSim`] is a thin `B = 1` wrapper.
+//!
+//! With `sparse = true` the run additionally keeps **per-partition lane
+//! activity masks over the RUM cut**
+//! ([`crate::activity::PartitionTracker`]): a partition is skipped for a
+//! cycle when no input port its cone reads changed in any lane and no
+//! register it reads changed at the last commit. Skipping is exact —
+//! a quiescent partition's slot file (including the registers it would
+//! commit) is already identical to what stepping would produce — so
+//! sparse partitioned runs are bit-identical to dense ones.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 
-use crate::kernels::{self, KernelConfig, SimKernel};
+use crate::activity::{PartitionActivity, PartitionTracker};
+use crate::graph::ops::mask;
+use crate::kernels::{self, BatchKernel, KernelConfig};
 use crate::tensor::ir::LayerIr;
 
-/// One partition: a filtered LayerIr + its kernel.
+/// One partition: a lane-batched kernel over the filtered LayerIr plus
+/// the registers it owns (commits).
 struct Partition {
-    kernel: Box<dyn SimKernel>,
+    kernel: Box<dyn BatchKernel>,
     /// registers owned (committed) by this partition
-    #[allow(dead_code)]
     owned_regs: Vec<u32>,
 }
 
-/// RUM entry: a register committed by `owner`, read by `readers`.
-struct RumEntry {
+/// A register tracked across the cycle boundary: committed by `owner`,
+/// read by `readers` (which may include the owner itself — its own
+/// next-state logic reading the register back).
+struct TrackedReg {
     owner: usize,
     reg_slot: u32,
-    readers: Vec<usize>,
+    /// every partition whose cone reads the register (sorted)
+    readers: Vec<u32>,
+    /// `readers` minus the owner — the RUM value-propagation targets
+    rum_readers: Vec<u32>,
 }
 
-pub struct ParallelSim {
-    parts: Vec<Partition>,
-    rum: Vec<RumEntry>,
-    outputs: Vec<(String, u32)>,
-    /// partition that computes each output (partition 0 by construction)
-    pub replication_factor: f64,
+/// The compile-time partitioning: filtered per-partition IRs plus the
+/// dependency structure the runtime needs (RUM entries, per-partition
+/// input-port reads).
+struct Partitioning {
+    part_irs: Vec<LayerIr>,
+    tracked: Vec<TrackedReg>,
+    /// input-port indices read by each partition's cone
+    input_deps: Vec<Vec<u32>>,
+    replication_factor: f64,
 }
 
-impl ParallelSim {
-    /// Partition `ir` into `n` pieces and build one kernel per piece.
-    pub fn new(ir: &LayerIr, cfg: KernelConfig, n: usize) -> Self {
-        assert!(n >= 1);
-        // 1. assign registers round-robin (RepCut uses hypergraph
-        //    partitioning; round-robin keeps this substrate simple while
-        //    exercising the same replication/sync machinery)
-        let n_regs = ir.commits.len();
-        let owner_of_reg: Vec<usize> = (0..n_regs).map(|i| i % n).collect();
+/// Partition `ir` into `n` pieces: round-robin register ownership, then
+/// one transitive fan-in cone per partition (RepCut uses hypergraph
+/// partitioning; round-robin keeps this substrate simple while
+/// exercising the same replication/sync machinery). Partition 0
+/// additionally owns the design outputs.
+fn partition_ir(ir: &LayerIr, n: usize) -> Partitioning {
+    assert!(n >= 1);
+    let n_regs = ir.commits.len();
+    let owner_of_reg: Vec<usize> = (0..n_regs).map(|i| i % n).collect();
 
-        // 2. compute each partition's cone: ops needed for its registers'
-        //    next-state (+ partition 0 also owns the design outputs)
-        let mut writer_of_slot: Vec<Option<(usize, usize)>> = vec![None; ir.num_slots];
-        for (li, layer) in ir.layers.iter().enumerate() {
-            for (oi, rec) in layer.iter().enumerate() {
-                writer_of_slot[rec.out as usize] = Some((li, oi));
+    let mut writer_of_slot: Vec<Option<(usize, usize)>> = vec![None; ir.num_slots];
+    for (li, layer) in ir.layers.iter().enumerate() {
+        for (oi, rec) in layer.iter().enumerate() {
+            writer_of_slot[rec.out as usize] = Some((li, oi));
+        }
+    }
+    let mut input_of: Vec<Option<u32>> = vec![None; ir.num_slots];
+    for (i, &s) in ir.input_slots.iter().enumerate() {
+        input_of[s as usize] = Some(i as u32);
+    }
+
+    let mut part_irs = Vec::with_capacity(n);
+    let mut total_kept = 0usize;
+    // source slots (registers / inputs / constants) reached by each cone
+    let mut sources_per_part: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); n];
+    let mut input_deps: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for p in 0..n {
+        let mut keep: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); ir.layers.len()];
+        let mut stack: Vec<u32> = Vec::new();
+        for (ri, c) in ir.commits.iter().enumerate() {
+            if owner_of_reg[ri] == p {
+                stack.push(c.1);
             }
         }
+        if p == 0 {
+            for (_, s) in &ir.output_slots {
+                stack.push(*s);
+            }
+        }
+        let mut visited = vec![false; ir.num_slots];
+        while let Some(slot) = stack.pop() {
+            if visited[slot as usize] {
+                continue;
+            }
+            visited[slot as usize] = true;
+            if let Some((li, oi)) = writer_of_slot[slot as usize] {
+                keep[li].insert(oi);
+                let rec = &ir.layers[li][oi];
+                for r in crate::tensor::oim::operand_slots(rec, &ir.ext_args) {
+                    stack.push(r);
+                }
+            } else {
+                // a source slot: register, input port or constant
+                sources_per_part[p].insert(slot);
+                if let Some(port) = input_of[slot as usize] {
+                    input_deps[p].push(port);
+                }
+            }
+        }
+        input_deps[p].sort_unstable();
+        input_deps[p].dedup();
+        // filtered ir
+        let mut pir = ir.clone();
+        pir.layers = ir
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, layer)| keep[li].iter().map(|&oi| layer[oi]).collect::<Vec<_>>())
+            .collect();
+        pir.commits = ir
+            .commits
+            .iter()
+            .enumerate()
+            .filter(|(ri, _)| owner_of_reg[*ri] == p)
+            .map(|(_, c)| *c)
+            .collect();
+        if p != 0 {
+            pir.output_slots = Vec::new();
+        }
+        total_kept += pir.total_ops();
+        part_irs.push(pir);
+    }
+
+    // RUM / boundary tracking: for each register, which partitions read it
+    let mut tracked = Vec::new();
+    for (ri, c) in ir.commits.iter().enumerate() {
+        let owner = owner_of_reg[ri];
+        let readers: Vec<u32> = (0..n)
+            .filter(|&p| sources_per_part[p].contains(&c.0))
+            .map(|p| p as u32)
+            .collect();
+        if readers.is_empty() {
+            continue; // write-only register: nothing to propagate or gate
+        }
+        let rum_readers: Vec<u32> =
+            readers.iter().copied().filter(|&p| p as usize != owner).collect();
+        tracked.push(TrackedReg { owner, reg_slot: c.0, readers, rum_readers });
+    }
+
+    let replication_factor = total_kept as f64 / ir.total_ops().max(1) as f64;
+    Partitioning { part_irs, tracked, input_deps, replication_factor }
+}
+
+/// Partitioned **and** lane-batched simulation: `P` thread-level
+/// partitions, each running a lane-batched kernel over `B` stimulus
+/// lanes, synchronized by a `B`-lane RUM exchange each cycle. Optionally
+/// sparse (per-partition activity masks over the RUM cut, `B ≤ 64`).
+pub struct BatchParallelSim {
+    parts: Vec<Partition>,
+    tracked: Vec<TrackedReg>,
+    lanes: usize,
+    outputs: Vec<(String, u32)>,
+    /// replicated-ops / total-ops (RepCut's replication overhead)
+    pub replication_factor: f64,
+    /// owning partition per committed register slot
+    owner_of_slot: HashMap<u32, usize>,
+    /// lane-major shadow of every tracked register's last seen values
+    /// (`shadow[t * B + lane]`), driving the differential RUM exchange
+    shadow: Vec<u64>,
+    /// scratch for one register's lane values during the exchange
+    scratch: Vec<u64>,
+    /// sparse mode: the per-partition activity tracker
+    tracker: Option<PartitionTracker>,
+    /// previous cycle's (masked) stimulus, for boundary change detection
+    prev_inputs: Vec<u64>,
+    input_changed: Vec<u64>,
+    input_masks: Vec<u64>,
+    num_inputs: usize,
+}
+
+impl BatchParallelSim {
+    /// Partition `ir` into `n` pieces and build one `lanes`-wide batched
+    /// kernel of configuration `cfg` per piece. `sparse` enables the
+    /// per-partition activity masks (requires `lanes ≤ 64`).
+    pub fn new(ir: &LayerIr, cfg: KernelConfig, n: usize, lanes: usize, sparse: bool) -> Self {
+        assert!(lanes >= 1, "lanes must be >= 1");
+        let parting = partition_ir(ir, n);
         let mut parts = Vec::with_capacity(n);
-        let mut total_kept = 0usize;
-        let mut needed_regs_per_part: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); n];
-        for p in 0..n {
-            let mut keep: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); ir.layers.len()];
-            let mut stack: Vec<u32> = Vec::new();
-            for (ri, c) in ir.commits.iter().enumerate() {
-                if owner_of_reg[ri] == p {
-                    stack.push(c.1);
-                }
-            }
-            if p == 0 {
-                for (_, s) in &ir.output_slots {
-                    stack.push(*s);
-                }
-            }
-            let mut visited = vec![false; ir.num_slots];
-            while let Some(slot) = stack.pop() {
-                if visited[slot as usize] {
-                    continue;
-                }
-                visited[slot as usize] = true;
-                if let Some((li, oi)) = writer_of_slot[slot as usize] {
-                    keep[li].insert(oi);
-                    let rec = &ir.layers[li][oi];
-                    for r in crate::tensor::oim::operand_slots(rec, &ir.ext_args) {
-                        stack.push(r);
-                    }
-                } else {
-                    // a source slot: if it's a register, partition p reads it
-                    needed_regs_per_part[p].insert(slot);
-                }
-            }
-            // filtered ir
-            let mut pir = ir.clone();
-            pir.layers = ir
-                .layers
-                .iter()
-                .enumerate()
-                .map(|(li, layer)| {
-                    keep[li].iter().map(|&oi| layer[oi]).collect::<Vec<_>>()
-                })
-                .collect();
-            pir.commits = ir
-                .commits
-                .iter()
-                .enumerate()
-                .filter(|(ri, _)| owner_of_reg[*ri] == p)
-                .map(|(_, c)| *c)
-                .collect();
-            if p != 0 {
-                pir.output_slots = Vec::new();
-            }
-            total_kept += pir.total_ops();
-            let oim = crate::tensor::oim::Oim::from_ir(&pir);
-            let kernel = kernels::build_with_oim(cfg, &pir, &oim);
+        for pir in &parting.part_irs {
+            let oim = crate::tensor::oim::Oim::from_ir(pir);
+            let kernel = kernels::build_batch(cfg, pir, &oim, lanes);
             parts.push(Partition {
                 kernel,
                 owned_regs: pir.commits.iter().map(|c| c.0).collect(),
             });
         }
-
-        // 3. RUM: for each register, which partitions read it
-        let mut rum = Vec::new();
-        for (ri, c) in ir.commits.iter().enumerate() {
-            let owner = owner_of_reg[ri];
-            let readers: Vec<usize> = (0..n)
-                .filter(|&p| p != owner && needed_regs_per_part[p].contains(&c.0))
-                .collect();
-            if !readers.is_empty() {
-                rum.push(RumEntry { owner, reg_slot: c.0, readers });
+        let mut owner_of_slot = HashMap::new();
+        for (p, part) in parts.iter().enumerate() {
+            for &slot in &part.owned_regs {
+                owner_of_slot.insert(slot, p);
             }
         }
-
-        let replication_factor = total_kept as f64 / ir.total_ops().max(1) as f64;
-        ParallelSim { parts, rum, outputs: ir.output_slots.clone(), replication_factor }
+        let init = ir.initial_slots();
+        let mut shadow = vec![0u64; parting.tracked.len() * lanes];
+        for (t, entry) in parting.tracked.iter().enumerate() {
+            for l in 0..lanes {
+                shadow[t * lanes + l] = init[entry.reg_slot as usize];
+            }
+        }
+        let num_inputs = ir.input_slots.len();
+        let tracker = if sparse {
+            Some(PartitionTracker::new(parting.input_deps, lanes))
+        } else {
+            None
+        };
+        BatchParallelSim {
+            parts,
+            tracked: parting.tracked,
+            lanes,
+            outputs: ir.output_slots.clone(),
+            replication_factor: parting.replication_factor,
+            owner_of_slot,
+            shadow,
+            scratch: vec![0u64; lanes],
+            tracker,
+            prev_inputs: vec![0u64; num_inputs * lanes],
+            input_changed: vec![0u64; num_inputs],
+            input_masks: ir.input_widths.iter().map(|&w| mask(w)).collect(),
+            num_inputs,
+        }
     }
 
-    /// One cycle: partitions evaluate + commit concurrently, then the RUM
-    /// synchronization step exchanges committed register values.
+    /// One cycle for every lane: (active) partitions evaluate + commit
+    /// concurrently, then the RUM synchronization step exchanges the
+    /// lanes of each committed cut register that actually changed.
+    /// `inputs` is lane-major (`inputs[i * lanes + lane]`), as for
+    /// [`crate::kernels::BatchKernel::step`].
     pub fn step(&mut self, inputs: &[u64]) {
-        if self.parts.len() == 1 {
-            self.parts[0].kernel.step(inputs);
-            return;
+        debug_assert_eq!(inputs.len(), self.num_inputs * self.lanes);
+        // 1. sparse: boundary input change detection vs the previous cycle
+        if self.tracker.is_some() {
+            for i in 0..self.num_inputs {
+                let m = self.input_masks[i];
+                let base = i * self.lanes;
+                let mut ch = 0u64;
+                for l in 0..self.lanes {
+                    let nv = inputs[base + l] & m;
+                    if self.prev_inputs[base + l] != nv {
+                        self.prev_inputs[base + l] = nv;
+                        ch |= 1u64 << l;
+                    }
+                }
+                self.input_changed[i] = ch;
+            }
         }
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for part in &mut self.parts {
-                let inputs = inputs.to_vec();
-                handles.push(scope.spawn(move || part.kernel.step(&inputs)));
+        if let Some(tracker) = &mut self.tracker {
+            tracker.begin_cycle(&self.input_changed);
+        }
+
+        // 2. step the active partitions concurrently
+        let tracker = &self.tracker;
+        if self.parts.len() == 1 {
+            let active = match tracker {
+                Some(t) => t.is_active(0),
+                None => true,
+            };
+            if active {
+                self.parts[0].kernel.step(inputs);
             }
-            for h in handles {
-                h.join().expect("partition thread panicked");
+        } else {
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (p, part) in self.parts.iter_mut().enumerate() {
+                    if let Some(t) = tracker {
+                        if !t.is_active(p) {
+                            continue; // quiescent partition: skipped entirely
+                        }
+                    }
+                    handles.push(scope.spawn(move || part.kernel.step(inputs)));
+                }
+                for h in handles {
+                    h.join().expect("partition thread panicked");
+                }
+            });
+        }
+
+        // 3. RUM exchange (differential: only changed lanes cross
+        //    partitions), feeding next cycle's activity masks
+        let sparse = self.tracker.is_some();
+        for t_idx in 0..self.tracked.len() {
+            let entry = &self.tracked[t_idx];
+            if !sparse && entry.rum_readers.is_empty() {
+                continue; // only the owner reads it: nothing to move
             }
-        });
-        // RUM exchange (differential: only changed values cross partitions)
-        for entry in &self.rum {
-            let v = self.parts[entry.owner].kernel.slots()[entry.reg_slot as usize];
-            for &r in &entry.readers {
-                if self.parts[r].kernel.slots()[entry.reg_slot as usize] != v {
-                    self.parts[r].kernel.poke(entry.reg_slot, v);
+            if let Some(t) = &self.tracker {
+                // a skipped owner did not commit, so its registers
+                // provably hold their previous values (RUM pokes only
+                // write *non-owned* slots): skip the whole lane scan
+                if !t.is_active(entry.owner) {
+                    continue;
+                }
+            }
+            let b = self.lanes;
+            let base = entry.reg_slot as usize * b;
+            self.scratch
+                .copy_from_slice(&self.parts[entry.owner].kernel.slots()[base..base + b]);
+            let sh = t_idx * b;
+            let mut changed = 0u64;
+            for l in 0..b {
+                if self.shadow[sh + l] != self.scratch[l] {
+                    self.shadow[sh + l] = self.scratch[l];
+                    if sparse {
+                        changed |= 1u64 << l;
+                    }
+                    for &r in &entry.rum_readers {
+                        self.parts[r as usize].kernel.poke_lane(
+                            entry.reg_slot,
+                            l,
+                            self.scratch[l],
+                        );
+                    }
+                }
+            }
+            if changed != 0 {
+                if let Some(tr) = &mut self.tracker {
+                    tr.note_reg_change(&entry.readers, changed);
                 }
             }
         }
     }
 
-    pub fn outputs(&self) -> Vec<(String, u64)> {
+    /// Named design outputs as seen by one lane (partition 0 computes the
+    /// outputs by construction).
+    pub fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         let v = self.parts[0].kernel.slots();
-        self.outputs.iter().map(|(n, s)| (n.clone(), v[*s as usize])).collect()
+        self.outputs
+            .iter()
+            .map(|(n, s)| (n.clone(), v[*s as usize * self.lanes + lane]))
+            .collect()
+    }
+
+    /// [`Self::lane_outputs`] into a reusable buffer: only the values are
+    /// rewritten, the names are cloned once — no per-call allocation.
+    pub fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        if buf.len() != self.outputs.len() {
+            *buf = self.outputs.iter().map(|(n, _)| (n.clone(), 0)).collect();
+        }
+        let v = self.parts[0].kernel.slots();
+        for (dst, (_, s)) in buf.iter_mut().zip(&self.outputs) {
+            dst.1 = v[*s as usize * self.lanes + lane];
+        }
+    }
+
+    /// Committed value of register slot `reg_slot` in `lane`, read from
+    /// the partition that owns (commits) the register.
+    pub fn reg_lane(&self, reg_slot: u32, lane: usize) -> u64 {
+        let owner = *self
+            .owner_of_slot
+            .get(&reg_slot)
+            .unwrap_or_else(|| panic!("slot {reg_slot} is not a committed register"));
+        self.parts[owner].kernel.slots()[reg_slot as usize * self.lanes + lane]
+    }
+
+    /// Write one lane of one slot in every partition's slot file
+    /// (divergent-lane initialization). Keeps the RUM shadow consistent
+    /// and, in sparse mode, invalidates the activity state so the next
+    /// cycle re-evaluates everything.
+    pub fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        for part in &mut self.parts {
+            part.kernel.poke_lane(slot, lane, value);
+        }
+        for (t_idx, t) in self.tracked.iter().enumerate() {
+            if t.reg_slot == slot {
+                self.shadow[t_idx * self.lanes + lane] = value;
+            }
+        }
+        if let Some(tr) = &mut self.tracker {
+            tr.force_recold();
+        }
+    }
+
+    /// Partition-level activity accounting of a sparse run; `None` on
+    /// dense ones.
+    pub fn activity_stats(&self) -> Option<PartitionActivity> {
+        self.tracker.as_ref().map(|t| t.stats())
+    }
+
+    /// Registers owned (committed) by partition `p` — the ownership
+    /// invariant every partition's commits must respect (see the unit
+    /// tests).
+    pub fn owned_regs(&self, p: usize) -> &[u32] {
+        &self.parts[p].owned_regs
     }
 
     pub fn num_partitions(&self) -> usize {
         self.parts.len()
     }
 
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// (register, reader) pairs whose values cross partitions each cycle.
+    pub fn cut_size(&self) -> usize {
+        self.tracked.iter().map(|e| e.rum_readers.len()).sum()
+    }
+}
+
+/// Scalar RepCut-style partitioned simulation — a thin `B = 1` wrapper
+/// over [`BatchParallelSim`] keeping the original single-lane API.
+pub struct ParallelSim {
+    inner: BatchParallelSim,
+    outputs_buf: Vec<(String, u64)>,
+    pub replication_factor: f64,
+}
+
+impl ParallelSim {
+    /// Partition `ir` into `n` pieces and build one kernel per piece.
+    pub fn new(ir: &LayerIr, cfg: KernelConfig, n: usize) -> Self {
+        let inner = BatchParallelSim::new(ir, cfg, n, 1, false);
+        let replication_factor = inner.replication_factor;
+        ParallelSim { inner, outputs_buf: Vec::new(), replication_factor }
+    }
+
+    /// One cycle: partitions evaluate + commit concurrently, then the RUM
+    /// synchronization step exchanges committed register values.
+    pub fn step(&mut self, inputs: &[u64]) {
+        self.inner.step(inputs);
+    }
+
+    /// Named design outputs. The values are refreshed into an internal
+    /// buffer — no allocation per call (this sits in hot sweep loops).
+    pub fn outputs(&mut self) -> &[(String, u64)] {
+        self.inner.write_lane_outputs(0, &mut self.outputs_buf);
+        &self.outputs_buf
+    }
+
+    /// Registers owned (committed) by partition `p`.
+    pub fn owned_regs(&self, p: usize) -> &[u32] {
+        self.inner.owned_regs(p)
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.inner.num_partitions()
+    }
+
     /// Registers whose values cross partitions each cycle.
     pub fn cut_size(&self) -> usize {
-        self.rum.iter().map(|e| e.readers.len()).sum()
+        self.inner.cut_size()
     }
 }
 
@@ -188,7 +477,6 @@ mod tests {
         let d = catalog("rocket_like_1c").unwrap();
         let (opt, _) = optimize(&d.graph);
         let ir = lower(&opt);
-        let mut single = crate::kernels::build(KernelConfig::PSU, &ir);
         for n in [2usize, 4] {
             let mut par = ParallelSim::new(&ir, KernelConfig::PSU, n);
             assert!(par.replication_factor >= 1.0);
@@ -201,7 +489,6 @@ mod tests {
                 assert_eq!(par.outputs(), single_fresh.outputs(), "n={n} cycle={c}");
             }
         }
-        let _ = &mut single;
     }
 
     #[test]
@@ -222,12 +509,117 @@ mod tests {
         let mut load = vec![1u64, 0];
         load.extend_from_slice(&ins);
         par.step(&load);
-        let mut go = vec![0u64, 1, 0, 0, 0, 0, 0];
+        let go = vec![0u64, 1, 0, 0, 0, 0, 0];
         for _ in 0..24 {
-            par.step(&mut go.clone());
+            par.step(&go);
         }
-        let outs: std::collections::HashMap<String, u64> = par.outputs().into_iter().collect();
+        let outs: std::collections::HashMap<String, u64> =
+            par.outputs().iter().cloned().collect();
         assert_eq!(outs["lane00"], golden[0][0]);
         assert_eq!(outs["lane44"], golden[4][4]);
+    }
+
+    /// Register ownership invariants: every committed register is owned
+    /// by exactly one partition (the sets are pairwise disjoint and their
+    /// union is the design's full commit list), for both the scalar and
+    /// the batched partitioned simulators.
+    #[test]
+    fn partition_register_ownership_is_a_disjoint_cover() {
+        let d = catalog("gemmini_like_4").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let all: std::collections::BTreeSet<u32> = ir.commits.iter().map(|c| c.0).collect();
+        for n in [1usize, 2, 4] {
+            let par = BatchParallelSim::new(&ir, KernelConfig::PSU, n, 2, false);
+            let mut seen = std::collections::BTreeSet::new();
+            for p in 0..par.num_partitions() {
+                for &slot in par.owned_regs(p) {
+                    assert!(seen.insert(slot), "register slot {slot} owned twice (n={n})");
+                }
+            }
+            assert_eq!(seen, all, "ownership must cover every commit (n={n})");
+        }
+    }
+
+    /// P × B smoke: the batched partitioned simulator is bit-identical
+    /// per lane to one lane-batched kernel (no partitioning) on a catalog
+    /// design — the full differential grid against RefSim lives in
+    /// `tests/designs_e2e.rs`.
+    #[test]
+    fn batch_parallel_matches_unpartitioned_batch() {
+        let d = catalog("fir8").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let oim = crate::tensor::oim::Oim::from_ir(&ir);
+        let lanes = 4usize;
+        for n in [2usize, 3] {
+            let mut par = BatchParallelSim::new(&ir, KernelConfig::TI, n, lanes, false);
+            let mut single = crate::kernels::build_batch(KernelConfig::TI, &ir, &oim, lanes);
+            let mut stim = d.make_lane_stimulus(lanes);
+            for c in 0..40u64 {
+                let inputs = stim(c);
+                single.step(&inputs);
+                par.step(&inputs);
+                for l in 0..lanes {
+                    assert_eq!(
+                        par.lane_outputs(l),
+                        single.lane_outputs(l),
+                        "n={n} lane={l} cycle={c}"
+                    );
+                }
+                for &(reg, _, _) in &ir.commits {
+                    for l in 0..lanes {
+                        assert_eq!(
+                            par.reg_lane(reg, l),
+                            single.slots()[reg as usize * lanes + l],
+                            "n={n} reg={reg} lane={l} cycle={c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sparse partitioned runs are bit-identical to dense ones and skip
+    /// idle partitions: on `alu_farm_64` with the stimulus frozen after
+    /// cycle 0 (toggle rate 0), every partition goes quiescent, so the
+    /// partition-cycle skip-rate must be high while outputs stay exact.
+    #[test]
+    fn sparse_parallel_skips_idle_partitions_exactly() {
+        let d = catalog("alu_farm_64").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let parts = 4usize;
+        let lanes = 8usize;
+        let mut dense = BatchParallelSim::new(&ir, KernelConfig::PSU, parts, lanes, false);
+        let mut sparse = BatchParallelSim::new(&ir, KernelConfig::PSU, parts, lanes, true);
+        let mut stim_a = d.make_lane_stimulus_toggle(lanes, 0.0);
+        let mut stim_b = d.make_lane_stimulus_toggle(lanes, 0.0);
+        for c in 0..64u64 {
+            let ia = stim_a(c);
+            let ib = stim_b(c);
+            assert_eq!(ia, ib);
+            dense.step(&ia);
+            sparse.step(&ib);
+            for l in [0usize, lanes - 1] {
+                assert_eq!(
+                    sparse.lane_outputs(l),
+                    dense.lane_outputs(l),
+                    "lane {l} cycle {c}"
+                );
+            }
+            for &(reg, _, _) in &ir.commits {
+                assert_eq!(sparse.reg_lane(reg, 0), dense.reg_lane(reg, 0), "reg {reg} cycle {c}");
+            }
+        }
+        let stats = sparse.activity_stats().expect("sparse runs report activity");
+        assert!(dense.activity_stats().is_none());
+        assert_eq!(stats.cycles, 64);
+        assert_eq!(stats.total_partition_cycles, 64 * parts as u64);
+        assert!(
+            stats.skip_rate() > 0.5,
+            "frozen stimulus must idle most partition-cycles (got {:.3})",
+            stats.skip_rate()
+        );
     }
 }

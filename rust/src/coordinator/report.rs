@@ -476,9 +476,10 @@ pub fn fig21_llc() -> Table {
 // ---------------------------------------------------------------- Fig 22
 
 /// Fig 22 (ours, beyond the paper): lane-batched throughput sweep.
-/// Aggregate lane-cycles/sec for `B ∈ {1, 2, 4, 8, 16}` on the four
+/// Aggregate lane-cycles/sec for `B ∈ {1, 2, 4, 8, 16}` on **all seven**
 /// batched binding levels — the "simulate many users/test-vectors at
-/// once" scale axis enabled by the tensor form.
+/// once" scale axis enabled by the tensor form, with a complete lane
+/// axis since the batched IU/SU executors landed.
 pub fn fig22_lanes(ctx: &Ctx) -> Table {
     let (d, c) = compiled("rocket_like_1c");
     let cycles = ctx.cycles(d.default_cycles).max(200);
@@ -486,7 +487,7 @@ pub fn fig22_lanes(ctx: &Ctx) -> Table {
         &format!("Fig 22 — lane-batched aggregate throughput (rocket_like_1c, {cycles} cycles/lane, M lane-cyc/s)"),
         &["kernel", "B=1", "B=2", "B=4", "B=8", "B=16"],
     );
-    for cfg in [KernelConfig::RU, KernelConfig::OU, KernelConfig::PSU, KernelConfig::TI] {
+    for cfg in crate::kernels::BATCHED_KERNELS {
         let mut row = vec![cfg.name().to_string()];
         for lanes in [1usize, 2, 4, 8, 16] {
             let p = sweep::measure_kernel_lanes(&d, &c, cfg, lanes, cycles);
@@ -594,6 +595,73 @@ pub fn fig23_sparse(ctx: &Ctx) -> Table {
     fig23_table(&fig23_measure(ctx))
 }
 
+// ---------------------------------------------------------------- Fig 24
+
+/// The (kernel, partitions, lanes) grid of the partitions × lanes sweep —
+/// shared by the fig24 table and the bench's JSON dump.
+pub const FIG24_DESIGN: &str = "gemmini_like_8";
+pub const FIG24_PARTS: [usize; 3] = [1, 2, 4];
+pub const FIG24_LANES: [usize; 2] = [1, 8];
+
+/// One (kernel, partition-count) row of the fig24 grid: a measurement
+/// per lane count.
+pub struct Fig24Point {
+    pub kernel: KernelConfig,
+    pub parts: usize,
+    /// (lanes, measurement) per lane count in [`FIG24_LANES`] order
+    pub cells: Vec<(usize, sweep::SweepPoint)>,
+}
+
+/// Measure the fig24 grid once — shared by the rendered table and the
+/// bench's JSON dump, so nothing is simulated twice.
+pub fn fig24_measure(ctx: &Ctx) -> Vec<Fig24Point> {
+    let (d, c) = compiled(FIG24_DESIGN);
+    let cycles = ctx.cycles(d.default_cycles).max(200);
+    let mut points = Vec::new();
+    for cfg in [KernelConfig::PSU, KernelConfig::TI] {
+        for &parts in &FIG24_PARTS {
+            let cells = FIG24_LANES
+                .iter()
+                .map(|&lanes| {
+                    (lanes, sweep::measure_kernel_parts_lanes(&d, &c, cfg, parts, lanes, cycles))
+                })
+                .collect();
+            points.push(Fig24Point { kernel: cfg, parts, cells });
+        }
+    }
+    points
+}
+
+/// Render measured fig24 points as the report table.
+pub fn fig24_table(points: &[Fig24Point]) -> Table {
+    let mut header = vec!["kernel".to_string(), "parts".to_string()];
+    header.extend(FIG24_LANES.iter().map(|b| format!("B={b} Mlc/s")));
+    let mut t = Table::new(
+        &format!(
+            "Fig 24 — partitions x lanes aggregate throughput ({FIG24_DESIGN}, M lane-cyc/s)"
+        ),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for p in points {
+        let mut row = vec![p.kernel.name().to_string(), format!("P={}", p.parts)];
+        for (_, sp) in &p.cells {
+            row.push(format!("{:.2}", sp.hz / 1e6));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig 24 (ours, beyond the paper): thread-level × data-level parallelism
+/// in one run — the RepCut-style partitioned simulator with lane-batched
+/// kernels per partition ([`super::parallel::BatchParallelSim`]),
+/// sweeping partitions P × lanes B. One run's aggregate lane-cycles/sec
+/// scales along both axes at once; `benches/fig24_parts_lanes.rs` adds
+/// the sparse (partition-skipping) measurements on `alu_farm_64`.
+pub fn fig24_parts_lanes(ctx: &Ctx) -> Table {
+    fig24_table(&fig24_measure(ctx))
+}
+
 /// Run an experiment by id; returns rendered text.
 pub fn run_experiment(id: &str, ctx: &Ctx) -> Option<Vec<Table>> {
     let tables = match id {
@@ -612,12 +680,13 @@ pub fn run_experiment(id: &str, ctx: &Ctx) -> Option<Vec<Table>> {
         "fig21" => vec![fig21_llc()],
         "fig22" => vec![fig22_lanes(ctx)],
         "fig23" => vec![fig23_sparse(ctx)],
+        "fig24" => vec![fig24_parts_lanes(ctx)],
         _ => return None,
     };
     Some(tables)
 }
 
-pub const ALL_EXPERIMENTS: [&str; 15] = [
+pub const ALL_EXPERIMENTS: [&str; 16] = [
     "setup", "tab01", "fig07", "fig08", "fig15", "tab05", "fig16", "fig17", "fig18", "fig19",
-    "tab07", "fig20", "fig21", "fig22", "fig23",
+    "tab07", "fig20", "fig21", "fig22", "fig23", "fig24",
 ];

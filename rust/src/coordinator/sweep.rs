@@ -154,6 +154,86 @@ pub fn measure_kernel_lanes_sparse(
     }
 }
 
+/// Run `cycles` of `design` under the partitioned lane-batched simulator
+/// ([`super::parallel::BatchParallelSim`]): `parts` thread-level
+/// partitions, each stepping `lanes` stimulus lanes per cycle. `hz` is
+/// aggregate lane-cycles/sec as in [`measure_kernel_lanes`] — the P × B
+/// composition scales it along both axes at once.
+pub fn measure_kernel_parts_lanes(
+    design: &Design,
+    compiled: &Compiled,
+    cfg: KernelConfig,
+    parts: usize,
+    lanes: usize,
+    cycles: u64,
+) -> SweepPoint {
+    let mut sim =
+        super::parallel::BatchParallelSim::new(&compiled.ir, cfg, parts, lanes, false);
+    for (slot, lane, value) in design.resolved_lane_init(&compiled.graph, lanes) {
+        sim.poke_lane(slot, lane, value);
+    }
+    let mut stim = design.make_lane_stimulus(lanes);
+    // warm-up then measure
+    for c in 0..cycles.min(64) {
+        sim.step(&stim(c));
+    }
+    let t0 = std::time::Instant::now();
+    for c in 0..cycles {
+        sim.step(&stim(c));
+    }
+    let wall = t0.elapsed();
+    SweepPoint {
+        label: format!("{}/P{}xB{}", cfg.name(), parts, lanes),
+        wall,
+        cycles,
+        hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
+        program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
+        data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
+        skip_rate: None,
+    }
+}
+
+/// [`measure_kernel_parts_lanes`] with per-partition activity masking
+/// over the RUM cut (`lanes ≤ 64`), under toggle-rate-controlled
+/// stimulus. `skip_rate` reports the fraction of (partition, cycle) work
+/// units skipped during the measured window (warm-up excluded).
+pub fn measure_kernel_parts_lanes_sparse(
+    design: &Design,
+    compiled: &Compiled,
+    cfg: KernelConfig,
+    parts: usize,
+    lanes: usize,
+    cycles: u64,
+    toggle_rate: f64,
+) -> SweepPoint {
+    let mut sim = super::parallel::BatchParallelSim::new(&compiled.ir, cfg, parts, lanes, true);
+    for (slot, lane, value) in design.resolved_lane_init(&compiled.graph, lanes) {
+        sim.poke_lane(slot, lane, value);
+    }
+    let mut stim = design.make_lane_stimulus_toggle(lanes, toggle_rate);
+    // warm-up (absorbs the cold full-evaluation cycle), then measure
+    for c in 0..cycles.min(64) {
+        sim.step(&stim(c));
+    }
+    let warm = sim.activity_stats().expect("sparse partitioned runs report activity");
+    let t0 = std::time::Instant::now();
+    for c in 0..cycles {
+        sim.step(&stim(c));
+    }
+    let wall = t0.elapsed();
+    let stats =
+        sim.activity_stats().expect("sparse partitioned runs report activity").since(&warm);
+    SweepPoint {
+        label: format!("{}/P{}xB{}/sparse@{:.0}%", cfg.name(), parts, lanes, toggle_rate * 100.0),
+        wall,
+        cycles,
+        hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
+        program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
+        data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
+        skip_rate: Some(stats.skip_rate()),
+    }
+}
+
 /// Run a baseline (verilator-like / essent-like / event-driven).
 pub fn measure_baseline(design: &Design, compiled: &Compiled, which: &str, cycles: u64) -> SweepPoint {
     let kernel: Box<dyn crate::kernels::SimKernel> = match which {

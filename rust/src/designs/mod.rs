@@ -166,12 +166,19 @@ impl Design {
         }
     }
 
-    /// Apply this design's divergent-lane initialization to a freshly
-    /// built batched kernel. `compiled_graph` must be the *optimized*
-    /// graph the kernel was lowered from (its node ids are the slot ids);
-    /// registers are resolved by name, which survives every pass.
-    pub fn apply_lane_init(&self, compiled_graph: &Graph, kernel: &mut dyn BatchKernel) {
-        let lanes = kernel.lanes();
+    /// Resolve this design's divergent-lane initialization to concrete
+    /// `(slot, lane, value)` pokes. `compiled_graph` must be the
+    /// *optimized* graph the kernel was lowered from (its node ids are
+    /// the slot ids); registers are resolved by name, which survives
+    /// every pass. Consumers that are not a single [`BatchKernel`] — the
+    /// partitioned [`crate::coordinator::parallel::BatchParallelSim`],
+    /// per-lane reference interpreters — replay these pokes themselves.
+    pub fn resolved_lane_init(
+        &self,
+        compiled_graph: &Graph,
+        lanes: usize,
+    ) -> Vec<(u32, usize, u64)> {
+        let mut pokes = Vec::new();
         for (name, values) in &self.lane_init {
             assert!(!values.is_empty(), "lane_init for '{name}' has no values");
             let reg = compiled_graph.regs.iter().find(|r| r.name == *name).unwrap_or_else(|| {
@@ -179,8 +186,17 @@ impl Design {
             });
             let m = crate::graph::ops::mask(reg.width);
             for l in 0..lanes {
-                kernel.poke_lane(reg.node, l, values[l % values.len()] & m);
+                pokes.push((reg.node, l, values[l % values.len()] & m));
             }
+        }
+        pokes
+    }
+
+    /// Apply this design's divergent-lane initialization to a freshly
+    /// built batched kernel (see [`Design::resolved_lane_init`]).
+    pub fn apply_lane_init(&self, compiled_graph: &Graph, kernel: &mut dyn BatchKernel) {
+        for (slot, lane, value) in self.resolved_lane_init(compiled_graph, kernel.lanes()) {
+            kernel.poke_lane(slot, lane, value);
         }
     }
 }

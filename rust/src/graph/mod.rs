@@ -254,6 +254,13 @@ impl RefSim {
         self.values[id as usize]
     }
 
+    /// Overwrite a node's current value — pre-run initialization of
+    /// divergent-lane register state ([`crate::designs::Design::lane_init`]),
+    /// mirroring `BatchKernel::poke_lane` on the reference interpreter.
+    pub fn poke(&mut self, id: NodeId, value: u64) {
+        self.values[id as usize] = value;
+    }
+
     /// Values of all declared outputs.
     pub fn outputs(&self) -> Vec<(String, u64)> {
         self.graph.outputs.iter().map(|(n, id)| (n.clone(), self.values[*id as usize])).collect()

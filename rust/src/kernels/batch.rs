@@ -7,8 +7,8 @@
 //! [`super::common::BatchDriver`]) so the innermost lane loop is a
 //! contiguous streaming loop the compiler can vectorize.
 //!
-//! Four binding levels cover the design space (mirroring the scalar
-//! kernels they batch):
+//! All seven binding levels have a batched executor (mirroring the
+//! scalar kernels they batch):
 //!
 //! * [`BatchRuKernel`] — format-B cursor walk, case dispatch per op
 //!   (batched RU): the rolled extreme, where batching amortizes the most
@@ -19,6 +19,12 @@
 //! * [`BatchNuKernel`] — format-C group walk with dispatch hoisted out of
 //!   the S loop (batched NU; the PSU flavour shares it, differing only in
 //!   name — the lane loop replaces the scalar partial S unroll).
+//! * [`BatchIuKernel`] — the flattened group-command program of the
+//!   scalar IU (empty groups compiled away, cursors precomputed), with a
+//!   lane inner loop per command.
+//! * [`BatchSuKernel`] — straight-line op tape over lane-major slots
+//!   (batched SU): the OIM embedded in the program, writebacks unrolled
+//!   into per-record lane loops.
 //! * [`BatchTiKernel`] — tape of precompiled per-opcode functions with
 //!   operand slots baked in (batched TI): the unrolled extreme, where
 //!   batching amortizes the tape walk itself.
@@ -362,6 +368,22 @@ fn run_group_lanes(
     }
 }
 
+/// Layer writeback shared by the batched group-walk executors (NU/PSU
+/// and IU): copy each lane-major LO entry into its LI slot. (The batched
+/// SU intentionally does *not* route through this — its writebacks are
+/// unrolled into explicit per-record tape entries, mirroring the scalar
+/// SU's binding level.)
+#[inline]
+fn write_back_lanes(v: &mut [u64], lo: &[u64], s: &[u32], lanes: usize) {
+    for (i, &slot) in s.iter().enumerate() {
+        let sb = slot as usize * lanes;
+        let lb = i * lanes;
+        for l in 0..lanes {
+            v[sb + l] = lo[lb + l];
+        }
+    }
+}
+
 /// Batched **NU / PSU**: format-C group walk with per-op-type dispatch
 /// hoisted out of the (S, lane) loops. In the batched executors the lane
 /// loop takes the place of the scalar PSU's partial S unroll as the
@@ -432,15 +454,253 @@ impl BatchKernel for BatchNuKernel {
                 lo_pos += cnt;
             }
             let cnt = o.i_payload[layer] as usize;
-            let s = &o.c.s_coords[wb_idx..wb_idx + cnt];
-            for (i, &slot) in s.iter().enumerate() {
+            write_back_lanes(v, &self.lo, &o.c.s_coords[wb_idx..wb_idx + cnt], lanes);
+            wb_idx += cnt;
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        self.d.lane_outputs(lane)
+    }
+
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.d.poke_lane(slot, lane, value);
+    }
+}
+
+// --------------------------------------------------------------- IU (batched)
+
+/// Batched **IU**: walks the same flattened group-command program as the
+/// scalar [`super::iu::IuKernel`] (empty groups compiled away, all
+/// cursors precomputed — zero per-layer overhead), running the lane inner
+/// loop inside each group command. The group bodies are shared with
+/// [`BatchNuKernel`]; what IU adds is the program flattening.
+pub struct BatchIuKernel {
+    d: BatchDriver,
+    oim: Oim,
+    program: Vec<super::iu::Cmd>,
+    /// lane-major LO buffer (`max_layer_ops * lanes`)
+    lo: Vec<u64>,
+    chain_buf: Vec<u64>,
+}
+
+impl BatchIuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        let max_arity = oim.c.arity.iter().copied().max().unwrap_or(1) as usize;
+        BatchIuKernel {
+            d: BatchDriver::new(ir, lanes),
+            oim: oim.clone(),
+            program: super::iu::flatten_program(oim),
+            lo: vec![0; ir.max_layer_ops() * lanes],
+            chain_buf: vec![0; max_arity.max(3)],
+        }
+    }
+}
+
+impl BatchKernel for BatchIuKernel {
+    fn config_name(&self) -> &'static str {
+        "IU"
+    }
+
+    fn lanes(&self) -> usize {
+        self.d.lanes
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let lanes = self.d.lanes;
+        let o = &self.oim;
+        let v = &mut self.d.v;
+        for cmd in &self.program {
+            match *cmd {
+                super::iu::Cmd::Group { n, cnt, op_idx, r_idx, lo_pos } => {
+                    let (cnt, op_idx, r_idx, lo_pos) =
+                        (cnt as usize, op_idx as usize, r_idx as usize, lo_pos as usize);
+                    run_group_lanes(
+                        n,
+                        lanes,
+                        v,
+                        &mut self.lo,
+                        lo_pos,
+                        cnt,
+                        &o.c.r_coords[r_idx..],
+                        &o.c.imm[op_idx..],
+                        &o.c.mask[op_idx..],
+                        &o.c.aux[op_idx..],
+                        &o.c.arity[op_idx..],
+                        &mut self.chain_buf,
+                    );
+                }
+                super::iu::Cmd::Writeback { wb_idx, cnt } => {
+                    let (wb_idx, cnt) = (wb_idx as usize, cnt as usize);
+                    write_back_lanes(v, &self.lo, &o.c.s_coords[wb_idx..wb_idx + cnt], lanes);
+                }
+            }
+        }
+        self.d.commit();
+    }
+
+    fn slots(&self) -> &[u64] {
+        &self.d.v
+    }
+
+    fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
+        self.d.lane_outputs(lane)
+    }
+
+    fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.d.poke_lane(slot, lane, value);
+    }
+}
+
+// --------------------------------------------------------------- SU (batched)
+
+/// A batched tape op: the self-contained record plus its LO position
+/// (mirrors the scalar SU's `TapeOp`).
+#[derive(Clone, Copy, Debug)]
+struct BatchTapeOp {
+    rec: OpRec,
+    lo_pos: u32,
+}
+
+/// Layer segment boundaries in the batched SU tape.
+#[derive(Clone, Copy, Debug)]
+struct BatchSegment {
+    op_start: u32,
+    op_end: u32,
+    wb_start: u32,
+    wb_end: u32,
+}
+
+/// Evaluate one self-contained tape record over all lanes into the
+/// lane-major LO buffer at `ob` — the lane-strided analog of the scalar
+/// SU's `eval_rec` call, dispatching from the record at run time (the
+/// OIM lives in the "code"; contrast [`BatchTiKernel`], which resolves
+/// the dispatch to a function pointer at build time).
+fn eval_rec_lanes(rec: &OpRec, v: &[u64], ext: &[u32], lanes: usize, lo: &mut [u64], ob: usize) {
+    match lane_op(rec.kop()) {
+        LaneOp::Un(f) => {
+            let ab = rec.a as usize * lanes;
+            for l in 0..lanes {
+                lo[ob + l] = f(v[ab + l], rec.imm, rec.aux) & rec.mask;
+            }
+        }
+        LaneOp::Bin(f) => {
+            let ab = rec.a as usize * lanes;
+            let bb = rec.b as usize * lanes;
+            for l in 0..lanes {
+                lo[ob + l] = f(v[ab + l], v[bb + l], rec.imm) & rec.mask;
+            }
+        }
+        LaneOp::Mux => {
+            let sb = rec.a as usize * lanes;
+            let tb = rec.b as usize * lanes;
+            let fb = rec.c as usize * lanes;
+            for l in 0..lanes {
+                lo[ob + l] = (if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] }) & rec.mask;
+            }
+        }
+        LaneOp::Chain => {
+            // operands: sel0 = a, v0 = b, then ext (sel1, v1, .., default)
+            let k = rec.imm as usize;
+            let e = &ext[rec.ext as usize..rec.ext as usize + 2 * k - 1];
+            for l in 0..lanes {
+                let val = if v[rec.a as usize * lanes + l] != 0 {
+                    v[rec.b as usize * lanes + l]
+                } else {
+                    let mut x = v[e[2 * k - 2] as usize * lanes + l];
+                    for i in (0..k - 1).rev() {
+                        if v[e[2 * i] as usize * lanes + l] != 0 {
+                            x = v[e[2 * i + 1] as usize * lanes + l];
+                        }
+                    }
+                    x
+                };
+                lo[ob + l] = val & rec.mask;
+            }
+        }
+    }
+}
+
+/// Batched **SU**: the straight-line op tape of the scalar
+/// [`super::su::SuKernel`] — the OIM fully embedded in the program, no
+/// coordinate/payload arrays traversed at run time — with each tape
+/// record and each unrolled writeback evaluating all lanes over the
+/// lane-major slot file.
+pub struct BatchSuKernel {
+    d: BatchDriver,
+    tape: Vec<BatchTapeOp>,
+    /// writeback records: (LI slot, LO position)
+    wb: Vec<(u32, u32)>,
+    segments: Vec<BatchSegment>,
+    ext_args: Vec<u32>,
+    /// lane-major LO buffer (`max_layer_ops * lanes`)
+    lo: Vec<u64>,
+}
+
+impl BatchSuKernel {
+    pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        let (layers, ext_args) = oim.op_recs();
+        let mut tape = Vec::with_capacity(oim.total_ops());
+        let mut wb = Vec::with_capacity(oim.total_ops());
+        let mut segments = Vec::with_capacity(layers.len());
+        for layer in &layers {
+            let op_start = tape.len() as u32;
+            let wb_start = wb.len() as u32;
+            for (pos, rec) in layer.iter().enumerate() {
+                tape.push(BatchTapeOp { rec: *rec, lo_pos: pos as u32 });
+                wb.push((rec.out, pos as u32));
+            }
+            segments.push(BatchSegment {
+                op_start,
+                op_end: tape.len() as u32,
+                wb_start,
+                wb_end: wb.len() as u32,
+            });
+        }
+        BatchSuKernel {
+            d: BatchDriver::new(ir, lanes),
+            tape,
+            wb,
+            segments,
+            ext_args,
+            lo: vec![0; ir.max_layer_ops() * lanes],
+        }
+    }
+}
+
+impl BatchKernel for BatchSuKernel {
+    fn config_name(&self) -> &'static str {
+        "SU"
+    }
+
+    fn lanes(&self) -> usize {
+        self.d.lanes
+    }
+
+    fn step(&mut self, inputs: &[u64]) {
+        self.d.set_inputs(inputs);
+        let lanes = self.d.lanes;
+        let v = &mut self.d.v;
+        for seg in &self.segments {
+            // straight-line op records (OIM embedded in the "code")
+            for t in &self.tape[seg.op_start as usize..seg.op_end as usize] {
+                let ob = t.lo_pos as usize * lanes;
+                eval_rec_lanes(&t.rec, v, &self.ext_args, lanes, &mut self.lo, ob);
+            }
+            // unrolled writeback records
+            for &(slot, lo_pos) in &self.wb[seg.wb_start as usize..seg.wb_end as usize] {
                 let sb = slot as usize * lanes;
-                let lb = i * lanes;
+                let lb = lo_pos as usize * lanes;
                 for l in 0..lanes {
                     v[sb + l] = self.lo[lb + l];
                 }
             }
-            wb_idx += cnt;
         }
         self.d.commit();
     }

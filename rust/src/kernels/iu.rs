@@ -30,38 +30,46 @@ pub struct IuKernel {
     chain_buf: Vec<u64>,
 }
 
+/// Flatten the (layer, op-type) loop structure into IU's group-command
+/// program — IU's "compile" step: all cursors precomputed, empty groups
+/// dropped, layer structure fixed into the program. Shared with the
+/// lane-batched IU executor ([`super::batch::BatchIuKernel`]), which walks
+/// the identical program with a lane inner loop per command.
+pub(crate) fn flatten_program(oim: &Oim) -> Vec<Cmd> {
+    let mut program = Vec::new();
+    let mut op_idx = 0usize;
+    let mut r_idx = 0usize;
+    let mut wb_idx = 0usize;
+    for layer in 0..oim.i_payload.len() {
+        let mut lo_pos = 0usize;
+        for n in 0..NUM_KOPS {
+            let cnt = oim.n_payload[layer * NUM_KOPS + n] as usize;
+            if cnt == 0 {
+                continue; // empty groups never enter the program
+            }
+            program.push(Cmd::Group {
+                n: n as u8,
+                cnt: cnt as u32,
+                op_idx: op_idx as u32,
+                r_idx: r_idx as u32,
+                lo_pos: lo_pos as u32,
+            });
+            let operands: usize =
+                oim.c.arity[op_idx..op_idx + cnt].iter().map(|&a| a as usize).sum();
+            op_idx += cnt;
+            r_idx += operands;
+            lo_pos += cnt;
+        }
+        let cnt = oim.i_payload[layer] as usize;
+        program.push(Cmd::Writeback { wb_idx: wb_idx as u32, cnt: cnt as u32 });
+        wb_idx += cnt;
+    }
+    program
+}
+
 impl IuKernel {
     pub fn new(ir: &LayerIr, oim: &Oim) -> Self {
-        // Precompute all cursors (this is IU's "compile" step: layer
-        // structure fixed into the program).
-        let mut program = Vec::new();
-        let mut op_idx = 0usize;
-        let mut r_idx = 0usize;
-        let mut wb_idx = 0usize;
-        for layer in 0..oim.i_payload.len() {
-            let mut lo_pos = 0usize;
-            for n in 0..NUM_KOPS {
-                let cnt = oim.n_payload[layer * NUM_KOPS + n] as usize;
-                if cnt == 0 {
-                    continue; // empty groups never enter the program
-                }
-                program.push(Cmd::Group {
-                    n: n as u8,
-                    cnt: cnt as u32,
-                    op_idx: op_idx as u32,
-                    r_idx: r_idx as u32,
-                    lo_pos: lo_pos as u32,
-                });
-                let operands: usize =
-                    oim.c.arity[op_idx..op_idx + cnt].iter().map(|&a| a as usize).sum();
-                op_idx += cnt;
-                r_idx += operands;
-                lo_pos += cnt;
-            }
-            let cnt = oim.i_payload[layer] as usize;
-            program.push(Cmd::Writeback { wb_idx: wb_idx as u32, cnt: cnt as u32 });
-            wb_idx += cnt;
-        }
+        let program = flatten_program(oim);
         let max_arity = oim.c.arity.iter().copied().max().unwrap_or(1) as usize;
         IuKernel {
             d: Driver::new(ir),

@@ -7,15 +7,15 @@
 //! (dispatch per element vs per group vs per program; metadata in data
 //! arrays vs embedded in the program) is preserved:
 //!
-//! | kernel | paper                                | here |
-//! |--------|--------------------------------------|------|
-//! | RU     | rolled `[I,S,N,O,R]`, per-op case    | cursor walk of format-B arrays, `match` per op, operand loop |
-//! | OU     | + unroll O                           | operand fetches inlined by arity |
-//! | NU     | + S/N swizzle, per-op-type loops     | format-C group walk, dispatch hoisted out of the S loop |
-//! | PSU    | + partial S unroll (8 / 24)          | chunked inner loops (`UNROLL=8`), writeback by 24 |
-//! | IU     | + unroll I (drop empty groups)       | flattened group-command program, zero per-layer overhead |
-//! | SU     | + unroll S fully (OIM in binary)     | straight-line op tape — no metadata arrays |
-//! | TI     | + tensor inlining (values in regs)   | tape of precompiled per-op closures, direct slot writes, no LO |
+//! | kernel | paper                                | here | batched |
+//! |--------|--------------------------------------|------|---------|
+//! | RU     | rolled `[I,S,N,O,R]`, per-op case    | cursor walk of format-B arrays, `match` per op, operand loop | [`batch::BatchRuKernel`] |
+//! | OU     | + unroll O                           | operand fetches inlined by arity | [`batch::BatchOuKernel`] |
+//! | NU     | + S/N swizzle, per-op-type loops     | format-C group walk, dispatch hoisted out of the S loop | [`batch::BatchNuKernel`] |
+//! | PSU    | + partial S unroll (8 / 24)          | chunked inner loops (`UNROLL=8`), writeback by 24 | [`batch::BatchNuKernel`] (lane loop replaces the S unroll) |
+//! | IU     | + unroll I (drop empty groups)       | flattened group-command program, zero per-layer overhead | [`batch::BatchIuKernel`] |
+//! | SU     | + unroll S fully (OIM in binary)     | straight-line op tape — no metadata arrays | [`batch::BatchSuKernel`] |
+//! | TI     | + tensor inlining (values in regs)   | tape of precompiled per-op closures, direct slot writes, no LO | [`batch::BatchTiKernel`] |
 //!
 //! All kernels implement [`SimKernel`] and are property-tested to agree
 //! with `graph::RefSim` and the Einsum cascade evaluator.
@@ -36,10 +36,12 @@
 //! Inputs follow the same convention (`inputs[i * B + lane]`). Lanes are
 //! fully independent: a `B`-lane batched run is bit-identical to `B`
 //! single-lane runs of the corresponding scalar kernel (differential
-//! property test in `tests/kernels_property.rs`). Batched executors exist
-//! for four binding levels spanning the spectrum — RU, OU, NU/PSU and TI
-//! (see [`BATCHED_KERNELS`] and [`batch`]); `rteaal sim --lanes B` and
-//! `benches/fig22_lanes.rs` drive them.
+//! property test in `tests/kernels_property.rs`). Every binding level has
+//! a batched executor — the "batched" column of the table above — so the
+//! Fig 16-style sweep has a complete lane axis (see [`BATCHED_KERNELS`]
+//! and [`batch`]); `rteaal sim --lanes B` and `benches/fig22_lanes.rs`
+//! drive them, and [`crate::coordinator::parallel::BatchParallelSim`]
+//! composes lanes with thread-level partitions (P × B).
 //!
 //! ## Sparse activity masking (dynamic sparsity)
 //!
@@ -203,24 +205,13 @@ pub trait BatchKernel: Send {
     }
 }
 
-/// The kernel configurations with lane-batched executors — four binding
-/// levels spanning the design space (PSU shares NU's batched group
-/// bodies).
-pub const BATCHED_KERNELS: [KernelConfig; 5] = [
-    KernelConfig::RU,
-    KernelConfig::OU,
-    KernelConfig::NU,
-    KernelConfig::PSU,
-    KernelConfig::TI,
-];
+/// The kernel configurations with lane-batched executors — since the
+/// batched IU/SU executors landed, **all seven** binding levels (PSU
+/// shares NU's batched group bodies), so unlike [`supports_sparse`]
+/// there is no support gate to check before [`build_batch`].
+pub const BATCHED_KERNELS: [KernelConfig; 7] = ALL_KERNELS;
 
-/// Whether `config` has a lane-batched executor.
-pub fn supports_batch(config: KernelConfig) -> bool {
-    BATCHED_KERNELS.contains(&config)
-}
-
-/// Build a lane-batched kernel. Panics for configurations without a
-/// batched executor — gate on [`supports_batch`] first.
+/// Build a lane-batched kernel of the given configuration.
 pub fn build_batch(
     config: KernelConfig,
     ir: &LayerIr,
@@ -232,11 +223,9 @@ pub fn build_batch(
         KernelConfig::OU => Box::new(batch::BatchOuKernel::new(ir, oim, lanes)),
         KernelConfig::NU => Box::new(batch::BatchNuKernel::new(ir, oim, lanes, "NU")),
         KernelConfig::PSU => Box::new(batch::BatchNuKernel::new(ir, oim, lanes, "PSU")),
+        KernelConfig::IU => Box::new(batch::BatchIuKernel::new(ir, oim, lanes)),
+        KernelConfig::SU => Box::new(batch::BatchSuKernel::new(ir, oim, lanes)),
         KernelConfig::TI => Box::new(batch::BatchTiKernel::new(ir, oim, lanes)),
-        other => panic!(
-            "kernel {} has no lane-batched executor (supported: RU, OU, NU, PSU, TI)",
-            other.name()
-        ),
     }
 }
 

@@ -1,8 +1,8 @@
 //! End-to-end design suites: the real designs do their real jobs under
 //! every kernel configuration.
 
-use rteaal::coordinator::compile::{compile_design, CompileOpts};
-use rteaal::coordinator::parallel::ParallelSim;
+use rteaal::coordinator::compile::{compile_design, CompileOpts, Compiled};
+use rteaal::coordinator::parallel::{BatchParallelSim, ParallelSim};
 use rteaal::designs::keccak::{keccak_f_sw, keccak_round_datapath};
 use rteaal::designs::tiny_cpu::{
     dhrystone_like, golden_run, lane_rom_init, tiny_cpu, tiny_cpu_divergent,
@@ -130,6 +130,83 @@ fn parallel_sim_matches_refsim_on_catalog_designs() {
     }
 }
 
+/// One cell of the partitions × lanes differential grid: a
+/// `BatchParallelSim` over (parts, lanes) against one graph reference
+/// interpreter **per lane**, checking named outputs *and* every
+/// committed register slot, every cycle. Divergent-lane register
+/// initialization (`Design::lane_init`) is replayed on both sides.
+fn grid_check_against_refsim(d: &Design, c: &Compiled, parts: usize, lanes: usize, cycles: u64) {
+    let mut par = BatchParallelSim::new(&c.ir, KernelConfig::PSU, parts, lanes, false);
+    let pokes = d.resolved_lane_init(&c.graph, lanes);
+    for &(slot, lane, value) in &pokes {
+        par.poke_lane(slot, lane, value);
+    }
+    let mut refs: Vec<RefSim> = (0..lanes).map(|_| RefSim::new(c.graph.clone())).collect();
+    for &(slot, lane, value) in &pokes {
+        refs[lane].poke(slot, value);
+    }
+    let mut stims: Vec<_> = (0..lanes).map(|l| d.make_stimulus_for_lane(l)).collect();
+    let n_inputs = c.graph.inputs.len();
+    for cycle in 0..cycles {
+        let per_lane: Vec<Vec<u64>> = stims.iter_mut().map(|s| s(cycle)).collect();
+        let mut flat = vec![0u64; n_inputs * lanes];
+        for (l, inp) in per_lane.iter().enumerate() {
+            for (i, &v) in inp.iter().enumerate() {
+                flat[i * lanes + l] = v;
+            }
+        }
+        par.step(&flat);
+        for (l, r) in refs.iter_mut().enumerate() {
+            r.step(&per_lane[l]);
+        }
+        for (l, r) in refs.iter().enumerate() {
+            assert_eq!(
+                par.lane_outputs(l),
+                r.outputs(),
+                "{} P={parts} B={lanes} lane={l} cycle={cycle}",
+                d.name
+            );
+            for &(reg, _, _) in &c.ir.commits {
+                assert_eq!(
+                    par.reg_lane(reg, l),
+                    r.value(reg),
+                    "{} P={parts} B={lanes} lane={l} cycle={cycle} reg slot {reg}",
+                    d.name
+                );
+            }
+        }
+    }
+}
+
+/// The headline partitions × lanes differential grid: `BatchParallelSim`
+/// is bit-identical **per lane** to the graph reference interpreter on
+/// real designs — including the divergent-lane register-ROM tiny_cpu —
+/// across P ∈ {1, 2, 4} × B ∈ {1, 8, 64}, 64 cycles each, checking
+/// outputs and committed register slots every cycle.
+#[test]
+fn batch_parallel_grid_matches_refsim_per_lane() {
+    let prog_a = dhrystone_like(12);
+    let prog_b = dhrystone_like(7);
+    let rom_words = 32;
+    let divergent = Design {
+        name: "tiny_cpu_divergent".into(),
+        graph: tiny_cpu_divergent(rom_words, &prog_a),
+        stimulus: Stimulus::Zero,
+        default_cycles: 0,
+        lane_init: lane_rom_init(rom_words, &[prog_a, prog_b]),
+    };
+    let designs: Vec<Design> =
+        vec![catalog("fir8").unwrap(), catalog("gemmini_like_4").unwrap(), divergent];
+    for d in &designs {
+        let c = compile_design(d, CompileOpts::default());
+        for parts in [1usize, 2, 4] {
+            for lanes in [1usize, 8, 64] {
+                grid_check_against_refsim(d, &c, parts, lanes, 64);
+            }
+        }
+    }
+}
+
 /// The batched TI kernel reproduces the tiny_cpu golden checksum on
 /// *every* lane when all lanes run the same (self-driving) program —
 /// the end-to-end workload under the throughput engine.
@@ -169,9 +246,11 @@ fn batched_ti_tiny_cpu_checksum_on_every_lane() {
 
 /// Divergent lanes: a register-ROM tiny_cpu with **two distinct per-lane
 /// programs** (via `Design::lane_init`) reaches each program's own golden
-/// checksum on the right lanes — one OIM walk, different software per
-/// lane. Runs under the dense batched TI executor and the sparse
-/// activity-masked one (which must survive the pre-run pokes).
+/// checksum on the right lanes — one OIM walk / tape, different software
+/// per lane. Runs under the dense batched executors at three binding
+/// levels (TI, plus the flattened-program IU and straight-line-tape SU)
+/// and the sparse activity-masked TI one (which must survive the pre-run
+/// pokes).
 #[test]
 fn divergent_lane_roms_reach_their_own_golden_checksums() {
     let prog_a = dhrystone_like(12);
@@ -192,12 +271,14 @@ fn divergent_lane_roms_reach_their_own_golden_checksums() {
     let c = compile_design(&d, CompileOpts::default());
     let lanes = 4usize; // lanes 0, 2 run prog_a; lanes 1, 3 run prog_b
     let max_cycles = 1 + steps_a.max(steps_b) as u64;
-    for sparse in [false, true] {
-        let mut k = if sparse {
-            build_sparse(KernelConfig::TI, &c.ir, &c.oim, lanes)
-        } else {
-            build_batch(KernelConfig::TI, &c.ir, &c.oim, lanes)
-        };
+    let runs: Vec<(Box<dyn BatchKernel>, bool)> = vec![
+        (build_batch(KernelConfig::TI, &c.ir, &c.oim, lanes), false),
+        (build_batch(KernelConfig::IU, &c.ir, &c.oim, lanes), false),
+        (build_batch(KernelConfig::SU, &c.ir, &c.oim, lanes), false),
+        (build_sparse(KernelConfig::TI, &c.ir, &c.oim, lanes), true),
+    ];
+    for (mut k, sparse) in runs {
+        let name = k.config_name();
         d.apply_lane_init(&c.graph, k.as_mut());
         let zeros = vec![0u64; 4 * lanes];
         for _ in 0..max_cycles + 4 {
@@ -208,10 +289,10 @@ fn divergent_lane_roms_reach_their_own_golden_checksums() {
                 k.lane_outputs(lane).into_iter().collect();
             let (golden, which) =
                 if lane % 2 == 0 { (golden_a, "A") } else { (golden_b, "B") };
-            assert_eq!(outs["halted"], 1, "sparse={sparse} lane {lane} not halted");
+            assert_eq!(outs["halted"], 1, "{name} sparse={sparse} lane {lane} not halted");
             assert_eq!(
                 outs["checksum"], golden as u64,
-                "sparse={sparse} lane {lane} (program {which}) checksum"
+                "{name} sparse={sparse} lane {lane} (program {which}) checksum"
             );
         }
         if sparse {

@@ -135,8 +135,9 @@ fn firrtl_roundtrip_through_kernels() {
 
 /// The differential batching property: a `B`-lane batched run is
 /// bit-identical to `B` independent single-lane runs of the corresponding
-/// scalar kernel, for every batched kernel and `B ∈ {1, 3, 8}` — lanes
-/// share one OIM walk but must never interact.
+/// scalar kernel, for every batched kernel — since the batched IU/SU
+/// executors landed, all seven binding levels — and `B ∈ {1, 3, 8}`:
+/// lanes share one OIM walk / tape but must never interact.
 #[test]
 fn batched_kernels_match_sequential_lanes() {
     propcheck::check("batched-vs-sequential", 6, |rng, size| {
@@ -182,6 +183,69 @@ fn batched_kernels_match_sequential_lanes() {
                 };
                 if batched.slots() != &want[..] {
                     return Err(format!("{} lane-major slot file diverged", cfg.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Divergent-lane initialization property: pre-run `poke_lane`s — the
+/// mechanism behind `Design::lane_init` — keep every batched kernel
+/// (including the IU and SU executors) bit-identical to scalar kernels
+/// given the same per-lane register pokes: outputs *and* the full
+/// lane-major slot file, over multiple cycles of decorrelated stimulus.
+#[test]
+fn batched_poke_lane_matches_scalar_pokes() {
+    propcheck::check("batched-poke-lane", 6, |rng, size| {
+        let g = random_circuit(rng, 15 + size * 4);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        if ir.commits.is_empty() {
+            return Ok(()); // no register state to diverge
+        }
+        let lanes = 4usize;
+        for cfg in BATCHED_KERNELS {
+            let mut batched = build_batch(cfg, &ir, &oim, lanes);
+            let mut singles: Vec<Box<dyn SimKernel>> =
+                (0..lanes).map(|_| build_with_oim(cfg, &ir, &oim)).collect();
+            // divergent init: give every register a different value per lane
+            for &(reg, _, m) in &ir.commits {
+                for (l, s) in singles.iter_mut().enumerate() {
+                    let val = rng.bits(64) & m;
+                    batched.poke_lane(reg, l, val);
+                    s.poke(reg, val);
+                }
+            }
+            for cycle in 0..4 {
+                let per_lane: Vec<Vec<u64>> =
+                    (0..lanes).map(|_| random_inputs(rng, &opt)).collect();
+                let mut flat = vec![0u64; opt.inputs.len() * lanes];
+                for (l, inp) in per_lane.iter().enumerate() {
+                    for (i, &v) in inp.iter().enumerate() {
+                        flat[i * lanes + l] = v;
+                    }
+                }
+                batched.step(&flat);
+                for (l, s) in singles.iter_mut().enumerate() {
+                    s.step(&per_lane[l]);
+                    if batched.lane_outputs(l) != s.outputs() {
+                        return Err(format!(
+                            "{} lane {l} diverged after pokes at cycle {cycle}",
+                            cfg.name()
+                        ));
+                    }
+                }
+            }
+            for (l, s) in singles.iter().enumerate() {
+                for (slot, &val) in s.slots().iter().enumerate() {
+                    if batched.slots()[slot * lanes + l] != val {
+                        return Err(format!(
+                            "{} slot {slot} lane {l} diverged after pokes",
+                            cfg.name()
+                        ));
+                    }
                 }
             }
         }
