@@ -2,16 +2,21 @@
 //! coordinator::report::fig24_parts_lanes). Quick by default; set
 //! RTEAAL_FULL=1 for full-length runs.
 //!
-//! The grid is measured **once** (`report::fig24_measure`) and reused for
-//! both the rendered table and the JSON dump
-//! (`results/fig24_parts_lanes.json`), which additionally records the
-//! sparse (partition-skipping) measurement on `alu_farm_64`.
+//! The grid — now (kernel × partitioner × P × B) — is measured **once**
+//! (`report::fig24_measure`) and reused for both the rendered table and
+//! the JSON dump (`results/fig24_parts_lanes.json`), which additionally
+//! records the per-partitioning RUM cut (`cut_regs`) and the sparse
+//! (partition-skipping) measurement on `alu_farm_64`.
 //!
 //! Acceptance checks built in:
 //! * composing thread-level and data-level parallelism must pay — the TI
 //!   kernel at P=4 × B=8 must achieve higher *aggregate* lane-cycles/sec
 //!   than P=1 × B=1 on `gemmini_like_8` (wall-clock: authoritative on
 //!   quiet hardware, informational on shared CI runners);
+//! * the min-cut partitioner must beat round-robin's scatter on the
+//!   structured systolic array — `MinCut` cut ≤ `RoundRobin` cut on
+//!   `gemmini_like_8` at P ∈ {2, 4} (deterministic; the strict-< form is
+//!   also enforced as a cargo test in `partition::tests`);
 //! * the sparse ParallelSim must skip idle partitions — with the
 //!   stimulus frozen after cycle 0 on `alu_farm_64`, the partition-cycle
 //!   skip-rate must exceed 50% (deterministic; also enforced as a cargo
@@ -19,11 +24,14 @@
 
 rteaal::install_tracking_alloc!();
 
+use std::collections::BTreeMap;
+
 use rteaal::coordinator::compile::{compile_design, CompileOpts};
-use rteaal::coordinator::report::{self, FIG24_DESIGN};
+use rteaal::coordinator::report::{self, FIG24_DESIGN, FIG24_PARTS};
 use rteaal::coordinator::sweep;
 use rteaal::designs::catalog;
 use rteaal::kernels::KernelConfig;
+use rteaal::partition::PartitionerKind;
 use rteaal::util::json::{obj, Json};
 
 fn main() {
@@ -47,32 +55,50 @@ fn main() {
         lanes,
         cycles,
         0.0,
+        PartitionerKind::MinCut,
     );
-    let dense =
-        sweep::measure_kernel_parts_lanes(&farm, &cfarm, KernelConfig::PSU, parts, lanes, cycles);
+    let dense = sweep::measure_kernel_parts_lanes(
+        &farm,
+        &cfarm,
+        KernelConfig::PSU,
+        parts,
+        lanes,
+        cycles,
+        PartitionerKind::MinCut,
+    );
 
-    // the P × B grid plus the sparse farm point as JSON
-    let mut kernels_json: std::collections::BTreeMap<String, Json> = Default::default();
+    // the grid (throughput and cut per partitioner) plus the sparse farm
+    // point as JSON
+    let mut kernels_json: BTreeMap<String, Json> = Default::default();
+    let mut cut_json: BTreeMap<String, Json> = Default::default();
     for p in &points {
         let per_kernel = kernels_json
             .entry(p.kernel.name().to_string())
             .or_insert_with(|| Json::Obj(Default::default()));
-        let Json::Obj(cells) = per_kernel else { unreachable!() };
+        let Json::Obj(per_pk) = per_kernel else { unreachable!() };
+        let per_cells = per_pk
+            .entry(p.partitioner.name().to_string())
+            .or_insert_with(|| Json::Obj(Default::default()));
+        let Json::Obj(cells) = per_cells else { unreachable!() };
         for (b, sp) in &p.cells {
-            cells.insert(
-                format!("P{}xB{}", p.parts, b),
-                Json::Num(sp.hz),
-            );
+            cells.insert(format!("P{}xB{}", p.parts, b), Json::Num(sp.hz));
         }
+        let per_cut = cut_json
+            .entry(p.partitioner.name().to_string())
+            .or_insert_with(|| Json::Obj(Default::default()));
+        let Json::Obj(cuts) = per_cut else { unreachable!() };
+        cuts.insert(format!("P{}", p.parts), Json::Int(p.cut_regs as i64));
     }
     let root = obj(vec![
         ("design", Json::Str(FIG24_DESIGN.to_string())),
         ("lane_cycles_per_sec", Json::Obj(kernels_json)),
+        ("cut_regs", Json::Obj(cut_json)),
         (
             "sparse_alu_farm_64",
             obj(vec![
                 ("parts", Json::Int(parts as i64)),
                 ("lanes", Json::Int(lanes as i64)),
+                ("partitioner", Json::Str("mincut".to_string())),
                 ("toggle_rate", Json::Num(0.0)),
                 ("partition_skip_rate", Json::Num(sparse.skip_rate.unwrap_or(0.0))),
                 ("lane_cycles_per_sec", Json::Num(sparse.hz)),
@@ -88,11 +114,49 @@ fn main() {
         }
     }
 
+    // acceptance: the min-cut RUM cut never exceeds round-robin's on the
+    // systolic array at P in {2, 4} (deterministic — no wall clock)
+    let cut_of = |pk: PartitionerKind, parts: usize| -> usize {
+        points
+            .iter()
+            .find(|p| p.partitioner == pk && p.parts == parts)
+            .map(|p| p.cut_regs)
+            .expect("grid covers every (partitioner, parts) point")
+    };
+    for &parts in FIG24_PARTS.iter().filter(|&&p| p > 1) {
+        let rr = cut_of(PartitionerKind::RoundRobin, parts);
+        let mc = cut_of(PartitionerKind::MinCut, parts);
+        println!(
+            "RUM cut on {FIG24_DESIGN} at P={parts}: rr {rr} regs, mincut {mc} regs ({:.1}%)",
+            100.0 * mc as f64 / rr.max(1) as f64
+        );
+        assert!(
+            mc <= rr,
+            "P={parts}: mincut cut {mc} must not exceed round-robin cut {rr}"
+        );
+    }
+
     // acceptance: P=4 × B=8 aggregate beats P=1 × B=1 on the TI kernel
     let d = catalog(FIG24_DESIGN).expect("catalog design");
     let c = compile_design(&d, CompileOpts::default());
-    let base = sweep::measure_kernel_parts_lanes(&d, &c, KernelConfig::TI, 1, 1, cycles);
-    let scaled = sweep::measure_kernel_parts_lanes(&d, &c, KernelConfig::TI, 4, 8, cycles);
+    let base = sweep::measure_kernel_parts_lanes(
+        &d,
+        &c,
+        KernelConfig::TI,
+        1,
+        1,
+        cycles,
+        PartitionerKind::MinCut,
+    );
+    let scaled = sweep::measure_kernel_parts_lanes(
+        &d,
+        &c,
+        KernelConfig::TI,
+        4,
+        8,
+        cycles,
+        PartitionerKind::MinCut,
+    );
     println!(
         "TI aggregate throughput on {FIG24_DESIGN}: P1xB1 {:.2} M lane-cyc/s, P4xB8 {:.2} M lane-cyc/s ({:.2}x)",
         base.hz / 1e6,

@@ -1,7 +1,9 @@
 //! RepCut-style partitioned simulation (Cascade 2): simulate a multi-core
-//! design on 1/2/4/8 partitions and report throughput, replication factor
-//! and cut size — the paper's Box 1 "parallelize across partitions"
-//! optimization realized on the RTeAAL substrate.
+//! design on 1/2/4/8 partitions — on the persistent worker pool, under
+//! both register-ownership strategies — and report throughput,
+//! replication factor and RUM cut size: the paper's Box 1 "parallelize
+//! across partitions" optimization realized on the RTeAAL substrate,
+//! plus the min-cut-vs-scatter cut comparison.
 //!
 //! Run: `cargo run --release --example parallel_scaling`
 
@@ -11,6 +13,7 @@ use rteaal::coordinator::compile::{compile_design, CompileOpts};
 use rteaal::coordinator::parallel::ParallelSim;
 use rteaal::designs::catalog;
 use rteaal::kernels::KernelConfig;
+use rteaal::partition::PartitionerKind;
 
 fn main() -> anyhow::Result<()> {
     let d = catalog("rocket_like_4c").expect("design");
@@ -18,24 +21,27 @@ fn main() -> anyhow::Result<()> {
     println!("design {}: {} ops, {} regs", d.name, c.ir.total_ops(), c.graph.regs.len());
     let cycles = 2000u64;
 
-    for parts in [1usize, 2, 4, 8] {
-        let mut sim = ParallelSim::new(&c.ir, KernelConfig::PSU, parts);
-        let mut stim = d.make_stimulus();
-        // warm-up
-        for cyc in 0..100 {
-            sim.step(&stim(cyc));
+    for kind in [PartitionerKind::RoundRobin, PartitionerKind::MinCut] {
+        println!("partitioner: {}", kind.name());
+        for parts in [1usize, 2, 4, 8] {
+            let mut sim = ParallelSim::with_partitioner(&c.ir, KernelConfig::PSU, parts, kind);
+            let mut stim = d.make_stimulus();
+            // warm-up
+            for cyc in 0..100 {
+                sim.step(&stim(cyc));
+            }
+            let t0 = Instant::now();
+            for cyc in 100..100 + cycles {
+                sim.step(&stim(cyc));
+            }
+            let dt = t0.elapsed();
+            println!(
+                "  partitions={parts}: {:.2} Mcyc/s  (replication {:.2}x, cut {} pairs/cycle)",
+                cycles as f64 / dt.as_secs_f64() / 1e6,
+                sim.replication_factor,
+                sim.cut_size(),
+            );
         }
-        let t0 = Instant::now();
-        for cyc in 100..100 + cycles {
-            sim.step(&stim(cyc));
-        }
-        let dt = t0.elapsed();
-        println!(
-            "partitions={parts}: {:.2} Mcyc/s  (replication {:.2}x, cut {} regs/cycle)",
-            cycles as f64 / dt.as_secs_f64() / 1e6,
-            sim.replication_factor,
-            sim.cut_size(),
-        );
     }
     Ok(())
 }

@@ -6,7 +6,11 @@
 //! *partitions* of a RepCut-style partitioned run: a partition is skipped
 //! for a cycle when no input port it reads changed in any lane **and** no
 //! register it reads (its own or a RUM cut register) changed at the last
-//! commit. Because every combinational slot of a partition is a pure
+//! commit. The per-partition boundary sets come from the ownership map
+//! computed by [`crate::partition::partition_ir`]
+//! ([`PartitionTracker::for_partitioning`]) and are valid for *any*
+//! [`crate::partition::Partitioner`] — skipping exactness depends only
+//! on cone closure, not on which partition owns which register. Because every combinational slot of a partition is a pure
 //! function of exactly those boundary sources, a skipped partition's slot
 //! file — including the registers it would have committed — is identical
 //! to what stepping it would produce, so skipping is exact.
@@ -76,6 +80,15 @@ pub struct PartitionTracker {
 }
 
 impl PartitionTracker {
+    /// Build a tracker keyed off a [`crate::partition::Partitioning`]'s
+    /// ownership map: one gate per partition, watching exactly the input
+    /// ports that partition's cone reads. (Register-side gating comes
+    /// from the coordinator's RUM exchange, which already walks the
+    /// partitioning's tracked-register table.)
+    pub fn for_partitioning(parting: &crate::partition::Partitioning, lanes: usize) -> Self {
+        Self::new(parting.input_deps.clone(), lanes)
+    }
+
     /// `input_deps[p]` lists the input-port indices partition `p` reads.
     pub fn new(input_deps: Vec<Vec<u32>>, lanes: usize) -> Self {
         let full = full_mask(lanes);

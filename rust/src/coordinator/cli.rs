@@ -33,12 +33,18 @@ COMMANDS:
                                reports aggregate lane-cycles/sec
             [--parts P]        partitioned lane-batched run: P thread-level
                                partitions x B lanes in one run (RepCut x
-                               batching); reports aggregate lane-cycles/sec,
+                               batching) on a persistent worker pool;
+                               reports aggregate lane-cycles/sec,
                                replication and cut size. With --sparse,
                                quiescent partitions are skipped entirely
                                (per-partition activity masks over the RUM
                                cut, B <= 64) and the partition skip-rate is
                                reported
+            [--partitioner X]  register-ownership strategy for --parts /
+                               --backend parallel: mincut (multilevel
+                               hypergraph min-cut, default — shrinks the
+                               per-cycle RUM cut) | rr (round-robin
+                               scatter baseline)
             [--sparse]         activity-masked sparse batched run (without
                                --parts: kernels NU|PSU|TI, B <= 64 — groups
                                whose inputs changed in no lane are skipped;
@@ -133,6 +139,22 @@ fn validate_lanes(lanes: usize, sparse: bool) -> Result<()> {
     Ok(())
 }
 
+/// Validate and parse `--partitioner`: only meaningful on partitioned
+/// runs (`--parts` or `--backend parallel`); defaults to the multilevel
+/// min-cut strategy.
+fn partitioner_arg(
+    args: &Args,
+    parts_given: bool,
+    backend: &str,
+) -> Result<crate::partition::PartitionerKind> {
+    if args.opt("partitioner").is_some() && !parts_given && backend != "parallel" {
+        bail!("--partitioner requires --parts or --backend parallel");
+    }
+    let name = args.opt_or("partitioner", "mincut");
+    crate::partition::PartitionerKind::parse(name)
+        .with_context(|| format!("unknown partitioner '{name}' (use rr or mincut)"))
+}
+
 /// Validate and parse `--toggle`: requires `--sparse`, a rate in [0, 1],
 /// and a design whose stimulus actually responds to it.
 fn toggle_arg(args: &Args, d: &crate::designs::Design, sparse: bool) -> Result<Option<f64>> {
@@ -168,6 +190,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     let sparse = args.flag("sparse");
     validate_lanes(lanes, sparse)?;
+    let partitioner = partitioner_arg(args, parts_given, backend)?;
     let c = compile_design(&d, CompileOpts { fuse: args.opt("vcd").is_none() });
 
     if parts_given {
@@ -179,7 +202,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
         }
         let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
         let toggle = toggle_arg(args, &d, sparse)?;
-        let mut sim = super::parallel::BatchParallelSim::new(&c.ir, cfg, parts, lanes, sparse);
+        let mut sim = super::parallel::BatchParallelSim::with_partitioner(
+            &c.ir,
+            cfg,
+            parts,
+            lanes,
+            sparse,
+            partitioner,
+        );
         for (slot, lane, value) in d.resolved_lane_init(&c.graph, lanes) {
             sim.poke_lane(slot, lane, value);
         }
@@ -194,11 +224,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
         let dt = t0.elapsed();
         let aggregate = (cycles as f64 * lanes as f64) / dt.as_secs_f64().max(1e-12);
         println!(
-            "{} x{parts} parts x{lanes} lanes: {cycles} cycles/lane in {} ({:.2} M lane-cyc/s aggregate), replication {:.2}x, cut {}",
+            "{} x{parts} parts x{lanes} lanes [{}]: {cycles} cycles/lane in {} ({:.2} M lane-cyc/s aggregate), replication {:.2}x, cut {} regs / {} pairs",
             cfg.name(),
+            partitioner.name(),
             crate::util::fmt_duration(dt),
             aggregate / 1e6,
             sim.replication_factor,
+            sim.cut_regs(),
             sim.cut_size()
         );
         if let Some(stats) = sim.activity_stats() {
@@ -271,7 +303,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if backend == "parallel" {
         let threads = args.opt_usize("threads", 4)?;
         let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
-        let mut sim = super::parallel::ParallelSim::new(&c.ir, cfg, threads);
+        let mut sim =
+            super::parallel::ParallelSim::with_partitioner(&c.ir, cfg, threads, partitioner);
         let mut stim = d.make_stimulus();
         let t0 = std::time::Instant::now();
         for cyc in 0..cycles {
@@ -454,5 +487,31 @@ mod tests {
             "sim", "--design", "alu32", "--parts", "2", "--lanes", "65", "--sparse",
         ]));
         assert!(validate_lanes(c.opt_usize("lanes", 1).unwrap(), c.flag("sparse")).is_err());
+    }
+
+    /// `--partitioner` resolves to a strategy on partitioned runs,
+    /// defaults to min-cut, and is rejected on unpartitioned ones.
+    #[test]
+    fn partitioner_argument_validation() {
+        use crate::partition::PartitionerKind;
+        let a = Args::parse(&v(&[
+            "sim", "--design", "gemmini_like_4", "--parts", "4", "--partitioner", "rr",
+        ]));
+        assert_eq!(partitioner_arg(&a, true, "interp").unwrap(), PartitionerKind::RoundRobin);
+
+        let b = Args::parse(&v(&["sim", "--design", "gemmini_like_4", "--parts", "4"]));
+        assert_eq!(partitioner_arg(&b, true, "interp").unwrap(), PartitionerKind::MinCut);
+
+        let c = Args::parse(&v(&[
+            "sim", "--design", "gemmini_like_4", "--partitioner", "mincut",
+        ]));
+        assert!(partitioner_arg(&c, false, "interp").is_err(), "needs --parts");
+        assert_eq!(partitioner_arg(&c, false, "parallel").unwrap(), PartitionerKind::MinCut);
+
+        let d = Args::parse(&v(&[
+            "sim", "--design", "gemmini_like_4", "--parts", "2", "--partitioner", "metis",
+        ]));
+        let msg = partitioner_arg(&d, true, "interp").unwrap_err().to_string();
+        assert!(msg.contains("metis"), "error names the bad strategy: {msg}");
     }
 }

@@ -7,5 +7,6 @@ pub mod cli;
 pub mod compile;
 pub mod sweep;
 pub mod autotune;
+pub mod pool;
 pub mod parallel;
 pub mod report;

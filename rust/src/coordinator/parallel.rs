@@ -1,13 +1,16 @@
 //! RepCut-style partitioned multi-threaded simulation (paper Cascade 2,
 //! Appendix C), composed with data-level lane batching.
 //!
-//! The graph's registers are partitioned; each partition owns the
-//! transitive fan-in cone of its registers' next-state logic (logic read
-//! by several partitions is *replicated*, which decouples partitions
-//! within a cycle — the replication overhead RepCut pays for superlinear
-//! scaling). At the end of each cycle, the **RUM** (register update map)
-//! propagates each committed register value to the partitions that read
-//! it — Cascade 2's final Einsum `LI_{c+1} = LI_c · RUM`.
+//! The graph's registers are partitioned ([`crate::partition`]); each
+//! partition owns the transitive fan-in cone of its registers'
+//! next-state logic (logic read by several partitions is *replicated*,
+//! which decouples partitions within a cycle — the replication overhead
+//! RepCut pays for superlinear scaling). At the end of each cycle, the
+//! **RUM** (register update map) propagates each committed register
+//! value to the partitions that read it — Cascade 2's final Einsum
+//! `LI_{c+1} = LI_c · RUM`. Ownership comes from a selectable
+//! [`PartitionerKind`]: multilevel hypergraph min-cut by default
+//! (shrinking the RUM cut), round-robin as the scatter baseline.
 //!
 //! [`BatchParallelSim`] generalizes the whole machinery over `B` stimulus
 //! lanes: each partition holds one **lane-batched** kernel
@@ -15,6 +18,13 @@
 //! and the RUM step moves `B` lanes of every cut register per cycle —
 //! thread-level (partitions `P`) × data-level (lanes `B`) parallelism in
 //! one run. The scalar [`ParallelSim`] is a thin `B = 1` wrapper.
+//!
+//! The cycle loop runs on a **persistent worker pool**
+//! ([`super::pool::WorkerPool`]): `P - 1` workers are spawned once at
+//! construction and parked on a barrier between cycles, the coordinator
+//! thread steps partition 0 and runs the RUM exchange — no per-cycle
+//! thread spawns (the old `thread::scope`-per-cycle cost that dominated
+//! small designs).
 //!
 //! With `sparse = true` the run additionally keeps **per-partition lane
 //! activity masks over the RUM cut**
@@ -25,158 +35,30 @@
 //! commit) is already identical to what stepping would produce — so
 //! sparse partitioned runs are bit-identical to dense ones.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::HashMap;
 
+use super::pool::WorkerPool;
 use crate::activity::{PartitionActivity, PartitionTracker};
 use crate::graph::ops::mask;
-use crate::kernels::{self, BatchKernel, KernelConfig};
+use crate::kernels::{self, KernelConfig};
+use crate::partition::{partition_ir, PartitionerKind, TrackedReg};
 use crate::tensor::ir::LayerIr;
-
-/// One partition: a lane-batched kernel over the filtered LayerIr plus
-/// the registers it owns (commits).
-struct Partition {
-    kernel: Box<dyn BatchKernel>,
-    /// registers owned (committed) by this partition
-    owned_regs: Vec<u32>,
-}
-
-/// A register tracked across the cycle boundary: committed by `owner`,
-/// read by `readers` (which may include the owner itself — its own
-/// next-state logic reading the register back).
-struct TrackedReg {
-    owner: usize,
-    reg_slot: u32,
-    /// every partition whose cone reads the register (sorted)
-    readers: Vec<u32>,
-    /// `readers` minus the owner — the RUM value-propagation targets
-    rum_readers: Vec<u32>,
-}
-
-/// The compile-time partitioning: filtered per-partition IRs plus the
-/// dependency structure the runtime needs (RUM entries, per-partition
-/// input-port reads).
-struct Partitioning {
-    part_irs: Vec<LayerIr>,
-    tracked: Vec<TrackedReg>,
-    /// input-port indices read by each partition's cone
-    input_deps: Vec<Vec<u32>>,
-    replication_factor: f64,
-}
-
-/// Partition `ir` into `n` pieces: round-robin register ownership, then
-/// one transitive fan-in cone per partition (RepCut uses hypergraph
-/// partitioning; round-robin keeps this substrate simple while
-/// exercising the same replication/sync machinery). Partition 0
-/// additionally owns the design outputs.
-fn partition_ir(ir: &LayerIr, n: usize) -> Partitioning {
-    assert!(n >= 1);
-    let n_regs = ir.commits.len();
-    let owner_of_reg: Vec<usize> = (0..n_regs).map(|i| i % n).collect();
-
-    let mut writer_of_slot: Vec<Option<(usize, usize)>> = vec![None; ir.num_slots];
-    for (li, layer) in ir.layers.iter().enumerate() {
-        for (oi, rec) in layer.iter().enumerate() {
-            writer_of_slot[rec.out as usize] = Some((li, oi));
-        }
-    }
-    let mut input_of: Vec<Option<u32>> = vec![None; ir.num_slots];
-    for (i, &s) in ir.input_slots.iter().enumerate() {
-        input_of[s as usize] = Some(i as u32);
-    }
-
-    let mut part_irs = Vec::with_capacity(n);
-    let mut total_kept = 0usize;
-    // source slots (registers / inputs / constants) reached by each cone
-    let mut sources_per_part: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); n];
-    let mut input_deps: Vec<Vec<u32>> = vec![Vec::new(); n];
-    for p in 0..n {
-        let mut keep: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); ir.layers.len()];
-        let mut stack: Vec<u32> = Vec::new();
-        for (ri, c) in ir.commits.iter().enumerate() {
-            if owner_of_reg[ri] == p {
-                stack.push(c.1);
-            }
-        }
-        if p == 0 {
-            for (_, s) in &ir.output_slots {
-                stack.push(*s);
-            }
-        }
-        let mut visited = vec![false; ir.num_slots];
-        while let Some(slot) = stack.pop() {
-            if visited[slot as usize] {
-                continue;
-            }
-            visited[slot as usize] = true;
-            if let Some((li, oi)) = writer_of_slot[slot as usize] {
-                keep[li].insert(oi);
-                let rec = &ir.layers[li][oi];
-                for r in crate::tensor::oim::operand_slots(rec, &ir.ext_args) {
-                    stack.push(r);
-                }
-            } else {
-                // a source slot: register, input port or constant
-                sources_per_part[p].insert(slot);
-                if let Some(port) = input_of[slot as usize] {
-                    input_deps[p].push(port);
-                }
-            }
-        }
-        input_deps[p].sort_unstable();
-        input_deps[p].dedup();
-        // filtered ir
-        let mut pir = ir.clone();
-        pir.layers = ir
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(li, layer)| keep[li].iter().map(|&oi| layer[oi]).collect::<Vec<_>>())
-            .collect();
-        pir.commits = ir
-            .commits
-            .iter()
-            .enumerate()
-            .filter(|(ri, _)| owner_of_reg[*ri] == p)
-            .map(|(_, c)| *c)
-            .collect();
-        if p != 0 {
-            pir.output_slots = Vec::new();
-        }
-        total_kept += pir.total_ops();
-        part_irs.push(pir);
-    }
-
-    // RUM / boundary tracking: for each register, which partitions read it
-    let mut tracked = Vec::new();
-    for (ri, c) in ir.commits.iter().enumerate() {
-        let owner = owner_of_reg[ri];
-        let readers: Vec<u32> = (0..n)
-            .filter(|&p| sources_per_part[p].contains(&c.0))
-            .map(|p| p as u32)
-            .collect();
-        if readers.is_empty() {
-            continue; // write-only register: nothing to propagate or gate
-        }
-        let rum_readers: Vec<u32> =
-            readers.iter().copied().filter(|&p| p as usize != owner).collect();
-        tracked.push(TrackedReg { owner, reg_slot: c.0, readers, rum_readers });
-    }
-
-    let replication_factor = total_kept as f64 / ir.total_ops().max(1) as f64;
-    Partitioning { part_irs, tracked, input_deps, replication_factor }
-}
 
 /// Partitioned **and** lane-batched simulation: `P` thread-level
 /// partitions, each running a lane-batched kernel over `B` stimulus
 /// lanes, synchronized by a `B`-lane RUM exchange each cycle. Optionally
 /// sparse (per-partition activity masks over the RUM cut, `B ≤ 64`).
 pub struct BatchParallelSim {
-    parts: Vec<Partition>,
+    pool: WorkerPool,
+    /// registers owned (committed) by each partition
+    owned: Vec<Vec<u32>>,
     tracked: Vec<TrackedReg>,
     lanes: usize,
     outputs: Vec<(String, u32)>,
     /// replicated-ops / total-ops (RepCut's replication overhead)
     pub replication_factor: f64,
+    /// which ownership strategy produced this partitioning
+    partitioner: PartitionerKind,
     /// owning partition per committed register slot
     owner_of_slot: HashMap<u32, usize>,
     /// lane-major shadow of every tracked register's last seen values
@@ -184,6 +66,8 @@ pub struct BatchParallelSim {
     shadow: Vec<u64>,
     /// scratch for one register's lane values during the exchange
     scratch: Vec<u64>,
+    /// per-cycle "step this partition" flags handed to the pool
+    active: Vec<bool>,
     /// sparse mode: the per-partition activity tracker
     tracker: Option<PartitionTracker>,
     /// previous cycle's (masked) stimulus, for boundary change detection
@@ -194,24 +78,35 @@ pub struct BatchParallelSim {
 }
 
 impl BatchParallelSim {
-    /// Partition `ir` into `n` pieces and build one `lanes`-wide batched
-    /// kernel of configuration `cfg` per piece. `sparse` enables the
-    /// per-partition activity masks (requires `lanes ≤ 64`).
+    /// Partition `ir` into `n` pieces under the default (min-cut)
+    /// partitioner and build one `lanes`-wide batched kernel of
+    /// configuration `cfg` per piece. `sparse` enables the per-partition
+    /// activity masks (requires `lanes ≤ 64`).
     pub fn new(ir: &LayerIr, cfg: KernelConfig, n: usize, lanes: usize, sparse: bool) -> Self {
+        Self::with_partitioner(ir, cfg, n, lanes, sparse, PartitionerKind::default())
+    }
+
+    /// [`Self::new`] with an explicit register-ownership strategy.
+    pub fn with_partitioner(
+        ir: &LayerIr,
+        cfg: KernelConfig,
+        n: usize,
+        lanes: usize,
+        sparse: bool,
+        partitioner: PartitionerKind,
+    ) -> Self {
         assert!(lanes >= 1, "lanes must be >= 1");
-        let parting = partition_ir(ir, n);
-        let mut parts = Vec::with_capacity(n);
+        let parting = partition_ir(ir, n, partitioner);
+        let mut kernel_boxes = Vec::with_capacity(n);
+        let mut owned = Vec::with_capacity(n);
         for pir in &parting.part_irs {
             let oim = crate::tensor::oim::Oim::from_ir(pir);
-            let kernel = kernels::build_batch(cfg, pir, &oim, lanes);
-            parts.push(Partition {
-                kernel,
-                owned_regs: pir.commits.iter().map(|c| c.0).collect(),
-            });
+            kernel_boxes.push(kernels::build_batch(cfg, pir, &oim, lanes));
+            owned.push(pir.commits.iter().map(|c| c.0).collect::<Vec<u32>>());
         }
         let mut owner_of_slot = HashMap::new();
-        for (p, part) in parts.iter().enumerate() {
-            for &slot in &part.owned_regs {
+        for (p, regs) in owned.iter().enumerate() {
+            for &slot in regs {
                 owner_of_slot.insert(slot, p);
             }
         }
@@ -224,19 +119,22 @@ impl BatchParallelSim {
         }
         let num_inputs = ir.input_slots.len();
         let tracker = if sparse {
-            Some(PartitionTracker::new(parting.input_deps, lanes))
+            Some(PartitionTracker::for_partitioning(&parting, lanes))
         } else {
             None
         };
         BatchParallelSim {
-            parts,
+            pool: WorkerPool::new(kernel_boxes),
+            owned,
             tracked: parting.tracked,
             lanes,
             outputs: ir.output_slots.clone(),
             replication_factor: parting.replication_factor,
+            partitioner,
             owner_of_slot,
             shadow,
             scratch: vec![0u64; lanes],
+            active: vec![true; n],
             tracker,
             prev_inputs: vec![0u64; num_inputs * lanes],
             input_changed: vec![0u64; num_inputs],
@@ -246,9 +144,10 @@ impl BatchParallelSim {
     }
 
     /// One cycle for every lane: (active) partitions evaluate + commit
-    /// concurrently, then the RUM synchronization step exchanges the
-    /// lanes of each committed cut register that actually changed.
-    /// `inputs` is lane-major (`inputs[i * lanes + lane]`), as for
+    /// concurrently on the persistent pool, then the RUM synchronization
+    /// step exchanges the lanes of each committed cut register that
+    /// actually changed. `inputs` is lane-major
+    /// (`inputs[i * lanes + lane]`), as for
     /// [`crate::kernels::BatchKernel::step`].
     pub fn step(&mut self, inputs: &[u64]) {
         debug_assert_eq!(inputs.len(), self.num_inputs * self.lanes);
@@ -272,32 +171,15 @@ impl BatchParallelSim {
             tracker.begin_cycle(&self.input_changed);
         }
 
-        // 2. step the active partitions concurrently
-        let tracker = &self.tracker;
-        if self.parts.len() == 1 {
-            let active = match tracker {
-                Some(t) => t.is_active(0),
+        // 2. step the active partitions on the persistent pool (a
+        //    quiescent partition is skipped entirely)
+        for p in 0..self.active.len() {
+            self.active[p] = match &self.tracker {
+                Some(t) => t.is_active(p),
                 None => true,
             };
-            if active {
-                self.parts[0].kernel.step(inputs);
-            }
-        } else {
-            std::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                for (p, part) in self.parts.iter_mut().enumerate() {
-                    if let Some(t) = tracker {
-                        if !t.is_active(p) {
-                            continue; // quiescent partition: skipped entirely
-                        }
-                    }
-                    handles.push(scope.spawn(move || part.kernel.step(inputs)));
-                }
-                for h in handles {
-                    h.join().expect("partition thread panicked");
-                }
-            });
         }
+        self.pool.step(inputs, &self.active);
 
         // 3. RUM exchange (differential: only changed lanes cross
         //    partitions), feeding next cycle's activity masks
@@ -318,7 +200,7 @@ impl BatchParallelSim {
             let b = self.lanes;
             let base = entry.reg_slot as usize * b;
             self.scratch
-                .copy_from_slice(&self.parts[entry.owner].kernel.slots()[base..base + b]);
+                .copy_from_slice(&self.pool.kernel(entry.owner).slots()[base..base + b]);
             let sh = t_idx * b;
             let mut changed = 0u64;
             for l in 0..b {
@@ -328,7 +210,7 @@ impl BatchParallelSim {
                         changed |= 1u64 << l;
                     }
                     for &r in &entry.rum_readers {
-                        self.parts[r as usize].kernel.poke_lane(
+                        self.pool.kernel_mut(r as usize).poke_lane(
                             entry.reg_slot,
                             l,
                             self.scratch[l],
@@ -347,7 +229,7 @@ impl BatchParallelSim {
     /// Named design outputs as seen by one lane (partition 0 computes the
     /// outputs by construction).
     pub fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
-        let v = self.parts[0].kernel.slots();
+        let v = self.pool.kernel(0).slots();
         self.outputs
             .iter()
             .map(|(n, s)| (n.clone(), v[*s as usize * self.lanes + lane]))
@@ -360,7 +242,7 @@ impl BatchParallelSim {
         if buf.len() != self.outputs.len() {
             *buf = self.outputs.iter().map(|(n, _)| (n.clone(), 0)).collect();
         }
-        let v = self.parts[0].kernel.slots();
+        let v = self.pool.kernel(0).slots();
         for (dst, (_, s)) in buf.iter_mut().zip(&self.outputs) {
             dst.1 = v[*s as usize * self.lanes + lane];
         }
@@ -373,7 +255,7 @@ impl BatchParallelSim {
             .owner_of_slot
             .get(&reg_slot)
             .unwrap_or_else(|| panic!("slot {reg_slot} is not a committed register"));
-        self.parts[owner].kernel.slots()[reg_slot as usize * self.lanes + lane]
+        self.pool.kernel(owner).slots()[reg_slot as usize * self.lanes + lane]
     }
 
     /// Write one lane of one slot in every partition's slot file
@@ -381,8 +263,8 @@ impl BatchParallelSim {
     /// and, in sparse mode, invalidates the activity state so the next
     /// cycle re-evaluates everything.
     pub fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
-        for part in &mut self.parts {
-            part.kernel.poke_lane(slot, lane, value);
+        for p in 0..self.pool.parts() {
+            self.pool.kernel_mut(p).poke_lane(slot, lane, value);
         }
         for (t_idx, t) in self.tracked.iter().enumerate() {
             if t.reg_slot == slot {
@@ -404,20 +286,42 @@ impl BatchParallelSim {
     /// invariant every partition's commits must respect (see the unit
     /// tests).
     pub fn owned_regs(&self, p: usize) -> &[u32] {
-        &self.parts[p].owned_regs
+        &self.owned[p]
     }
 
     pub fn num_partitions(&self) -> usize {
-        self.parts.len()
+        self.pool.parts()
     }
 
     pub fn lanes(&self) -> usize {
         self.lanes
     }
 
+    /// The ownership strategy this simulation was partitioned with.
+    pub fn partitioner(&self) -> PartitionerKind {
+        self.partitioner
+    }
+
     /// (register, reader) pairs whose values cross partitions each cycle.
     pub fn cut_size(&self) -> usize {
         self.tracked.iter().map(|e| e.rum_readers.len()).sum()
+    }
+
+    /// Distinct registers whose values cross partitions each cycle.
+    pub fn cut_regs(&self) -> usize {
+        self.tracked.iter().filter(|e| !e.rum_readers.is_empty()).count()
+    }
+
+    /// Worker threads backing this simulation (`P - 1`; constant — the
+    /// pool is built once and stepping never spawns).
+    pub fn pool_threads(&self) -> usize {
+        self.pool.worker_threads()
+    }
+
+    /// Threads ever spawned for this simulation — must equal
+    /// [`Self::pool_threads`] forever (the no-per-cycle-spawn guarantee).
+    pub fn pool_threads_spawned_ever(&self) -> usize {
+        self.pool.threads_spawned_ever()
     }
 }
 
@@ -430,9 +334,20 @@ pub struct ParallelSim {
 }
 
 impl ParallelSim {
-    /// Partition `ir` into `n` pieces and build one kernel per piece.
+    /// Partition `ir` into `n` pieces under the default (min-cut)
+    /// partitioner and build one kernel per piece.
     pub fn new(ir: &LayerIr, cfg: KernelConfig, n: usize) -> Self {
-        let inner = BatchParallelSim::new(ir, cfg, n, 1, false);
+        Self::with_partitioner(ir, cfg, n, PartitionerKind::default())
+    }
+
+    /// [`Self::new`] with an explicit register-ownership strategy.
+    pub fn with_partitioner(
+        ir: &LayerIr,
+        cfg: KernelConfig,
+        n: usize,
+        partitioner: PartitionerKind,
+    ) -> Self {
+        let inner = BatchParallelSim::with_partitioner(ir, cfg, n, 1, false, partitioner);
         let replication_factor = inner.replication_factor;
         ParallelSim { inner, outputs_buf: Vec::new(), replication_factor }
     }
@@ -472,21 +387,30 @@ mod tests {
     use crate::graph::passes::optimize;
     use crate::tensor::ir::lower;
 
+    const BOTH: [PartitionerKind; 2] = [PartitionerKind::RoundRobin, PartitionerKind::MinCut];
+
     #[test]
     fn partitioned_sim_matches_single_threaded() {
         let d = catalog("rocket_like_1c").unwrap();
         let (opt, _) = optimize(&d.graph);
         let ir = lower(&opt);
-        for n in [2usize, 4] {
-            let mut par = ParallelSim::new(&ir, KernelConfig::PSU, n);
-            assert!(par.replication_factor >= 1.0);
-            let mut stim = d.make_stimulus();
-            let mut single_fresh = crate::kernels::build(KernelConfig::PSU, &ir);
-            for c in 0..30u64 {
-                let inputs = stim(c);
-                single_fresh.step(&inputs);
-                par.step(&inputs);
-                assert_eq!(par.outputs(), single_fresh.outputs(), "n={n} cycle={c}");
+        for kind in BOTH {
+            for n in [2usize, 4] {
+                let mut par = ParallelSim::with_partitioner(&ir, KernelConfig::PSU, n, kind);
+                assert!(par.replication_factor >= 1.0);
+                let mut stim = d.make_stimulus();
+                let mut single_fresh = crate::kernels::build(KernelConfig::PSU, &ir);
+                for c in 0..30u64 {
+                    let inputs = stim(c);
+                    single_fresh.step(&inputs);
+                    par.step(&inputs);
+                    assert_eq!(
+                        par.outputs(),
+                        single_fresh.outputs(),
+                        "{} n={n} cycle={c}",
+                        kind.name()
+                    );
+                }
             }
         }
     }
@@ -521,23 +445,29 @@ mod tests {
 
     /// Register ownership invariants: every committed register is owned
     /// by exactly one partition (the sets are pairwise disjoint and their
-    /// union is the design's full commit list), for both the scalar and
-    /// the batched partitioned simulators.
+    /// union is the design's full commit list), for both partitioners.
     #[test]
     fn partition_register_ownership_is_a_disjoint_cover() {
         let d = catalog("gemmini_like_4").unwrap();
         let (opt, _) = optimize(&d.graph);
         let ir = lower(&opt);
         let all: std::collections::BTreeSet<u32> = ir.commits.iter().map(|c| c.0).collect();
-        for n in [1usize, 2, 4] {
-            let par = BatchParallelSim::new(&ir, KernelConfig::PSU, n, 2, false);
-            let mut seen = std::collections::BTreeSet::new();
-            for p in 0..par.num_partitions() {
-                for &slot in par.owned_regs(p) {
-                    assert!(seen.insert(slot), "register slot {slot} owned twice (n={n})");
+        for kind in BOTH {
+            for n in [1usize, 2, 4] {
+                let par =
+                    BatchParallelSim::with_partitioner(&ir, KernelConfig::PSU, n, 2, false, kind);
+                let mut seen = std::collections::BTreeSet::new();
+                for p in 0..par.num_partitions() {
+                    for &slot in par.owned_regs(p) {
+                        assert!(
+                            seen.insert(slot),
+                            "register slot {slot} owned twice (n={n}, {})",
+                            kind.name()
+                        );
+                    }
                 }
+                assert_eq!(seen, all, "ownership must cover every commit (n={n})");
             }
-            assert_eq!(seen, all, "ownership must cover every commit (n={n})");
         }
     }
 
@@ -576,6 +506,71 @@ mod tests {
                         );
                     }
                 }
+            }
+        }
+    }
+
+    /// The persistent pool is constructed once: `P - 1` workers exist
+    /// after construction and stepping many cycles spawns no further
+    /// threads anywhere in the process — the per-cycle `thread::scope`
+    /// regression guard.
+    #[test]
+    fn stepping_spawns_no_per_cycle_threads() {
+        let d = catalog("fir8").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let parts = 4usize;
+        let lanes = 2usize;
+        let mut sim = BatchParallelSim::new(&ir, KernelConfig::PSU, parts, lanes, false);
+        assert_eq!(sim.pool_threads(), parts - 1);
+        assert_eq!(sim.pool_threads_spawned_ever(), parts - 1);
+        let mut stim = d.make_lane_stimulus(lanes);
+        for c in 0..200u64 {
+            sim.step(&stim(c));
+        }
+        assert_eq!(
+            sim.pool_threads_spawned_ever(),
+            parts - 1,
+            "stepping 200 cycles must not spawn any thread"
+        );
+        assert_eq!(sim.pool_threads(), parts - 1);
+    }
+
+    /// Both partitioners drive bit-identical simulations (ownership is a
+    /// performance choice, never a semantic one): min-cut vs round-robin
+    /// on a multi-partition batched run.
+    #[test]
+    fn mincut_and_round_robin_simulations_agree() {
+        let d = catalog("gemmini_like_4").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let lanes = 4usize;
+        let mut a = BatchParallelSim::with_partitioner(
+            &ir,
+            KernelConfig::PSU,
+            3,
+            lanes,
+            false,
+            PartitionerKind::RoundRobin,
+        );
+        let mut b = BatchParallelSim::with_partitioner(
+            &ir,
+            KernelConfig::PSU,
+            3,
+            lanes,
+            false,
+            PartitionerKind::MinCut,
+        );
+        let mut stim = d.make_lane_stimulus(lanes);
+        for c in 0..50u64 {
+            let inputs = stim(c);
+            a.step(&inputs);
+            b.step(&inputs);
+            for l in 0..lanes {
+                assert_eq!(a.lane_outputs(l), b.lane_outputs(l), "lane={l} cycle={c}");
+            }
+            for &(reg, _, _) in &ir.commits {
+                assert_eq!(a.reg_lane(reg, 0), b.reg_lane(reg, 0), "reg={reg} cycle={c}");
             }
         }
     }

@@ -1,0 +1,247 @@
+//! Persistent partition worker pool for
+//! [`super::parallel::BatchParallelSim`].
+//!
+//! The original cycle loop spawned a fresh `thread::scope` every cycle,
+//! so small designs paid thread creation (µs) against per-cycle work
+//! (ns–µs). This pool spawns its workers **once at construction** and
+//! parks them on a reusable [`Barrier`] between cycles; a cycle is two
+//! barrier crossings (start → step → done), with the coordinator thread
+//! stepping partition 0 itself in between.
+//!
+//! ## Sharing protocol (why the `unsafe` is sound)
+//!
+//! Kernels and the staged input buffer live in [`UnsafeCell`]s shared
+//! through one `Arc`. Access is *phase-exclusive*, with the two barriers
+//! providing the happens-before edges:
+//!
+//! * **Between cycles** (workers blocked on the *start* barrier): only
+//!   the coordinator touches shared state — it stages inputs and active
+//!   flags, runs the RUM exchange against every kernel's slot file, and
+//!   serves reads/pokes. Workers cannot observe any of it: their next
+//!   access is ordered after the coordinator's `start.wait()`.
+//! * **During a step** (between the barriers): worker `i` mutates only
+//!   `kernels[i]`; every thread may read the staged inputs (shared
+//!   reads); the coordinator mutates only `kernels[0]`. No cell is
+//!   aliased mutably.
+//!
+//! [`WorkerPool::step`] takes `&mut self`, so no reference handed out by
+//! [`WorkerPool::kernel`]/[`WorkerPool::kernel_mut`] (which borrow
+//! `self`) can be live while a step is in flight.
+//!
+//! A panic inside a kernel step is caught on the worker, flagged, and
+//! re-raised on the coordinator after the *done* barrier — the barrier
+//! protocol itself never wedges. Dropping the pool releases the workers
+//! through a shutdown flag raised before the *start* barrier.
+
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
+
+use crate::kernels::BatchKernel;
+
+/// Interior-mutability cell shared under the pool's barrier protocol
+/// (module docs). `Sync` is sound because the protocol makes every
+/// access phase-exclusive.
+struct PoolCell<T>(UnsafeCell<T>);
+
+unsafe impl<T: Send> Sync for PoolCell<T> {}
+
+struct Shared {
+    /// Threads ever spawned by *this* pool — stays at `parts - 1` for
+    /// the pool's whole lifetime (stepping never spawns).
+    spawned_ever: AtomicUsize,
+    kernels: Vec<PoolCell<Box<dyn BatchKernel>>>,
+    /// Inputs staged for the cycle in flight (lane-major, as for
+    /// [`BatchKernel::step`]).
+    inputs: PoolCell<Vec<u64>>,
+    /// Per-partition "step this cycle" flags (sparse skipping).
+    active: Vec<AtomicBool>,
+    /// Per-worker panic flags, re-raised on the coordinator.
+    panicked: Vec<AtomicBool>,
+    shutdown: AtomicBool,
+    start: Barrier,
+    done: Barrier,
+}
+
+/// A pool of `P - 1` persistent worker threads driving partitions
+/// `1..P`; the coordinator thread drives partition 0. `P = 1` spawns no
+/// threads at all and steps inline.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize, gate: std::sync::mpsc::Receiver<bool>) {
+    // Startup gate: do not enter the barrier protocol until the
+    // constructor confirms every worker spawned. If a later spawn fails,
+    // the constructor sends `false` (or drops the sender) and this worker
+    // exits instead of parking forever on a barrier that can never fill.
+    if gate.recv() != Ok(true) {
+        return;
+    }
+    loop {
+        shared.start.wait();
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if shared.active[idx].load(Ordering::Relaxed) {
+            let stepped = catch_unwind(AssertUnwindSafe(|| {
+                // SAFETY: between the barriers this worker is the only
+                // thread touching kernels[idx], and the staged inputs are
+                // only read (module docs).
+                let kernel = unsafe { &mut *shared.kernels[idx].0.get() };
+                let inputs = unsafe { &*shared.inputs.0.get() };
+                kernel.step(inputs);
+            }));
+            if stepped.is_err() {
+                shared.panicked[idx].store(true, Ordering::Release);
+            }
+        }
+        shared.done.wait();
+    }
+}
+
+impl WorkerPool {
+    /// Take ownership of one kernel per partition and spawn the worker
+    /// threads (once — stepping never spawns again).
+    pub fn new(kernels: Vec<Box<dyn BatchKernel>>) -> Self {
+        assert!(!kernels.is_empty());
+        let parts = kernels.len();
+        let shared = Arc::new(Shared {
+            spawned_ever: AtomicUsize::new(0),
+            kernels: kernels.into_iter().map(|k| PoolCell(UnsafeCell::new(k))).collect(),
+            inputs: PoolCell(UnsafeCell::new(Vec::new())),
+            active: (0..parts).map(|_| AtomicBool::new(false)).collect(),
+            panicked: (0..parts).map(|_| AtomicBool::new(false)).collect(),
+            shutdown: AtomicBool::new(false),
+            start: Barrier::new(parts),
+            done: Barrier::new(parts),
+        });
+        let mut handles = Vec::with_capacity(parts.saturating_sub(1));
+        let mut gates = Vec::with_capacity(parts.saturating_sub(1));
+        for idx in 1..parts {
+            let sh = Arc::clone(&shared);
+            let (tx, rx) = std::sync::mpsc::channel::<bool>();
+            let spawned = std::thread::Builder::new()
+                .name(format!("rteaal-part{idx}"))
+                .spawn(move || worker_loop(sh, idx, rx));
+            match spawned {
+                Ok(h) => {
+                    shared.spawned_ever.fetch_add(1, Ordering::Relaxed);
+                    handles.push(h);
+                    gates.push(tx);
+                }
+                Err(e) => {
+                    // Release the workers spawned so far through their
+                    // startup gates (they have not entered the barrier
+                    // protocol yet), then fail construction cleanly.
+                    for gate in &gates {
+                        let _ = gate.send(false);
+                    }
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    panic!("spawn partition worker: {e}");
+                }
+            }
+        }
+        // all workers exist: let them enter the barrier protocol
+        for gate in &gates {
+            let _ = gate.send(true);
+        }
+        WorkerPool { shared, handles }
+    }
+
+    pub fn parts(&self) -> usize {
+        self.shared.kernels.len()
+    }
+
+    /// Worker threads owned by this pool (`parts - 1`; constant for the
+    /// pool's lifetime).
+    pub fn worker_threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Threads ever spawned by this pool — equal to
+    /// [`Self::worker_threads`] forever, however many cycles are stepped
+    /// (the no-per-cycle-spawn guarantee, asserted in tests).
+    pub fn threads_spawned_ever(&self) -> usize {
+        self.shared.spawned_ever.load(Ordering::Relaxed)
+    }
+
+    /// One cycle: step every partition whose `active` flag is set, in
+    /// parallel, and return once all have finished. `inputs` is
+    /// lane-major, as for [`BatchKernel::step`].
+    pub fn step(&mut self, inputs: &[u64], active: &[bool]) {
+        debug_assert_eq!(active.len(), self.parts());
+        let shared = &self.shared;
+        if self.handles.is_empty() {
+            if active[0] {
+                // SAFETY: no workers exist; this thread has exclusive
+                // access through `&mut self`.
+                unsafe { &mut *shared.kernels[0].0.get() }.step(inputs);
+            }
+            return;
+        }
+        // Stage: workers are parked on the start barrier, so the
+        // coordinator has exclusive access (module docs).
+        {
+            // SAFETY: see above.
+            let staged = unsafe { &mut *shared.inputs.0.get() };
+            staged.clear();
+            staged.extend_from_slice(inputs);
+        }
+        for (flag, &a) in shared.active.iter().zip(active) {
+            flag.store(a, Ordering::Relaxed);
+        }
+        shared.start.wait();
+        let own = catch_unwind(AssertUnwindSafe(|| {
+            if active[0] {
+                // SAFETY: between the barriers the coordinator only
+                // touches kernels[0] (module docs).
+                unsafe { &mut *shared.kernels[0].0.get() }.step(inputs);
+            }
+        }));
+        shared.done.wait();
+        for p in &shared.panicked {
+            if p.load(Ordering::Acquire) {
+                panic!("partition worker panicked during step");
+            }
+        }
+        if let Err(e) = own {
+            resume_unwind(e);
+        }
+    }
+
+    /// Read access to partition `p`'s kernel (between cycles).
+    pub fn kernel(&self, p: usize) -> &dyn BatchKernel {
+        // SAFETY: workers are parked between cycles; `step` takes
+        // `&mut self`, so this borrow cannot span a step (module docs).
+        unsafe { &**self.shared.kernels[p].0.get() }
+    }
+
+    /// Mutable access to partition `p`'s kernel (between cycles — RUM
+    /// pokes, lane initialization).
+    pub fn kernel_mut(&mut self, p: usize) -> &mut dyn BatchKernel {
+        // SAFETY: as for `kernel`, plus `&mut self` guarantees this is
+        // the only outstanding pool borrow.
+        unsafe { &mut **self.shared.kernels[p].0.get() }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Release the workers parked on the start barrier; they observe
+        // the flag and exit before touching any cell.
+        self.shared.start.wait();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

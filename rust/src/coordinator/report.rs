@@ -14,6 +14,7 @@ use crate::coordinator::{autotune, sweep};
 use crate::designs::{catalog, Design};
 use crate::graph::levelize::levelize;
 use crate::kernels::{KernelConfig, ALL_KERNELS};
+use crate::partition::PartitionerKind;
 use crate::perf::machine::{self, Machine};
 use crate::perf::topdown;
 use crate::perf::trace::SimStyle;
@@ -597,17 +598,22 @@ pub fn fig23_sparse(ctx: &Ctx) -> Table {
 
 // ---------------------------------------------------------------- Fig 24
 
-/// The (kernel, partitions, lanes) grid of the partitions × lanes sweep —
-/// shared by the fig24 table and the bench's JSON dump.
+/// The (kernel, partitioner, partitions, lanes) grid of the partitions ×
+/// lanes sweep — shared by the fig24 table and the bench's JSON dump.
 pub const FIG24_DESIGN: &str = "gemmini_like_8";
 pub const FIG24_PARTS: [usize; 3] = [1, 2, 4];
 pub const FIG24_LANES: [usize; 2] = [1, 8];
+pub const FIG24_PARTITIONERS: [PartitionerKind; 2] =
+    [PartitionerKind::RoundRobin, PartitionerKind::MinCut];
 
-/// One (kernel, partition-count) row of the fig24 grid: a measurement
-/// per lane count.
+/// One (kernel, partitioner, partition-count) row of the fig24 grid: a
+/// measurement per lane count, plus the RUM cut that partitioning paid.
 pub struct Fig24Point {
     pub kernel: KernelConfig,
+    pub partitioner: PartitionerKind,
     pub parts: usize,
+    /// distinct registers crossing partitions each cycle
+    pub cut_regs: usize,
     /// (lanes, measurement) per lane count in [`FIG24_LANES`] order
     pub cells: Vec<(usize, sweep::SweepPoint)>,
 }
@@ -619,14 +625,22 @@ pub fn fig24_measure(ctx: &Ctx) -> Vec<Fig24Point> {
     let cycles = ctx.cycles(d.default_cycles).max(200);
     let mut points = Vec::new();
     for cfg in [KernelConfig::PSU, KernelConfig::TI] {
-        for &parts in &FIG24_PARTS {
-            let cells = FIG24_LANES
-                .iter()
-                .map(|&lanes| {
-                    (lanes, sweep::measure_kernel_parts_lanes(&d, &c, cfg, parts, lanes, cycles))
-                })
-                .collect();
-            points.push(Fig24Point { kernel: cfg, parts, cells });
+        for &pk in &FIG24_PARTITIONERS {
+            for &parts in &FIG24_PARTS {
+                let cells: Vec<(usize, sweep::SweepPoint)> = FIG24_LANES
+                    .iter()
+                    .map(|&lanes| {
+                        (
+                            lanes,
+                            sweep::measure_kernel_parts_lanes(
+                                &d, &c, cfg, parts, lanes, cycles, pk,
+                            ),
+                        )
+                    })
+                    .collect();
+                let cut_regs = cells[0].1.cut_regs.unwrap_or(0);
+                points.push(Fig24Point { kernel: cfg, partitioner: pk, parts, cut_regs, cells });
+            }
         }
     }
     points
@@ -634,8 +648,10 @@ pub fn fig24_measure(ctx: &Ctx) -> Vec<Fig24Point> {
 
 /// Render measured fig24 points as the report table.
 pub fn fig24_table(points: &[Fig24Point]) -> Table {
-    let mut header = vec!["kernel".to_string(), "parts".to_string()];
+    let mut header =
+        vec!["kernel".to_string(), "partitioner".to_string(), "parts".to_string()];
     header.extend(FIG24_LANES.iter().map(|b| format!("B={b} Mlc/s")));
+    header.push("cut_regs".to_string());
     let mut t = Table::new(
         &format!(
             "Fig 24 — partitions x lanes aggregate throughput ({FIG24_DESIGN}, M lane-cyc/s)"
@@ -643,10 +659,15 @@ pub fn fig24_table(points: &[Fig24Point]) -> Table {
         &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
     for p in points {
-        let mut row = vec![p.kernel.name().to_string(), format!("P={}", p.parts)];
+        let mut row = vec![
+            p.kernel.name().to_string(),
+            p.partitioner.name().to_string(),
+            format!("P={}", p.parts),
+        ];
         for (_, sp) in &p.cells {
             row.push(format!("{:.2}", sp.hz / 1e6));
         }
+        row.push(p.cut_regs.to_string());
         t.row(row);
     }
     t
@@ -655,9 +676,13 @@ pub fn fig24_table(points: &[Fig24Point]) -> Table {
 /// Fig 24 (ours, beyond the paper): thread-level × data-level parallelism
 /// in one run — the RepCut-style partitioned simulator with lane-batched
 /// kernels per partition ([`super::parallel::BatchParallelSim`]),
-/// sweeping partitions P × lanes B. One run's aggregate lane-cycles/sec
-/// scales along both axes at once; `benches/fig24_parts_lanes.rs` adds
-/// the sparse (partition-skipping) measurements on `alu_farm_64`.
+/// sweeping partitions P × lanes B under both register-ownership
+/// strategies (round-robin scatter vs multilevel hypergraph min-cut —
+/// the `cut_regs` column shows the RUM cut each pays). One run's
+/// aggregate lane-cycles/sec scales along both axes at once;
+/// `benches/fig24_parts_lanes.rs` adds the sparse (partition-skipping)
+/// measurements on `alu_farm_64` and asserts the min-cut cut never
+/// exceeds round-robin's.
 pub fn fig24_parts_lanes(ctx: &Ctx) -> Table {
     fig24_table(&fig24_measure(ctx))
 }

@@ -7,6 +7,7 @@ use std::time::Duration;
 use super::compile::Compiled;
 use crate::designs::Design;
 use crate::kernels::{BatchKernel as _, KernelConfig};
+use crate::partition::PartitionerKind;
 use crate::perf::machine::Machine;
 use crate::perf::topdown::{self, TopDown};
 use crate::perf::trace::{self, SimStyle};
@@ -26,6 +27,9 @@ pub struct SweepPoint {
     /// fraction of (op, lane) work skipped by activity masking
     /// (sparse batched runs only)
     pub skip_rate: Option<f64>,
+    /// distinct registers crossing partitions each cycle (partitioned
+    /// runs only)
+    pub cut_regs: Option<usize>,
 }
 
 /// Run `cycles` of `design` under one kernel config; measured wall-clock.
@@ -45,6 +49,7 @@ pub fn measure_kernel(design: &Design, compiled: &Compiled, cfg: KernelConfig, c
         program_bytes,
         data_bytes,
         skip_rate: None,
+        cut_regs: None,
     }
 }
 
@@ -80,6 +85,7 @@ pub fn measure_kernel_lanes(
         program_bytes,
         data_bytes,
         skip_rate: None,
+        cut_regs: None,
     }
 }
 
@@ -113,6 +119,7 @@ pub fn measure_kernel_lanes_toggle(
         program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
         data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
         skip_rate: None,
+        cut_regs: None,
     }
 }
 
@@ -151,14 +158,17 @@ pub fn measure_kernel_lanes_sparse(
         program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
         data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
         skip_rate: Some(stats.skip_rate()),
+        cut_regs: None,
     }
 }
 
 /// Run `cycles` of `design` under the partitioned lane-batched simulator
 /// ([`super::parallel::BatchParallelSim`]): `parts` thread-level
-/// partitions, each stepping `lanes` stimulus lanes per cycle. `hz` is
-/// aggregate lane-cycles/sec as in [`measure_kernel_lanes`] — the P × B
-/// composition scales it along both axes at once.
+/// partitions under the given register-ownership strategy, each stepping
+/// `lanes` stimulus lanes per cycle. `hz` is aggregate lane-cycles/sec
+/// as in [`measure_kernel_lanes`] — the P × B composition scales it
+/// along both axes at once; `cut_regs` reports the RUM cut the
+/// partitioner achieved.
 pub fn measure_kernel_parts_lanes(
     design: &Design,
     compiled: &Compiled,
@@ -166,9 +176,16 @@ pub fn measure_kernel_parts_lanes(
     parts: usize,
     lanes: usize,
     cycles: u64,
+    partitioner: PartitionerKind,
 ) -> SweepPoint {
-    let mut sim =
-        super::parallel::BatchParallelSim::new(&compiled.ir, cfg, parts, lanes, false);
+    let mut sim = super::parallel::BatchParallelSim::with_partitioner(
+        &compiled.ir,
+        cfg,
+        parts,
+        lanes,
+        false,
+        partitioner,
+    );
     for (slot, lane, value) in design.resolved_lane_init(&compiled.graph, lanes) {
         sim.poke_lane(slot, lane, value);
     }
@@ -183,13 +200,14 @@ pub fn measure_kernel_parts_lanes(
     }
     let wall = t0.elapsed();
     SweepPoint {
-        label: format!("{}/P{}xB{}", cfg.name(), parts, lanes),
+        label: format!("{}/P{}xB{}/{}", cfg.name(), parts, lanes, partitioner.name()),
         wall,
         cycles,
         hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
         program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
         data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
         skip_rate: None,
+        cut_regs: Some(sim.cut_regs()),
     }
 }
 
@@ -205,8 +223,16 @@ pub fn measure_kernel_parts_lanes_sparse(
     lanes: usize,
     cycles: u64,
     toggle_rate: f64,
+    partitioner: PartitionerKind,
 ) -> SweepPoint {
-    let mut sim = super::parallel::BatchParallelSim::new(&compiled.ir, cfg, parts, lanes, true);
+    let mut sim = super::parallel::BatchParallelSim::with_partitioner(
+        &compiled.ir,
+        cfg,
+        parts,
+        lanes,
+        true,
+        partitioner,
+    );
     for (slot, lane, value) in design.resolved_lane_init(&compiled.graph, lanes) {
         sim.poke_lane(slot, lane, value);
     }
@@ -224,13 +250,21 @@ pub fn measure_kernel_parts_lanes_sparse(
     let stats =
         sim.activity_stats().expect("sparse partitioned runs report activity").since(&warm);
     SweepPoint {
-        label: format!("{}/P{}xB{}/sparse@{:.0}%", cfg.name(), parts, lanes, toggle_rate * 100.0),
+        label: format!(
+            "{}/P{}xB{}/{}/sparse@{:.0}%",
+            cfg.name(),
+            parts,
+            lanes,
+            partitioner.name(),
+            toggle_rate * 100.0
+        ),
         wall,
         cycles,
         hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
         program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
         data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
         skip_rate: Some(stats.skip_rate()),
+        cut_regs: Some(sim.cut_regs()),
     }
 }
 
@@ -258,6 +292,7 @@ pub fn measure_baseline(design: &Design, compiled: &Compiled, which: &str, cycle
         program_bytes,
         data_bytes,
         skip_rate: None,
+        cut_regs: None,
     }
 }
 

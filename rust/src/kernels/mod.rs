@@ -43,6 +43,17 @@
 //! drive them, and [`crate::coordinator::parallel::BatchParallelSim`]
 //! composes lanes with thread-level partitions (P × B).
 //!
+//! **Partitioning** (one more row on the binding table, orthogonal to
+//! it): every batched executor above also serves as the per-partition
+//! engine of the partitioned simulator — [`crate::partition`] assigns
+//! register ownership (round-robin or multilevel hypergraph min-cut,
+//! `rteaal sim --parts P --partitioner {rr,mincut}`), each partition
+//! compiles its replicated cone through the *same* kernel constructors
+//! over a filtered `LayerIr`, and a persistent worker pool steps them
+//! with a differential RUM exchange per cycle. A kernel needs no
+//! partition awareness beyond [`BatchKernel::poke_lane`], which the RUM
+//! uses to write cut registers into reader partitions.
+//!
 //! ## Sparse activity masking (dynamic sparsity)
 //!
 //! The OIM occupancy is *static* sparsity; real workloads add *dynamic*

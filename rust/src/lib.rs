@@ -26,6 +26,7 @@ pub mod graph;
 pub mod tensor;
 pub mod einsum;
 pub mod activity;
+pub mod partition;
 pub mod kernels;
 pub mod baselines;
 pub mod perf;

@@ -1,0 +1,272 @@
+//! The register-affinity hypergraph behind min-cut partitioning.
+//!
+//! Vertices are the design's *writable* registers (commits whose
+//! next-state slot differs from the register slot — a self-holding
+//! register can never change value and is handled separately by
+//! [`super::partition_ir`]), plus one zero-weight **anchor** vertex that
+//! stands for the design-output cone, which is pinned to partition 0.
+//!
+//! One hyperedge is emitted per *read* register `q`: its pins are `q`
+//! itself plus every register whose next-state cone (and the anchor, if
+//! the output cone) transitively reads `q`'s slot. This is the transpose
+//! of the "one hyperedge per combinational cone over the registers it
+//! reads/writes" view, chosen because its connectivity metric is exact:
+//! with register ownership as the vertex partition, the RUM must move
+//! `q`'s lanes to every *distinct* partition among `q`'s readers other
+//! than `q`'s owner — which is precisely `λ(e_q) − 1`, the
+//! connectivity-minus-one objective the multilevel partitioner
+//! ([`super::multilevel`]) minimizes. Summed over all edges it equals the
+//! RUM cut in (register, reader-partition) pairs.
+//!
+//! Vertex weights are `1 + |cone ops|` — the replicated work a partition
+//! pays for owning the register — so the balance constraint bounds
+//! per-partition compute, not just register counts.
+
+use crate::tensor::ir::LayerIr;
+use crate::tensor::oim::operand_slots;
+
+/// Sentinel for "this vertex is the output anchor, not a register".
+pub const ANCHOR_REG: usize = usize::MAX;
+
+/// The register-affinity hypergraph of a lowered design.
+pub struct RegHypergraph {
+    /// Vertex count (writable registers + 1 anchor).
+    pub n: usize,
+    /// The output-anchor vertex (always `n - 1`, weight 0, pinned to
+    /// partition 0 by the partitioner).
+    pub anchor: usize,
+    /// Per-vertex weight: `1 + ops` in the register's next-state cone
+    /// (0 for the anchor).
+    pub weight: Vec<u64>,
+    /// Hyperedges as sorted, deduplicated vertex lists (every edge has at
+    /// least two pins).
+    pub edges: Vec<Vec<u32>>,
+    /// Per-edge weight (RUM pair cost contributed per crossed partition).
+    pub edge_weight: Vec<u64>,
+    /// Per-vertex incident edge ids.
+    pub pins: Vec<Vec<u32>>,
+    /// Vertex → commit index in `ir.commits` ([`ANCHOR_REG`] for the
+    /// anchor).
+    pub reg_of_vert: Vec<usize>,
+}
+
+/// Which commits are *never written*: the next-state slot is the register
+/// slot itself (`Graph::reg`'s default self-holding wiring, e.g. the
+/// `rom{i}` lane-ROM registers of `tiny_cpu_divergent`). Their value can
+/// only change through out-of-band pokes, which the coordinator
+/// broadcasts to every partition, so they never need RUM tracking.
+pub fn never_written(ir: &LayerIr) -> Vec<bool> {
+    ir.commits.iter().map(|c| c.0 == c.1).collect()
+}
+
+/// Walk the transitive fan-in cone of `seeds`, invoking `on_op(layer,
+/// op)` for every op record kept and `on_source` for every source slot
+/// (register, input or constant) reached. `stamp`/`epoch` implement
+/// reusable visited marks; `stack` is reusable scratch. The single cone
+/// traversal shared by the hypergraph build and `partition_ir`'s
+/// per-partition cone growth — keeping the cut model and the replicated
+/// cones derived from the same walk.
+pub(super) fn walk_cone(
+    ir: &LayerIr,
+    writer_of_slot: &[Option<(u32, u32)>],
+    seeds: &[u32],
+    stamp: &mut [u32],
+    epoch: u32,
+    stack: &mut Vec<u32>,
+    mut on_op: impl FnMut(u32, u32),
+    mut on_source: impl FnMut(u32),
+) {
+    stack.clear();
+    stack.extend_from_slice(seeds);
+    while let Some(slot) = stack.pop() {
+        if stamp[slot as usize] == epoch {
+            continue;
+        }
+        stamp[slot as usize] = epoch;
+        if let Some((li, oi)) = writer_of_slot[slot as usize] {
+            on_op(li, oi);
+            let rec = &ir.layers[li as usize][oi as usize];
+            for r in operand_slots(rec, &ir.ext_args) {
+                stack.push(r);
+            }
+        } else {
+            on_source(slot);
+        }
+    }
+}
+
+/// `writer_of_slot[s]` = the `(layer, op)` coordinates writing slot `s`,
+/// `None` for source slots (registers, inputs, constants).
+pub(super) fn writer_map(ir: &LayerIr) -> Vec<Option<(u32, u32)>> {
+    let mut writer_of_slot: Vec<Option<(u32, u32)>> = vec![None; ir.num_slots];
+    for (li, layer) in ir.layers.iter().enumerate() {
+        for (oi, rec) in layer.iter().enumerate() {
+            writer_of_slot[rec.out as usize] = Some((li as u32, oi as u32));
+        }
+    }
+    writer_of_slot
+}
+
+/// Build the register-affinity hypergraph of `ir` (see module docs).
+pub fn build(ir: &LayerIr) -> RegHypergraph {
+    let never = never_written(ir);
+    let mut vert_of_slot: Vec<u32> = vec![u32::MAX; ir.num_slots];
+    let mut reg_of_vert: Vec<usize> = Vec::new();
+    for (ri, c) in ir.commits.iter().enumerate() {
+        if !never[ri] {
+            vert_of_slot[c.0 as usize] = reg_of_vert.len() as u32;
+            reg_of_vert.push(ri);
+        }
+    }
+    let n_writable = reg_of_vert.len();
+    let anchor = n_writable;
+    reg_of_vert.push(ANCHOR_REG);
+    let n = n_writable + 1;
+
+    let writer_of_slot = writer_map(ir);
+
+    let mut weight = vec![0u64; n];
+    // read register vertex → vertices whose cones read it (incl. anchor)
+    let mut readers_of: Vec<Vec<u32>> = vec![Vec::new(); n_writable];
+    let mut stamp = vec![0u32; ir.num_slots];
+    let mut stack: Vec<u32> = Vec::new();
+
+    for v in 0..n_writable {
+        let ri = reg_of_vert[v];
+        let seeds = [ir.commits[ri].1];
+        let mut ops = 0u64;
+        walk_cone(
+            ir,
+            &writer_of_slot,
+            &seeds,
+            &mut stamp,
+            v as u32 + 1,
+            &mut stack,
+            |_, _| ops += 1,
+            |slot| {
+                let q = vert_of_slot[slot as usize];
+                if q != u32::MAX {
+                    readers_of[q as usize].push(v as u32);
+                }
+            },
+        );
+        weight[v] = 1 + ops;
+    }
+    // the output cone reads registers too: the anchor vertex stands in
+    // for it, pinning that traffic toward partition 0
+    let out_seeds: Vec<u32> = ir.output_slots.iter().map(|(_, s)| *s).collect();
+    walk_cone(
+        ir,
+        &writer_of_slot,
+        &out_seeds,
+        &mut stamp,
+        n_writable as u32 + 1,
+        &mut stack,
+        |_, _| {},
+        |slot| {
+            let q = vert_of_slot[slot as usize];
+            if q != u32::MAX {
+                readers_of[q as usize].push(anchor as u32);
+            }
+        },
+    );
+
+    let mut edges: Vec<Vec<u32>> = Vec::new();
+    let mut edge_weight: Vec<u64> = Vec::new();
+    for (q, readers) in readers_of.iter().enumerate() {
+        if readers.is_empty() {
+            continue; // write-only register: no RUM traffic possible
+        }
+        let mut pins: Vec<u32> = Vec::with_capacity(readers.len() + 1);
+        pins.push(q as u32);
+        pins.extend_from_slice(readers);
+        pins.sort_unstable();
+        pins.dedup();
+        if pins.len() < 2 {
+            continue; // only read by its own cone: never cut
+        }
+        edges.push(pins);
+        edge_weight.push(1);
+    }
+
+    let pins = pins_of(n, &edges);
+    RegHypergraph { n, anchor, weight, edges, edge_weight, pins, reg_of_vert }
+}
+
+/// Per-vertex incident edge lists for `edges` over `n` vertices.
+pub fn pins_of(n: usize, edges: &[Vec<u32>]) -> Vec<Vec<u32>> {
+    let mut pins: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (e, edge) in edges.iter().enumerate() {
+        for &v in edge {
+            pins[v as usize].push(e as u32);
+        }
+    }
+    pins
+}
+
+/// The (λ − 1) connectivity cost of `parts` over the hypergraph — equal
+/// to the RUM cut in (register, reader-partition) pairs (module docs).
+pub fn connectivity_cost(hg: &RegHypergraph, parts: &[u32]) -> u64 {
+    let mut cost = 0u64;
+    let mut seen: Vec<u32> = Vec::new();
+    for (e, edge) in hg.edges.iter().enumerate() {
+        seen.clear();
+        for &v in edge {
+            let p = parts[v as usize];
+            if !seen.contains(&p) {
+                seen.push(p);
+            }
+        }
+        cost += hg.edge_weight[e] * (seen.len() as u64 - 1);
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::passes::optimize;
+    use crate::tensor::ir::lower;
+
+    fn hg_for(name: &str) -> (LayerIr, RegHypergraph) {
+        let d = crate::designs::catalog(name).unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let hg = build(&ir);
+        (ir, hg)
+    }
+
+    /// Structural invariants: one vertex per writable register plus the
+    /// anchor, positive weights, sorted pins referencing valid vertices.
+    #[test]
+    fn hypergraph_structure_is_well_formed() {
+        for name in ["fir8", "gemmini_like_4", "rocket_like_1c"] {
+            let (ir, hg) = hg_for(name);
+            let writable = never_written(&ir).iter().filter(|&&nw| !nw).count();
+            assert_eq!(hg.n, writable + 1, "{name}");
+            assert_eq!(hg.anchor, hg.n - 1, "{name}");
+            assert_eq!(hg.weight[hg.anchor], 0, "{name}: anchor carries no work");
+            for v in 0..hg.anchor {
+                assert!(hg.weight[v] >= 1, "{name}: writable reg cones weigh >= 1");
+                assert!(hg.reg_of_vert[v] < ir.commits.len(), "{name}");
+            }
+            assert!(!hg.edges.is_empty(), "{name}: sequential designs have affinity");
+            for edge in &hg.edges {
+                assert!(edge.len() >= 2, "{name}: single-pin edges are dropped");
+                assert!(edge.windows(2).all(|w| w[0] < w[1]), "{name}: sorted pins");
+                assert!(edge.iter().all(|&v| (v as usize) < hg.n), "{name}");
+            }
+        }
+    }
+
+    /// A uniform partition has zero connectivity cost; scattering every
+    /// vertex raises it.
+    #[test]
+    fn connectivity_cost_tracks_scatter() {
+        let (_, hg) = hg_for("gemmini_like_4");
+        let all_zero = vec![0u32; hg.n];
+        assert_eq!(connectivity_cost(&hg, &all_zero), 0);
+        let scattered: Vec<u32> = (0..hg.n as u32).map(|v| v % 4).collect();
+        assert!(connectivity_cost(&hg, &scattered) > 0);
+    }
+}

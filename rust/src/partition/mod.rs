@@ -1,0 +1,459 @@
+//! Register partitioning for RepCut-style parallel simulation.
+//!
+//! [`crate::coordinator::parallel::BatchParallelSim`] splits a design by
+//! *register ownership*: each partition owns a subset of the committed
+//! registers and replicates the transitive fan-in cone of their
+//! next-state logic, so partitions are independent within a cycle and
+//! synchronize only through the per-cycle **RUM** exchange of cut
+//! registers (Cascade 2's final Einsum). The quality of the ownership
+//! assignment decides the RUM cut — the per-cycle synchronization
+//! traffic that limits partitioned scaling — which is what this module
+//! computes:
+//!
+//! * [`hypergraph`] — the **register-affinity hypergraph**: one vertex
+//!   per writable register (weighted by its cone's op count), one
+//!   hyperedge per read register spanning the registers whose cones read
+//!   it (plus an anchor vertex for the output cone, pinned to partition
+//!   0). The hyperedge connectivity-minus-one cost of an ownership
+//!   assignment equals the RUM cut in (register, reader-partition)
+//!   pairs exactly.
+//! * [`multilevel`] — a multilevel min-cut partitioner over that
+//!   hypergraph: heavy-edge coarsening, greedy affinity-based initial
+//!   split, and Fiduccia–Mattheyses boundary refinement (best-gain
+//!   single-vertex moves with best-prefix rollback) at every level,
+//!   under the [`multilevel::balance_limit`] weight constraint.
+//! * [`partition_ir`] — the partitioning driver shared by every
+//!   [`Partitioner`]: it turns an ownership assignment into filtered
+//!   per-partition IRs, the RUM tracking table and the per-partition
+//!   input dependencies the runtime needs.
+//!
+//! Two [`Partitioner`] implementations are exposed, selectable with
+//! `rteaal sim --parts P --partitioner {rr,mincut}`:
+//! [`RoundRobin`] (the original `i mod n` scatter — worst-case cut,
+//! useful as a baseline and for bisection) and [`MinCut`] (the
+//! multilevel partitioner, the default).
+//!
+//! **Never-written registers** (next-state slot == register slot, e.g.
+//! the self-holding `rom{i}` lane-ROM registers of
+//! `tiny_cpu_divergent`) can only change through out-of-band pokes,
+//! which the coordinator broadcasts to every partition. `partition_ir`
+//! therefore assigns each one to (the lowest-indexed) partition whose
+//! cone reads it and keeps it out of the RUM tracking table entirely:
+//! pure ROM never enters the cut, under either partitioner.
+
+pub mod hypergraph;
+pub mod multilevel;
+
+use std::collections::BTreeSet;
+
+use crate::tensor::ir::LayerIr;
+
+pub use hypergraph::never_written;
+
+/// Selectable register-ownership strategies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PartitionerKind {
+    /// `register i → partition i mod n`: the historical baseline, with a
+    /// near-worst-case RUM cut on structured designs.
+    RoundRobin,
+    /// Multilevel hypergraph min-cut ([`MinCut`]): coarsen → greedy split
+    /// → FM refinement, minimizing the RUM cut under a balance bound.
+    #[default]
+    MinCut,
+}
+
+impl PartitionerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionerKind::RoundRobin => "rr",
+            PartitionerKind::MinCut => "mincut",
+        }
+    }
+
+    /// Parse a `--partitioner` argument (`rr` | `mincut`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "roundrobin" | "round-robin" => Some(PartitionerKind::RoundRobin),
+            "mincut" | "min-cut" => Some(PartitionerKind::MinCut),
+            _ => None,
+        }
+    }
+
+    pub fn build(self) -> Box<dyn Partitioner> {
+        match self {
+            PartitionerKind::RoundRobin => Box::new(RoundRobin),
+            PartitionerKind::MinCut => Box::new(MinCut::default()),
+        }
+    }
+}
+
+/// A register-ownership strategy: maps every commit of `ir` to one of
+/// `n` partitions. Any total assignment is *correct* (the partitioning
+/// driver replicates cones and tracks the cut it induces); quality is
+/// measured by [`Partitioning::cut_pairs`].
+pub trait Partitioner {
+    fn name(&self) -> &'static str;
+    /// One owner in `0..n` per entry of `ir.commits`.
+    fn assign(&self, ir: &LayerIr, n: usize) -> Vec<usize>;
+}
+
+/// `register i → partition i mod n`.
+pub struct RoundRobin;
+
+impl Partitioner for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn assign(&self, ir: &LayerIr, n: usize) -> Vec<usize> {
+        (0..ir.commits.len()).map(|i| i % n).collect()
+    }
+}
+
+/// Multilevel hypergraph min-cut ownership (see [`multilevel`]).
+/// Deterministic for a fixed `seed` — two instances with the same seed
+/// produce identical assignments.
+pub struct MinCut {
+    pub seed: u64,
+}
+
+impl Default for MinCut {
+    fn default() -> Self {
+        MinCut { seed: 0x5EED_CA7 }
+    }
+}
+
+impl Partitioner for MinCut {
+    fn name(&self) -> &'static str {
+        "mincut"
+    }
+
+    fn assign(&self, ir: &LayerIr, n: usize) -> Vec<usize> {
+        // provisional round-robin for never-written registers — the ones
+        // with readers are re-homed by `partition_ir`
+        let mut owner: Vec<usize> = (0..ir.commits.len()).map(|i| i % n).collect();
+        if n > 1 {
+            let hg = hypergraph::build(ir);
+            let parts = multilevel::partition(&hg, n, self.seed);
+            for (v, &ri) in hg.reg_of_vert.iter().enumerate() {
+                if ri != hypergraph::ANCHOR_REG {
+                    owner[ri] = parts[v] as usize;
+                }
+            }
+        }
+        owner
+    }
+}
+
+/// A register tracked across the cycle boundary: committed by `owner`,
+/// read by `readers` (which may include the owner itself — its own
+/// next-state logic reading the register back).
+pub struct TrackedReg {
+    pub owner: usize,
+    pub reg_slot: u32,
+    /// every partition whose cone reads the register (sorted)
+    pub readers: Vec<u32>,
+    /// `readers` minus the owner — the RUM value-propagation targets
+    pub rum_readers: Vec<u32>,
+}
+
+/// The compile-time partitioning: filtered per-partition IRs plus the
+/// dependency structure the runtime needs (RUM entries, per-partition
+/// input-port reads).
+pub struct Partitioning {
+    pub part_irs: Vec<LayerIr>,
+    pub tracked: Vec<TrackedReg>,
+    /// input-port indices read by each partition's cone
+    pub input_deps: Vec<Vec<u32>>,
+    /// replicated-ops / total-ops (RepCut's replication overhead)
+    pub replication_factor: f64,
+    /// final owner per entry of `ir.commits`
+    pub owner_of_reg: Vec<usize>,
+}
+
+impl Partitioning {
+    pub fn num_partitions(&self) -> usize {
+        self.part_irs.len()
+    }
+
+    /// RUM cut in (register, reader-partition) pairs — the per-cycle
+    /// value-propagation work.
+    pub fn cut_pairs(&self) -> usize {
+        self.tracked.iter().map(|t| t.rum_readers.len()).sum()
+    }
+
+    /// RUM cut in distinct registers that cross partitions each cycle.
+    pub fn cut_regs(&self) -> usize {
+        self.tracked.iter().filter(|t| !t.rum_readers.is_empty()).count()
+    }
+}
+
+/// Partition `ir` into `n` pieces under the given strategy: assign
+/// register ownership, grow one transitive fan-in cone per partition
+/// (logic read by several partitions is *replicated*, which decouples
+/// partitions within a cycle — the replication RepCut pays for
+/// superlinear scaling), re-home never-written registers to a reader
+/// partition, and derive the RUM tracking table. Partition 0
+/// additionally owns the design outputs.
+pub fn partition_ir(ir: &LayerIr, n: usize, kind: PartitionerKind) -> Partitioning {
+    partition_ir_with(ir, n, &*kind.build())
+}
+
+/// [`partition_ir`] with an explicit [`Partitioner`] instance.
+pub fn partition_ir_with(ir: &LayerIr, n: usize, partitioner: &dyn Partitioner) -> Partitioning {
+    assert!(n >= 1);
+    let n_regs = ir.commits.len();
+    let mut owner_of_reg = partitioner.assign(ir, n);
+    assert_eq!(owner_of_reg.len(), n_regs, "partitioner must assign every register");
+    assert!(owner_of_reg.iter().all(|&p| p < n), "partition ids must be < n");
+    let never = never_written(ir);
+
+    let writer_of_slot = hypergraph::writer_map(ir);
+    let mut input_of: Vec<Option<u32>> = vec![None; ir.num_slots];
+    for (i, &s) in ir.input_slots.iter().enumerate() {
+        input_of[s as usize] = Some(i as u32);
+    }
+
+    // Pass A: one cone per partition (the same `walk_cone` the cut model
+    // is built from), seeded by its *writable* owned registers'
+    // next-state slots (+ the design outputs for partition 0).
+    // Never-written registers contribute no logic and no reads, so the
+    // cones — and with them the reader sets — are independent of their
+    // ownership, which is resolved afterwards.
+    let mut keep_per_part: Vec<Vec<BTreeSet<usize>>> = Vec::with_capacity(n);
+    let mut sources_per_part: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); n];
+    let mut input_deps: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut stamp = vec![0u32; ir.num_slots];
+    let mut stack: Vec<u32> = Vec::new();
+    for p in 0..n {
+        let mut keep: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); ir.layers.len()];
+        let mut seeds: Vec<u32> = Vec::new();
+        for (ri, c) in ir.commits.iter().enumerate() {
+            if owner_of_reg[ri] == p && !never[ri] {
+                seeds.push(c.1);
+            }
+        }
+        if p == 0 {
+            for (_, s) in &ir.output_slots {
+                seeds.push(*s);
+            }
+        }
+        let sources = &mut sources_per_part[p];
+        let deps = &mut input_deps[p];
+        hypergraph::walk_cone(
+            ir,
+            &writer_of_slot,
+            &seeds,
+            &mut stamp,
+            p as u32 + 1,
+            &mut stack,
+            |li, oi| {
+                keep[li as usize].insert(oi as usize);
+            },
+            |slot| {
+                // a source slot: register, input port or constant
+                sources.insert(slot);
+                if let Some(port) = input_of[slot as usize] {
+                    deps.push(port);
+                }
+            },
+        );
+        deps.sort_unstable();
+        deps.dedup();
+        keep_per_part.push(keep);
+    }
+
+    // Re-home never-written registers: the lowest-indexed reader
+    // partition owns them (pure ROM read by one partition never crosses
+    // the cut; read by several, its value still never moves — it is not
+    // tracked at all). Unread ones keep the provisional assignment.
+    for (ri, c) in ir.commits.iter().enumerate() {
+        if !never[ri] {
+            continue;
+        }
+        if let Some(p) = (0..n).find(|&p| sources_per_part[p].contains(&c.0)) {
+            owner_of_reg[ri] = p;
+        }
+    }
+
+    // Pass B: materialize the filtered per-partition IRs.
+    let mut part_irs = Vec::with_capacity(n);
+    let mut total_kept = 0usize;
+    for (p, keep) in keep_per_part.iter().enumerate() {
+        let mut pir = ir.clone();
+        pir.layers = ir
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, layer)| keep[li].iter().map(|&oi| layer[oi]).collect::<Vec<_>>())
+            .collect();
+        pir.commits = ir
+            .commits
+            .iter()
+            .enumerate()
+            .filter(|(ri, _)| owner_of_reg[*ri] == p)
+            .map(|(_, c)| *c)
+            .collect();
+        if p != 0 {
+            pir.output_slots = Vec::new();
+        }
+        total_kept += pir.total_ops();
+        part_irs.push(pir);
+    }
+
+    // RUM / boundary tracking: for each writable register, which
+    // partitions read it.
+    let mut tracked = Vec::new();
+    for (ri, c) in ir.commits.iter().enumerate() {
+        if never[ri] {
+            continue; // pure ROM: can never change, nothing to track
+        }
+        let owner = owner_of_reg[ri];
+        let readers: Vec<u32> = (0..n)
+            .filter(|&p| sources_per_part[p].contains(&c.0))
+            .map(|p| p as u32)
+            .collect();
+        if readers.is_empty() {
+            continue; // write-only register: nothing to propagate or gate
+        }
+        let rum_readers: Vec<u32> =
+            readers.iter().copied().filter(|&p| p as usize != owner).collect();
+        tracked.push(TrackedReg { owner, reg_slot: c.0, readers, rum_readers });
+    }
+
+    let replication_factor = total_kept as f64 / ir.total_ops().max(1) as f64;
+    Partitioning { part_irs, tracked, input_deps, replication_factor, owner_of_reg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::designs::catalog;
+    use crate::designs::tiny_cpu::{dhrystone_like, tiny_cpu_divergent};
+    use crate::graph::passes::optimize;
+    use crate::tensor::ir::lower;
+
+    fn ir_for(name: &str) -> LayerIr {
+        let d = catalog(name).unwrap();
+        let (opt, _) = optimize(&d.graph);
+        lower(&opt)
+    }
+
+    const BOTH: [PartitionerKind; 2] = [PartitionerKind::RoundRobin, PartitionerKind::MinCut];
+
+    /// `--partitioner` spellings resolve, unknown ones don't.
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(PartitionerKind::parse("rr"), Some(PartitionerKind::RoundRobin));
+        assert_eq!(PartitionerKind::parse("RR"), Some(PartitionerKind::RoundRobin));
+        assert_eq!(PartitionerKind::parse("mincut"), Some(PartitionerKind::MinCut));
+        assert_eq!(PartitionerKind::parse("min-cut"), Some(PartitionerKind::MinCut));
+        assert_eq!(PartitionerKind::parse("metis"), None);
+        assert_eq!(PartitionerKind::default(), PartitionerKind::MinCut);
+    }
+
+    /// Round-robin reproduces the historical `i mod n` assignment.
+    #[test]
+    fn round_robin_matches_modulo() {
+        let ir = ir_for("gemmini_like_4");
+        let owner = RoundRobin.assign(&ir, 3);
+        for (i, &p) in owner.iter().enumerate() {
+            assert_eq!(p, i % 3);
+        }
+    }
+
+    /// Partitioner invariant: ownership is a disjoint cover of every
+    /// committed register, for both strategies and several part counts.
+    #[test]
+    fn ownership_is_a_disjoint_cover() {
+        for name in ["fir8", "gemmini_like_4", "rocket_like_1c"] {
+            let ir = ir_for(name);
+            let all: BTreeSet<u32> = ir.commits.iter().map(|c| c.0).collect();
+            for kind in BOTH {
+                for n in [1usize, 2, 4] {
+                    let parting = partition_ir(&ir, n, kind);
+                    assert_eq!(parting.num_partitions(), n);
+                    let mut seen = BTreeSet::new();
+                    for pir in &parting.part_irs {
+                        for c in &pir.commits {
+                            assert!(
+                                seen.insert(c.0),
+                                "{name} {} n={n}: register slot {} owned twice",
+                                kind.name(),
+                                c.0
+                            );
+                        }
+                    }
+                    assert_eq!(seen, all, "{name} {} n={n}: cover", kind.name());
+                }
+            }
+        }
+    }
+
+    /// Partitioner invariant: the min-cut assignment is deterministic —
+    /// independent instances with the same seed agree exactly.
+    #[test]
+    fn mincut_assignment_is_deterministic() {
+        let ir = ir_for("gemmini_like_8");
+        let a = MinCut { seed: 7 }.assign(&ir, 4);
+        let b = MinCut { seed: 7 }.assign(&ir, 4);
+        assert_eq!(a, b);
+        let c = MinCut { seed: 7 }.assign(&ir, 4);
+        assert_eq!(a, c);
+    }
+
+    /// The headline quality bound: on the structured systolic array the
+    /// min-cut partitioning must beat round-robin's scatter *strictly*,
+    /// at P = 2 and P = 4, in both cut metrics that matter (pairs moved
+    /// per cycle, distinct registers crossing).
+    #[test]
+    fn mincut_cut_is_strictly_smaller_than_round_robin_on_gemmini_like_8() {
+        let ir = ir_for("gemmini_like_8");
+        for n in [2usize, 4] {
+            let rr = partition_ir(&ir, n, PartitionerKind::RoundRobin);
+            let mc = partition_ir(&ir, n, PartitionerKind::MinCut);
+            assert!(
+                mc.cut_pairs() < rr.cut_pairs(),
+                "P={n}: mincut pairs {} vs rr pairs {}",
+                mc.cut_pairs(),
+                rr.cut_pairs()
+            );
+            assert!(
+                mc.cut_regs() <= rr.cut_regs(),
+                "P={n}: mincut regs {} vs rr regs {}",
+                mc.cut_regs(),
+                rr.cut_regs()
+            );
+        }
+    }
+
+    /// Never-written registers (the divergent tiny_cpu's `rom{i}` ROM)
+    /// are owned by a partition that reads them and stay out of the RUM
+    /// tracking table entirely, under both partitioners.
+    #[test]
+    fn never_written_registers_stay_out_of_the_cut() {
+        let g = tiny_cpu_divergent(32, &dhrystone_like(5));
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let never = never_written(&ir);
+        let rom_slots: BTreeSet<u32> = ir
+            .commits
+            .iter()
+            .zip(&never)
+            .filter(|(_, &nw)| nw)
+            .map(|(c, _)| c.0)
+            .collect();
+        assert!(!rom_slots.is_empty(), "the divergent build must carry a register ROM");
+        for kind in BOTH {
+            let parting = partition_ir(&ir, 4, kind);
+            for t in &parting.tracked {
+                assert!(
+                    !rom_slots.contains(&t.reg_slot),
+                    "{}: ROM slot {} entered the RUM tracking table",
+                    kind.name(),
+                    t.reg_slot
+                );
+            }
+        }
+    }
+}

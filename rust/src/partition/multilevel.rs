@@ -1,0 +1,511 @@
+//! Multilevel (λ − 1)-connectivity hypergraph partitioning: heavy-edge
+//! coarsening → greedy initial split → Fiduccia–Mattheyses boundary
+//! refinement at every level, under a balance constraint.
+//!
+//! The shape follows hMETIS/KaHyPar at toy scale:
+//!
+//! 1. **Coarsening** — repeated heavy-edge matching: each vertex pairs
+//!    with the unmatched neighbour it shares the most (size-normalized)
+//!    hyperedge weight with; matched pairs merge, edges are remapped with
+//!    identical pin sets folded together, and single-pin edges dropped.
+//!    Merges are capped at the average partition weight so no coarse
+//!    vertex can single-handedly break the balance constraint.
+//! 2. **Initial split** — on the coarsest graph, vertices in decreasing
+//!    weight order go to the feasible partition with the strongest
+//!    existing affinity (most incident hyperedge weight already present),
+//!    ties to the lightest partition.
+//! 3. **Refinement** — k-way FM passes: repeatedly apply the best-gain
+//!    feasible single-vertex move (locking the vertex), allow limited
+//!    negative-gain moves to climb out of local minima, and roll back to
+//!    the best prefix of the pass; projected down level by level.
+//!
+//! Everything is deterministic for a fixed seed: the only randomness is
+//! the seeded visit order of the matching, and every tie-break is by
+//! lowest index. The output is a partition id per vertex respecting
+//! [`balance_limit`] (enforced by a final rebalance sweep at the finest
+//! level) with the anchor vertex pinned to partition 0.
+
+use std::collections::HashMap;
+
+use super::hypergraph::{pins_of, RegHypergraph};
+use crate::util::prng::Rng;
+
+/// Allowed relative imbalance: no partition's vertex weight may exceed
+/// `balance_limit(total, n, max_w)`.
+pub const BALANCE_EPS: f64 = 0.10;
+
+/// Coarsening stops once the graph has at most `max(8 n, 48)` vertices.
+const COARSEN_STOP_FACTOR: usize = 8;
+const COARSEN_MIN: usize = 48;
+/// FM passes per level, and the negative-gain stall window per pass.
+const MAX_FM_PASSES: usize = 6;
+const FM_STALL: usize = 24;
+/// Hyperedges wider than this are ignored when scoring matches (their
+/// 1/(|e|−1) contribution is negligible and scanning them is quadratic).
+const EDGE_SCORE_CAP: usize = 64;
+
+/// The partition-weight ceiling: `(1 + ε)` of the average, but never less
+/// than one maximal vertex on top of the average (otherwise a single hot
+/// cone could make every placement infeasible).
+pub fn balance_limit(total: u64, n: usize, max_w: u64) -> u64 {
+    let avg_floor = total / n as u64;
+    let relaxed = (total as f64 * (1.0 + BALANCE_EPS) / n as f64).ceil() as u64;
+    relaxed.max(avg_floor + max_w)
+}
+
+/// One level of the coarsening hierarchy.
+struct Level {
+    weight: Vec<u64>,
+    edges: Vec<Vec<u32>>,
+    edge_weight: Vec<u64>,
+    pins: Vec<Vec<u32>>,
+    anchor: usize,
+}
+
+/// Partition `hg` into `n` parts; returns a part id per vertex (anchor
+/// pinned to part 0). Deterministic for a fixed `seed`.
+pub fn partition(hg: &RegHypergraph, n: usize, seed: u64) -> Vec<u32> {
+    assert!(n >= 1);
+    if n == 1 || hg.n <= 1 {
+        return vec![0; hg.n];
+    }
+    let total: u64 = hg.weight.iter().sum();
+    let max_w = hg.weight.iter().copied().max().unwrap_or(0);
+    let limit = balance_limit(total, n, max_w);
+    let merge_cap = (total / n as u64).max(1);
+
+    let mut levels = vec![Level {
+        weight: hg.weight.clone(),
+        edges: hg.edges.clone(),
+        edge_weight: hg.edge_weight.clone(),
+        pins: hg.pins.clone(),
+        anchor: hg.anchor,
+    }];
+    let mut maps: Vec<Vec<u32>> = Vec::new();
+    let stop = (COARSEN_STOP_FACTOR * n).max(COARSEN_MIN);
+    let mut rng = Rng::new(seed);
+    while levels.last().unwrap().weight.len() > stop {
+        match coarsen(levels.last().unwrap(), merge_cap, &mut rng) {
+            Some((next, map)) => {
+                maps.push(map);
+                levels.push(next);
+            }
+            None => break,
+        }
+    }
+
+    let mut part = initial(levels.last().unwrap(), n, limit);
+    refine(levels.last().unwrap(), n, limit, &mut part);
+    for li in (0..maps.len()).rev() {
+        let fine = &levels[li];
+        let map = &maps[li];
+        let mut fine_part = vec![0u32; fine.weight.len()];
+        for v in 0..fine.weight.len() {
+            fine_part[v] = part[map[v] as usize];
+        }
+        part = fine_part;
+        refine(fine, n, limit, &mut part);
+    }
+    rebalance(&levels[0], n, limit, &mut part);
+    part
+}
+
+/// One heavy-edge-matching coarsening step; `None` when matching no
+/// longer shrinks the graph meaningfully.
+fn coarsen(level: &Level, merge_cap: u64, rng: &mut Rng) -> Option<(Level, Vec<u32>)> {
+    let nv = level.weight.len();
+    let mut order: Vec<u32> = (0..nv as u32).collect();
+    rng.shuffle(&mut order);
+    let mut mate: Vec<u32> = vec![u32::MAX; nv];
+    mate[level.anchor] = level.anchor as u32; // the anchor never merges
+    let mut score: Vec<u64> = vec![0; nv];
+    let mut touched: Vec<u32> = Vec::new();
+    for &u in &order {
+        let u = u as usize;
+        if mate[u] != u32::MAX {
+            continue;
+        }
+        for &e in &level.pins[u] {
+            let pins = &level.edges[e as usize];
+            if pins.len() > EDGE_SCORE_CAP {
+                continue;
+            }
+            let s = (level.edge_weight[e as usize] << 8) / (pins.len() as u64 - 1);
+            for &v in pins {
+                let v = v as usize;
+                if v == u || mate[v] != u32::MAX {
+                    continue;
+                }
+                if level.weight[u] + level.weight[v] > merge_cap {
+                    continue;
+                }
+                if score[v] == 0 {
+                    touched.push(v as u32);
+                }
+                score[v] += s;
+            }
+        }
+        let mut best: Option<usize> = None;
+        for &v in &touched {
+            let v = v as usize;
+            let better = match best {
+                None => true,
+                Some(b) => score[v] > score[b] || (score[v] == score[b] && v < b),
+            };
+            if better {
+                best = Some(v);
+            }
+        }
+        match best {
+            Some(v) => {
+                mate[u] = v as u32;
+                mate[v] = u as u32;
+            }
+            None => mate[u] = u as u32,
+        }
+        for &v in &touched {
+            score[v as usize] = 0;
+        }
+        touched.clear();
+    }
+
+    // coarse ids in fine-index order (determinism)
+    let mut map = vec![u32::MAX; nv];
+    let mut n_coarse = 0u32;
+    for v in 0..nv {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        map[v] = n_coarse;
+        map[mate[v] as usize] = n_coarse;
+        n_coarse += 1;
+    }
+    if n_coarse as usize * 100 > nv * 97 {
+        return None; // matching stalled
+    }
+
+    let mut weight = vec![0u64; n_coarse as usize];
+    for v in 0..nv {
+        weight[map[v] as usize] += level.weight[v];
+    }
+    let mut edges: Vec<Vec<u32>> = Vec::new();
+    let mut edge_weight: Vec<u64> = Vec::new();
+    let mut seen: HashMap<Vec<u32>, usize> = HashMap::new();
+    let mut scratch: Vec<u32> = Vec::new();
+    for (e, pins) in level.edges.iter().enumerate() {
+        scratch.clear();
+        scratch.extend(pins.iter().map(|&v| map[v as usize]));
+        scratch.sort_unstable();
+        scratch.dedup();
+        if scratch.len() < 2 {
+            continue; // edge collapsed inside one coarse vertex
+        }
+        match seen.get(&scratch) {
+            Some(&i) => edge_weight[i] += level.edge_weight[e],
+            None => {
+                seen.insert(scratch.clone(), edges.len());
+                edges.push(scratch.clone());
+                edge_weight.push(level.edge_weight[e]);
+            }
+        }
+    }
+    let pins = pins_of(n_coarse as usize, &edges);
+    let anchor = map[level.anchor] as usize;
+    Some((Level { weight, edges, edge_weight, pins, anchor }, map))
+}
+
+/// Greedy affinity-based initial split of the coarsest level.
+fn initial(level: &Level, n: usize, limit: u64) -> Vec<u32> {
+    let nv = level.weight.len();
+    let mut part = vec![0u32; nv];
+    let mut load = vec![0u64; n];
+    let mut cnt: Vec<Vec<u32>> = level.edges.iter().map(|_| vec![0u32; n]).collect();
+    let place = |v: usize, p: usize, part: &mut [u32], load: &mut [u64], cnt: &mut [Vec<u32>]| {
+        part[v] = p as u32;
+        load[p] += level.weight[v];
+        for &e in &level.pins[v] {
+            cnt[e as usize][p] += 1;
+        }
+    };
+    place(level.anchor, 0, &mut part, &mut load, &mut cnt);
+
+    let mut order: Vec<u32> = (0..nv as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(level.weight[v as usize]), v));
+    for &v in &order {
+        let v = v as usize;
+        if v == level.anchor {
+            continue;
+        }
+        let w = level.weight[v];
+        let mut best: Option<(u64, usize)> = None;
+        for p in 0..n {
+            if load[p] + w > limit {
+                continue;
+            }
+            let mut s = 0u64;
+            for &e in &level.pins[v] {
+                if cnt[e as usize][p] > 0 {
+                    s += level.edge_weight[e as usize];
+                }
+            }
+            let better = match best {
+                None => true,
+                Some((bs, bp)) => s > bs || (s == bs && (load[p], p) < (load[bp], bp)),
+            };
+            if better {
+                best = Some((s, p));
+            }
+        }
+        let p = match best {
+            Some((_, p)) => p,
+            // no feasible bin (can only happen at coarse levels where a
+            // merged vertex outweighs the limit): fall back to lightest
+            None => (0..n).min_by_key(|&p| (load[p], p)).unwrap(),
+        };
+        place(v, p, &mut part, &mut load, &mut cnt);
+    }
+    part
+}
+
+/// Per-edge part pin counts and per-part loads for `part`.
+fn edge_counts(level: &Level, n: usize, part: &[u32]) -> (Vec<Vec<u32>>, Vec<u64>) {
+    let mut cnt: Vec<Vec<u32>> = level.edges.iter().map(|_| vec![0u32; n]).collect();
+    for (e, pins) in level.edges.iter().enumerate() {
+        for &v in pins {
+            cnt[e][part[v as usize] as usize] += 1;
+        }
+    }
+    let mut load = vec![0u64; n];
+    for (v, &p) in part.iter().enumerate() {
+        load[p as usize] += level.weight[v];
+    }
+    (cnt, load)
+}
+
+fn connectivity(level: &Level, cnt: &[Vec<u32>]) -> i64 {
+    let mut cost = 0i64;
+    for (e, c) in cnt.iter().enumerate() {
+        let parts_present = c.iter().filter(|&&x| x > 0).count() as i64;
+        cost += level.edge_weight[e] as i64 * (parts_present - 1);
+    }
+    cost
+}
+
+/// The (λ − 1) gain of moving `v` from `from` to `to`.
+fn move_gain(level: &Level, cnt: &[Vec<u32>], v: usize, from: usize, to: usize) -> i64 {
+    let mut gain = 0i64;
+    for &e in &level.pins[v] {
+        let c = &cnt[e as usize];
+        if c[from] == 1 {
+            gain += level.edge_weight[e as usize] as i64;
+        }
+        if c[to] == 0 {
+            gain -= level.edge_weight[e as usize] as i64;
+        }
+    }
+    gain
+}
+
+fn apply_move(
+    level: &Level,
+    cnt: &mut [Vec<u32>],
+    load: &mut [u64],
+    part: &mut [u32],
+    v: usize,
+    to: usize,
+) {
+    let from = part[v] as usize;
+    part[v] = to as u32;
+    load[from] -= level.weight[v];
+    load[to] += level.weight[v];
+    for &e in &level.pins[v] {
+        cnt[e as usize][from] -= 1;
+        cnt[e as usize][to] += 1;
+    }
+}
+
+/// K-way FM boundary refinement with best-prefix rollback.
+fn refine(level: &Level, n: usize, limit: u64, part: &mut [u32]) {
+    let nv = level.weight.len();
+    let (mut cnt, mut load) = edge_counts(level, n, part);
+    let mut cand = vec![false; n];
+    let mut cand_list: Vec<usize> = Vec::new();
+    for _ in 0..MAX_FM_PASSES {
+        let pass_start = connectivity(level, &cnt);
+        let mut cur = pass_start;
+        let mut best_cut = cur;
+        let mut best_prefix = 0usize;
+        let mut locked = vec![false; nv];
+        locked[level.anchor] = true; // the anchor stays in partition 0
+        let mut moves: Vec<(u32, u32, u32)> = Vec::new();
+        let mut stall = 0usize;
+        loop {
+            let mut best: Option<(i64, usize, usize)> = None;
+            for v in 0..nv {
+                if locked[v] {
+                    continue;
+                }
+                let from = part[v] as usize;
+                let w = level.weight[v];
+                cand_list.clear();
+                for &e in &level.pins[v] {
+                    let c = &cnt[e as usize];
+                    for (p, &x) in c.iter().enumerate() {
+                        if p != from && x > 0 && !cand[p] {
+                            cand[p] = true;
+                            cand_list.push(p);
+                        }
+                    }
+                }
+                let pmin = (0..n).min_by_key(|&p| (load[p], p)).unwrap();
+                if pmin != from && !cand[pmin] {
+                    cand[pmin] = true;
+                    cand_list.push(pmin);
+                }
+                for &to in &cand_list {
+                    if load[to] + w > limit {
+                        continue;
+                    }
+                    let gain = move_gain(level, &cnt, v, from, to);
+                    let better = match best {
+                        None => true,
+                        Some((bg, _, _)) => gain > bg,
+                    };
+                    if better {
+                        best = Some((gain, v, to));
+                    }
+                }
+                for &p in &cand_list {
+                    cand[p] = false;
+                }
+            }
+            let Some((gain, v, to)) = best else { break };
+            let from = part[v] as usize;
+            apply_move(level, &mut cnt, &mut load, part, v, to);
+            locked[v] = true;
+            moves.push((v as u32, from as u32, to as u32));
+            cur -= gain;
+            if cur < best_cut {
+                best_cut = cur;
+                best_prefix = moves.len();
+                stall = 0;
+            } else {
+                stall += 1;
+                if stall >= FM_STALL {
+                    break;
+                }
+            }
+        }
+        // roll back past the best prefix
+        for &(v, from, _) in moves[best_prefix..].iter().rev() {
+            apply_move(level, &mut cnt, &mut load, part, v as usize, from as usize);
+        }
+        if best_cut >= pass_start {
+            break;
+        }
+    }
+}
+
+/// Final balance repair at the finest level: while some partition exceeds
+/// the limit, move its least-damaging vertex to the lightest partition.
+/// Feasible by construction there (every vertex fits on top of a
+/// below-average load) and bounded by a move budget.
+fn rebalance(level: &Level, n: usize, limit: u64, part: &mut [u32]) {
+    let nv = level.weight.len();
+    let (mut cnt, mut load) = edge_counts(level, n, part);
+    let mut budget = nv * 4 + 16;
+    loop {
+        let over = (0..n).max_by_key(|&p| (load[p], std::cmp::Reverse(p))).unwrap();
+        if load[over] <= limit || budget == 0 {
+            break;
+        }
+        budget -= 1;
+        let to = (0..n).min_by_key(|&p| (load[p], p)).unwrap();
+        let mut best: Option<(i64, usize)> = None;
+        for v in 0..nv {
+            if part[v] as usize != over || v == level.anchor || level.weight[v] == 0 {
+                continue;
+            }
+            if load[to] + level.weight[v] > limit {
+                continue;
+            }
+            let gain = move_gain(level, &cnt, v, over, to);
+            let better = match best {
+                None => true,
+                Some((bg, _)) => gain > bg,
+            };
+            if better {
+                best = Some((gain, v));
+            }
+        }
+        let Some((_, v)) = best else { break };
+        apply_move(level, &mut cnt, &mut load, part, v, to);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::passes::optimize;
+    use crate::partition::hypergraph::{self, connectivity_cost};
+    use crate::tensor::ir::lower;
+
+    fn hg_for(name: &str) -> hypergraph::RegHypergraph {
+        let d = crate::designs::catalog(name).unwrap();
+        let (opt, _) = optimize(&d.graph);
+        hypergraph::build(&lower(&opt))
+    }
+
+    /// The multilevel split respects the balance limit and covers every
+    /// vertex with a valid part id, across designs and part counts.
+    #[test]
+    fn partition_is_balanced_and_total() {
+        for name in ["fir8", "gemmini_like_8", "rocket_like_1c"] {
+            let hg = hg_for(name);
+            let total: u64 = hg.weight.iter().sum();
+            let max_w = hg.weight.iter().copied().max().unwrap();
+            for n in [2usize, 4] {
+                let part = partition(&hg, n, 1);
+                assert_eq!(part.len(), hg.n, "{name} n={n}");
+                assert!(part.iter().all(|&p| (p as usize) < n), "{name} n={n}");
+                assert_eq!(part[hg.anchor], 0, "{name} n={n}: anchor pinned to 0");
+                let mut load = vec![0u64; n];
+                for (v, &p) in part.iter().enumerate() {
+                    load[p as usize] += hg.weight[v];
+                }
+                let limit = balance_limit(total, n, max_w);
+                for (p, &l) in load.iter().enumerate() {
+                    assert!(
+                        l <= limit,
+                        "{name} n={n}: partition {p} weighs {l} > limit {limit}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Refinement must leave the cut far below the scatter baseline on
+    /// the structured systolic array (the RepCut-style win).
+    #[test]
+    fn mincut_beats_scatter_on_gemmini() {
+        let hg = hg_for("gemmini_like_8");
+        for n in [2usize, 4] {
+            let part = partition(&hg, n, 1);
+            let scattered: Vec<u32> = (0..hg.n as u32).map(|v| v % n as u32).collect();
+            let cut = connectivity_cost(&hg, &part);
+            let base = connectivity_cost(&hg, &scattered);
+            assert!(cut < base, "n={n}: multilevel cut {cut} vs scatter {base}");
+        }
+    }
+
+    /// Same seed → same partition, across independent runs.
+    #[test]
+    fn partition_is_deterministic_for_a_fixed_seed() {
+        let hg = hg_for("gemmini_like_4");
+        let a = partition(&hg, 4, 42);
+        let b = partition(&hg, 4, 42);
+        assert_eq!(a, b);
+        let c = partition(&hg, 4, 42);
+        assert_eq!(a, c);
+    }
+}

@@ -12,6 +12,7 @@ use rteaal::graph::RefSim;
 use rteaal::kernels::{
     build_batch, build_sparse, build_with_oim, BatchKernel, KernelConfig, ALL_KERNELS,
 };
+use rteaal::partition::PartitionerKind;
 
 /// tiny_cpu runs its program to the golden checksum under all 7 kernels.
 #[test]
@@ -131,12 +132,29 @@ fn parallel_sim_matches_refsim_on_catalog_designs() {
 }
 
 /// One cell of the partitions × lanes differential grid: a
-/// `BatchParallelSim` over (parts, lanes) against one graph reference
-/// interpreter **per lane**, checking named outputs *and* every
-/// committed register slot, every cycle. Divergent-lane register
-/// initialization (`Design::lane_init`) is replayed on both sides.
-fn grid_check_against_refsim(d: &Design, c: &Compiled, parts: usize, lanes: usize, cycles: u64) {
-    let mut par = BatchParallelSim::new(&c.ir, KernelConfig::PSU, parts, lanes, false);
+/// `BatchParallelSim` over (parts, lanes) — under the given register
+/// partitioner, optionally in sparse (partition-skipping) mode — against
+/// one graph reference interpreter **per lane**, checking named outputs
+/// *and* every committed register slot, every cycle. Divergent-lane
+/// register initialization (`Design::lane_init`) is replayed on both
+/// sides.
+fn grid_check_against_refsim(
+    d: &Design,
+    c: &Compiled,
+    parts: usize,
+    lanes: usize,
+    cycles: u64,
+    partitioner: PartitionerKind,
+    sparse: bool,
+) {
+    let mut par = BatchParallelSim::with_partitioner(
+        &c.ir,
+        KernelConfig::PSU,
+        parts,
+        lanes,
+        sparse,
+        partitioner,
+    );
     let pokes = d.resolved_lane_init(&c.graph, lanes);
     for &(slot, lane, value) in &pokes {
         par.poke_lane(slot, lane, value);
@@ -163,28 +181,27 @@ fn grid_check_against_refsim(d: &Design, c: &Compiled, parts: usize, lanes: usiz
             assert_eq!(
                 par.lane_outputs(l),
                 r.outputs(),
-                "{} P={parts} B={lanes} lane={l} cycle={cycle}",
-                d.name
+                "{} {} sparse={sparse} P={parts} B={lanes} lane={l} cycle={cycle}",
+                d.name,
+                partitioner.name()
             );
             for &(reg, _, _) in &c.ir.commits {
                 assert_eq!(
                     par.reg_lane(reg, l),
                     r.value(reg),
-                    "{} P={parts} B={lanes} lane={l} cycle={cycle} reg slot {reg}",
-                    d.name
+                    "{} {} sparse={sparse} P={parts} B={lanes} lane={l} cycle={cycle} reg slot {reg}",
+                    d.name,
+                    partitioner.name()
                 );
             }
         }
     }
 }
 
-/// The headline partitions × lanes differential grid: `BatchParallelSim`
-/// is bit-identical **per lane** to the graph reference interpreter on
-/// real designs — including the divergent-lane register-ROM tiny_cpu —
-/// across P ∈ {1, 2, 4} × B ∈ {1, 8, 64}, 64 cycles each, checking
-/// outputs and committed register slots every cycle.
-#[test]
-fn batch_parallel_grid_matches_refsim_per_lane() {
+/// The three real designs the differential grids run over — including
+/// the divergent-lane register-ROM tiny_cpu, whose pure-ROM `rom{i}`
+/// registers exercise the never-written ownership fix.
+fn grid_designs() -> Vec<Design> {
     let prog_a = dhrystone_like(12);
     let prog_b = dhrystone_like(7);
     let rom_words = 32;
@@ -195,13 +212,62 @@ fn batch_parallel_grid_matches_refsim_per_lane() {
         default_cycles: 0,
         lane_init: lane_rom_init(rom_words, &[prog_a, prog_b]),
     };
-    let designs: Vec<Design> =
-        vec![catalog("fir8").unwrap(), catalog("gemmini_like_4").unwrap(), divergent];
-    for d in &designs {
+    vec![catalog("fir8").unwrap(), catalog("gemmini_like_4").unwrap(), divergent]
+}
+
+/// The headline partitions × lanes differential grid: `BatchParallelSim`
+/// under the default min-cut partitioner is bit-identical **per lane**
+/// to the graph reference interpreter on real designs — including the
+/// divergent-lane register-ROM tiny_cpu — across P ∈ {1, 2, 4} ×
+/// B ∈ {1, 8, 64}, 64 cycles each, checking outputs and committed
+/// register slots every cycle.
+#[test]
+fn batch_parallel_grid_matches_refsim_per_lane() {
+    for d in &grid_designs() {
         let c = compile_design(d, CompileOpts::default());
         for parts in [1usize, 2, 4] {
             for lanes in [1usize, 8, 64] {
-                grid_check_against_refsim(d, &c, parts, lanes, 64);
+                grid_check_against_refsim(d, &c, parts, lanes, 64, PartitionerKind::MinCut, false);
+            }
+        }
+    }
+}
+
+/// The same differential grid under the round-robin baseline partitioner
+/// (reduced to the multi-partition corner — P = 1 is
+/// partitioner-independent): ownership strategy must never change
+/// behaviour.
+#[test]
+fn batch_parallel_grid_matches_refsim_round_robin() {
+    for d in &grid_designs() {
+        let c = compile_design(d, CompileOpts::default());
+        for parts in [2usize, 4] {
+            for lanes in [1usize, 8] {
+                grid_check_against_refsim(
+                    d,
+                    &c,
+                    parts,
+                    lanes,
+                    64,
+                    PartitionerKind::RoundRobin,
+                    false,
+                );
+            }
+        }
+    }
+}
+
+/// The same differential grid in sparse (partition-skipping) mode under
+/// min-cut ownership: activity-masked partitioned runs stay bit-identical
+/// to the per-lane reference interpreter, including across the divergent
+/// ROM's pre-run pokes (`B ≤ 64` for the lane masks).
+#[test]
+fn batch_parallel_grid_matches_refsim_sparse_mincut() {
+    for d in &grid_designs() {
+        let c = compile_design(d, CompileOpts::default());
+        for parts in [2usize, 4] {
+            for lanes in [8usize, 64] {
+                grid_check_against_refsim(d, &c, parts, lanes, 64, PartitionerKind::MinCut, true);
             }
         }
     }

@@ -85,24 +85,40 @@ fn optimization_pipelines_preserve_long_run_behaviour() {
 }
 
 /// The partitioned (RepCut-style) simulator agrees with single-threaded
-/// execution for any partition count.
+/// execution for any partition count, under both register-ownership
+/// strategies (round-robin scatter and multilevel min-cut) — ownership
+/// is a performance choice, never a semantic one, even on random
+/// circuits.
 #[test]
 fn partitioned_simulation_agrees() {
+    use rteaal::partition::PartitionerKind;
     propcheck::check("partitioned-agrees", 8, |rng, size| {
         let g = random_circuit(rng, 40 + size * 8);
         let (opt, _) = passes::optimize(&g);
         let ir = lower(&opt);
         let oim = Oim::from_ir(&ir);
         let n = 2 + rng.index(3);
-        let mut par =
-            rteaal::coordinator::parallel::ParallelSim::new(&ir, rteaal::kernels::KernelConfig::TI, n);
+        let kind = if rng.index(2) == 0 {
+            PartitionerKind::RoundRobin
+        } else {
+            PartitionerKind::MinCut
+        };
+        let mut par = rteaal::coordinator::parallel::ParallelSim::with_partitioner(
+            &ir,
+            rteaal::kernels::KernelConfig::TI,
+            n,
+            kind,
+        );
         let mut single = build_with_oim(rteaal::kernels::KernelConfig::TI, &ir, &oim);
         for cycle in 0..12 {
             let inputs = random_inputs(rng, &opt);
             single.step(&inputs);
             par.step(&inputs);
             if par.outputs() != single.outputs() {
-                return Err(format!("partitioned ({n}) diverged at cycle {cycle}"));
+                return Err(format!(
+                    "partitioned ({n}, {}) diverged at cycle {cycle}",
+                    kind.name()
+                ));
             }
         }
         Ok(())
