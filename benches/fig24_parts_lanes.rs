@@ -6,7 +6,8 @@
 //! (`report::fig24_measure`) and reused for both the rendered table and
 //! the JSON dump (`results/fig24_parts_lanes.json`), which additionally
 //! records the per-partitioning RUM cut (`cut_regs`) and the sparse
-//! (partition-skipping) measurement on `alu_farm_64`.
+//! (partition- **and** group-skipping) measurement on `alu_farm_64`,
+//! with both skip rates.
 //!
 //! Acceptance checks built in:
 //! * composing thread-level and data-level parallelism must pay — the TI
@@ -20,7 +21,11 @@
 //! * the sparse ParallelSim must skip idle partitions — with the
 //!   stimulus frozen after cycle 0 on `alu_farm_64`, the partition-cycle
 //!   skip-rate must exceed 50% (deterministic; also enforced as a cargo
-//!   test in `coordinator::parallel`).
+//!   test in `coordinator::parallel`);
+//! * the group-masked sparse kernels *inside* the partitions must skip
+//!   too — on the same frozen `alu_farm_64` run at P=4 × B=8, the
+//!   composed group-level op-lane skip-rate must exceed 50%
+//!   (deterministic; partition-skipped cycles count as skipped op-lanes).
 
 rteaal::install_tracking_alloc!();
 
@@ -101,6 +106,7 @@ fn main() {
                 ("partitioner", Json::Str("mincut".to_string())),
                 ("toggle_rate", Json::Num(0.0)),
                 ("partition_skip_rate", Json::Num(sparse.skip_rate.unwrap_or(0.0))),
+                ("group_skip_rate", Json::Num(sparse.group_skip_rate.unwrap_or(0.0))),
                 ("lane_cycles_per_sec", Json::Num(sparse.hz)),
                 ("dense_lane_cycles_per_sec", Json::Num(dense.hz)),
             ]),
@@ -172,15 +178,25 @@ fn main() {
 
     // acceptance: idle partitions are skipped on the frozen-stimulus farm
     let skip = sparse.skip_rate.unwrap_or(0.0);
+    let group_skip = sparse.group_skip_rate.unwrap_or(0.0);
     println!(
         "sparse ParallelSim on alu_farm_64 (P={parts}, B={lanes}, frozen stimulus): \
-         skip-rate {:.1}%, {:.2} M lane-cyc/s vs dense {:.2} M lane-cyc/s",
+         partition skip-rate {:.1}%, group skip-rate {:.1}%, \
+         {:.2} M lane-cyc/s vs dense {:.2} M lane-cyc/s",
         100.0 * skip,
+        100.0 * group_skip,
         sparse.hz / 1e6,
         dense.hz / 1e6
     );
     assert!(
         skip > 0.5,
         "partition skip-rate {skip:.3} should exceed 0.5 with frozen stimulus"
+    );
+    // acceptance: the sparse kernels inside the partitions compose —
+    // group-level op-lane skipping (partition-skipped cycles counted as
+    // skipped op-lanes) must also clear 50% on the frozen farm
+    assert!(
+        group_skip > 0.5,
+        "group-level skip-rate {group_skip:.3} should exceed 0.5 with frozen stimulus"
     );
 }

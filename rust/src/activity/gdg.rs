@@ -52,6 +52,16 @@ pub struct GroupDepGraph {
     pub num_edges: usize,
     /// Total effectual operations across all groups.
     pub total_ops: usize,
+    /// CSR offsets of the slot → direct-reader-groups index
+    /// ([`Self::readers_of`]); `num_slots + 1` entries.
+    reader_offsets: Vec<u32>,
+    /// CSR payload of the slot → direct-reader-groups index, sorted per
+    /// slot.
+    reader_groups: Vec<u32>,
+    /// Group writing each slot within the cycle ([`Self::writer_of`]);
+    /// `u32::MAX` for slots no group writes (registers, inputs,
+    /// constants).
+    slot_writer: Vec<u32>,
 }
 
 impl GroupDepGraph {
@@ -70,6 +80,8 @@ impl GroupDepGraph {
         }
 
         let mut g = GroupDepGraph::default();
+        // (slot, reader group) pairs, turned into the CSR index below
+        let mut reader_edges: Vec<(u32, u32)> = Vec::new();
         let mut op_idx = 0usize;
         let mut r_idx = 0usize;
         for layer in 0..oim.num_layers() {
@@ -93,6 +105,7 @@ impl GroupDepGraph {
                     let ar = oim.c.arity[op_idx] as usize;
                     for o in 0..ar {
                         let slot = oim.c.r_coords[r_idx + o] as usize;
+                        reader_edges.push((slot as u32, gid));
                         let w = writer[slot];
                         if w != NONE {
                             debug_assert!(w < gid, "operand produced in the same layer");
@@ -124,7 +137,52 @@ impl GroupDepGraph {
             }
         }
         debug_assert_eq!(g.total_ops, oim.total_ops());
+        // Slot → direct-reader-groups CSR. *Every* operand slot is
+        // indexed, including ones the dependency classification above
+        // filed as constants: a partitioned IR presents cut registers
+        // (committed by another partition, written here only through RUM
+        // pokes) with no writer, input port or commit of its own, and
+        // targeted invalidation must still find their reader groups.
+        reader_edges.sort_unstable();
+        reader_edges.dedup();
+        let mut offsets = vec![0u32; num_slots + 1];
+        for &(s, _) in &reader_edges {
+            offsets[s as usize + 1] += 1;
+        }
+        for i in 1..offsets.len() {
+            offsets[i] += offsets[i - 1];
+        }
+        g.reader_offsets = offsets;
+        g.reader_groups = reader_edges.into_iter().map(|(_, gid)| gid).collect();
+        g.slot_writer = writer;
         g
+    }
+
+    /// The group that writes `slot` within the cycle, if any (`None` for
+    /// registers, input ports, constants and out-of-range slots). An
+    /// out-of-band write to an op-*output* slot must re-run this group so
+    /// the poked value is overwritten exactly as a dense step would
+    /// overwrite it.
+    #[inline]
+    pub fn writer_of(&self, slot: u32) -> Option<u32> {
+        match self.slot_writer.get(slot as usize) {
+            Some(&w) if w != u32::MAX => Some(w),
+            _ => None,
+        }
+    }
+
+    /// The groups with a direct operand on `slot` (sorted, deduplicated);
+    /// empty for unread and out-of-range slots. This is the entry point of
+    /// targeted invalidation ([`super::mask::ActivityTracker::note_slot_changed`]):
+    /// an out-of-band write to `slot` must re-evaluate exactly these
+    /// groups and their transitive descendants.
+    #[inline]
+    pub fn readers_of(&self, slot: u32) -> &[u32] {
+        let s = slot as usize;
+        if s + 1 >= self.reader_offsets.len() {
+            return &[];
+        }
+        &self.reader_groups[self.reader_offsets[s] as usize..self.reader_offsets[s + 1] as usize]
     }
 }
 
@@ -238,5 +296,50 @@ mod tests {
                 assert!((d as usize) < gi, "group {gi} has non-topological dep {d}");
             }
         }
+    }
+
+    /// The slot → reader-groups index is exact: `readers_of(slot)` lists
+    /// precisely the groups with a direct operand on that slot (every
+    /// operand slot is indexed, constants included), and unread or
+    /// out-of-range slots return the empty slice.
+    #[test]
+    fn slot_reader_index_is_exact() {
+        let (gdg, _ir, oim) = sample(31_003, 130);
+        use std::collections::{BTreeMap, BTreeSet};
+        let mut want: BTreeMap<u32, BTreeSet<u32>> = BTreeMap::new();
+        let mut r_idx = 0usize;
+        for (gi, grp) in gdg.groups.iter().enumerate() {
+            for op in grp.op_start..grp.op_end {
+                let ar = oim.c.arity[op as usize] as usize;
+                for o in 0..ar {
+                    want.entry(oim.c.r_coords[r_idx + o]).or_default().insert(gi as u32);
+                }
+                r_idx += ar;
+            }
+        }
+        // writer map: the last group writing a slot (in group order) owns it
+        let mut want_writer: BTreeMap<u32, u32> = BTreeMap::new();
+        for (gi, grp) in gdg.groups.iter().enumerate() {
+            for op in grp.op_start..grp.op_end {
+                want_writer.insert(oim.c.s_coords[op as usize], gi as u32);
+            }
+        }
+        for slot in 0..oim.num_slots {
+            let got: BTreeSet<u32> = gdg.readers_of(slot).iter().copied().collect();
+            assert_eq!(
+                got.len(),
+                gdg.readers_of(slot).len(),
+                "slot {slot}: reader list must be deduplicated"
+            );
+            let expect = want.get(&slot).cloned().unwrap_or_default();
+            assert_eq!(got, expect, "slot {slot}: reader set");
+            assert_eq!(
+                gdg.writer_of(slot),
+                want_writer.get(&slot).copied(),
+                "slot {slot}: writer group"
+            );
+        }
+        assert!(gdg.readers_of(oim.num_slots + 7).is_empty(), "out-of-range slot");
+        assert_eq!(gdg.writer_of(oim.num_slots + 7), None, "out-of-range slot writer");
     }
 }

@@ -11,6 +11,14 @@
 //! the GDG is in topological order). This is conservative (a changed
 //! source does not guarantee a changed output) but never misses work, and
 //! it costs `O(edges)` per cycle regardless of `B`.
+//!
+//! Out-of-band slot writes (`poke_lane` for divergent-lane init, the
+//! partitioned simulator's RUM pokes) bypass the boundary detectors; they
+//! feed [`ActivityTracker::note_slot_changed`] instead, which marks the
+//! written slot's direct reader groups pending in the written lanes via
+//! the GDG's slot → reader-groups index — the forward sweep then wakes
+//! exactly the poked slot's descendants in exactly the poked lanes,
+//! rather than recolding every group in every lane.
 
 use super::gdg::GroupDepGraph;
 use super::{full_mask, ActivityStats};
@@ -28,8 +36,12 @@ pub struct ActivityTracker {
     pub reg_changed: Vec<u64>,
     /// Active lanes per group, recomputed each cycle.
     pub active: Vec<u64>,
-    /// First cycle (or post-poke): run everything once to establish all
-    /// combinational slot values.
+    /// Targeted out-of-band invalidations for the next cycle, per group
+    /// (filled by [`Self::note_slot_changed`], consumed and cleared by
+    /// [`Self::begin_cycle`]).
+    pending: Vec<u64>,
+    /// First cycle: run everything once to establish all combinational
+    /// slot values.
     cold: bool,
     stats: ActivityStats,
 }
@@ -47,6 +59,7 @@ impl ActivityTracker {
             input_changed: vec![0; num_inputs],
             reg_changed: vec![0; num_commits],
             active: vec![0; groups],
+            pending: vec![0; groups],
             cold: true,
             stats: ActivityStats::default(),
         }
@@ -63,7 +76,10 @@ impl ActivityTracker {
             }
         } else {
             for g in 0..self.gdg.groups.len() {
-                let mut m = 0u64;
+                // pending carries targeted out-of-band invalidations; the
+                // forward sweep below propagates them (like every other
+                // source) to all transitive descendants within this cycle
+                let mut m = self.pending[g];
                 for &i in &self.gdg.input_deps[g] {
                     m |= self.input_changed[i as usize];
                 }
@@ -82,6 +98,9 @@ impl ActivityTracker {
         for x in &mut self.reg_changed {
             *x = 0;
         }
+        for x in &mut self.pending {
+            *x = 0;
+        }
         self.stats.cycles += 1;
         self.stats.total_op_lanes += (self.gdg.total_ops * self.lanes) as u64;
         for (g, &m) in self.active.iter().enumerate() {
@@ -90,9 +109,30 @@ impl ActivityTracker {
         }
     }
 
+    /// Targeted invalidation for an out-of-band slot write (`poke_lane`,
+    /// partitioned RUM pokes): OR `lane_mask` into the pending masks of
+    /// the groups that read `slot` directly ([`GroupDepGraph::readers_of`])
+    /// — plus the group that *writes* it, if any: a dense step recomputes
+    /// an op-output slot from its operands (overwriting the poke), so
+    /// re-running the writer is what keeps pokes of non-register slots
+    /// dense-equivalent. The next [`Self::begin_cycle`] forward sweep
+    /// carries the mask to every transitive descendant, so exactly the
+    /// cone around the written slot re-evaluates, in exactly the written
+    /// lanes — replacing the all-groups/all-lanes recold these writes
+    /// used to pay.
+    pub fn note_slot_changed(&mut self, slot: u32, lane_mask: u64) {
+        if let Some(w) = self.gdg.writer_of(slot) {
+            self.pending[w as usize] |= lane_mask;
+        }
+        for &gid in self.gdg.readers_of(slot) {
+            self.pending[gid as usize] |= lane_mask;
+        }
+    }
+
     /// Invalidate all cached slot values: the next cycle runs every group
-    /// in every lane. Used after out-of-band slot writes (`poke_lane`),
-    /// which bypass boundary change detection.
+    /// in every lane. An explicit full-invalidate escape hatch (and test
+    /// aid); production out-of-band writes use the targeted
+    /// [`Self::note_slot_changed`] instead.
     pub fn force_recold(&mut self) {
         self.cold = true;
     }
@@ -166,6 +206,68 @@ mod tests {
         t.force_recold();
         t.begin_cycle();
         assert_eq!(t.active, vec![0b1111; 3]);
+    }
+
+    /// Targeted invalidation: a single-slot `note_slot_changed` wakes
+    /// exactly the GDG cone around that slot — its writer group (which
+    /// must overwrite the poke, as a dense step would), the groups
+    /// reading it, and everything transitively downstream — in exactly
+    /// the noted lane, and nothing else. A second quiet cycle goes fully
+    /// idle (no recold anywhere).
+    #[test]
+    fn note_slot_changed_wakes_only_descendants_in_the_noted_lane() {
+        use crate::tensor::ir::KOp;
+        let mut g = Graph::new("poketarget");
+        let a = g.input("a", 8);
+        let b = g.input("b", 8);
+        let x = g.prim(PrimOp::Not, &[a]); // layer 0, cone A
+        let w = g.prim(PrimOp::Neg, &[b]); // layer 0, independent cone B
+        let y = g.prim(PrimOp::Neg, &[x]); // layer 1, downstream of x
+        let z = g.prim(PrimOp::Orr, &[y]); // layer 2, downstream of y
+        g.output("z", z);
+        g.output("w", w);
+        let ir = lower(&g);
+        let oim = Oim::from_ir(&ir);
+        let gdg = GroupDepGraph::build(&ir, &oim);
+        assert_eq!(gdg.groups.len(), 4);
+        let find = |layer: u32, op: KOp| {
+            gdg.groups
+                .iter()
+                .position(|grp| grp.layer == layer && grp.opcode == op as u8)
+                .unwrap()
+        };
+        let g_not = find(0, KOp::Not);
+        let g_negb = find(0, KOp::Neg);
+        let g_negx = find(1, KOp::Neg);
+        let g_orr = find(2, KOp::Orr);
+        // the slot the layer-0 Not writes (x): read by g_negx, written by
+        // g_not
+        let x_slot = oim.c.s_coords[gdg.groups[g_not].op_start as usize];
+        assert_eq!(gdg.readers_of(x_slot), &[g_negx as u32]);
+        assert_eq!(gdg.writer_of(x_slot), Some(g_not as u32));
+        // input and register-free slots have no writer group
+        assert_eq!(gdg.writer_of(ir.input_slots[0]), None);
+
+        let mut t = ActivityTracker::new(gdg, ir.input_slots.len(), ir.commits.len(), 4);
+        t.begin_cycle(); // cold
+        assert_eq!(t.active, vec![0b1111; 4]);
+
+        // out-of-band write of x in lane 2 only
+        t.note_slot_changed(x_slot, 0b0100);
+        t.begin_cycle();
+        assert_eq!(t.active[g_not], 0b0100, "x's writer re-runs (overwrites the poke)");
+        assert_eq!(t.active[g_negb], 0, "independent cone stays idle");
+        assert_eq!(t.active[g_negx], 0b0100, "direct reader wakes in lane 2");
+        assert_eq!(t.active[g_orr], 0b0100, "transitive descendant wakes in lane 2");
+
+        // quiet next cycle: the poke was targeted, not a recold
+        t.begin_cycle();
+        assert_eq!(t.active, vec![0; 4], "no residual activity after the poke drains");
+
+        // a note on an unread slot wakes nothing
+        t.note_slot_changed(oim.num_slots + 3, u64::MAX);
+        t.begin_cycle();
+        assert_eq!(t.active, vec![0; 4]);
     }
 
     /// A chained design propagates activity transitively through

@@ -29,11 +29,24 @@
 //! is bit-identical to dense batched execution (property-tested in
 //! `tests/kernels_property.rs`).
 //!
+//! Out-of-band slot writes (`poke_lane`: divergent-lane init, the
+//! partitioned RUM exchange) bypass the boundary detectors and use
+//! **targeted invalidation** instead of a recold: the GDG carries a
+//! slot → direct-reader-groups index ([`GroupDepGraph::readers_of`])
+//! and [`ActivityTracker::note_slot_changed`] marks exactly the written
+//! slot's readers pending in the written lanes — the next propagation
+//! sweep wakes its transitive descendants and nothing else.
+//!
 //! The same idea lifts one level up to thread-level partitions:
 //! [`partition::PartitionTracker`] gates whole partitions of a
 //! RepCut-style partitioned batched run over the RUM cut (sparse
 //! [`crate::coordinator::parallel::BatchParallelSim`]), skipping a
-//! quiescent partition's entire kernel step.
+//! quiescent partition's entire kernel step. The two levels **compose**:
+//! a sparse partitioned run of a group-capable kernel builds one sparse
+//! executor per partition and routes the RUM exchange's per-register
+//! per-lane change bits into each destination partition's group tracker
+//! through the targeted `poke_lane` — quiescent partitions skip whole,
+//! quiescent groups skip inside the partitions that do step.
 
 pub mod gdg;
 pub mod mask;

@@ -138,16 +138,28 @@ impl PartitionTracker {
     }
 
     /// Record that a register read by `readers` changed in the lanes of
-    /// `mask` — those partitions must step next cycle.
+    /// `mask` — those partitions must step next cycle. Drives both the
+    /// RUM exchange's differential change bits and the coordinator's
+    /// targeted `poke_lane` wake (readers ∪ owner of the poked slot).
     pub fn note_reg_change(&mut self, readers: &[u32], mask: u64) {
         for &r in readers {
             self.pending[r as usize] |= mask;
         }
     }
 
+    /// Conservative fallback of [`Self::note_reg_change`] for a slot the
+    /// partitioning has no reader/owner record of: every partition steps
+    /// in the lanes of `mask` next cycle.
+    pub fn note_all(&mut self, mask: u64) {
+        for p in &mut self.pending {
+            *p |= mask;
+        }
+    }
+
     /// Invalidate all cached slot values: the next cycle steps every
-    /// partition. Used after out-of-band slot writes (`poke_lane`), which
-    /// bypass boundary change detection.
+    /// partition in every lane. An explicit full-invalidate escape hatch
+    /// (and test aid); production out-of-band writes take the targeted
+    /// [`Self::note_reg_change`] / [`Self::note_all`] path instead.
     pub fn force_recold(&mut self) {
         self.cold = true;
     }

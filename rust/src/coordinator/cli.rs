@@ -38,8 +38,12 @@ COMMANDS:
                                replication and cut size. With --sparse,
                                quiescent partitions are skipped entirely
                                (per-partition activity masks over the RUM
-                               cut, B <= 64) and the partition skip-rate is
-                               reported
+                               cut, B <= 64) and, for kernels with sparse
+                               executors (NU|PSU|TI), each partition runs
+                               its group-masked sparse kernel with RUM
+                               change bits feeding the group trackers;
+                               both the partition- and the composed
+                               group-level skip-rates are reported
             [--partitioner X]  register-ownership strategy for --parts /
                                --backend parallel: mincut (multilevel
                                hypergraph min-cut, default — shrinks the
@@ -239,6 +243,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
                 100.0 * stats.skip_rate(),
                 stats.stepped_partition_cycles,
                 stats.total_partition_cycles
+            );
+        }
+        if let Some(group) = sim.group_stats() {
+            println!(
+                "  sparse: group skip-rate {:.1}% ({} of {} op-lanes evaluated; \
+                 partition-skipped cycles count as skipped op-lanes)",
+                100.0 * group.skip_rate(),
+                group.evaluated_op_lanes,
+                group.total_op_lanes
             );
         }
         for (oname, v) in sim.lane_outputs(0) {

@@ -34,11 +34,26 @@
 //! a quiescent partition's slot file (including the registers it would
 //! commit) is already identical to what stepping would produce — so
 //! sparse partitioned runs are bit-identical to dense ones.
+//!
+//! Sparse mode composes **both activity levels** when the kernel
+//! configuration has a sparse executor ([`crate::kernels::SPARSE_KERNELS`]):
+//! each partition then runs its group-masked sparse kernel, and the
+//! differential RUM exchange feeds every destination partition's group
+//! tracker its per-register per-lane change bits through the targeted
+//! [`crate::kernels::BatchKernel::poke_lane`] — quiescent partitions are
+//! skipped whole, quiescent groups are skipped inside the partitions
+//! that do step, and no out-of-band write recolds anything
+//! ([`BatchParallelSim::group_stats`] reports the composed op-lane skip
+//! rate). Out-of-band [`BatchParallelSim::poke_lane`] writes are equally
+//! targeted at the
+//! partition level: they wake only the poked slot's reader partitions
+//! (plus its owner, whose next commit must overwrite the poke exactly as
+//! a dense run's would), in the poked lane only.
 
 use std::collections::HashMap;
 
 use super::pool::WorkerPool;
-use crate::activity::{PartitionActivity, PartitionTracker};
+use crate::activity::{ActivityStats, PartitionActivity, PartitionTracker};
 use crate::graph::ops::mask;
 use crate::kernels::{self, KernelConfig};
 use crate::partition::{partition_ir, PartitionerKind, TrackedReg};
@@ -70,6 +85,16 @@ pub struct BatchParallelSim {
     active: Vec<bool>,
     /// sparse mode: the per-partition activity tracker
     tracker: Option<PartitionTracker>,
+    /// sparse mode with a [`kernels::SPARSE_KERNELS`] configuration: the
+    /// per-partition kernels are group-masked sparse executors
+    group_sparse: bool,
+    /// per-partition cone op counts (replication included) — the
+    /// group-level skip accounting's denominator
+    part_ops: Vec<u64>,
+    /// cycles stepped so far
+    cycles_total: u64,
+    /// partitions whose cones read each boundary slot (targeted poke wake)
+    slot_readers: HashMap<u32, Vec<u32>>,
     /// previous cycle's (masked) stimulus, for boundary change detection
     prev_inputs: Vec<u64>,
     input_changed: Vec<u64>,
@@ -97,12 +122,23 @@ impl BatchParallelSim {
     ) -> Self {
         assert!(lanes >= 1, "lanes must be >= 1");
         let parting = partition_ir(ir, n, partitioner);
+        // sparse mode runs group-masked sparse executors inside the
+        // partitions whenever the configuration has one; group-free
+        // configurations keep dense kernels and get partition-level
+        // skipping only
+        let group_sparse = sparse && kernels::supports_sparse(cfg);
         let mut kernel_boxes = Vec::with_capacity(n);
         let mut owned = Vec::with_capacity(n);
+        let mut part_ops = Vec::with_capacity(n);
         for pir in &parting.part_irs {
             let oim = crate::tensor::oim::Oim::from_ir(pir);
-            kernel_boxes.push(kernels::build_batch(cfg, pir, &oim, lanes));
+            kernel_boxes.push(if group_sparse {
+                kernels::build_sparse(cfg, pir, &oim, lanes)
+            } else {
+                kernels::build_batch(cfg, pir, &oim, lanes)
+            });
             owned.push(pir.commits.iter().map(|c| c.0).collect::<Vec<u32>>());
+            part_ops.push(pir.total_ops() as u64);
         }
         let mut owner_of_slot = HashMap::new();
         for (p, regs) in owned.iter().enumerate() {
@@ -136,6 +172,10 @@ impl BatchParallelSim {
             scratch: vec![0u64; lanes],
             active: vec![true; n],
             tracker,
+            group_sparse,
+            part_ops,
+            cycles_total: 0,
+            slot_readers: parting.readers_of_slot,
             prev_inputs: vec![0u64; num_inputs * lanes],
             input_changed: vec![0u64; num_inputs],
             input_masks: ir.input_widths.iter().map(|&w| mask(w)).collect(),
@@ -151,6 +191,7 @@ impl BatchParallelSim {
     /// [`crate::kernels::BatchKernel::step`].
     pub fn step(&mut self, inputs: &[u64]) {
         debug_assert_eq!(inputs.len(), self.num_inputs * self.lanes);
+        self.cycles_total += 1;
         // 1. sparse: boundary input change detection vs the previous cycle
         if self.tracker.is_some() {
             for i in 0..self.num_inputs {
@@ -260,8 +301,11 @@ impl BatchParallelSim {
 
     /// Write one lane of one slot in every partition's slot file
     /// (divergent-lane initialization). Keeps the RUM shadow consistent
-    /// and, in sparse mode, invalidates the activity state so the next
-    /// cycle re-evaluates everything.
+    /// and, in sparse mode, performs a *targeted* wake instead of a
+    /// recold: only the partitions whose cones read the slot — plus its
+    /// owner, whose next commit must overwrite the poke exactly as a
+    /// dense run's would — step in the poked lane next cycle. (The
+    /// per-kernel `poke_lane` is equally targeted at the group level.)
     pub fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         for p in 0..self.pool.parts() {
             self.pool.kernel_mut(p).poke_lane(slot, lane, value);
@@ -272,7 +316,23 @@ impl BatchParallelSim {
             }
         }
         if let Some(tr) = &mut self.tracker {
-            tr.force_recold();
+            let lane_mask = 1u64 << lane;
+            let readers = self.slot_readers.get(&slot);
+            if let Some(readers) = readers {
+                tr.note_reg_change(readers, lane_mask);
+            }
+            match self.owner_of_slot.get(&slot) {
+                Some(&owner) => tr.note_reg_change(&[owner as u32], lane_mask),
+                // a slot the partitioning has no record of at all (e.g.
+                // an internal op output): full wake in the poked lane —
+                // every partition steps, and each sparse kernel's own
+                // targeted invalidation re-runs the slot's writer and
+                // reader groups, so the poke is overwritten exactly as a
+                // dense step would overwrite it (no recold of the other
+                // lanes)
+                None if readers.is_none() => tr.note_all(lane_mask),
+                None => {}
+            }
         }
     }
 
@@ -280,6 +340,32 @@ impl BatchParallelSim {
     /// dense ones.
     pub fn activity_stats(&self) -> Option<PartitionActivity> {
         self.tracker.as_ref().map(|t| t.stats())
+    }
+
+    /// **Group-level** activity accounting of a sparse run whose kernel
+    /// configuration has a sparse executor; `None` on dense runs and on
+    /// sparse runs of group-free kernels. One op-lane is one operation
+    /// evaluated in one lane, counted against everything a dense
+    /// partitioned run would evaluate — replicated cone ops × lanes ×
+    /// cycles, summed over partitions — so a partition-cycle skipped at
+    /// the partition level contributes all its op-lanes as skipped: this
+    /// is the *composed* skip rate of both activity levels.
+    pub fn group_stats(&self) -> Option<ActivityStats> {
+        if !self.group_sparse {
+            return None;
+        }
+        let mut evaluated = 0u64;
+        for p in 0..self.pool.parts() {
+            if let Some(s) = self.pool.kernel(p).activity_stats() {
+                evaluated += s.evaluated_op_lanes;
+            }
+        }
+        let per_cycle: u64 = self.part_ops.iter().sum::<u64>() * self.lanes as u64;
+        Some(ActivityStats {
+            cycles: self.cycles_total,
+            evaluated_op_lanes: evaluated,
+            total_op_lanes: per_cycle * self.cycles_total,
+        })
     }
 
     /// Registers owned (committed) by partition `p` — the ownership
@@ -615,6 +701,70 @@ mod tests {
             stats.skip_rate() > 0.5,
             "frozen stimulus must idle most partition-cycles (got {:.3})",
             stats.skip_rate()
+        );
+        // PSU has a sparse executor, so the sparse run also composes
+        // group-level masks inside the partitions: over the whole frozen
+        // run, nearly all op-lanes are skipped (only the cold first
+        // cycles evaluate anything)
+        let group = sparse.group_stats().expect("sparse PSU runs report group-level activity");
+        assert!(dense.group_stats().is_none());
+        assert_eq!(group.cycles, 64);
+        assert_eq!(
+            group.total_op_lanes % (64 * lanes as u64),
+            0,
+            "denominator covers every partition-cycle's op-lanes"
+        );
+        assert!(
+            group.skip_rate() > 0.5,
+            "frozen stimulus must idle most op-lanes (got {:.3})",
+            group.skip_rate()
+        );
+    }
+
+    /// Targeted poke wake: on a quiescent sparse partitioned run, a
+    /// single-register poke steps only the partitions that read or own
+    /// the register — not all of them (the old `force_recold` hammer) —
+    /// and the run stays bit-identical to a dense partitioned run given
+    /// the same poke.
+    #[test]
+    fn poke_lane_wakes_only_reader_partitions() {
+        let d = catalog("alu_farm_64").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let parts = 4usize;
+        let lanes = 4usize;
+        let mut dense = BatchParallelSim::new(&ir, KernelConfig::PSU, parts, lanes, false);
+        let mut sparse = BatchParallelSim::new(&ir, KernelConfig::PSU, parts, lanes, true);
+        let mut stim_a = d.make_lane_stimulus_toggle(lanes, 0.0);
+        let mut stim_b = d.make_lane_stimulus_toggle(lanes, 0.0);
+        for c in 0..16u64 {
+            dense.step(&stim_a(c));
+            sparse.step(&stim_b(c));
+        }
+        let before = sparse.activity_stats().unwrap();
+        let (reg, _, m) = ir.commits[0];
+        let poked = (sparse.reg_lane(reg, 1) ^ 1) & m;
+        dense.poke_lane(reg, 1, poked);
+        sparse.poke_lane(reg, 1, poked);
+        for c in 16..20u64 {
+            let ia = stim_a(c);
+            dense.step(&ia);
+            sparse.step(&stim_b(c));
+            for l in 0..lanes {
+                assert_eq!(sparse.lane_outputs(l), dense.lane_outputs(l), "lane {l} cycle {c}");
+            }
+            for &(r, _, _) in &ir.commits {
+                assert_eq!(sparse.reg_lane(r, 1), dense.reg_lane(r, 1), "reg {r} cycle {c}");
+            }
+        }
+        let after = sparse.activity_stats().unwrap().since(&before);
+        assert_eq!(after.total_partition_cycles, 4 * parts as u64);
+        assert!(
+            after.stepped_partition_cycles <= 4,
+            "a single-register poke must wake only its readers/owner for a ripple, \
+             not every partition ({} of {} partition-cycles stepped)",
+            after.stepped_partition_cycles,
+            after.total_partition_cycles
         );
     }
 }

@@ -28,6 +28,14 @@
 //! [`WorkerPool::kernel`]/[`WorkerPool::kernel_mut`] (which borrow
 //! `self`) can be live while a step is in flight.
 //!
+//! The kernels may be sparse (group-masked) executors carrying their own
+//! activity trackers; that changes nothing here — tracker state lives
+//! inside the kernel box, the coordinator's between-cycles RUM pokes
+//! (`kernel_mut(..).poke_lane(..)`, which on sparse kernels also feed
+//! the tracker via targeted invalidation) and read-only stats queries
+//! (`kernel(..).activity_stats()`) fall under the same phase-exclusive
+//! protocol as every other kernel access.
+//!
 //! A panic inside a kernel step is caught on the worker, flagged, and
 //! re-raised on the coordinator after the *done* barrier — the barrier
 //! protocol itself never wedges. Dropping the pool releases the workers

@@ -605,9 +605,16 @@ pub const FIG24_PARTS: [usize; 3] = [1, 2, 4];
 pub const FIG24_LANES: [usize; 2] = [1, 8];
 pub const FIG24_PARTITIONERS: [PartitionerKind; 2] =
     [PartitionerKind::RoundRobin, PartitionerKind::MinCut];
+/// Lane count of the sparse (activity-masked) column of the fig24 grid.
+pub const FIG24_SPARSE_LANES: usize = 8;
+/// Toggle rate of the sparse column — low enough that both activity
+/// levels (partition skipping and group masks inside partitions) have
+/// real work to skip.
+pub const FIG24_SPARSE_TOGGLE: f64 = 0.05;
 
 /// One (kernel, partitioner, partition-count) row of the fig24 grid: a
-/// measurement per lane count, plus the RUM cut that partitioning paid.
+/// measurement per lane count, plus the RUM cut that partitioning paid
+/// and the sparse (composed partition × group skipping) measurement.
 pub struct Fig24Point {
     pub kernel: KernelConfig,
     pub partitioner: PartitionerKind,
@@ -616,6 +623,11 @@ pub struct Fig24Point {
     pub cut_regs: usize,
     /// (lanes, measurement) per lane count in [`FIG24_LANES`] order
     pub cells: Vec<(usize, sweep::SweepPoint)>,
+    /// sparse run at [`FIG24_SPARSE_LANES`] × [`FIG24_SPARSE_TOGGLE`]
+    /// (kernels with sparse executors only): its `skip_rate` is the
+    /// partition-cycle skip rate, its `group_skip_rate` the composed
+    /// op-lane skip rate
+    pub sparse: Option<sweep::SweepPoint>,
 }
 
 /// Measure the fig24 grid once — shared by the rendered table and the
@@ -639,18 +651,38 @@ pub fn fig24_measure(ctx: &Ctx) -> Vec<Fig24Point> {
                     })
                     .collect();
                 let cut_regs = cells[0].1.cut_regs.unwrap_or(0);
-                points.push(Fig24Point { kernel: cfg, partitioner: pk, parts, cut_regs, cells });
+                let sparse = crate::kernels::supports_sparse(cfg).then(|| {
+                    sweep::measure_kernel_parts_lanes_sparse(
+                        &d, &c, cfg, parts, FIG24_SPARSE_LANES, cycles, FIG24_SPARSE_TOGGLE, pk,
+                    )
+                });
+                points.push(Fig24Point {
+                    kernel: cfg,
+                    partitioner: pk,
+                    parts,
+                    cut_regs,
+                    cells,
+                    sparse,
+                });
             }
         }
     }
     points
 }
 
-/// Render measured fig24 points as the report table.
+/// Render measured fig24 points as the report table. The sparse column
+/// reports throughput plus the two skip rates of the composed activity
+/// levels: `part` — the fraction of (partition, cycle) units skipped
+/// whole; `group` — the fraction of (op, lane) units skipped by
+/// partition- and group-level masking together.
 pub fn fig24_table(points: &[Fig24Point]) -> Table {
     let mut header =
         vec!["kernel".to_string(), "partitioner".to_string(), "parts".to_string()];
     header.extend(FIG24_LANES.iter().map(|b| format!("B={b} Mlc/s")));
+    header.push(format!(
+        "sparse B={FIG24_SPARSE_LANES}@{:.0}% (part/group skip)",
+        FIG24_SPARSE_TOGGLE * 100.0
+    ));
     header.push("cut_regs".to_string());
     let mut t = Table::new(
         &format!(
@@ -667,6 +699,15 @@ pub fn fig24_table(points: &[Fig24Point]) -> Table {
         for (_, sp) in &p.cells {
             row.push(format!("{:.2}", sp.hz / 1e6));
         }
+        row.push(match &p.sparse {
+            Some(sp) => format!(
+                "{:.2} ({:.0}%/{:.0}%)",
+                sp.hz / 1e6,
+                100.0 * sp.skip_rate.unwrap_or(0.0),
+                100.0 * sp.group_skip_rate.unwrap_or(0.0)
+            ),
+            None => "—".to_string(),
+        });
         row.push(p.cut_regs.to_string());
         t.row(row);
     }
@@ -679,10 +720,13 @@ pub fn fig24_table(points: &[Fig24Point]) -> Table {
 /// sweeping partitions P × lanes B under both register-ownership
 /// strategies (round-robin scatter vs multilevel hypergraph min-cut —
 /// the `cut_regs` column shows the RUM cut each pays). One run's
-/// aggregate lane-cycles/sec scales along both axes at once;
-/// `benches/fig24_parts_lanes.rs` adds the sparse (partition-skipping)
-/// measurements on `alu_farm_64` and asserts the min-cut cut never
-/// exceeds round-robin's.
+/// aggregate lane-cycles/sec scales along both axes at once, and the
+/// sparse column shows the *composed* activity machinery — group-masked
+/// sparse kernels inside partitions — with its partition-cycle and
+/// op-lane skip rates side by side;
+/// `benches/fig24_parts_lanes.rs` adds the sparse (partition- and
+/// group-skipping) measurements on `alu_farm_64` and asserts the
+/// min-cut cut never exceeds round-robin's.
 pub fn fig24_parts_lanes(ctx: &Ctx) -> Table {
     fig24_table(&fig24_measure(ctx))
 }

@@ -30,6 +30,11 @@ pub struct SweepPoint {
     /// distinct registers crossing partitions each cycle (partitioned
     /// runs only)
     pub cut_regs: Option<usize>,
+    /// fraction of (op, lane) work the *composed* activity levels skipped
+    /// in a sparse partitioned run — partition-skipped cycles count as
+    /// skipped op-lanes (sparse partitioned runs of group-capable
+    /// kernels only)
+    pub group_skip_rate: Option<f64>,
 }
 
 /// Run `cycles` of `design` under one kernel config; measured wall-clock.
@@ -50,6 +55,7 @@ pub fn measure_kernel(design: &Design, compiled: &Compiled, cfg: KernelConfig, c
         data_bytes,
         skip_rate: None,
         cut_regs: None,
+        group_skip_rate: None,
     }
 }
 
@@ -86,6 +92,7 @@ pub fn measure_kernel_lanes(
         data_bytes,
         skip_rate: None,
         cut_regs: None,
+        group_skip_rate: None,
     }
 }
 
@@ -120,6 +127,7 @@ pub fn measure_kernel_lanes_toggle(
         data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
         skip_rate: None,
         cut_regs: None,
+        group_skip_rate: None,
     }
 }
 
@@ -159,6 +167,7 @@ pub fn measure_kernel_lanes_sparse(
         data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
         skip_rate: Some(stats.skip_rate()),
         cut_regs: None,
+        group_skip_rate: None,
     }
 }
 
@@ -208,13 +217,17 @@ pub fn measure_kernel_parts_lanes(
         data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
         skip_rate: None,
         cut_regs: Some(sim.cut_regs()),
+        group_skip_rate: None,
     }
 }
 
 /// [`measure_kernel_parts_lanes`] with per-partition activity masking
 /// over the RUM cut (`lanes ≤ 64`), under toggle-rate-controlled
 /// stimulus. `skip_rate` reports the fraction of (partition, cycle) work
-/// units skipped during the measured window (warm-up excluded).
+/// units skipped during the measured window (warm-up excluded);
+/// `group_skip_rate` additionally reports — for kernels with sparse
+/// (group-masked) executors — the composed fraction of (op, lane) work
+/// units skipped by partition- and group-level masking together.
 pub fn measure_kernel_parts_lanes_sparse(
     design: &Design,
     compiled: &Compiled,
@@ -242,6 +255,7 @@ pub fn measure_kernel_parts_lanes_sparse(
         sim.step(&stim(c));
     }
     let warm = sim.activity_stats().expect("sparse partitioned runs report activity");
+    let warm_group = sim.group_stats();
     let t0 = std::time::Instant::now();
     for c in 0..cycles {
         sim.step(&stim(c));
@@ -249,6 +263,8 @@ pub fn measure_kernel_parts_lanes_sparse(
     let wall = t0.elapsed();
     let stats =
         sim.activity_stats().expect("sparse partitioned runs report activity").since(&warm);
+    let group_skip_rate =
+        sim.group_stats().zip(warm_group).map(|(now, base)| now.since(&base).skip_rate());
     SweepPoint {
         label: format!(
             "{}/P{}xB{}/{}/sparse@{:.0}%",
@@ -265,6 +281,7 @@ pub fn measure_kernel_parts_lanes_sparse(
         data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
         skip_rate: Some(stats.skip_rate()),
         cut_regs: Some(sim.cut_regs()),
+        group_skip_rate,
     }
 }
 
@@ -293,6 +310,7 @@ pub fn measure_baseline(design: &Design, compiled: &Compiled, which: &str, cycle
         data_bytes,
         skip_rate: None,
         cut_regs: None,
+        group_skip_rate: None,
     }
 }
 

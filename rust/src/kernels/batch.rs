@@ -121,6 +121,10 @@ impl BatchKernel for BatchRuKernel {
         self.d.lane_outputs(lane)
     }
 
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        self.d.write_lane_outputs(lane, buf);
+    }
+
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         self.d.poke_lane(slot, lane, value);
     }
@@ -237,6 +241,10 @@ impl BatchKernel for BatchOuKernel {
 
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         self.d.lane_outputs(lane)
+    }
+
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        self.d.write_lane_outputs(lane, buf);
     }
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
@@ -468,6 +476,10 @@ impl BatchKernel for BatchNuKernel {
         self.d.lane_outputs(lane)
     }
 
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        self.d.write_lane_outputs(lane, buf);
+    }
+
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         self.d.poke_lane(slot, lane, value);
     }
@@ -551,6 +563,10 @@ impl BatchKernel for BatchIuKernel {
 
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         self.d.lane_outputs(lane)
+    }
+
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        self.d.write_lane_outputs(lane, buf);
     }
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
@@ -711,6 +727,10 @@ impl BatchKernel for BatchSuKernel {
 
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         self.d.lane_outputs(lane)
+    }
+
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        self.d.write_lane_outputs(lane, buf);
     }
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
@@ -899,6 +919,10 @@ impl BatchKernel for BatchTiKernel {
 
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)> {
         self.d.lane_outputs(lane)
+    }
+
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        self.d.write_lane_outputs(lane, buf);
     }
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {

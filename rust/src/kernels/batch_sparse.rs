@@ -29,6 +29,14 @@
 //! boundary source changed in that lane, so the stale slot values are
 //! exactly what re-evaluation would produce. Sparse runs are bit-identical
 //! to dense batched runs (property-tested in `tests/kernels_property.rs`).
+//!
+//! Out-of-band writes (`poke_lane` — divergent-lane init, the partitioned
+//! simulator's RUM cut-register pokes) take the **targeted invalidation**
+//! path: the poked slot's direct reader groups are marked pending in the
+//! poked lane ([`ActivityTracker::note_slot_changed`]) and the next
+//! cycle's propagation sweep wakes exactly its transitive descendants —
+//! a single-slot single-lane poke no longer costs a full cold cycle over
+//! every group and every lane.
 
 use super::batch::{lane_op, LaneOp};
 use super::common::BatchDriver;
@@ -55,6 +63,25 @@ macro_rules! for_lanes {
             }
         }
     };
+}
+
+/// Shared `poke_lane` body of the sparse executors: write the slot and —
+/// only when the value actually changed — feed the tracker the targeted
+/// invalidation (the slot's writer + reader groups, in the poked lane),
+/// instead of the old all-groups/all-lanes recold per poke.
+fn poke_lane_tracked(
+    d: &mut BatchDriver,
+    tracker: &mut ActivityTracker,
+    slot: u32,
+    lane: usize,
+    value: u64,
+) {
+    assert!(lane < d.lanes, "lane {lane} out of range (lanes = {})", d.lanes);
+    let changed = d.v[slot as usize * d.lanes + lane] != value;
+    d.poke_lane(slot, lane, value);
+    if changed {
+        tracker.note_slot_changed(slot, 1u64 << lane);
+    }
 }
 
 // ------------------------------------------------------ NU / PSU (sparse)
@@ -202,9 +229,12 @@ impl BatchKernel for SparseNuBatch {
         self.d.lane_outputs(lane)
     }
 
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        self.d.write_lane_outputs(lane, buf);
+    }
+
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
-        self.d.poke_lane(slot, lane, value);
-        self.tracker.force_recold();
+        poke_lane_tracked(&mut self.d, &mut self.tracker, slot, lane, value);
     }
 
     fn activity_stats(&self) -> Option<ActivityStats> {
@@ -414,9 +444,12 @@ impl BatchKernel for SparseTiBatch {
         self.d.lane_outputs(lane)
     }
 
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        self.d.write_lane_outputs(lane, buf);
+    }
+
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
-        self.d.poke_lane(slot, lane, value);
-        self.tracker.force_recold();
+        poke_lane_tracked(&mut self.d, &mut self.tracker, slot, lane, value);
     }
 
     fn activity_stats(&self) -> Option<ActivityStats> {
@@ -504,6 +537,57 @@ mod tests {
             // and the woken lane's outputs are correct
             assert_eq!(k.lane_outputs(2)[0].1, (!9u64).wrapping_neg() & 0xFF);
             assert_eq!(k.lane_outputs(0)[0].1, (!7u64).wrapping_neg() & 0xFF);
+        }
+    }
+
+    /// Targeted poke invalidation: an out-of-band `poke_lane` on a
+    /// quiescent run evaluates, on the next cycle, exactly the poked
+    /// slot's GDG descendants in exactly the poked lane — one op-lane
+    /// here, not the `ops × lanes` a recold used to cost — while staying
+    /// bit-identical to a dense run given the same poke.
+    #[test]
+    fn poke_lane_wakes_only_descendants_in_the_poked_lane() {
+        use crate::graph::ops::PrimOp;
+        let mut g = crate::graph::Graph::new("poke");
+        let a = g.input("a", 8);
+        let x = g.prim(PrimOp::Not, &[a]); // cone A: 2 ops off the input
+        let y = g.prim(PrimOp::Neg, &[x]);
+        g.output("y", y);
+        let r = g.reg("r", 8, 3);
+        let z = g.prim(PrimOp::Orr, &[r]); // cone R: 1 op off the register
+        g.connect_reg(r, r); // self-holding: only a poke can change r
+        g.output("z", z);
+        let ir = lower(&g);
+        let oim = Oim::from_ir(&ir);
+        let lanes = 4usize;
+        let reg_slot = ir.commits[0].0;
+        for cfg in SPARSE_KERNELS {
+            let mut sparse = build_sparse(cfg, &ir, &oim, lanes);
+            let mut dense = build_batch(cfg, &ir, &oim, lanes);
+            let frozen = vec![5u64; lanes];
+            for _ in 0..4 {
+                sparse.step(&frozen);
+                dense.step(&frozen);
+            }
+            let before = sparse.activity_stats().unwrap();
+            sparse.poke_lane(reg_slot, 2, 0);
+            dense.poke_lane(reg_slot, 2, 0);
+            sparse.step(&frozen);
+            dense.step(&frozen);
+            let after = sparse.activity_stats().unwrap().since(&before);
+            assert_eq!(
+                after.evaluated_op_lanes,
+                1,
+                "{}: only the register's reader group, only lane 2",
+                cfg.name()
+            );
+            assert_eq!(sparse.slots(), dense.slots(), "{}: poke result", cfg.name());
+            // an equal-value poke is a no-op: nothing wakes at all
+            let quiet = sparse.activity_stats().unwrap();
+            sparse.poke_lane(reg_slot, 2, 0);
+            sparse.step(&frozen);
+            let after = sparse.activity_stats().unwrap().since(&quiet);
+            assert_eq!(after.evaluated_op_lanes, 0, "{}: no-change poke", cfg.name());
         }
     }
 }

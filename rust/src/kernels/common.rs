@@ -175,6 +175,20 @@ impl BatchDriver {
             .map(|(n, s)| (n.clone(), self.v[*s as usize * self.lanes + lane]))
             .collect()
     }
+
+    /// [`Self::lane_outputs`] into a reusable buffer: only the values are
+    /// rewritten, the names are cloned once — no allocation per call.
+    /// Sits behind [`crate::kernels::BatchKernel::write_lane_outputs`]
+    /// for the per-cycle sweep and differential loops.
+    pub fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        assert!(lane < self.lanes, "lane {lane} out of range (lanes = {})", self.lanes);
+        if buf.len() != self.outputs.len() {
+            *buf = self.outputs.iter().map(|(n, _)| (n.clone(), 0)).collect();
+        }
+        for (dst, (_, s)) in buf.iter_mut().zip(&self.outputs) {
+            dst.1 = self.v[*s as usize * self.lanes + lane];
+        }
+    }
 }
 
 /// Generic operation evaluation over gathered operand values — the big

@@ -76,6 +76,16 @@
 //!   partial mask runs bit-iterated over the active lanes; a full mask
 //!   takes the same contiguous vectorizable loop as the dense executor.
 //!
+//! Out-of-band slot writes ([`BatchKernel::poke_lane`] — divergent-lane
+//! init and the partitioned RUM exchange) bypass the boundary detectors;
+//! they use **targeted invalidation** instead: the GDG carries a
+//! slot → direct-reader-groups index
+//! ([`crate::activity::GroupDepGraph::readers_of`]), and
+//! [`crate::activity::ActivityTracker::note_slot_changed`] marks the
+//! written slot's readers pending in the written lane so the next
+//! propagation sweep wakes exactly its transitive descendants — a poke no
+//! longer recolds every group in every lane.
+//!
 //! Skipping is exact, not approximate: operations are pure functions of
 //! their operand slots, so a (group, lane) with no changed transitive
 //! source holds slot values identical to what re-evaluation would
@@ -84,6 +94,18 @@
 //! `tests/kernels_property.rs`), and [`BatchKernel::activity_stats`]
 //! reports the realized skip rate (`rteaal sim --lanes B --sparse`,
 //! `benches/fig23_sparse.rs`).
+//!
+//! The sparse executors also run **inside partitions**: a sparse
+//! partitioned run (`rteaal sim --parts P --lanes B --sparse` with a
+//! kernel from [`SPARSE_KERNELS`]) builds one sparse executor per
+//! partition, the RUM exchange feeds each destination partition's group
+//! tracker its per-register per-lane change bits through the targeted
+//! `poke_lane`, and partition-level skipping
+//! ([`crate::activity::PartitionTracker`]) composes with group-level
+//! skipping in one run — quiescent partitions are skipped whole,
+//! quiescent groups are skipped inside the partitions that do step
+//! (`BatchParallelSim::group_stats` reports the composed op-lane skip
+//! rate alongside the partition-cycle rate).
 //!
 //! This is the classically-unprofitable event-driven idea
 //! ([`crate::baselines::event_driven`]) made profitable by the batch
@@ -205,10 +227,24 @@ pub trait BatchKernel: Send {
     fn slots(&self) -> &[u64];
     /// Named design outputs as observed by one lane.
     fn lane_outputs(&self, lane: usize) -> Vec<(String, u64)>;
+    /// [`Self::lane_outputs`] into a reusable buffer for per-cycle sweep
+    /// and differential loops. The buffer is **per kernel**: the fast
+    /// paths rewrite only the values once it has the right shape, so
+    /// reusing one buffer across kernels of different designs can keep
+    /// the previous design's names. The driver-backed executors override
+    /// this with [`common::BatchDriver::write_lane_outputs`]
+    /// (allocation-free; names cloned once); this default merely
+    /// delegates to [`Self::lane_outputs`].
+    fn write_lane_outputs(&self, lane: usize, buf: &mut Vec<(String, u64)>) {
+        *buf = self.lane_outputs(lane);
+    }
     /// Write one lane of one slot directly — pre-run initialization of
-    /// divergent lanes ([`crate::designs::Design::lane_init`]). Sparse
-    /// executors additionally invalidate their activity state, so the
-    /// next cycle re-evaluates everything.
+    /// divergent lanes ([`crate::designs::Design::lane_init`]) and the
+    /// partitioned simulator's RUM cut-register pokes. Sparse executors
+    /// additionally note the write in their activity tracker (*targeted*
+    /// invalidation: the next cycle re-evaluates exactly the written
+    /// slot's dependent groups, in the written lane only — see
+    /// [`crate::activity::ActivityTracker::note_slot_changed`]).
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64);
     /// Activity accounting of a sparse executor; `None` on dense ones.
     fn activity_stats(&self) -> Option<crate::activity::ActivityStats> {

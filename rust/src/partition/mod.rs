@@ -44,7 +44,7 @@
 pub mod hypergraph;
 pub mod multilevel;
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::tensor::ir::LayerIr;
 
@@ -165,6 +165,12 @@ pub struct Partitioning {
     pub tracked: Vec<TrackedReg>,
     /// input-port indices read by each partition's cone
     pub input_deps: Vec<Vec<u32>>,
+    /// partitions whose cones read each boundary (source) slot —
+    /// registers, input ports and constants alike; sorted per slot.
+    /// Slots absent from the map are read by no partition. Drives the
+    /// runtime's *targeted* out-of-band poke wake (readers ∪ owner)
+    /// instead of a full activity recold.
+    pub readers_of_slot: HashMap<u32, Vec<u32>>,
     /// replicated-ops / total-ops (RepCut's replication overhead)
     pub replication_factor: f64,
     /// final owner per entry of `ir.commits`
@@ -321,8 +327,26 @@ pub fn partition_ir_with(ir: &LayerIr, n: usize, partitioner: &dyn Partitioner) 
         tracked.push(TrackedReg { owner, reg_slot: c.0, readers, rum_readers });
     }
 
+    // Boundary-slot reader map (targeted poke wake): which partitions'
+    // cones read each source slot. Built from the same source sets the
+    // RUM reader lists come from, so it covers never-written ROM slots
+    // (absent from `tracked`) too.
+    let mut readers_of_slot: HashMap<u32, Vec<u32>> = HashMap::new();
+    for (p, sources) in sources_per_part.iter().enumerate() {
+        for &slot in sources {
+            readers_of_slot.entry(slot).or_default().push(p as u32);
+        }
+    }
+
     let replication_factor = total_kept as f64 / ir.total_ops().max(1) as f64;
-    Partitioning { part_irs, tracked, input_deps, replication_factor, owner_of_reg }
+    Partitioning {
+        part_irs,
+        tracked,
+        input_deps,
+        readers_of_slot,
+        replication_factor,
+        owner_of_reg,
+    }
 }
 
 #[cfg(test)]
@@ -424,6 +448,34 @@ mod tests {
                 mc.cut_regs(),
                 rr.cut_regs()
             );
+        }
+    }
+
+    /// The boundary-slot reader map (the targeted poke wake's index)
+    /// agrees with the RUM tracking table on every tracked register:
+    /// same reader partitions, in the same order.
+    #[test]
+    fn readers_of_slot_agrees_with_tracked_readers() {
+        for name in ["fir8", "gemmini_like_4"] {
+            let ir = ir_for(name);
+            for kind in BOTH {
+                let parting = partition_ir(&ir, 3, kind);
+                assert!(!parting.tracked.is_empty(), "{name}: nothing tracked");
+                for t in &parting.tracked {
+                    let got: &[u32] = parting
+                        .readers_of_slot
+                        .get(&t.reg_slot)
+                        .map(|v| v.as_slice())
+                        .unwrap_or(&[]);
+                    assert_eq!(
+                        got,
+                        t.readers.as_slice(),
+                        "{name} {}: reader partitions of slot {}",
+                        kind.name(),
+                        t.reg_slot
+                    );
+                }
+            }
         }
     }
 

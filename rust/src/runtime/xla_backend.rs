@@ -31,6 +31,10 @@ pub struct XlaBackend {
     pending_cycles: usize,
     /// outputs of every cycle in the last executed chunk
     pub last_outputs: Vec<u32>,
+    /// rows of `last_outputs` that correspond to real (requested) cycles —
+    /// a padded peek flush ([`Self::run`]) executes a full chunk but only
+    /// its leading rows are meaningful
+    valid_rows: usize,
 }
 
 impl XlaBackend {
@@ -75,6 +79,7 @@ impl XlaBackend {
             pending: Vec::new(),
             pending_cycles: 0,
             last_outputs: Vec::new(),
+            valid_rows: 0,
         })
     }
 
@@ -102,26 +107,40 @@ impl XlaBackend {
         Ok(false)
     }
 
-    /// Run exactly `cycles` cycles with a stimulus function; pads the
-    /// final partial chunk by replaying its last input row (outputs of
-    /// padded cycles are discarded by tracking the real cycle count).
+    /// Run exactly `cycles` cycles with a stimulus function. A final
+    /// partial chunk is executed by padding it with replays of its last
+    /// input row, but the padded flush is a *peek*: the committed
+    /// register state is restored to the last chunk boundary afterwards
+    /// and the real input rows stay buffered, so the padded cycles never
+    /// advance the design. `run(cycles)` is therefore exact — safe for
+    /// lockstep comparisons: [`Self::outputs`] reports the last *real*
+    /// cycle's row, and a subsequent `step`/`run` continues from the
+    /// boundary, replaying the buffered rows in its next full chunk.
     pub fn run(&mut self, cycles: u64, mut stim: impl FnMut(u64) -> Vec<u64>) -> Result<()> {
         for c in 0..cycles {
             self.step(&stim(c))?;
         }
         if self.pending_cycles > 0 {
-            // NOTE: padding advances the design extra cycles; acceptable
-            // for throughput benches, avoid for lockstep comparisons.
-            let pad_row: Vec<u32> = self.pending[self.pending.len() - self.num_inputs.max(1)..].to_vec();
-            while self.pending_cycles < self.chunk {
-                if self.num_inputs == 0 {
-                    // nothing to pad
-                } else {
+            let real_cycles = self.pending_cycles;
+            let real_inputs = self.pending.clone();
+            if self.num_inputs > 0 {
+                let pad_row: Vec<u32> =
+                    self.pending[self.pending.len() - self.num_inputs..].to_vec();
+                while self.pending_cycles < self.chunk {
                     self.pending.extend_from_slice(&pad_row);
+                    self.pending_cycles += 1;
                 }
-                self.pending_cycles += 1;
+            } else {
+                self.pending_cycles = self.chunk; // nothing to pad
             }
+            let committed = self.state.clone();
             self.flush()?;
+            // un-advance: drop the padded cycles' state, re-buffer the
+            // real rows, and expose only the real rows' outputs
+            self.state = committed;
+            self.pending = real_inputs;
+            self.pending_cycles = real_cycles;
+            self.valid_rows = real_cycles;
         }
         Ok(())
     }
@@ -142,22 +161,26 @@ impl XlaBackend {
         let (state, outputs) = result.to_tuple2()?;
         self.state = state.to_vec::<u32>()?;
         self.last_outputs = outputs.to_vec::<u32>()?;
+        self.valid_rows = self.chunk;
         self.pending.clear();
         self.pending_cycles = 0;
         Ok(())
     }
 
-    /// Named outputs as of the last executed cycle.
+    /// Named outputs as of the last executed *real* cycle (padded rows of
+    /// a partial-chunk peek are never reported).
     pub fn outputs(&self) -> Vec<(String, u64)> {
-        if self.last_outputs.is_empty() {
+        if self.last_outputs.is_empty() || self.valid_rows == 0 || self.num_outputs == 0 {
             return Vec::new();
         }
-        let last_row = &self.last_outputs[self.last_outputs.len() - self.num_outputs..];
-        self.output_names.iter().cloned().zip(last_row.iter().map(|&v| v as u64)).collect()
+        let start = (self.valid_rows - 1) * self.num_outputs;
+        let row = &self.last_outputs[start..start + self.num_outputs];
+        self.output_names.iter().cloned().zip(row.iter().map(|&v| v as u64)).collect()
     }
 
-    /// Outputs of every cycle in the last chunk (row-major).
+    /// Outputs of every *real* cycle in the last executed chunk
+    /// (row-major; a partial-chunk peek exposes only its real rows).
     pub fn chunk_outputs(&self) -> &[u32] {
-        &self.last_outputs
+        &self.last_outputs[..self.valid_rows * self.num_outputs]
     }
 }

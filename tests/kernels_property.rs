@@ -161,6 +161,7 @@ fn batched_kernels_match_sequential_lanes() {
         let (opt, _) = passes::optimize(&g);
         let ir = lower(&opt);
         let oim = Oim::from_ir(&ir);
+        let mut out_buf: Vec<(String, u64)> = Vec::new();
         for &lanes in &[1usize, 3, 8] {
             for cfg in BATCHED_KERNELS {
                 let mut batched = build_batch(cfg, &ir, &oim, lanes);
@@ -178,7 +179,8 @@ fn batched_kernels_match_sequential_lanes() {
                     batched.step(&flat);
                     for (l, s) in singles.iter_mut().enumerate() {
                         s.step(&per_lane[l]);
-                        if batched.lane_outputs(l) != s.outputs() {
+                        batched.write_lane_outputs(l, &mut out_buf);
+                        if out_buf != s.outputs() {
                             return Err(format!(
                                 "{} lane {l}/{lanes} diverged at cycle {cycle}",
                                 cfg.name()
@@ -284,6 +286,8 @@ fn sparse_batched_is_bit_identical_to_dense_batched() {
         let oim = Oim::from_ir(&ir);
         let n_inputs = opt.inputs.len();
         let widths: Vec<u8> = opt.inputs.iter().map(|p| p.width).collect();
+        let mut sparse_buf: Vec<(String, u64)> = Vec::new();
+        let mut dense_buf: Vec<(String, u64)> = Vec::new();
         for &rate in &[0.0f64, 0.05, 0.5, 1.0] {
             for &lanes in &[1usize, 8, 64] {
                 for cfg in SPARSE_KERNELS {
@@ -314,7 +318,9 @@ fn sparse_batched_is_bit_identical_to_dense_batched() {
                             ));
                         }
                         for l in [0, lanes - 1] {
-                            if sparse.lane_outputs(l) != dense.lane_outputs(l) {
+                            sparse.write_lane_outputs(l, &mut sparse_buf);
+                            dense.write_lane_outputs(l, &mut dense_buf);
+                            if sparse_buf != dense_buf {
                                 return Err(format!(
                                     "{} sparse lane {l} outputs diverged (rate {rate}, B {lanes}, cycle {cycle})",
                                     cfg.name()
@@ -330,6 +336,116 @@ fn sparse_batched_is_bit_identical_to_dense_batched() {
                     }
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+/// The targeted-invalidation property: out-of-band `poke_lane` writes no
+/// longer recold the sparse executors, yet sparse stays **bit-identical**
+/// to dense under random mid-run pokes of random register slots and
+/// lanes — over *frozen* stimulus, so the pokes are the only activity and
+/// a dropped invalidation edge cannot hide behind input-driven
+/// re-evaluation.
+#[test]
+fn sparse_poke_lane_targeted_invalidation_matches_dense() {
+    propcheck::check("sparse-poke-targeted", 6, |rng, size| {
+        let g = random_circuit(rng, 15 + size * 4);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        if ir.commits.is_empty() {
+            return Ok(()); // no register state to poke
+        }
+        let lanes = 8usize;
+        let widths: Vec<u8> = opt.inputs.iter().map(|p| p.width).collect();
+        let mut held = vec![0u64; opt.inputs.len() * lanes];
+        for l in 0..lanes {
+            for (i, &w) in widths.iter().enumerate() {
+                held[i * lanes + l] = rng.bits(w);
+            }
+        }
+        for cfg in SPARSE_KERNELS {
+            let mut dense = build_batch(cfg, &ir, &oim, lanes);
+            let mut sparse = build_sparse(cfg, &ir, &oim, lanes);
+            for cycle in 0..8 {
+                if cycle % 2 == 1 {
+                    let (reg, _, m) = ir.commits[rng.index(ir.commits.len())];
+                    let lane = rng.index(lanes);
+                    let val = rng.bits(64) & m;
+                    dense.poke_lane(reg, lane, val);
+                    sparse.poke_lane(reg, lane, val);
+                }
+                dense.step(&held);
+                sparse.step(&held);
+                if sparse.slots() != dense.slots() {
+                    return Err(format!(
+                        "{} slot files diverged after mid-run pokes at cycle {cycle}",
+                        cfg.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The composed-sparsity property on random circuits: a sparse
+/// partitioned run (group-masked kernels inside partitions, targeted RUM
+/// feed, partition-level skipping) is bit-identical to a dense
+/// partitioned run — outputs and every committed register — including
+/// across a mid-run poke, for random partition counts.
+#[test]
+fn sparse_partitioned_matches_dense_partitioned_on_random_circuits() {
+    use rteaal::coordinator::parallel::BatchParallelSim;
+    propcheck::check("sparse-partitioned", 6, |rng, size| {
+        let g = random_circuit(rng, 30 + size * 6);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let lanes = 4usize;
+        let n = 2 + rng.index(3);
+        let mut dense = BatchParallelSim::new(&ir, KernelConfig::TI, n, lanes, false);
+        let mut sparse = BatchParallelSim::new(&ir, KernelConfig::TI, n, lanes, true);
+        let mut dense_buf: Vec<(String, u64)> = Vec::new();
+        let mut sparse_buf: Vec<(String, u64)> = Vec::new();
+        for cycle in 0..10 {
+            if cycle == 3 && !ir.commits.is_empty() {
+                let (reg, _, m) = ir.commits[rng.index(ir.commits.len())];
+                let lane = rng.index(lanes);
+                let val = rng.bits(64) & m;
+                dense.poke_lane(reg, lane, val);
+                sparse.poke_lane(reg, lane, val);
+            }
+            let per_lane: Vec<Vec<u64>> = (0..lanes).map(|_| random_inputs(rng, &opt)).collect();
+            let mut flat = vec![0u64; opt.inputs.len() * lanes];
+            for (l, inp) in per_lane.iter().enumerate() {
+                for (i, &v) in inp.iter().enumerate() {
+                    flat[i * lanes + l] = v;
+                }
+            }
+            dense.step(&flat);
+            sparse.step(&flat);
+            for l in 0..lanes {
+                dense.write_lane_outputs(l, &mut dense_buf);
+                sparse.write_lane_outputs(l, &mut sparse_buf);
+                if dense_buf != sparse_buf {
+                    return Err(format!(
+                        "sparse partitioned (n={n}) lane {l} diverged at cycle {cycle}"
+                    ));
+                }
+            }
+            for &(reg, _, _) in &ir.commits {
+                for l in 0..lanes {
+                    if sparse.reg_lane(reg, l) != dense.reg_lane(reg, l) {
+                        return Err(format!(
+                            "sparse partitioned (n={n}) reg {reg} lane {l} diverged at cycle {cycle}"
+                        ));
+                    }
+                }
+            }
+        }
+        if sparse.group_stats().is_none() {
+            return Err("sparse TI partitioned run must report group-level stats".into());
         }
         Ok(())
     });

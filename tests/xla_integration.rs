@@ -60,6 +60,48 @@ fn xla_backend_matches_interpreter_tiny_cpu() {
     assert_eq!(boundary, 8);
 }
 
+/// The partial-chunk peek is exact: `run(cycles)` with `cycles` not a
+/// multiple of the chunk reports the last *real* cycle's outputs and does
+/// not advance the committed state past it — continuing afterwards stays
+/// in lockstep with the native interpreter, because the re-buffered real
+/// rows replay in the next full chunk.
+#[test]
+fn xla_backend_partial_chunk_run_is_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let mut xla = XlaBackend::load(&rt, dir, "tiny_cpu").expect("load artifacts");
+    let d = catalog("tiny_cpu").unwrap();
+    let c = compile_design(&d, CompileOpts { fuse: false });
+    let mut native = build_with_oim(KernelConfig::PSU, &c.ir, &c.oim);
+
+    let chunk = xla.chunk as u64;
+    if chunk < 2 {
+        return; // no partial chunks to exercise
+    }
+    let partial = chunk + chunk / 2 + 1;
+    assert_ne!(partial % chunk, 0, "must land mid-chunk");
+    let mut stim = d.make_stimulus();
+    xla.run(partial, |cyc| stim(cyc)).expect("xla run");
+    let mut stim2 = d.make_stimulus();
+    for cyc in 0..partial {
+        native.step(&stim2(cyc));
+    }
+    assert_eq!(xla.outputs(), native.outputs(), "outputs at the partial cycle");
+
+    // continue past the peek: the buffered rows replay in the next full
+    // chunk, so the next flush lands exactly at cycle 2 * chunk
+    let mut flushed_at = None;
+    for cyc in partial..3 * chunk {
+        native.step(&stim2(cyc));
+        if xla.step(&stim(cyc)).expect("xla step") {
+            flushed_at = Some(cyc + 1);
+            break;
+        }
+    }
+    assert_eq!(flushed_at, Some(2 * chunk), "the peek must not consume the buffered rows");
+    assert_eq!(xla.outputs(), native.outputs(), "outputs after continuing past the peek");
+}
+
 #[test]
 fn xla_backend_matches_interpreter_rocket_xs() {
     let Some(dir) = artifacts_dir() else { return };
