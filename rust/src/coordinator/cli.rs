@@ -57,7 +57,12 @@ COMMANDS:
                                stimulus (lane inputs change with
                                probability R per cycle; default random)
             [--cycles N]       cycle count (default: design default)
-            [--vcd F]          write waveforms
+            [--vcd F]          write waveforms (delta-encoded: quiescent
+                               cycles emit nothing). With --parts: lane 0's
+                               design output ports (partition 0 commits
+                               every output; internal names live in
+                               replicated cones). Not supported with
+                               --lanes (waveforms are per-lane)
   xla-sim   --design D         simulate via the AOT XLA/PJRT artifact
             [--artifacts DIR]  artifact directory (default: artifacts)
             [--cycles N]
@@ -201,11 +206,19 @@ fn cmd_sim(args: &Args) -> Result<()> {
         if backend != "interp" {
             bail!("--parts requires --backend interp (got '{backend}')");
         }
-        if args.opt("vcd").is_some() {
-            bail!("--parts does not support --vcd (waveforms are per-lane)");
-        }
         let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
         let toggle = toggle_arg(args, &d, sparse)?;
+        // --vcd on a partitioned run dumps lane 0's *output ports*:
+        // internal named slots live in replicated per-partition cones, but
+        // partition 0 computes every design output by construction, so the
+        // buffered lane-0 output values are globally correct committed state.
+        let mut vcd = match args.opt("vcd") {
+            Some(p) => Some(crate::sim::vcd::VcdWriter::create_outputs(
+                &c.ir,
+                std::path::Path::new(p),
+            )?),
+            None => None,
+        };
         let mut sim = super::parallel::BatchParallelSim::with_partitioner(
             &c.ir,
             cfg,
@@ -221,11 +234,22 @@ fn cmd_sim(args: &Args) -> Result<()> {
             Some(rate) => d.make_lane_stimulus_toggle(lanes, rate),
             None => d.make_lane_stimulus(lanes),
         };
+        let mut obuf: Vec<(String, u64)> = Vec::new();
+        let mut vbuf: Vec<u64> = Vec::new();
         let t0 = std::time::Instant::now();
         for cyc in 0..cycles {
             sim.step(&stim(cyc));
+            if let Some(w) = vcd.as_mut() {
+                sim.write_lane_outputs(0, &mut obuf);
+                vbuf.clear();
+                vbuf.extend(obuf.iter().map(|&(_, v)| v));
+                w.sample_values(cyc + 1, &vbuf);
+            }
         }
         let dt = t0.elapsed();
+        if let Some(w) = vcd {
+            w.finish()?;
+        }
         let aggregate = (cycles as f64 * lanes as f64) / dt.as_secs_f64().max(1e-12);
         println!(
             "{} x{parts} parts x{lanes} lanes [{}]: {cycles} cycles/lane in {} ({:.2} M lane-cyc/s aggregate), replication {:.2}x, cut {} regs / {} pairs",

@@ -17,7 +17,12 @@
 //! ([`crate::kernels::BatchKernel`], lane-major `slots[s * B + lane]`),
 //! and the RUM step moves `B` lanes of every cut register per cycle —
 //! thread-level (partitions `P`) × data-level (lanes `B`) parallelism in
-//! one run. The scalar [`ParallelSim`] is a thin `B = 1` wrapper.
+//! one run. The per-partition kernels run their lane loops through the
+//! explicit `[u64; 8]` tile primitives ([`crate::kernels::tile`]), so
+//! SIMD tiles × threads × (optional) sparsity compose in a single run;
+//! [`BatchParallelSim::with_partitioner_baseline`] swaps in the pre-tile
+//! per-partition kernels for the tiled-vs-autovec sweep points. The
+//! scalar [`ParallelSim`] is a thin `B = 1` wrapper.
 //!
 //! The cycle loop runs on a **persistent worker pool**
 //! ([`super::pool::WorkerPool`]): `P - 1` workers are spawned once at
@@ -120,6 +125,36 @@ impl BatchParallelSim {
         sparse: bool,
         partitioner: PartitionerKind,
     ) -> Self {
+        Self::build(ir, cfg, n, lanes, sparse, partitioner, false)
+    }
+
+    /// [`Self::with_partitioner`] with pre-tile (auto-vectorized baseline)
+    /// per-partition kernels ([`kernels::build_batch_baseline`]) — the
+    /// tiled-vs-baseline comparison point of `benches/fig24_parts_lanes.rs`
+    /// and the partitioned remainder-lane differential tests. Dense only:
+    /// the sparse executors have no baseline variant (their partial-mask
+    /// path is bit-iterated either way), so `sparse` baseline runs keep
+    /// tiled full-mask bodies.
+    pub fn with_partitioner_baseline(
+        ir: &LayerIr,
+        cfg: KernelConfig,
+        n: usize,
+        lanes: usize,
+        partitioner: PartitionerKind,
+    ) -> Self {
+        Self::build(ir, cfg, n, lanes, false, partitioner, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        ir: &LayerIr,
+        cfg: KernelConfig,
+        n: usize,
+        lanes: usize,
+        sparse: bool,
+        partitioner: PartitionerKind,
+        baseline: bool,
+    ) -> Self {
         assert!(lanes >= 1, "lanes must be >= 1");
         let parting = partition_ir(ir, n, partitioner);
         // sparse mode runs group-masked sparse executors inside the
@@ -134,6 +169,8 @@ impl BatchParallelSim {
             let oim = crate::tensor::oim::Oim::from_ir(pir);
             kernel_boxes.push(if group_sparse {
                 kernels::build_sparse(cfg, pir, &oim, lanes)
+            } else if baseline {
+                kernels::build_batch_baseline(cfg, pir, &oim, lanes)
             } else {
                 kernels::build_batch(cfg, pir, &oim, lanes)
             });

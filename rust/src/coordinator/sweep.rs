@@ -96,6 +96,46 @@ pub fn measure_kernel_lanes(
     }
 }
 
+/// [`measure_kernel_lanes`] against the **pre-tile baseline** executor
+/// ([`crate::kernels::build_batch_baseline`]): the retained
+/// lane-at-a-time loops the auto-vectorizer sees, bit-identical to the
+/// tiled path. The tiled-vs-autovec comparison points of
+/// `BENCH_fig22.json` pair one of these (label `.../scalar`) with a
+/// [`measure_kernel_lanes`] point at the same `(cfg, lanes)`.
+pub fn measure_kernel_lanes_baseline(
+    design: &Design,
+    compiled: &Compiled,
+    cfg: KernelConfig,
+    lanes: usize,
+    cycles: u64,
+) -> SweepPoint {
+    let mut kernel =
+        crate::kernels::build_batch_baseline(cfg, &compiled.ir, &compiled.oim, lanes);
+    let program_bytes = crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim);
+    let data_bytes = crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim);
+    let mut stim = design.make_lane_stimulus(lanes);
+    // warm-up then measure
+    for c in 0..cycles.min(64) {
+        kernel.step(&stim(c));
+    }
+    let t0 = std::time::Instant::now();
+    for c in 0..cycles {
+        kernel.step(&stim(c));
+    }
+    let wall = t0.elapsed();
+    SweepPoint {
+        label: format!("{}/B{}/scalar", cfg.name(), lanes),
+        wall,
+        cycles,
+        hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
+        program_bytes,
+        data_bytes,
+        skip_rate: None,
+        cut_regs: None,
+        group_skip_rate: None,
+    }
+}
+
 /// [`measure_kernel_lanes`] but under toggle-rate-controlled stimulus
 /// (`Design::make_lane_stimulus_toggle`) — the dense comparison point for
 /// the sparse measurements, paying the identical stimulus-generation cost.
@@ -210,6 +250,53 @@ pub fn measure_kernel_parts_lanes(
     let wall = t0.elapsed();
     SweepPoint {
         label: format!("{}/P{}xB{}/{}", cfg.name(), parts, lanes, partitioner.name()),
+        wall,
+        cycles,
+        hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),
+        program_bytes: crate::perf::binsize::kernel_code_bytes(cfg, &compiled.oim),
+        data_bytes: crate::perf::binsize::kernel_data_bytes(cfg, &compiled.oim),
+        skip_rate: None,
+        cut_regs: Some(sim.cut_regs()),
+        group_skip_rate: None,
+    }
+}
+
+/// [`measure_kernel_parts_lanes`] against the pre-tile baseline
+/// per-partition kernels
+/// ([`super::parallel::BatchParallelSim::with_partitioner_baseline`]) —
+/// the P × B comparison points (label `.../scalar`) of `BENCH_fig24.json`.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_kernel_parts_lanes_baseline(
+    design: &Design,
+    compiled: &Compiled,
+    cfg: KernelConfig,
+    parts: usize,
+    lanes: usize,
+    cycles: u64,
+    partitioner: PartitionerKind,
+) -> SweepPoint {
+    let mut sim = super::parallel::BatchParallelSim::with_partitioner_baseline(
+        &compiled.ir,
+        cfg,
+        parts,
+        lanes,
+        partitioner,
+    );
+    for (slot, lane, value) in design.resolved_lane_init(&compiled.graph, lanes) {
+        sim.poke_lane(slot, lane, value);
+    }
+    let mut stim = design.make_lane_stimulus(lanes);
+    // warm-up then measure
+    for c in 0..cycles.min(64) {
+        sim.step(&stim(c));
+    }
+    let t0 = std::time::Instant::now();
+    for c in 0..cycles {
+        sim.step(&stim(c));
+    }
+    let wall = t0.elapsed();
+    SweepPoint {
+        label: format!("{}/P{}xB{}/{}/scalar", cfg.name(), parts, lanes, partitioner.name()),
         wall,
         cycles,
         hz: (cycles as f64 * lanes as f64) / wall.as_secs_f64().max(1e-12),

@@ -35,9 +35,24 @@
 //! Lanes never interact: a `B`-lane batched run is bit-identical to `B`
 //! independent single-lane runs of the corresponding scalar kernel
 //! (property-tested in `tests/kernels_property.rs`).
+//!
+//! ## Lane tiling
+//!
+//! The group-walk bodies (NU/PSU/IU), the SU tape records and the TI
+//! tape functions run their lane loops through the fixed-width tile
+//! primitives of [`super::tile`] (`[u64; 8]` tiles, `[u64; 4]` fallback,
+//! scalar remainder for `B % W != 0`), with the op body dispatched
+//! through [`kop_dispatch`] so each opcode monomorphizes its own tiled
+//! loop — no per-lane function-pointer call in the hot path. `MuxChain`
+//! is the documented exception: its variable arity has no fixed-shape
+//! tile, so it stays lane-at-a-time in every executor. The pre-tile
+//! lane-at-a-time path is retained (`run_group_lanes_scalar`, the
+//! `bt*_scalar` tape, [`super::build_batch_baseline`]) as the
+//! auto-vectorized baseline the tiled executors are benchmarked and
+//! differentially tested against.
 
 use super::common::{eval_op, BatchDriver};
-use super::BatchKernel;
+use super::{tile, BatchKernel};
 use crate::tensor::ir::{KOp, LayerIr, OpRec, NUM_KOPS};
 use crate::tensor::oim::Oim;
 
@@ -254,10 +269,57 @@ impl BatchKernel for BatchOuKernel {
 
 // ---------------------------------------------------- NU / PSU (batched)
 
-/// Scalar op body used by the batched group loops: the dispatch happens
-/// once per (layer, op-type) group, then the group loop iterates
-/// (element, lane) through one of these shapes. Shared with the sparse
-/// group walk in [`super::batch_sparse`].
+/// Central opcode table shared by every tiled dispatch site (the dense
+/// group walk, the SU record evaluator, and the sparse group walk in
+/// [`super::batch_sparse`]): maps each [`KOp`] to one of four loop
+/// *shapes*, handing the op body to the shape as an inline closure.
+/// Each call site supplies the four shapes as local macros, so every
+/// (site, opcode) pair monomorphizes its own tiled lane loop — the
+/// dispatch happens once per group/record, never per lane.
+///
+/// Closure signatures: `$un` receives `|a, imm, aux| -> u64`, `$bin`
+/// receives `|a, b, imm| -> u64`; `$mux` and `$chain` take no body
+/// (their shapes are fixed). Result masking is the shape's job.
+macro_rules! kop_dispatch {
+    ($n:expr, $un:ident, $bin:ident, $mux:ident, $chain:ident) => {
+        match $n {
+            KOp::Add => $bin!(|a, b, _imm| a.wrapping_add(b)),
+            KOp::Sub => $bin!(|a, b, _imm| a.wrapping_sub(b)),
+            KOp::Mul => $bin!(|a, b, _imm| a.wrapping_mul(b)),
+            KOp::Div => $bin!(|a, b, _imm| if b == 0 { 0 } else { a / b }),
+            KOp::Rem => $bin!(|a, b, _imm| if b == 0 { 0 } else { a % b }),
+            KOp::Lt => $bin!(|a, b, _imm| (a < b) as u64),
+            KOp::Leq => $bin!(|a, b, _imm| (a <= b) as u64),
+            KOp::Gt => $bin!(|a, b, _imm| (a > b) as u64),
+            KOp::Geq => $bin!(|a, b, _imm| (a >= b) as u64),
+            KOp::Eq => $bin!(|a, b, _imm| (a == b) as u64),
+            KOp::Neq => $bin!(|a, b, _imm| (a != b) as u64),
+            KOp::And => $bin!(|a, b, _imm| a & b),
+            KOp::Or => $bin!(|a, b, _imm| a | b),
+            KOp::Xor => $bin!(|a, b, _imm| a ^ b),
+            KOp::Dshl => $bin!(|a, b, _imm| if b >= 64 { 0 } else { a << b }),
+            KOp::Dshr => $bin!(|a, b, _imm| if b >= 64 { 0 } else { a >> b }),
+            KOp::Cat => $bin!(|a, b, imm| (a << imm) | b),
+            KOp::Not => $un!(|a, _imm, _aux| !a),
+            KOp::Neg => $un!(|a, _imm, _aux| a.wrapping_neg()),
+            KOp::AndrK => $un!(|a, _imm, aux| (a == aux) as u64),
+            KOp::Orr => $un!(|a, _imm, _aux| (a != 0) as u64),
+            KOp::Xorr => $un!(|a, _imm, _aux| (a.count_ones() & 1) as u64),
+            KOp::ShlI => $un!(|a, imm, _aux| a << imm),
+            KOp::ShrI => $un!(|a, imm, _aux| a >> imm),
+            KOp::Copy => $un!(|a, _imm, _aux| a),
+            KOp::Mux => $mux!(),
+            KOp::MuxChain => $chain!(),
+        }
+    };
+}
+pub(super) use kop_dispatch;
+
+/// Scalar op body used by the **baseline** (pre-tile) group loops: the
+/// dispatch happens once per (layer, op-type) group, then the group loop
+/// iterates (element, lane) calling one of these function pointers per
+/// lane — the lane-at-a-time path the tiled executors replaced, kept as
+/// the auto-vectorized comparison point ([`super::build_batch_baseline`]).
 pub(super) enum LaneOp {
     /// `(a, imm, aux) -> out`
     Un(fn(u64, u8, u64) -> u64),
@@ -299,10 +361,98 @@ pub(super) fn lane_op(n: KOp) -> LaneOp {
     }
 }
 
-/// Evaluate one (op type, group) over all lanes. Returns the number of
-/// operand-slot entries consumed (as `run_group` does for the scalar path).
+/// Evaluate one (op type, group) over all lanes through the tiled lane
+/// loops of [`super::tile`] — the opcode dispatch happens once per group
+/// ([`kop_dispatch`]), each opcode monomorphizing its own `[u64; 8]` /
+/// `[u64; 4]` / scalar-remainder loop. Returns the number of
+/// operand-slot entries consumed (as `run_group` does for the scalar
+/// path). `MuxChain` keeps the lane-at-a-time gather (variable arity —
+/// the documented tile exception).
 #[allow(clippy::too_many_arguments)]
 fn run_group_lanes(
+    n: u8,
+    lanes: usize,
+    v: &[u64],
+    lo: &mut [u64],
+    lo_pos: usize,
+    cnt: usize,
+    r: &[u32],
+    imm: &[u8],
+    msk: &[u64],
+    aux: &[u64],
+    arity: &[u8],
+    chain_buf: &mut [u64],
+) -> usize {
+    macro_rules! un {
+        ($f:expr) => {{
+            let f = $f;
+            for i in 0..cnt {
+                let ab = r[i] as usize * lanes;
+                let ob = (lo_pos + i) * lanes;
+                let (im, ax) = (imm[i], aux[i]);
+                tile::un(v, ab, lo, ob, lanes, msk[i], move |a| f(a, im, ax));
+            }
+            cnt
+        }};
+    }
+    macro_rules! bin {
+        ($f:expr) => {{
+            let f = $f;
+            for i in 0..cnt {
+                let ab = r[2 * i] as usize * lanes;
+                let bb = r[2 * i + 1] as usize * lanes;
+                let ob = (lo_pos + i) * lanes;
+                let im = imm[i];
+                tile::bin(v, ab, bb, lo, ob, lanes, msk[i], move |a, b| f(a, b, im));
+            }
+            2 * cnt
+        }};
+    }
+    macro_rules! mux {
+        () => {{
+            for i in 0..cnt {
+                let sb = r[3 * i] as usize * lanes;
+                let tb = r[3 * i + 1] as usize * lanes;
+                let fb = r[3 * i + 2] as usize * lanes;
+                let ob = (lo_pos + i) * lanes;
+                tile::mux(v, sb, tb, fb, lo, ob, lanes, msk[i]);
+            }
+            3 * cnt
+        }};
+    }
+    macro_rules! chain {
+        () => {{
+            let mut r_off = 0usize;
+            for i in 0..cnt {
+                let ar = arity[i] as usize;
+                let ob = (lo_pos + i) * lanes;
+                let k = imm[i] as usize;
+                for l in 0..lanes {
+                    for o in 0..ar {
+                        chain_buf[o] = v[r[r_off + o] as usize * lanes + l];
+                    }
+                    let mut val = chain_buf[2 * k];
+                    for j in (0..k).rev() {
+                        if chain_buf[2 * j] != 0 {
+                            val = chain_buf[2 * j + 1];
+                        }
+                    }
+                    lo[ob + l] = val & msk[i];
+                }
+                r_off += ar;
+            }
+            r_off
+        }};
+    }
+    kop_dispatch!(KOp::from_u8(n), un, bin, mux, chain)
+}
+
+/// The pre-tile lane-at-a-time group body ([`LaneOp`] function pointer
+/// per lane) — the baseline executors' counterpart of
+/// [`run_group_lanes`], bit-identical to it by the remainder-loop
+/// invariant (differentially tested in `tests/kernels_property.rs`).
+#[allow(clippy::too_many_arguments)]
+fn run_group_lanes_scalar(
     n: u8,
     lanes: usize,
     v: &[u64],
@@ -386,9 +536,7 @@ fn write_back_lanes(v: &mut [u64], lo: &[u64], s: &[u32], lanes: usize) {
     for (i, &slot) in s.iter().enumerate() {
         let sb = slot as usize * lanes;
         let lb = i * lanes;
-        for l in 0..lanes {
-            v[sb + l] = lo[lb + l];
-        }
+        v[sb..sb + lanes].copy_from_slice(&lo[lb..lb + lanes]);
     }
 }
 
@@ -403,10 +551,22 @@ pub struct BatchNuKernel {
     oim: Oim,
     lo: Vec<u64>,
     chain_buf: Vec<u64>,
+    /// tiled lane loops (default) vs the pre-tile lane-at-a-time baseline
+    tiled: bool,
 }
 
 impl BatchNuKernel {
     pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize, name: &'static str) -> Self {
+        Self::with_tiling(ir, oim, lanes, name, true)
+    }
+
+    /// The pre-tile (auto-vectorized baseline) variant — lane loops call
+    /// a [`LaneOp`] function pointer per lane instead of the tiled bodies.
+    pub fn new_baseline(ir: &LayerIr, oim: &Oim, lanes: usize, name: &'static str) -> Self {
+        Self::with_tiling(ir, oim, lanes, name, false)
+    }
+
+    fn with_tiling(ir: &LayerIr, oim: &Oim, lanes: usize, name: &'static str, tiled: bool) -> Self {
         let max_arity = oim.c.arity.iter().copied().max().unwrap_or(1) as usize;
         BatchNuKernel {
             name,
@@ -414,6 +574,7 @@ impl BatchNuKernel {
             oim: oim.clone(),
             lo: vec![0; ir.max_layer_ops() * lanes],
             chain_buf: vec![0; max_arity.max(3)],
+            tiled,
         }
     }
 }
@@ -443,7 +604,8 @@ impl BatchKernel for BatchNuKernel {
                 if cnt == 0 {
                     continue;
                 }
-                let consumed = run_group_lanes(
+                let body = if self.tiled { run_group_lanes } else { run_group_lanes_scalar };
+                let consumed = body(
                     n as u8,
                     lanes,
                     v,
@@ -499,10 +661,21 @@ pub struct BatchIuKernel {
     /// lane-major LO buffer (`max_layer_ops * lanes`)
     lo: Vec<u64>,
     chain_buf: Vec<u64>,
+    /// tiled lane loops (default) vs the pre-tile lane-at-a-time baseline
+    tiled: bool,
 }
 
 impl BatchIuKernel {
     pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        Self::with_tiling(ir, oim, lanes, true)
+    }
+
+    /// The pre-tile (auto-vectorized baseline) variant.
+    pub fn new_baseline(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        Self::with_tiling(ir, oim, lanes, false)
+    }
+
+    fn with_tiling(ir: &LayerIr, oim: &Oim, lanes: usize, tiled: bool) -> Self {
         let max_arity = oim.c.arity.iter().copied().max().unwrap_or(1) as usize;
         BatchIuKernel {
             d: BatchDriver::new(ir, lanes),
@@ -510,6 +683,7 @@ impl BatchIuKernel {
             program: super::iu::flatten_program(oim),
             lo: vec![0; ir.max_layer_ops() * lanes],
             chain_buf: vec![0; max_arity.max(3)],
+            tiled,
         }
     }
 }
@@ -528,12 +702,13 @@ impl BatchKernel for BatchIuKernel {
         let lanes = self.d.lanes;
         let o = &self.oim;
         let v = &mut self.d.v;
+        let body = if self.tiled { run_group_lanes } else { run_group_lanes_scalar };
         for cmd in &self.program {
             match *cmd {
                 super::iu::Cmd::Group { n, cnt, op_idx, r_idx, lo_pos } => {
                     let (cnt, op_idx, r_idx, lo_pos) =
                         (cnt as usize, op_idx as usize, r_idx as usize, lo_pos as usize);
-                    run_group_lanes(
+                    body(
                         n,
                         lanes,
                         v,
@@ -597,8 +772,74 @@ struct BatchSegment {
 /// lane-major LO buffer at `ob` — the lane-strided analog of the scalar
 /// SU's `eval_rec` call, dispatching from the record at run time (the
 /// OIM lives in the "code"; contrast [`BatchTiKernel`], which resolves
-/// the dispatch to a function pointer at build time).
+/// the dispatch to a function pointer at build time). The lane loop runs
+/// tiled ([`kop_dispatch`] + [`super::tile`]); `MuxChain` stays
+/// lane-at-a-time (variable arity).
 fn eval_rec_lanes(rec: &OpRec, v: &[u64], ext: &[u32], lanes: usize, lo: &mut [u64], ob: usize) {
+    macro_rules! un {
+        ($f:expr) => {{
+            let f = $f;
+            let (im, ax) = (rec.imm, rec.aux);
+            tile::un(v, rec.a as usize * lanes, lo, ob, lanes, rec.mask, move |a| f(a, im, ax));
+        }};
+    }
+    macro_rules! bin {
+        ($f:expr) => {{
+            let f = $f;
+            let im = rec.imm;
+            tile::bin(
+                v,
+                rec.a as usize * lanes,
+                rec.b as usize * lanes,
+                lo,
+                ob,
+                lanes,
+                rec.mask,
+                move |a, b| f(a, b, im),
+            );
+        }};
+    }
+    macro_rules! mux {
+        () => {
+            tile::mux(
+                v,
+                rec.a as usize * lanes,
+                rec.b as usize * lanes,
+                rec.c as usize * lanes,
+                lo,
+                ob,
+                lanes,
+                rec.mask,
+            )
+        };
+    }
+    macro_rules! chain {
+        () => {{
+            // operands: sel0 = a, v0 = b, then ext (sel1, v1, .., default)
+            let k = rec.imm as usize;
+            let e = &ext[rec.ext as usize..rec.ext as usize + 2 * k - 1];
+            for l in 0..lanes {
+                let val = if v[rec.a as usize * lanes + l] != 0 {
+                    v[rec.b as usize * lanes + l]
+                } else {
+                    let mut x = v[e[2 * k - 2] as usize * lanes + l];
+                    for i in (0..k - 1).rev() {
+                        if v[e[2 * i] as usize * lanes + l] != 0 {
+                            x = v[e[2 * i + 1] as usize * lanes + l];
+                        }
+                    }
+                    x
+                };
+                lo[ob + l] = val & rec.mask;
+            }
+        }};
+    }
+    kop_dispatch!(rec.kop(), un, bin, mux, chain)
+}
+
+/// The pre-tile lane-at-a-time record evaluator — the baseline SU's
+/// counterpart of [`eval_rec_lanes`].
+fn eval_rec_lanes_scalar(rec: &OpRec, v: &[u64], ext: &[u32], lanes: usize, lo: &mut [u64], ob: usize) {
     match lane_op(rec.kop()) {
         LaneOp::Un(f) => {
             let ab = rec.a as usize * lanes;
@@ -657,10 +898,21 @@ pub struct BatchSuKernel {
     ext_args: Vec<u32>,
     /// lane-major LO buffer (`max_layer_ops * lanes`)
     lo: Vec<u64>,
+    /// tiled lane loops (default) vs the pre-tile lane-at-a-time baseline
+    tiled: bool,
 }
 
 impl BatchSuKernel {
     pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        Self::with_tiling(ir, oim, lanes, true)
+    }
+
+    /// The pre-tile (auto-vectorized baseline) variant.
+    pub fn new_baseline(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        Self::with_tiling(ir, oim, lanes, false)
+    }
+
+    fn with_tiling(ir: &LayerIr, oim: &Oim, lanes: usize, tiled: bool) -> Self {
         let (layers, ext_args) = oim.op_recs();
         let mut tape = Vec::with_capacity(oim.total_ops());
         let mut wb = Vec::with_capacity(oim.total_ops());
@@ -686,6 +938,7 @@ impl BatchSuKernel {
             segments,
             ext_args,
             lo: vec![0; ir.max_layer_ops() * lanes],
+            tiled,
         }
     }
 }
@@ -703,19 +956,18 @@ impl BatchKernel for BatchSuKernel {
         self.d.set_inputs(inputs);
         let lanes = self.d.lanes;
         let v = &mut self.d.v;
+        let body = if self.tiled { eval_rec_lanes } else { eval_rec_lanes_scalar };
         for seg in &self.segments {
             // straight-line op records (OIM embedded in the "code")
             for t in &self.tape[seg.op_start as usize..seg.op_end as usize] {
                 let ob = t.lo_pos as usize * lanes;
-                eval_rec_lanes(&t.rec, v, &self.ext_args, lanes, &mut self.lo, ob);
+                body(&t.rec, v, &self.ext_args, lanes, &mut self.lo, ob);
             }
             // unrolled writeback records
             for &(slot, lo_pos) in &self.wb[seg.wb_start as usize..seg.wb_end as usize] {
                 let sb = slot as usize * lanes;
                 let lb = lo_pos as usize * lanes;
-                for l in 0..lanes {
-                    v[sb + l] = self.lo[lb + l];
-                }
+                v[sb..sb + lanes].copy_from_slice(&self.lo[lb..lb + lanes]);
             }
         }
         self.d.commit();
@@ -742,9 +994,25 @@ impl BatchKernel for BatchSuKernel {
 
 type BtFn = fn(&mut [u64], &OpRec, &[u32], usize);
 
+/// Each `bt_*` macro emits a **pair** of tape functions from one body: the
+/// tiled variant (default, built on [`tile`]'s in-place primitives so every
+/// opcode gets an explicitly unrollable `[u64; 8]` inner loop) and the
+/// pre-tile lane-at-a-time scalar variant (the auto-vectorized baseline,
+/// selected by [`BatchTiKernel::new_baseline`]).
 macro_rules! bt_bin {
-    ($name:ident, |$a:ident, $b:ident| $expr:expr) => {
-        fn $name(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
+    ($tiled:ident, $scalar:ident, |$a:ident, $b:ident| $expr:expr) => {
+        fn $tiled(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
+            tile::bin_ip(
+                v,
+                r.a as usize * lanes,
+                r.b as usize * lanes,
+                r.out as usize * lanes,
+                lanes,
+                r.mask,
+                |$a, $b| $expr,
+            );
+        }
+        fn $scalar(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
             let ab = r.a as usize * lanes;
             let bb = r.b as usize * lanes;
             let ob = r.out as usize * lanes;
@@ -757,8 +1025,13 @@ macro_rules! bt_bin {
     };
 }
 macro_rules! bt_un {
-    ($name:ident, |$a:ident, $r:ident| $expr:expr) => {
-        fn $name(v: &mut [u64], $r: &OpRec, _e: &[u32], lanes: usize) {
+    ($tiled:ident, $scalar:ident, |$a:ident, $r:ident| $expr:expr) => {
+        fn $tiled(v: &mut [u64], $r: &OpRec, _e: &[u32], lanes: usize) {
+            let ab = $r.a as usize * lanes;
+            let ob = $r.out as usize * lanes;
+            tile::un_ip(v, ab, ob, lanes, $r.mask, |$a| $expr);
+        }
+        fn $scalar(v: &mut [u64], $r: &OpRec, _e: &[u32], lanes: usize) {
             let ab = $r.a as usize * lanes;
             let ob = $r.out as usize * lanes;
             for l in 0..lanes {
@@ -769,32 +1042,45 @@ macro_rules! bt_un {
     };
 }
 
-bt_bin!(bt_add, |a, b| a.wrapping_add(b));
-bt_bin!(bt_sub, |a, b| a.wrapping_sub(b));
-bt_bin!(bt_mul, |a, b| a.wrapping_mul(b));
-bt_bin!(bt_div, |a, b| if b == 0 { 0 } else { a / b });
-bt_bin!(bt_rem, |a, b| if b == 0 { 0 } else { a % b });
-bt_bin!(bt_lt, |a, b| (a < b) as u64);
-bt_bin!(bt_leq, |a, b| (a <= b) as u64);
-bt_bin!(bt_gt, |a, b| (a > b) as u64);
-bt_bin!(bt_geq, |a, b| (a >= b) as u64);
-bt_bin!(bt_eq, |a, b| (a == b) as u64);
-bt_bin!(bt_neq, |a, b| (a != b) as u64);
-bt_bin!(bt_and, |a, b| a & b);
-bt_bin!(bt_or, |a, b| a | b);
-bt_bin!(bt_xor, |a, b| a ^ b);
-bt_bin!(bt_dshl, |a, b| if b >= 64 { 0 } else { a << b });
-bt_bin!(bt_dshr, |a, b| if b >= 64 { 0 } else { a >> b });
-bt_un!(bt_not, |a, _r| !a);
-bt_un!(bt_neg, |a, _r| a.wrapping_neg());
-bt_un!(bt_andr, |a, r| (a == r.aux) as u64);
-bt_un!(bt_orr, |a, _r| (a != 0) as u64);
-bt_un!(bt_xorr, |a, _r| (a.count_ones() & 1) as u64);
-bt_un!(bt_shli, |a, r| a << r.imm);
-bt_un!(bt_shri, |a, r| a >> r.imm);
-bt_un!(bt_copy, |a, _r| a);
+bt_bin!(bt_add, bts_add, |a, b| a.wrapping_add(b));
+bt_bin!(bt_sub, bts_sub, |a, b| a.wrapping_sub(b));
+bt_bin!(bt_mul, bts_mul, |a, b| a.wrapping_mul(b));
+bt_bin!(bt_div, bts_div, |a, b| if b == 0 { 0 } else { a / b });
+bt_bin!(bt_rem, bts_rem, |a, b| if b == 0 { 0 } else { a % b });
+bt_bin!(bt_lt, bts_lt, |a, b| (a < b) as u64);
+bt_bin!(bt_leq, bts_leq, |a, b| (a <= b) as u64);
+bt_bin!(bt_gt, bts_gt, |a, b| (a > b) as u64);
+bt_bin!(bt_geq, bts_geq, |a, b| (a >= b) as u64);
+bt_bin!(bt_eq, bts_eq, |a, b| (a == b) as u64);
+bt_bin!(bt_neq, bts_neq, |a, b| (a != b) as u64);
+bt_bin!(bt_and, bts_and, |a, b| a & b);
+bt_bin!(bt_or, bts_or, |a, b| a | b);
+bt_bin!(bt_xor, bts_xor, |a, b| a ^ b);
+bt_bin!(bt_dshl, bts_dshl, |a, b| if b >= 64 { 0 } else { a << b });
+bt_bin!(bt_dshr, bts_dshr, |a, b| if b >= 64 { 0 } else { a >> b });
+bt_un!(bt_not, bts_not, |a, _r| !a);
+bt_un!(bt_neg, bts_neg, |a, _r| a.wrapping_neg());
+bt_un!(bt_andr, bts_andr, |a, r| (a == r.aux) as u64);
+bt_un!(bt_orr, bts_orr, |a, _r| (a != 0) as u64);
+bt_un!(bt_xorr, bts_xorr, |a, _r| (a.count_ones() & 1) as u64);
+bt_un!(bt_shli, bts_shli, |a, r| a << r.imm);
+bt_un!(bt_shri, bts_shri, |a, r| a >> r.imm);
+bt_un!(bt_copy, bts_copy, |a, _r| a);
 
 fn bt_cat(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
+    let imm = r.imm;
+    tile::bin_ip(
+        v,
+        r.a as usize * lanes,
+        r.b as usize * lanes,
+        r.out as usize * lanes,
+        lanes,
+        r.mask,
+        move |a, b| (a << imm) | b,
+    );
+}
+
+fn bts_cat(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
     let ab = r.a as usize * lanes;
     let bb = r.b as usize * lanes;
     let ob = r.out as usize * lanes;
@@ -804,6 +1090,18 @@ fn bt_cat(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
 }
 
 fn bt_mux(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
+    tile::mux_ip(
+        v,
+        r.a as usize * lanes,
+        r.b as usize * lanes,
+        r.c as usize * lanes,
+        r.out as usize * lanes,
+        lanes,
+        r.mask,
+    );
+}
+
+fn bts_mux(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize) {
     let sb = r.a as usize * lanes;
     let tb = r.b as usize * lanes;
     let fb = r.c as usize * lanes;
@@ -869,6 +1167,40 @@ fn bt_fn(op: KOp) -> BtFn {
     }
 }
 
+/// Pre-tile lane-at-a-time tape functions; `MuxChain` shares the scalar
+/// implementation with the tiled table (variable arity — no fixed tile shape).
+fn bt_fn_scalar(op: KOp) -> BtFn {
+    match op {
+        KOp::Add => bts_add,
+        KOp::Sub => bts_sub,
+        KOp::Mul => bts_mul,
+        KOp::Div => bts_div,
+        KOp::Rem => bts_rem,
+        KOp::Lt => bts_lt,
+        KOp::Leq => bts_leq,
+        KOp::Gt => bts_gt,
+        KOp::Geq => bts_geq,
+        KOp::Eq => bts_eq,
+        KOp::Neq => bts_neq,
+        KOp::And => bts_and,
+        KOp::Or => bts_or,
+        KOp::Xor => bts_xor,
+        KOp::Not => bts_not,
+        KOp::Neg => bts_neg,
+        KOp::AndrK => bts_andr,
+        KOp::Orr => bts_orr,
+        KOp::Xorr => bts_xorr,
+        KOp::ShlI => bts_shli,
+        KOp::ShrI => bts_shri,
+        KOp::Dshl => bts_dshl,
+        KOp::Dshr => bts_dshr,
+        KOp::Cat => bts_cat,
+        KOp::Mux => bts_mux,
+        KOp::Copy => bts_copy,
+        KOp::MuxChain => bt_muxchain,
+    }
+}
+
 /// Batched **TI**: tape of precompiled per-opcode functions with operand
 /// slots baked into each record; each tape entry evaluates all lanes with
 /// direct lane-major slot writes (no LO staging). Batching amortizes the
@@ -883,11 +1215,21 @@ pub struct BatchTiKernel {
 
 impl BatchTiKernel {
     pub fn new(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        Self::with_table(ir, oim, lanes, bt_fn)
+    }
+
+    /// The pre-tile (auto-vectorized baseline) variant: same tape, but each
+    /// entry points at the lane-at-a-time scalar function.
+    pub fn new_baseline(ir: &LayerIr, oim: &Oim, lanes: usize) -> Self {
+        Self::with_table(ir, oim, lanes, bt_fn_scalar)
+    }
+
+    fn with_table(ir: &LayerIr, oim: &Oim, lanes: usize, table: fn(KOp) -> BtFn) -> Self {
         let (layers, ext_args) = oim.op_recs();
         let mut tape = Vec::with_capacity(ir.total_ops());
         for layer in &layers {
             for rec in layer {
-                tape.push((bt_fn(rec.kop()), *rec));
+                tape.push((table(rec.kop()), *rec));
             }
         }
         BatchTiKernel { d: BatchDriver::new(ir, lanes), tape, ext_args }

@@ -37,10 +37,22 @@
 //! cycle's propagation sweep wakes exactly its transitive descendants —
 //! a single-slot single-lane poke no longer costs a full cold cycle over
 //! every group and every lane.
+//!
+//! ## Lane tiling × sparsity
+//!
+//! The full-mask fast path — the common case whenever most lanes toggle —
+//! runs through the same explicit `[u64; 8]` tile primitives as the dense
+//! executors ([`super::tile`], dispatched per group via
+//! [`super::batch::kop_dispatch`]), so SIMD tiling and activity masking
+//! compose: a *quiescent* group is skipped outright, a *partial* mask
+//! bit-iterates exactly the active lanes (tiling a sparse scatter would
+//! waste the inactive slots), and a *full* mask takes the tiled loop.
+//! `MuxChain` stays lane-at-a-time in every path (variable arity — the
+//! documented tile exception).
 
-use super::batch::{lane_op, LaneOp};
+use super::batch::kop_dispatch;
 use super::common::BatchDriver;
-use super::BatchKernel;
+use super::{tile, BatchKernel};
 use crate::activity::gdg::Group;
 use crate::activity::{ActivityStats, ActivityTracker, GroupDepGraph};
 use crate::tensor::ir::{KOp, LayerIr, OpRec};
@@ -88,7 +100,10 @@ fn poke_lane_tracked(
 
 /// Evaluate one (layer, op-type) group over the active lanes only,
 /// writing output slots directly (levelization guarantees no same-layer
-/// consumer, so the dense executors' LO staging is unnecessary).
+/// consumer, so the dense executors' LO staging is unnecessary). The
+/// opcode dispatch happens once per group ([`kop_dispatch`]); a full
+/// mask takes the tiled in-place lane loop, a partial mask bit-iterates
+/// the active lanes.
 fn run_group_sparse(
     grp: &Group,
     mask: u64,
@@ -106,38 +121,70 @@ fn run_group_sparse(
     let msk = &c.mask[op0..];
     let aux = &c.aux[op0..];
     let arity = &c.arity[op0..];
-    match lane_op(KOp::from_u8(grp.opcode)) {
-        LaneOp::Un(f) => {
+    macro_rules! un {
+        ($f:expr) => {{
+            let f = $f;
             for i in 0..cnt {
                 let ab = r[i] as usize * lanes;
                 let ob = s[i] as usize * lanes;
-                for_lanes!(mask, full, lanes, l, {
-                    v[ob + l] = f(v[ab + l], imm[i], aux[i]) & msk[i];
-                });
+                let (im, ax) = (imm[i], aux[i]);
+                if mask == full {
+                    tile::un_ip(v, ab, ob, lanes, msk[i], move |a| f(a, im, ax));
+                } else {
+                    let mut rem = mask;
+                    while rem != 0 {
+                        let l = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        v[ob + l] = f(v[ab + l], im, ax) & msk[i];
+                    }
+                }
             }
-        }
-        LaneOp::Bin(f) => {
+        }};
+    }
+    macro_rules! bin {
+        ($f:expr) => {{
+            let f = $f;
             for i in 0..cnt {
                 let ab = r[2 * i] as usize * lanes;
                 let bb = r[2 * i + 1] as usize * lanes;
                 let ob = s[i] as usize * lanes;
-                for_lanes!(mask, full, lanes, l, {
-                    v[ob + l] = f(v[ab + l], v[bb + l], imm[i]) & msk[i];
-                });
+                let im = imm[i];
+                if mask == full {
+                    tile::bin_ip(v, ab, bb, ob, lanes, msk[i], move |a, b| f(a, b, im));
+                } else {
+                    let mut rem = mask;
+                    while rem != 0 {
+                        let l = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        v[ob + l] = f(v[ab + l], v[bb + l], im) & msk[i];
+                    }
+                }
             }
-        }
-        LaneOp::Mux => {
+        }};
+    }
+    macro_rules! mux {
+        () => {{
             for i in 0..cnt {
                 let sb = r[3 * i] as usize * lanes;
                 let tb = r[3 * i + 1] as usize * lanes;
                 let fb = r[3 * i + 2] as usize * lanes;
                 let ob = s[i] as usize * lanes;
-                for_lanes!(mask, full, lanes, l, {
-                    v[ob + l] = (if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] }) & msk[i];
-                });
+                if mask == full {
+                    tile::mux_ip(v, sb, tb, fb, ob, lanes, msk[i]);
+                } else {
+                    let mut rem = mask;
+                    while rem != 0 {
+                        let l = rem.trailing_zeros() as usize;
+                        rem &= rem - 1;
+                        v[ob + l] =
+                            (if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] }) & msk[i];
+                    }
+                }
             }
-        }
-        LaneOp::Chain => {
+        }};
+    }
+    macro_rules! chain {
+        () => {{
             let mut r_off = 0usize;
             for i in 0..cnt {
                 let ar = arity[i] as usize;
@@ -157,8 +204,9 @@ fn run_group_sparse(
                 });
                 r_off += ar;
             }
-        }
+        }};
     }
+    kop_dispatch!(KOp::from_u8(grp.opcode), un, bin, mux, chain)
 }
 
 /// Sparse **NU / PSU**: the format-C group walk gated by per-group lane
@@ -249,21 +297,29 @@ impl BatchKernel for SparseNuBatch {
 type SpFn = fn(&mut [u64], &OpRec, &[u32], usize, u64, u64);
 
 // The sp_* bodies below intentionally mirror the dense bt_* set in
-// `super::batch` one for one (only the lane loop differs): the dense TI
-// hot path stays branch-free, and any semantic drift between the two
-// sets is caught by the sparse-vs-dense bit-identity property test at
-// toggle rate 1.0, where every mask is full.
+// `super::batch` one for one (a full mask takes the same tiled in-place
+// loop; only the partial-mask bit-iteration differs): the dense TI hot
+// path stays branch-free, and any semantic drift between the two sets is
+// caught by the sparse-vs-dense bit-identity property test at toggle
+// rate 1.0, where every mask is full.
 macro_rules! sp_bin {
     ($name:ident, |$a:ident, $b:ident| $expr:expr) => {
         fn $name(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u64) {
             let ab = r.a as usize * lanes;
             let bb = r.b as usize * lanes;
             let ob = r.out as usize * lanes;
-            for_lanes!(mask, full, lanes, l, {
-                let $a = v[ab + l];
-                let $b = v[bb + l];
-                v[ob + l] = ($expr) & r.mask;
-            });
+            if mask == full {
+                tile::bin_ip(v, ab, bb, ob, lanes, r.mask, |$a, $b| $expr);
+            } else {
+                let mut rem = mask;
+                while rem != 0 {
+                    let l = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let $a = v[ab + l];
+                    let $b = v[bb + l];
+                    v[ob + l] = ($expr) & r.mask;
+                }
+            }
         }
     };
 }
@@ -272,10 +328,17 @@ macro_rules! sp_un {
         fn $name(v: &mut [u64], $r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u64) {
             let ab = $r.a as usize * lanes;
             let ob = $r.out as usize * lanes;
-            for_lanes!(mask, full, lanes, l, {
-                let $a = v[ab + l];
-                v[ob + l] = ($expr) & $r.mask;
-            });
+            if mask == full {
+                tile::un_ip(v, ab, ob, lanes, $r.mask, |$a| $expr);
+            } else {
+                let mut rem = mask;
+                while rem != 0 {
+                    let l = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let $a = v[ab + l];
+                    v[ob + l] = ($expr) & $r.mask;
+                }
+            }
         }
     };
 }
@@ -309,9 +372,17 @@ fn sp_cat(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u
     let ab = r.a as usize * lanes;
     let bb = r.b as usize * lanes;
     let ob = r.out as usize * lanes;
-    for_lanes!(mask, full, lanes, l, {
-        v[ob + l] = ((v[ab + l] << r.imm) | v[bb + l]) & r.mask;
-    });
+    if mask == full {
+        let imm = r.imm;
+        tile::bin_ip(v, ab, bb, ob, lanes, r.mask, move |a, b| (a << imm) | b);
+    } else {
+        let mut rem = mask;
+        while rem != 0 {
+            let l = rem.trailing_zeros() as usize;
+            rem &= rem - 1;
+            v[ob + l] = ((v[ab + l] << r.imm) | v[bb + l]) & r.mask;
+        }
+    }
 }
 
 fn sp_mux(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u64) {
@@ -319,9 +390,16 @@ fn sp_mux(v: &mut [u64], r: &OpRec, _e: &[u32], lanes: usize, mask: u64, full: u
     let tb = r.b as usize * lanes;
     let fb = r.c as usize * lanes;
     let ob = r.out as usize * lanes;
-    for_lanes!(mask, full, lanes, l, {
-        v[ob + l] = (if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] }) & r.mask;
-    });
+    if mask == full {
+        tile::mux_ip(v, sb, tb, fb, ob, lanes, r.mask);
+    } else {
+        let mut rem = mask;
+        while rem != 0 {
+            let l = rem.trailing_zeros() as usize;
+            rem &= rem - 1;
+            v[ob + l] = (if v[sb + l] != 0 { v[tb + l] } else { v[fb + l] }) & r.mask;
+        }
+    }
 }
 
 /// Masked mirror of the dense tape's MuxChain: operands are `sel0 = a`,

@@ -3,6 +3,7 @@
 //! per-operation evaluator used by the rolled kernels' case dispatch (the
 //! paper's Algorithm 2 `op_r[n]` case statement).
 
+use super::tile;
 use crate::graph::ops::mask;
 use crate::tensor::ir::{KOp, LayerIr};
 
@@ -88,29 +89,29 @@ impl BatchDriver {
     }
 
     /// Drive all lanes' inputs. `inputs` is lane-major:
-    /// `inputs[i * lanes + lane]` is input port `i` for `lane`.
+    /// `inputs[i * lanes + lane]` is input port `i` for `lane`. The copy
+    /// runs tile-strided ([`tile::un`]) like the kernel bodies, so the
+    /// cycle boundary shares the explicit-SIMD inner loop shape.
     #[inline]
     pub fn set_inputs(&mut self, inputs: &[u64]) {
         debug_assert_eq!(inputs.len(), self.input_slots.len() * self.lanes);
         for i in 0..self.input_slots.len() {
             let m = self.input_masks[i];
             let base = self.input_slots[i] as usize * self.lanes;
-            for l in 0..self.lanes {
-                self.v[base + l] = inputs[i * self.lanes + l] & m;
-            }
+            tile::un(inputs, i * self.lanes, &mut self.v, base, self.lanes, m, |a| a);
         }
     }
 
-    /// Register commits for every lane (the `◇ : i ≡ I` connects).
+    /// Register commits for every lane (the `◇ : i ≡ I` connects),
+    /// tile-strided. `reg == next` (self-holding registers) is safe: the
+    /// in-place tile primitive loads a whole tile before storing it.
     #[inline]
     pub fn commit(&mut self) {
         for ci in 0..self.commits.len() {
             let (reg, next, m) = self.commits[ci];
             let rb = reg as usize * self.lanes;
             let nb = next as usize * self.lanes;
-            for l in 0..self.lanes {
-                self.v[rb + l] = self.v[nb + l] & m;
-            }
+            tile::un_ip(&mut self.v, nb, rb, self.lanes, m, |a| a);
         }
     }
 
@@ -125,15 +126,8 @@ impl BatchDriver {
         for i in 0..self.input_slots.len() {
             let m = self.input_masks[i];
             let base = self.input_slots[i] as usize * self.lanes;
-            let mut ch = 0u64;
-            for l in 0..self.lanes {
-                let nv = inputs[i * self.lanes + l] & m;
-                if self.v[base + l] != nv {
-                    self.v[base + l] = nv;
-                    ch |= 1u64 << l;
-                }
-            }
-            changed[i] |= ch;
+            changed[i] |=
+                tile::store_changed(inputs, i * self.lanes, &mut self.v, base, self.lanes, m);
         }
     }
 
@@ -148,15 +142,7 @@ impl BatchDriver {
             let (reg, next, m) = self.commits[ci];
             let rb = reg as usize * self.lanes;
             let nb = next as usize * self.lanes;
-            let mut ch = 0u64;
-            for l in 0..self.lanes {
-                let nv = self.v[nb + l] & m;
-                if self.v[rb + l] != nv {
-                    self.v[rb + l] = nv;
-                    ch |= 1u64 << l;
-                }
-            }
-            changed[ci] |= ch;
+            changed[ci] |= tile::store_changed_ip(&mut self.v, nb, rb, self.lanes, m);
         }
     }
 

@@ -7,15 +7,29 @@
 //! (dispatch per element vs per group vs per program; metadata in data
 //! arrays vs embedded in the program) is preserved:
 //!
-//! | kernel | paper                                | here | batched |
-//! |--------|--------------------------------------|------|---------|
-//! | RU     | rolled `[I,S,N,O,R]`, per-op case    | cursor walk of format-B arrays, `match` per op, operand loop | [`batch::BatchRuKernel`] |
-//! | OU     | + unroll O                           | operand fetches inlined by arity | [`batch::BatchOuKernel`] |
-//! | NU     | + S/N swizzle, per-op-type loops     | format-C group walk, dispatch hoisted out of the S loop | [`batch::BatchNuKernel`] |
-//! | PSU    | + partial S unroll (8 / 24)          | chunked inner loops (`UNROLL=8`), writeback by 24 | [`batch::BatchNuKernel`] (lane loop replaces the S unroll) |
-//! | IU     | + unroll I (drop empty groups)       | flattened group-command program, zero per-layer overhead | [`batch::BatchIuKernel`] |
-//! | SU     | + unroll S fully (OIM in binary)     | straight-line op tape — no metadata arrays | [`batch::BatchSuKernel`] |
-//! | TI     | + tensor inlining (values in regs)   | tape of precompiled per-op closures, direct slot writes, no LO | [`batch::BatchTiKernel`] |
+//! | kernel | paper                                | here | batched | tiled |
+//! |--------|--------------------------------------|------|---------|-------|
+//! | RU     | rolled `[I,S,N,O,R]`, per-op case    | cursor walk of format-B arrays, `match` per op, operand loop | [`batch::BatchRuKernel`] | — (per-element dispatch *is* the binding level) |
+//! | OU     | + unroll O                           | operand fetches inlined by arity | [`batch::BatchOuKernel`] | — (per-element dispatch *is* the binding level) |
+//! | NU     | + S/N swizzle, per-op-type loops     | format-C group walk, dispatch hoisted out of the S loop | [`batch::BatchNuKernel`] | ✓ `[u64; 8]` group bodies |
+//! | PSU    | + partial S unroll (8 / 24)          | chunked inner loops (`UNROLL=8`), writeback by 24 | [`batch::BatchNuKernel`] (lane loop replaces the S unroll) | ✓ (shares NU's tiled bodies) |
+//! | IU     | + unroll I (drop empty groups)       | flattened group-command program, zero per-layer overhead | [`batch::BatchIuKernel`] | ✓ `[u64; 8]` group bodies |
+//! | SU     | + unroll S fully (OIM in binary)     | straight-line op tape — no metadata arrays | [`batch::BatchSuKernel`] | ✓ tiled per-record lane loops |
+//! | TI     | + tensor inlining (values in regs)   | tape of precompiled per-op closures, direct slot writes, no LO | [`batch::BatchTiKernel`] | ✓ tiled `bt_*` tape functions |
+//!
+//! The "tiled" column is the explicit-SIMD axis ([`tile`]): the batched
+//! executors' hot lane loops run over fixed-width `[u64; 8]` lane tiles
+//! (with a single `[u64; 4]` step and a scalar remainder loop for
+//! `B % 8 != 0`) instead of lane-at-a-time closure calls, so the
+//! data-level parallelism the tensor formulation exposes is spelled out
+//! for the backend rather than left to the auto-vectorizer. Every tiled
+//! executor keeps its pre-tile path alive as a *baseline* variant
+//! ([`build_batch_baseline`]) for the tiled-vs-autovec sweep points in
+//! `BENCH_fig22.json`/`BENCH_fig24.json` and for differential tests; the
+//! two paths are bit-identical by the remainder-loop invariant documented
+//! in [`tile`]. `MuxChain` (variable arity — no fixed tile shape) and the
+//! RU/OU executors (whose per-element dispatch is exactly what their
+//! binding level rolls up) stay lane-at-a-time.
 //!
 //! All kernels implement [`SimKernel`] and are property-tested to agree
 //! with `graph::RefSim` and the Einsum cascade evaluator.
@@ -113,6 +127,7 @@
 //! and the per-op dirty worklist collapses into `O(groups)` mask words.
 
 pub mod common;
+pub mod tile;
 pub mod ru;
 pub mod ou;
 pub mod nu;
@@ -273,6 +288,30 @@ pub fn build_batch(
         KernelConfig::IU => Box::new(batch::BatchIuKernel::new(ir, oim, lanes)),
         KernelConfig::SU => Box::new(batch::BatchSuKernel::new(ir, oim, lanes)),
         KernelConfig::TI => Box::new(batch::BatchTiKernel::new(ir, oim, lanes)),
+    }
+}
+
+/// Build the pre-tile (auto-vectorized baseline) variant of a lane-batched
+/// kernel: the retained lane-at-a-time loops from before the explicit
+/// `[u64; 8]` lane tiling, bit-identical to [`build_batch`] and kept for
+/// the tiled-vs-baseline sweep points (`BENCH_fig22.json` /
+/// `BENCH_fig24.json`) and the remainder-lane differential tests. RU/OU
+/// have no tiled path (their per-element dispatch is the binding level),
+/// so for them this returns the same executor as [`build_batch`].
+pub fn build_batch_baseline(
+    config: KernelConfig,
+    ir: &LayerIr,
+    oim: &Oim,
+    lanes: usize,
+) -> Box<dyn BatchKernel> {
+    match config {
+        KernelConfig::RU => Box::new(batch::BatchRuKernel::new(ir, oim, lanes)),
+        KernelConfig::OU => Box::new(batch::BatchOuKernel::new(ir, oim, lanes)),
+        KernelConfig::NU => Box::new(batch::BatchNuKernel::new_baseline(ir, oim, lanes, "NU")),
+        KernelConfig::PSU => Box::new(batch::BatchNuKernel::new_baseline(ir, oim, lanes, "PSU")),
+        KernelConfig::IU => Box::new(batch::BatchIuKernel::new_baseline(ir, oim, lanes)),
+        KernelConfig::SU => Box::new(batch::BatchSuKernel::new_baseline(ir, oim, lanes)),
+        KernelConfig::TI => Box::new(batch::BatchTiKernel::new_baseline(ir, oim, lanes)),
     }
 }
 

@@ -2,11 +2,27 @@
 //! variable; on each sampled cycle only signals whose value changed since
 //! the previous cycle are emitted (the change-detection scheme the paper
 //! describes).
+//!
+//! Delta semantics, precisely:
+//!
+//! * the `#{cycle}` timestamp is **buffered** and written only when at
+//!   least one variable changes at that time — a fully quiescent cycle
+//!   contributes zero bytes to the file (these are exactly the idle
+//!   cycles the activity subsystem skips, so a "delta" VCD of a mostly
+//!   idle run stays proportional to the activity, not to the cycle
+//!   count);
+//! * the **first** sample is a full dump of every variable — there is no
+//!   previous-value sentinel, so a signal whose genuine first value is
+//!   `u64::MAX` (e.g. the `Not` of a zero input at full width) is dumped
+//!   like any other;
+//! * emitted values are masked to the variable's declared width, so a
+//!   stale high bit in a slot can never leak into the waveform.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
+use crate::graph::ops::mask;
 use crate::tensor::ir::LayerIr;
 
 pub struct VcdWriter {
@@ -15,6 +31,11 @@ pub struct VcdWriter {
     vars: Vec<(u32, String, u8)>,
     last: Vec<u64>,
     first: bool,
+    /// timestamp of the current sample, written lazily before the first
+    /// changed-variable line (quiescent samples emit nothing)
+    pending_time: Option<u64>,
+    /// per-var value gather scratch for the slot-file entry point
+    vals: Vec<u64>,
 }
 
 /// VCD identifier codes: printable chars from '!' (33) to '~' (126).
@@ -31,37 +52,88 @@ fn id_code(mut n: usize) -> String {
 }
 
 impl VcdWriter {
+    /// Writer over every *named* slot of `ir` (the scalar simulator's
+    /// waveform: one variable per named signal).
     pub fn create(ir: &LayerIr, path: &Path) -> std::io::Result<Self> {
+        let vars: Vec<(u32, u8, &str)> = ir
+            .slot_names
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, name)| {
+                name.as_deref().map(|n| (slot as u32, ir.slot_widths[slot], n))
+            })
+            .collect();
+        Self::with_vars(ir, path, &vars)
+    }
+
+    /// Writer over the design's **output ports** only, in
+    /// `ir.output_slots` order. This is the variable set available from a
+    /// partitioned run: internal named slots live in replicated
+    /// per-partition cones, but partition 0 computes every design output
+    /// by construction, so its committed output-port values are globally
+    /// correct. [`Self::sample_values`] pairs with the lane-buffered
+    /// `write_lane_outputs` values, which follow the same order.
+    pub fn create_outputs(ir: &LayerIr, path: &Path) -> std::io::Result<Self> {
+        let vars: Vec<(u32, u8, &str)> = ir
+            .output_slots
+            .iter()
+            .map(|(name, slot)| (*slot, ir.slot_widths[*slot as usize], name.as_str()))
+            .collect();
+        Self::with_vars(ir, path, &vars)
+    }
+
+    fn with_vars(ir: &LayerIr, path: &Path, wanted: &[(u32, u8, &str)]) -> std::io::Result<Self> {
         let mut out = BufWriter::new(File::create(path)?);
         writeln!(out, "$date today $end")?;
         writeln!(out, "$version rteaal {} $end", crate::VERSION)?;
         writeln!(out, "$timescale 1ns $end")?;
         writeln!(out, "$scope module {} $end", if ir.name.is_empty() { "top" } else { &ir.name })?;
-        let mut vars = Vec::new();
-        for (slot, name) in ir.slot_names.iter().enumerate() {
-            if let Some(name) = name {
-                let code = id_code(vars.len());
-                let width = ir.slot_widths[slot];
-                writeln!(out, "$var wire {width} {code} {name} $end")?;
-                vars.push((slot as u32, code, width));
-            }
+        let mut vars = Vec::with_capacity(wanted.len());
+        for &(slot, width, name) in wanted {
+            let code = id_code(vars.len());
+            writeln!(out, "$var wire {width} {code} {name} $end")?;
+            vars.push((slot, code, width));
         }
         writeln!(out, "$upscope $end")?;
         writeln!(out, "$enddefinitions $end")?;
-        Ok(VcdWriter { out, vars, last: Vec::new(), first: true })
+        let n = vars.len();
+        Ok(VcdWriter {
+            out,
+            vars,
+            last: vec![0; n],
+            first: true,
+            pending_time: None,
+            vals: vec![0; n],
+        })
     }
 
-    /// Emit changed signals at time `cycle`.
+    /// Emit changed signals at time `cycle`, reading each variable from
+    /// the scalar slot file.
     pub fn sample(&mut self, cycle: u64, slots: &[u64]) {
-        let _ = writeln!(self.out, "#{cycle}");
-        if self.first {
-            self.first = false;
-            self.last = vec![u64::MAX; self.vars.len()];
+        let mut vals = std::mem::take(&mut self.vals);
+        for (i, (slot, _, _)) in self.vars.iter().enumerate() {
+            vals[i] = slots[*slot as usize];
         }
-        for (i, (slot, code, width)) in self.vars.iter().enumerate() {
-            let v = slots[*slot as usize];
-            if self.last[i] != v {
+        self.sample_values(cycle, &vals);
+        self.vals = vals;
+    }
+
+    /// Emit changed signals at time `cycle` from pre-gathered values, one
+    /// per declared variable (e.g. the value column of a partitioned
+    /// run's buffered `write_lane_outputs`). The timestamp is written
+    /// only if some variable changed; the first call dumps everything.
+    pub fn sample_values(&mut self, cycle: u64, values: &[u64]) {
+        debug_assert_eq!(values.len(), self.vars.len());
+        self.pending_time = Some(cycle);
+        let first = self.first;
+        self.first = false;
+        for (i, (_, code, width)) in self.vars.iter().enumerate() {
+            let v = values[i] & mask(*width);
+            if first || self.last[i] != v {
                 self.last[i] = v;
+                if let Some(t) = self.pending_time.take() {
+                    let _ = writeln!(self.out, "#{t}");
+                }
                 if *width == 1 {
                     let _ = writeln!(self.out, "{}{}", v & 1, code);
                 } else {
@@ -112,5 +184,105 @@ mod tests {
         for i in 0..500 {
             assert!(seen.insert(id_code(i)));
         }
+    }
+
+    /// A fully quiescent sample contributes nothing — not even its
+    /// timestamp (the delta-bloat bug: `#N` lines on exactly the idle
+    /// cycles the activity subsystem skips).
+    #[test]
+    fn quiescent_cycles_emit_no_timestamp() {
+        let g = counter(4);
+        let ir = lower(&g);
+        let dir = std::env::temp_dir().join("rteaal_vcd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("quiescent.vcd");
+        let mut w = VcdWriter::create(&ir, &path).unwrap();
+        let mut sim = IrSim::new(ir);
+        sim.step(&[0, 0]); // enable low: the counter holds its value
+        w.sample(1, &sim.slots); // first sample: full dump at #1
+        w.sample(2, &sim.slots); // same state re-sampled: nothing changes
+        w.sample(3, &sim.slots);
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("#1"), "{text}");
+        assert!(!text.contains("#2"), "quiescent cycle leaked a timestamp: {text}");
+        assert!(!text.contains("#3"), "quiescent cycle leaked a timestamp: {text}");
+    }
+
+    /// No first-sample sentinel: a 64-bit signal whose genuine first
+    /// value is `u64::MAX` is dumped like any other (the old
+    /// `last = u64::MAX` initialization silently swallowed it).
+    #[test]
+    fn first_sample_dumps_u64_max_values() {
+        use crate::graph::ops::PrimOp;
+        let mut g = crate::graph::Graph::new("allones");
+        let a = g.input("a", 64);
+        let x = g.prim(PrimOp::Not, &[a]);
+        g.output("y", x);
+        let ir = lower(&g);
+        let dir = std::env::temp_dir().join("rteaal_vcd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("allones.vcd");
+        let mut w = VcdWriter::create(&ir, &path).unwrap();
+        let mut sim = IrSim::new(ir);
+        sim.step(&[0]); // !0 = u64::MAX on the 64-bit output
+        w.sample(1, &sim.slots);
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let ones = "1".repeat(64);
+        assert!(
+            text.lines().any(|l| l.starts_with(&format!("b{ones} "))),
+            "first-value u64::MAX dump missing: {text}"
+        );
+    }
+
+    /// Emitted values are masked to the declared width: a stale high bit
+    /// planted in the slot file cannot leak into the waveform.
+    #[test]
+    fn emitted_values_masked_to_declared_width() {
+        let g = counter(4);
+        let ir = lower(&g);
+        let dir = std::env::temp_dir().join("rteaal_vcd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("masked.vcd");
+        let mut w = VcdWriter::create(&ir, &path).unwrap();
+        let mut sim = IrSim::new(ir);
+        sim.step(&[1, 0]);
+        let mut slots = sim.slots.clone();
+        for s in slots.iter_mut() {
+            *s |= 0xFFFF_FFFF_FFFF_FF00; // garbage above any declared width
+        }
+        w.sample(1, &slots);
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for line in text.lines().filter(|l| l.starts_with('b')) {
+            let bits = line[1..].split(' ').next().unwrap();
+            assert!(bits.len() <= 4, "value wider than declared width: {line}");
+        }
+    }
+
+    /// The outputs-only writer declares exactly the design's output ports
+    /// and samples from a plain value column.
+    #[test]
+    fn outputs_writer_declares_ports_and_buffers_timestamps() {
+        let g = counter(4);
+        let ir = lower(&g);
+        let dir = std::env::temp_dir().join("rteaal_vcd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("outputs.vcd");
+        let n_outputs = ir.output_slots.len();
+        let mut w = VcdWriter::create_outputs(&ir, &path).unwrap();
+        let threes = vec![3u64; n_outputs];
+        let fives = vec![5u64; n_outputs];
+        w.sample_values(1, &threes); // full dump
+        w.sample_values(2, &threes); // quiescent
+        w.sample_values(3, &fives); // change
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let declared = text.lines().filter(|l| l.starts_with("$var")).count();
+        assert_eq!(declared, n_outputs, "{text}");
+        assert!(text.contains("#1"), "{text}");
+        assert!(!text.contains("#2"), "{text}");
+        assert!(text.contains("#3"), "{text}");
     }
 }

@@ -12,8 +12,8 @@ use rteaal::graph::builder::{random_circuit, random_inputs};
 use rteaal::graph::passes;
 use rteaal::graph::RefSim;
 use rteaal::kernels::{
-    build_batch, build_sparse, build_with_oim, unopt::UnoptKernel, BatchKernel, KernelConfig,
-    SimKernel, ALL_KERNELS, BATCHED_KERNELS, SPARSE_KERNELS,
+    build_batch, build_batch_baseline, build_sparse, build_with_oim, unopt::UnoptKernel,
+    BatchKernel, KernelConfig, SimKernel, ALL_KERNELS, BATCHED_KERNELS, SPARSE_KERNELS,
 };
 use rteaal::tensor::ir::lower;
 use rteaal::tensor::oim::Oim;
@@ -208,6 +208,127 @@ fn batched_kernels_match_sequential_lanes() {
     });
 }
 
+/// The tiling differential property: the explicit `[u64; 8]`-tile
+/// executors are bit-identical to the retained pre-tile lane-at-a-time
+/// baselines ([`build_batch_baseline`]) for every batched kernel, across
+/// batch widths chosen to exercise every remainder decomposition —
+/// `B ∈ {1, 3, 7, 9, 63, 64}` covers scalar-only (1, 3), one 4-wide step
+/// plus scalar (7), one 8-wide tile plus scalar (9), the worst case
+/// 8-wide × 7 + 4-wide + 3 scalar (63), and the exact-tile path (64).
+/// Both the named outputs and the full lane-major slot file must agree.
+#[test]
+fn tiled_kernels_match_scalar_baseline_across_remainder_widths() {
+    propcheck::check("tiled-vs-scalar", 6, |rng, size| {
+        let g = random_circuit(rng, 15 + size * 4);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let mut tiled_buf: Vec<(String, u64)> = Vec::new();
+        let mut scalar_buf: Vec<(String, u64)> = Vec::new();
+        for &lanes in &[1usize, 3, 7, 9, 63, 64] {
+            for cfg in BATCHED_KERNELS {
+                let mut tiled = build_batch(cfg, &ir, &oim, lanes);
+                let mut scalar = build_batch_baseline(cfg, &ir, &oim, lanes);
+                for cycle in 0..4 {
+                    let mut flat = vec![0u64; opt.inputs.len() * lanes];
+                    for l in 0..lanes {
+                        for (i, &v) in random_inputs(rng, &opt).iter().enumerate() {
+                            flat[i * lanes + l] = v;
+                        }
+                    }
+                    tiled.step(&flat);
+                    scalar.step(&flat);
+                    if tiled.slots() != scalar.slots() {
+                        return Err(format!(
+                            "{} tiled slot file diverged from baseline (B {lanes}, cycle {cycle})",
+                            cfg.name()
+                        ));
+                    }
+                    for l in [0, lanes - 1] {
+                        tiled.write_lane_outputs(l, &mut tiled_buf);
+                        scalar.write_lane_outputs(l, &mut scalar_buf);
+                        if tiled_buf != scalar_buf {
+                            return Err(format!(
+                                "{} tiled lane {l} outputs diverged from baseline (B {lanes}, cycle {cycle})",
+                                cfg.name()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tiling composes with thread-level partitioning: a partitioned tiled
+/// run is bit-identical to the partitioned pre-tile baseline
+/// ([`BatchParallelSim::with_partitioner_baseline`]) at `P ∈ {2, 4}`,
+/// including remainder-heavy batch widths — outputs for every lane and
+/// every committed register.
+#[test]
+fn partitioned_tiled_matches_partitioned_baseline() {
+    use rteaal::coordinator::parallel::BatchParallelSim;
+    use rteaal::partition::PartitionerKind;
+    propcheck::check("partitioned-tiled-vs-scalar", 5, |rng, size| {
+        let g = random_circuit(rng, 30 + size * 6);
+        let (opt, _) = passes::optimize(&g);
+        let ir = lower(&opt);
+        let mut tiled_buf: Vec<(String, u64)> = Vec::new();
+        let mut scalar_buf: Vec<(String, u64)> = Vec::new();
+        for &(parts, lanes) in &[(2usize, 3usize), (2, 8), (4, 7), (4, 8)] {
+            for cfg in [KernelConfig::NU, KernelConfig::TI] {
+                let mut tiled = BatchParallelSim::with_partitioner(
+                    &ir,
+                    cfg,
+                    parts,
+                    lanes,
+                    false,
+                    PartitionerKind::MinCut,
+                );
+                let mut scalar = BatchParallelSim::with_partitioner_baseline(
+                    &ir,
+                    cfg,
+                    parts,
+                    lanes,
+                    PartitionerKind::MinCut,
+                );
+                for cycle in 0..5 {
+                    let mut flat = vec![0u64; opt.inputs.len() * lanes];
+                    for l in 0..lanes {
+                        for (i, &v) in random_inputs(rng, &opt).iter().enumerate() {
+                            flat[i * lanes + l] = v;
+                        }
+                    }
+                    tiled.step(&flat);
+                    scalar.step(&flat);
+                    for l in 0..lanes {
+                        tiled.write_lane_outputs(l, &mut tiled_buf);
+                        scalar.write_lane_outputs(l, &mut scalar_buf);
+                        if tiled_buf != scalar_buf {
+                            return Err(format!(
+                                "{} P{parts}xB{lanes} tiled lane {l} diverged at cycle {cycle}",
+                                cfg.name()
+                            ));
+                        }
+                    }
+                    for &(reg, _, _) in &ir.commits {
+                        for l in 0..lanes {
+                            if tiled.reg_lane(reg, l) != scalar.reg_lane(reg, l) {
+                                return Err(format!(
+                                    "{} P{parts}xB{lanes} reg {reg} lane {l} diverged at cycle {cycle}",
+                                    cfg.name()
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Divergent-lane initialization property: pre-run `poke_lane`s — the
 /// mechanism behind `Design::lane_init` — keep every batched kernel
 /// (including the IU and SU executors) bit-identical to scalar kernels
@@ -275,7 +396,10 @@ fn batched_poke_lane_matches_scalar_pokes() {
 /// batched kernel is **bit-identical** — named outputs *and* the full
 /// lane-major slot file — to its dense batched counterpart on random
 /// circuits, across toggle rates {0.0, 0.05, 0.5, 1.0} and
-/// `B ∈ {1, 8, 64}`. Skipping must be invisible: a (group, lane) is only
+/// `B ∈ {1, 3, 7, 9, 63, 64}` (the full remainder-decomposition grid:
+/// the sparse executors' full-mask fast path takes the tiled loop while
+/// partial masks bit-iterate, and both must land on identical bits).
+/// Skipping must be invisible: a (group, lane) is only
 /// skipped when recomputation would reproduce the very same values.
 #[test]
 fn sparse_batched_is_bit_identical_to_dense_batched() {
@@ -289,7 +413,7 @@ fn sparse_batched_is_bit_identical_to_dense_batched() {
         let mut sparse_buf: Vec<(String, u64)> = Vec::new();
         let mut dense_buf: Vec<(String, u64)> = Vec::new();
         for &rate in &[0.0f64, 0.05, 0.5, 1.0] {
-            for &lanes in &[1usize, 8, 64] {
+            for &lanes in &[1usize, 3, 7, 9, 63, 64] {
                 for cfg in SPARSE_KERNELS {
                     let mut dense = build_batch(cfg, &ir, &oim, lanes);
                     let mut sparse = build_sparse(cfg, &ir, &oim, lanes);
