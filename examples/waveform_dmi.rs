@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     loop {
         kernel.step(&[0, 0, 0, 0]);
         cycle += 1;
-        vcd.sample(cycle, kernel.slots());
+        vcd.sample(cycle, kernel.slots())?;
         if kernel.outputs().iter().any(|(n, v)| n == "halted" && *v == 1) {
             break;
         }

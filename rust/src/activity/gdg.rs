@@ -15,6 +15,7 @@
 
 use crate::tensor::ir::{LayerIr, NUM_KOPS};
 use crate::tensor::oim::Oim;
+use crate::util::json::{arr_u32, obj, Json, JsonError};
 
 /// One (layer, op-type) group of the format-C walk, addressed by its flat
 /// op range in the format-C arrays (`c.s_coords[op_start..op_end]` are its
@@ -171,6 +172,98 @@ impl GroupDepGraph {
         }
     }
 
+    /// Serialize for the service design cache. Everything is stored —
+    /// including the private slot→reader CSR and the slot→writer map —
+    /// so a cached load skips the `build` pass entirely.
+    pub fn to_json(&self) -> Json {
+        let flat_csr = |lists: &[Vec<u32>]| -> (Vec<u32>, Vec<u32>) {
+            let mut offsets = Vec::with_capacity(lists.len() + 1);
+            let mut flat = Vec::new();
+            offsets.push(0u32);
+            for l in lists {
+                flat.extend_from_slice(l);
+                offsets.push(flat.len() as u32);
+            }
+            (offsets, flat)
+        };
+        let (gd_off, gd) = flat_csr(&self.group_deps);
+        let (id_off, id) = flat_csr(&self.input_deps);
+        let (rd_off, rd) = flat_csr(&self.reg_deps);
+        obj(vec![
+            ("layer", arr_u32(&self.groups.iter().map(|g| g.layer).collect::<Vec<_>>())),
+            (
+                "opcode",
+                Json::Arr(self.groups.iter().map(|g| Json::Int(g.opcode as i64)).collect()),
+            ),
+            ("op_start", arr_u32(&self.groups.iter().map(|g| g.op_start).collect::<Vec<_>>())),
+            ("op_end", arr_u32(&self.groups.iter().map(|g| g.op_end).collect::<Vec<_>>())),
+            ("r_start", arr_u32(&self.groups.iter().map(|g| g.r_start).collect::<Vec<_>>())),
+            ("group_dep_offsets", arr_u32(&gd_off)),
+            ("group_deps", arr_u32(&gd)),
+            ("input_dep_offsets", arr_u32(&id_off)),
+            ("input_deps", arr_u32(&id)),
+            ("reg_dep_offsets", arr_u32(&rd_off)),
+            ("reg_deps", arr_u32(&rd)),
+            ("num_edges", Json::Int(self.num_edges as i64)),
+            ("total_ops", Json::Int(self.total_ops as i64)),
+            ("reader_offsets", arr_u32(&self.reader_offsets)),
+            ("reader_groups", arr_u32(&self.reader_groups)),
+            ("slot_writer", arr_u32(&self.slot_writer)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        let unflatten = |key: &str| -> Result<Vec<Vec<u32>>, JsonError> {
+            let offsets = j.req_u32_vec(&format!("{key}_offsets"))?;
+            let flat = j.req_u32_vec(key)?;
+            let mut lists = Vec::with_capacity(offsets.len().saturating_sub(1));
+            for w in offsets.windows(2) {
+                let (a, b) = (w[0] as usize, w[1] as usize);
+                if a > b || b > flat.len() {
+                    return Err(JsonError::Schema(format!("bad CSR offsets in '{key}'")));
+                }
+                lists.push(flat[a..b].to_vec());
+            }
+            Ok(lists)
+        };
+        let layer = j.req_u32_vec("layer")?;
+        let opcode = j.req_u32_vec("opcode")?;
+        let op_start = j.req_u32_vec("op_start")?;
+        let op_end = j.req_u32_vec("op_end")?;
+        let r_start = j.req_u32_vec("r_start")?;
+        let n = layer.len();
+        if [opcode.len(), op_start.len(), op_end.len(), r_start.len()] != [n; 4] {
+            return Err(JsonError::Schema("gdg group arrays disagree on length".into()));
+        }
+        let groups = (0..n)
+            .map(|i| Group {
+                layer: layer[i],
+                opcode: opcode[i] as u8,
+                op_start: op_start[i],
+                op_end: op_end[i],
+                r_start: r_start[i],
+            })
+            .collect();
+        let g = GroupDepGraph {
+            groups,
+            group_deps: unflatten("group_deps")?,
+            input_deps: unflatten("input_deps")?,
+            reg_deps: unflatten("reg_deps")?,
+            num_edges: j.req_usize("num_edges")?,
+            total_ops: j.req_usize("total_ops")?,
+            reader_offsets: j.req_u32_vec("reader_offsets")?,
+            reader_groups: j.req_u32_vec("reader_groups")?,
+            slot_writer: j.req_u32_vec("slot_writer")?,
+        };
+        if g.group_deps.len() != n || g.input_deps.len() != n || g.reg_deps.len() != n {
+            return Err(JsonError::Schema("gdg dependency CSRs disagree with group count".into()));
+        }
+        if g.reader_offsets.last().copied().unwrap_or(0) as usize != g.reader_groups.len() {
+            return Err(JsonError::Schema("gdg reader CSR is inconsistent".into()));
+        }
+        Ok(g)
+    }
+
     /// The groups with a direct operand on `slot` (sorted, deduplicated);
     /// empty for unread and out-of-range slots. This is the entry point of
     /// targeted invalidation ([`super::mask::ActivityTracker::note_slot_changed`]):
@@ -296,6 +389,37 @@ mod tests {
                 assert!((d as usize) < gi, "group {gi} has non-topological dep {d}");
             }
         }
+    }
+
+    /// JSON round-trip reproduces every field, including the private
+    /// reader CSR and writer map the design cache depends on.
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let (gdg, _ir, oim) = sample(31_004, 140);
+        let text = gdg.to_json().to_string();
+        let back =
+            GroupDepGraph::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.groups.len(), gdg.groups.len());
+        for (a, b) in back.groups.iter().zip(&gdg.groups) {
+            assert_eq!(
+                (a.layer, a.opcode, a.op_start, a.op_end, a.r_start),
+                (b.layer, b.opcode, b.op_start, b.op_end, b.r_start)
+            );
+        }
+        assert_eq!(back.group_deps, gdg.group_deps);
+        assert_eq!(back.input_deps, gdg.input_deps);
+        assert_eq!(back.reg_deps, gdg.reg_deps);
+        assert_eq!(back.num_edges, gdg.num_edges);
+        assert_eq!(back.total_ops, gdg.total_ops);
+        for slot in 0..oim.num_slots {
+            assert_eq!(back.readers_of(slot), gdg.readers_of(slot));
+            assert_eq!(back.writer_of(slot), gdg.writer_of(slot));
+        }
+        // corruption is a schema error, not a panic
+        let j = crate::util::json::parse(&text).unwrap();
+        let mut o = j.as_obj().unwrap().clone();
+        o.insert("reader_offsets".into(), crate::util::json::arr_u32(&[0, 999]));
+        assert!(GroupDepGraph::from_json(&Json::Obj(o)).is_err());
     }
 
     /// The slot → reader-groups index is exact: `readers_of(slot)` lists

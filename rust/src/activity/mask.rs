@@ -140,6 +140,46 @@ impl ActivityTracker {
     pub fn stats(&self) -> ActivityStats {
         self.stats
     }
+
+    /// Flat dump of the tracker's *dynamic* state for checkpointing:
+    /// `[cold, input_changed.., reg_changed.., pending.., active..]`.
+    /// Between cycles `reg_changed` (filled at the last commit) and
+    /// `pending` (filled by out-of-band pokes, e.g. the RUM exchange) are
+    /// live — tracker masks are real simulator state, not a cache — so a
+    /// bit-identical restore must carry them. Stats are deliberately
+    /// excluded (accounting, not semantics).
+    pub fn export_state(&self) -> Vec<u64> {
+        let mut v = Vec::with_capacity(
+            1 + self.input_changed.len() + self.reg_changed.len() + 2 * self.pending.len(),
+        );
+        v.push(self.cold as u64);
+        v.extend_from_slice(&self.input_changed);
+        v.extend_from_slice(&self.reg_changed);
+        v.extend_from_slice(&self.pending);
+        v.extend_from_slice(&self.active);
+        v
+    }
+
+    /// Restore state captured by [`Self::export_state`] on a tracker of
+    /// the same shape.
+    pub fn import_state(&mut self, data: &[u64]) -> Result<(), String> {
+        let want =
+            1 + self.input_changed.len() + self.reg_changed.len() + 2 * self.pending.len();
+        if data.len() != want {
+            return Err(format!(
+                "activity tracker state has {} words, expected {want}",
+                data.len()
+            ));
+        }
+        self.cold = data[0] != 0;
+        let mut at = 1usize;
+        for dst in [&mut self.input_changed, &mut self.reg_changed, &mut self.pending, &mut self.active]
+        {
+            dst.copy_from_slice(&data[at..at + dst.len()]);
+            at += dst.len();
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -167,6 +167,35 @@ impl PartitionTracker {
     pub fn stats(&self) -> PartitionActivity {
         self.stats
     }
+
+    /// Flat dump of the tracker's dynamic state for checkpointing:
+    /// `[cold, pending.., active..]`. `pending` is live between cycles
+    /// (the RUM exchange feeds it after stepping), so bit-identical
+    /// restore must carry it; stats are excluded.
+    pub fn export_state(&self) -> Vec<u64> {
+        let mut v = Vec::with_capacity(1 + 2 * self.pending.len());
+        v.push(self.cold as u64);
+        v.extend_from_slice(&self.pending);
+        v.extend_from_slice(&self.active);
+        v
+    }
+
+    /// Restore state captured by [`Self::export_state`] on a tracker of
+    /// the same shape.
+    pub fn import_state(&mut self, data: &[u64]) -> Result<(), String> {
+        let want = 1 + 2 * self.pending.len();
+        if data.len() != want {
+            return Err(format!(
+                "partition tracker state has {} words, expected {want}",
+                data.len()
+            ));
+        }
+        self.cold = data[0] != 0;
+        let parts = self.pending.len();
+        self.pending.copy_from_slice(&data[1..1 + parts]);
+        self.active.copy_from_slice(&data[1 + parts..1 + 2 * parts]);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -63,6 +63,17 @@ COMMANDS:
                                every output; internal names live in
                                replicated cones). Not supported with
                                --lanes (waveforms are per-lane)
+  serve                        run the simulation service (NDJSON requests,
+                               one per line; schema in the service module
+                               docs): a content-addressed design cache,
+                               concurrent lane-packed sessions, and
+                               checkpoint/restore
+            [--stdio]          serve stdin/stdout (default)
+            [--socket PATH]    serve a Unix socket instead
+            [--cache-dir DIR]  persist compiled designs under DIR (repeat
+                               opens are hash lookups, even across runs)
+            [--cache-cap N]    in-memory cache capacity (default 8)
+            [--timeout-ms N]   default per-request budget (default 2000)
   xla-sim   --design D         simulate via the AOT XLA/PJRT artifact
             [--artifacts DIR]  artifact directory (default: artifacts)
             [--cycles N]
@@ -90,11 +101,12 @@ pub fn run(args: Args) -> Result<()> {
                     d.default_cycles
                 );
             }
-            println!("  (+ counter, alu32, fir8, alu_farm_N, rocket_like_Nc, boom_like_Nc, gemmini_like_N, rocket_like_xs)");
+            println!("  (+ counter, alu32, fir8, alu_farm_N, rocket_like_Nc, boom_like_Nc, gemmini_like_N, rocket_like_xs, tiny_cpu_divergent)");
             Ok(())
         }
         "compile" => cmd_compile(&args),
         "sim" => cmd_sim(&args),
+        "serve" => cmd_serve(&args),
         "xla-sim" => cmd_xla_sim(&args),
         "export-tensors" => cmd_export(&args),
         "autotune" => cmd_autotune(&args),
@@ -243,7 +255,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
                 sim.write_lane_outputs(0, &mut obuf);
                 vbuf.clear();
                 vbuf.extend(obuf.iter().map(|&(_, v)| v));
-                w.sample_values(cyc + 1, &vbuf);
+                w.sample_values(cyc + 1, &vbuf)
+                    .context("writing VCD waveform (--vcd target)")?;
             }
         }
         let dt = t0.elapsed();
@@ -386,6 +399,26 @@ fn cmd_sim(args: &Args) -> Result<()> {
         println!("  out {oname} = {v:#x}");
     }
     sim.finish()?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::service::api::{serve_stdio, serve_unix, ServeOpts};
+    if args.flag("stdio") && args.opt("socket").is_some() {
+        bail!("--stdio and --socket are mutually exclusive");
+    }
+    let opts = ServeOpts {
+        cache_dir: args.opt("cache-dir").map(PathBuf::from),
+        cache_cap: args.opt_usize("cache-cap", 8)?,
+        timeout_ms: args.opt_u64("timeout-ms", 2_000)?,
+    };
+    if opts.cache_cap == 0 {
+        bail!("--cache-cap must be >= 1 (got 0)");
+    }
+    match args.opt("socket") {
+        Some(path) => serve_unix(std::path::Path::new(path), opts)?,
+        None => serve_stdio(opts)?,
+    }
     Ok(())
 }
 

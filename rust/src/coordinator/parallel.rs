@@ -61,8 +61,36 @@ use super::pool::WorkerPool;
 use crate::activity::{ActivityStats, PartitionActivity, PartitionTracker};
 use crate::graph::ops::mask;
 use crate::kernels::{self, KernelConfig};
-use crate::partition::{partition_ir, PartitionerKind, TrackedReg};
+use crate::partition::{partition_ir, PartitionerKind, Partitioning, TrackedReg};
 use crate::tensor::ir::LayerIr;
+
+/// Full dynamic state of a [`BatchParallelSim`] — everything `step`
+/// reads or writes besides the static compile artifacts, captured by
+/// [`BatchParallelSim::export_state`] and re-applied bit-identically by
+/// [`BatchParallelSim::import_state`]. The simulator this is restored
+/// into must come from the same design, partitioning, kernel
+/// configuration, lane count and sparse flag (the service layer keys
+/// snapshots by the design-cache hash to enforce this; `import_state`
+/// still validates every buffer shape so a mismatched or corrupted
+/// snapshot is a structured error, never a panic or silent corruption).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SimState {
+    /// cycles stepped when the snapshot was taken
+    pub cycles_total: u64,
+    pub lanes: usize,
+    /// per-partition lane-major slot files
+    pub part_slots: Vec<Vec<u64>>,
+    /// per-partition kernel activity dumps (empty for dense kernels)
+    pub part_activity: Vec<Vec<u64>>,
+    /// lane-major RUM shadow of every tracked register
+    pub shadow: Vec<u64>,
+    /// previous cycle's masked stimulus (sparse boundary detection)
+    pub prev_inputs: Vec<u64>,
+    /// partition-tracker dump (empty on dense runs)
+    pub tracker_state: Vec<u64>,
+    /// per-tracked-register poke-dirty flags (see the RUM fast-skip)
+    pub poke_dirty: Vec<bool>,
+}
 
 /// Partitioned **and** lane-batched simulation: `P` thread-level
 /// partitions, each running a lane-batched kernel over `B` stimulus
@@ -98,6 +126,15 @@ pub struct BatchParallelSim {
     part_ops: Vec<u64>,
     /// cycles stepped so far
     cycles_total: u64,
+    /// tracked registers whose shadow was overwritten by an out-of-band
+    /// poke since their last RUM lane scan: the next commit may *revert*
+    /// the poke without the register's writer group running, so the
+    /// fast-skip must not trust `writer_active_lanes` until a scan has
+    /// reconciled shadow and slot file
+    poke_dirty: Vec<bool>,
+    /// RUM lane scans actually performed (one per tracked register per
+    /// cycle that wasn't skipped) — the fast-skip's effectiveness metric
+    exchange_visits: u64,
     /// partitions whose cones read each boundary slot (targeted poke wake)
     slot_readers: HashMap<u32, Vec<u32>>,
     /// previous cycle's (masked) stimulus, for boundary change detection
@@ -145,6 +182,24 @@ impl BatchParallelSim {
         Self::build(ir, cfg, n, lanes, false, partitioner, true)
     }
 
+    /// Build from a precomputed [`Partitioning`] instead of re-running
+    /// the partitioner — the service design cache's replay path: a cached
+    /// ownership map replayed through
+    /// [`crate::partition::FixedOwners`] reproduces the partitioning with
+    /// the cheap cone-walk passes only, skipping the min-cut search at
+    /// session-open time. `partitioner` only labels where the ownership
+    /// originally came from ([`Self::partitioner`]).
+    pub fn with_partitioning(
+        ir: &LayerIr,
+        cfg: KernelConfig,
+        parting: Partitioning,
+        lanes: usize,
+        sparse: bool,
+        partitioner: PartitionerKind,
+    ) -> Self {
+        Self::build_from(ir, cfg, parting, lanes, sparse, partitioner, false)
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn build(
         ir: &LayerIr,
@@ -155,8 +210,22 @@ impl BatchParallelSim {
         partitioner: PartitionerKind,
         baseline: bool,
     ) -> Self {
-        assert!(lanes >= 1, "lanes must be >= 1");
         let parting = partition_ir(ir, n, partitioner);
+        Self::build_from(ir, cfg, parting, lanes, sparse, partitioner, baseline)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_from(
+        ir: &LayerIr,
+        cfg: KernelConfig,
+        parting: Partitioning,
+        lanes: usize,
+        sparse: bool,
+        partitioner: PartitionerKind,
+        baseline: bool,
+    ) -> Self {
+        assert!(lanes >= 1, "lanes must be >= 1");
+        let n = parting.num_partitions();
         // sparse mode runs group-masked sparse executors inside the
         // partitions whenever the configuration has one; group-free
         // configurations keep dense kernels and get partition-level
@@ -196,6 +265,7 @@ impl BatchParallelSim {
         } else {
             None
         };
+        let num_tracked = parting.tracked.len();
         BatchParallelSim {
             pool: WorkerPool::new(kernel_boxes),
             owned,
@@ -212,6 +282,8 @@ impl BatchParallelSim {
             group_sparse,
             part_ops,
             cycles_total: 0,
+            poke_dirty: vec![false; num_tracked],
+            exchange_visits: 0,
             slot_readers: parting.readers_of_slot,
             prev_inputs: vec![0u64; num_inputs * lanes],
             input_changed: vec![0u64; num_inputs],
@@ -275,6 +347,23 @@ impl BatchParallelSim {
                     continue;
                 }
             }
+            // fast-skip: the owner stepped, but if the group computing
+            // this register's next-state value ran in no lane, the commit
+            // just rewrote the old value — the lane scan cannot find a
+            // change. Not valid while a poke-dirty flag is up: an
+            // out-of-band poke moved the shadow (and slot files) to the
+            // poked value, and the next commit may *revert* it without
+            // the writer group running, so one reconciling scan must
+            // happen first. `None` (dense kernel, or no writer group)
+            // means no proof — scan.
+            if self.group_sparse
+                && !self.poke_dirty[t_idx]
+                && self.pool.kernel(entry.owner).writer_active_lanes(entry.reg_slot) == Some(0)
+            {
+                continue;
+            }
+            self.exchange_visits += 1;
+            self.poke_dirty[t_idx] = false;
             let b = self.lanes;
             let base = entry.reg_slot as usize * b;
             self.scratch
@@ -347,9 +436,22 @@ impl BatchParallelSim {
         for p in 0..self.pool.parts() {
             self.pool.kernel_mut(p).poke_lane(slot, lane, value);
         }
+        let mut hit_tracked = false;
         for (t_idx, t) in self.tracked.iter().enumerate() {
             if t.reg_slot == slot {
                 self.shadow[t_idx * self.lanes + lane] = value;
+                self.poke_dirty[t_idx] = true;
+                hit_tracked = true;
+            }
+        }
+        if !hit_tracked {
+            // a poke to any other slot (e.g. a register's next-state slot
+            // during divergent-lane init) can change a tracked register at
+            // the next commit without its writer group running — suspend
+            // the fast-skip for every tracked register until one
+            // reconciling scan has run
+            for d in &mut self.poke_dirty {
+                *d = true;
             }
         }
         if let Some(tr) = &mut self.tracker {
@@ -371,6 +473,111 @@ impl BatchParallelSim {
                 None => {}
             }
         }
+    }
+
+    /// Capture the full dynamic state of the run — slot files, kernel
+    /// activity trackers, RUM shadow, boundary-detection buffers, cycle
+    /// count — so [`Self::import_state`] can later resume it
+    /// bit-identically (the checkpoint/restore substrate of
+    /// [`crate::service`]). Skip-rate statistics are not state: they
+    /// restart from zero in the restored simulator.
+    pub fn export_state(&self) -> SimState {
+        let parts = self.pool.parts();
+        SimState {
+            cycles_total: self.cycles_total,
+            lanes: self.lanes,
+            part_slots: (0..parts).map(|p| self.pool.kernel(p).slots().to_vec()).collect(),
+            part_activity: (0..parts)
+                .map(|p| self.pool.kernel(p).export_activity().unwrap_or_default())
+                .collect(),
+            shadow: self.shadow.clone(),
+            prev_inputs: self.prev_inputs.clone(),
+            tracker_state: self.tracker.as_ref().map(|t| t.export_state()).unwrap_or_default(),
+            poke_dirty: self.poke_dirty.clone(),
+        }
+    }
+
+    /// Restore state captured by [`Self::export_state`] on a simulator
+    /// built from the same compile artifacts. Every buffer shape is
+    /// validated before anything is written, so a mismatched snapshot
+    /// leaves the simulator untouched and returns an error instead of
+    /// panicking or half-applying.
+    pub fn import_state(&mut self, st: &SimState) -> Result<(), String> {
+        let parts = self.pool.parts();
+        if st.lanes != self.lanes {
+            return Err(format!("snapshot has {} lanes, simulator has {}", st.lanes, self.lanes));
+        }
+        if st.part_slots.len() != parts || st.part_activity.len() != parts {
+            return Err(format!(
+                "snapshot has {} partitions, simulator has {parts}",
+                st.part_slots.len()
+            ));
+        }
+        for (p, slots) in st.part_slots.iter().enumerate() {
+            if slots.len() != self.pool.kernel(p).slots().len() {
+                return Err(format!(
+                    "partition {p} snapshot has {} slot words, expected {}",
+                    slots.len(),
+                    self.pool.kernel(p).slots().len()
+                ));
+            }
+        }
+        if st.shadow.len() != self.shadow.len() {
+            return Err(format!(
+                "snapshot shadow has {} words, expected {}",
+                st.shadow.len(),
+                self.shadow.len()
+            ));
+        }
+        if st.prev_inputs.len() != self.prev_inputs.len() {
+            return Err(format!(
+                "snapshot prev_inputs has {} words, expected {}",
+                st.prev_inputs.len(),
+                self.prev_inputs.len()
+            ));
+        }
+        if st.poke_dirty.len() != self.poke_dirty.len() {
+            return Err(format!(
+                "snapshot has {} poke-dirty flags, expected {}",
+                st.poke_dirty.len(),
+                self.poke_dirty.len()
+            ));
+        }
+        // a dense snapshot restored into a sparse simulator (or vice
+        // versa) has mismatched tracker state — not a supported pairing
+        if self.tracker.is_some() && st.tracker_state.is_empty() {
+            return Err("snapshot has no partition-tracker state but simulator is sparse"
+                .to_string());
+        }
+        if self.tracker.is_none() && !st.tracker_state.is_empty() {
+            return Err("snapshot has partition-tracker state but simulator is dense".to_string());
+        }
+        for p in 0..parts {
+            self.pool.kernel_mut(p).restore_slots(&st.part_slots[p])?;
+            self.pool.kernel_mut(p).import_activity(&st.part_activity[p])?;
+        }
+        self.shadow.copy_from_slice(&st.shadow);
+        self.prev_inputs.copy_from_slice(&st.prev_inputs);
+        self.poke_dirty.copy_from_slice(&st.poke_dirty);
+        if let Some(t) = &mut self.tracker {
+            t.import_state(&st.tracker_state)?;
+        }
+        self.cycles_total = st.cycles_total;
+        Ok(())
+    }
+
+    /// RUM lane scans actually performed so far — one per (tracked
+    /// register, cycle) the exchange did not skip. The fast-skip's
+    /// effectiveness metric: on a quiescent sparse run this stays far
+    /// below `tracked × cycles`.
+    pub fn exchange_visits(&self) -> u64 {
+        self.exchange_visits
+    }
+
+    /// Tracked (cross-partition) registers in the RUM exchange —
+    /// [`Self::exchange_visits`]'s per-cycle denominator.
+    pub fn tracked_regs(&self) -> usize {
+        self.tracked.len()
     }
 
     /// Partition-level activity accounting of a sparse run; `None` on
@@ -803,5 +1010,138 @@ mod tests {
             after.stepped_partition_cycles,
             after.total_partition_cycles
         );
+    }
+
+    /// RUM fast-skip: on `alu_farm_64` with the stimulus frozen after
+    /// cycle 0, the sparse run's writer groups go quiescent, so the
+    /// exchange must skip nearly every per-register lane scan — far
+    /// fewer visits than the dense run's every-tracked-register-every-
+    /// cycle — while both runs stay bit-identical (checked lane by lane
+    /// above in `sparse_parallel_skips_idle_partitions_exactly`; here
+    /// against the register files directly).
+    #[test]
+    fn rum_fast_skip_drops_exchange_visits_on_frozen_design() {
+        // round-robin ownership scatters the independent ALUs across
+        // partitions, guaranteeing a non-trivial RUM cut (min-cut can
+        // partition alu_farm with a near-zero cut, leaving nothing to
+        // measure)
+        let d = catalog("alu_farm_64").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let parts = 4usize;
+        let lanes = 8usize;
+        let cycles = 64u64;
+        let kind = PartitionerKind::RoundRobin;
+        let mut dense =
+            BatchParallelSim::with_partitioner(&ir, KernelConfig::PSU, parts, lanes, false, kind);
+        let mut sparse =
+            BatchParallelSim::with_partitioner(&ir, KernelConfig::PSU, parts, lanes, true, kind);
+        let tracked = sparse.tracked_regs() as u64;
+        assert!(tracked > 0, "alu_farm_64 must have tracked registers");
+        assert!(dense.cut_regs() > 0, "round-robin must leave a RUM cut to measure");
+
+        // phase 1 — frozen stimulus: whole partitions go quiescent, so
+        // the sparse exchange visits almost nothing (the cold first
+        // cycle only) while the dense one scans its full cut every cycle
+        let mut stim_a = d.make_lane_stimulus_toggle(lanes, 0.0);
+        let mut stim_b = d.make_lane_stimulus_toggle(lanes, 0.0);
+        for c in 0..cycles {
+            dense.step(&stim_a(c));
+            sparse.step(&stim_b(c));
+        }
+        for &(reg, _, _) in &ir.commits {
+            for l in 0..lanes {
+                assert_eq!(sparse.reg_lane(reg, l), dense.reg_lane(reg, l), "reg {reg} lane {l}");
+            }
+        }
+        assert!(
+            sparse.exchange_visits() <= tracked * 2,
+            "frozen run should skip the exchange (visited {} of {} reg-cycles)",
+            sparse.exchange_visits(),
+            tracked * cycles
+        );
+        assert!(sparse.exchange_visits() < dense.exchange_visits());
+
+        // phase 2 — sparse low-rate toggling: input changes keep
+        // partitions *active* most cycles, but each cycle only the few
+        // toggled ALUs' writer groups run, so the per-register
+        // writer-group fast-skip (not partition-level skipping) is what
+        // keeps the visit count below the dense run's
+        let v_dense = dense.exchange_visits();
+        let v_sparse = sparse.exchange_visits();
+        let mut tog_a = d.make_lane_stimulus_toggle(lanes, 0.05);
+        let mut tog_b = d.make_lane_stimulus_toggle(lanes, 0.05);
+        for c in 0..32u64 {
+            let ia = tog_a(c);
+            dense.step(&ia);
+            sparse.step(&tog_b(c));
+            for l in 0..lanes {
+                assert_eq!(sparse.lane_outputs(l), dense.lane_outputs(l), "lane {l} cycle {c}");
+            }
+        }
+        for &(reg, _, _) in &ir.commits {
+            for l in 0..lanes {
+                assert_eq!(sparse.reg_lane(reg, l), dense.reg_lane(reg, l), "reg {reg} lane {l}");
+            }
+        }
+        let d_delta = dense.exchange_visits() - v_dense;
+        let s_delta = sparse.exchange_visits() - v_sparse;
+        assert!(
+            s_delta < d_delta,
+            "toggling run must still fast-skip idle writer groups ({s_delta} vs {d_delta})"
+        );
+    }
+
+    /// export/import round trip: stop a partitioned batched run mid-way,
+    /// restore the snapshot into a freshly built simulator, and the
+    /// remainder of the run is bit-identical to the uninterrupted one —
+    /// outputs and every committed register slot, dense and sparse.
+    #[test]
+    fn state_roundtrip_resumes_bit_identically() {
+        let d = catalog("fir8").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let lanes = 4usize;
+        for sparse in [false, true] {
+            let mut full = BatchParallelSim::new(&ir, KernelConfig::PSU, 2, lanes, sparse);
+            let mut head = BatchParallelSim::new(&ir, KernelConfig::PSU, 2, lanes, sparse);
+            let mut stim_a = d.make_lane_stimulus(lanes);
+            let mut stim_b = d.make_lane_stimulus(lanes);
+            for c in 0..13u64 {
+                full.step(&stim_a(c));
+                head.step(&stim_b(c));
+            }
+            let snap = head.export_state();
+            assert_eq!(snap.cycles_total, 13);
+            let mut tail = BatchParallelSim::new(&ir, KernelConfig::PSU, 2, lanes, sparse);
+            tail.import_state(&snap).expect("well-formed snapshot restores");
+            for c in 13..30u64 {
+                full.step(&stim_a(c));
+                tail.step(&stim_b(c));
+                for l in 0..lanes {
+                    assert_eq!(
+                        tail.lane_outputs(l),
+                        full.lane_outputs(l),
+                        "sparse={sparse} lane={l} cycle={c}"
+                    );
+                }
+                for &(reg, _, _) in &ir.commits {
+                    for l in 0..lanes {
+                        assert_eq!(
+                            tail.reg_lane(reg, l),
+                            full.reg_lane(reg, l),
+                            "sparse={sparse} reg={reg} lane={l} cycle={c}"
+                        );
+                    }
+                }
+            }
+            // malformed snapshots are structured errors, not panics
+            let mut bad = snap.clone();
+            bad.shadow.push(0);
+            assert!(tail.import_state(&bad).is_err());
+            let other = BatchParallelSim::new(&ir, KernelConfig::PSU, 3, lanes, sparse)
+                .export_state();
+            assert!(tail.import_state(&other).is_err(), "partition-count mismatch rejected");
+        }
     }
 }

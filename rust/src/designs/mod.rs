@@ -244,6 +244,22 @@ pub fn catalog(name: &str) -> Option<Design> {
             default_cycles: 8_000,
             lane_init: vec![],
         },
+        // the divergent-lane variant: register-file ROM, one program per
+        // lane (lane l runs programs[l % 2]) — the design whose lane_init
+        // actually diverges, so batched/service runs exercise the
+        // per-lane initialization path end to end
+        "tiny_cpu_divergent" => {
+            let prog_a = tiny_cpu::dhrystone_like(12);
+            let prog_b = tiny_cpu::dhrystone_like(7);
+            let rom_words = 32;
+            Design {
+                name: name.into(),
+                graph: tiny_cpu::tiny_cpu_divergent(rom_words, &prog_a),
+                stimulus: Stimulus::Zero,
+                default_cycles: 4_000,
+                lane_init: tiny_cpu::lane_rom_init(rom_words, &[prog_a, prog_b]),
+            }
+        }
         _ => {
             if let Some(rest) = name.strip_prefix("rocket_like_") {
                 if rest == "xs" {

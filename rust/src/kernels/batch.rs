@@ -143,6 +143,10 @@ impl BatchKernel for BatchRuKernel {
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         self.d.poke_lane(slot, lane, value);
     }
+
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        self.d.restore_slots(slots)
+    }
 }
 
 // --------------------------------------------------------------- OU (batched)
@@ -264,6 +268,10 @@ impl BatchKernel for BatchOuKernel {
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         self.d.poke_lane(slot, lane, value);
+    }
+
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        self.d.restore_slots(slots)
     }
 }
 
@@ -645,6 +653,10 @@ impl BatchKernel for BatchNuKernel {
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         self.d.poke_lane(slot, lane, value);
     }
+
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        self.d.restore_slots(slots)
+    }
 }
 
 // --------------------------------------------------------------- IU (batched)
@@ -746,6 +758,10 @@ impl BatchKernel for BatchIuKernel {
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         self.d.poke_lane(slot, lane, value);
+    }
+
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        self.d.restore_slots(slots)
     }
 }
 
@@ -987,6 +1003,10 @@ impl BatchKernel for BatchSuKernel {
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         self.d.poke_lane(slot, lane, value);
+    }
+
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        self.d.restore_slots(slots)
     }
 }
 
@@ -1269,6 +1289,10 @@ impl BatchKernel for BatchTiKernel {
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
         self.d.poke_lane(slot, lane, value);
+    }
+
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        self.d.restore_slots(slots)
     }
 }
 

@@ -96,6 +96,19 @@ fn poke_lane_tracked(
     }
 }
 
+/// Register slot → next-state slot map of the commits, for
+/// [`BatchKernel::writer_active_lanes`]: a register's committed value can
+/// only differ from the previous cycle's when the group that writes its
+/// `next` slot ran. Self-holding registers (`reg == next`) are excluded —
+/// their "writer" is the commit itself, which has no GDG group.
+fn next_of_reg(commits: &[(u32, u32, u64)]) -> std::collections::HashMap<u32, u32> {
+    commits
+        .iter()
+        .filter(|&&(reg, next, _)| reg != next)
+        .map(|&(reg, next, _)| (reg, next))
+        .collect()
+}
+
 // ------------------------------------------------------ NU / PSU (sparse)
 
 /// Evaluate one (layer, op-type) group over the active lanes only,
@@ -218,6 +231,8 @@ pub struct SparseNuBatch {
     oim: Oim,
     tracker: ActivityTracker,
     chain_buf: Vec<u64>,
+    /// reg slot → next slot (see [`next_of_reg`])
+    reg_next: std::collections::HashMap<u32, u32>,
 }
 
 impl SparseNuBatch {
@@ -231,6 +246,7 @@ impl SparseNuBatch {
             oim: oim.clone(),
             tracker,
             chain_buf: vec![0; max_arity.max(3)],
+            reg_next: next_of_reg(&ir.commits),
         }
     }
 
@@ -287,6 +303,29 @@ impl BatchKernel for SparseNuBatch {
 
     fn activity_stats(&self) -> Option<ActivityStats> {
         Some(self.tracker.stats())
+    }
+
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        self.d.restore_slots(slots)?;
+        // Without the matching tracker state the cached masks are stale;
+        // recold so the next cycle re-establishes everything. A following
+        // import_activity overwrites this with the exact snapshot state.
+        self.tracker.force_recold();
+        Ok(())
+    }
+
+    fn export_activity(&self) -> Option<Vec<u64>> {
+        Some(self.tracker.export_state())
+    }
+
+    fn import_activity(&mut self, data: &[u64]) -> Result<(), String> {
+        self.tracker.import_state(data)
+    }
+
+    fn writer_active_lanes(&self, slot: u32) -> Option<u64> {
+        let next = *self.reg_next.get(&slot)?;
+        let g = self.tracker.gdg.writer_of(next)?;
+        Some(self.tracker.active[g as usize])
     }
 }
 
@@ -468,6 +507,8 @@ pub struct SparseTiBatch {
     /// tape range per GDG group (parallel to `tracker.gdg.groups`)
     ranges: Vec<(u32, u32)>,
     tracker: ActivityTracker,
+    /// reg slot → next slot (see [`next_of_reg`])
+    reg_next: std::collections::HashMap<u32, u32>,
 }
 
 impl SparseTiBatch {
@@ -483,7 +524,14 @@ impl SparseTiBatch {
         let ranges: Vec<(u32, u32)> = gdg.groups.iter().map(|g| (g.op_start, g.op_end)).collect();
         debug_assert_eq!(ranges.last().map(|&(_, e)| e as usize).unwrap_or(0), tape.len());
         let tracker = ActivityTracker::new(gdg, ir.input_slots.len(), ir.commits.len(), lanes);
-        SparseTiBatch { d: BatchDriver::new(ir, lanes), tape, ext_args, ranges, tracker }
+        SparseTiBatch {
+            d: BatchDriver::new(ir, lanes),
+            tape,
+            ext_args,
+            ranges,
+            tracker,
+            reg_next: next_of_reg(&ir.commits),
+        }
     }
 }
 
@@ -532,6 +580,26 @@ impl BatchKernel for SparseTiBatch {
 
     fn activity_stats(&self) -> Option<ActivityStats> {
         Some(self.tracker.stats())
+    }
+
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        self.d.restore_slots(slots)?;
+        self.tracker.force_recold();
+        Ok(())
+    }
+
+    fn export_activity(&self) -> Option<Vec<u64>> {
+        Some(self.tracker.export_state())
+    }
+
+    fn import_activity(&mut self, data: &[u64]) -> Result<(), String> {
+        self.tracker.import_state(data)
+    }
+
+    fn writer_active_lanes(&self, slot: u32) -> Option<u64> {
+        let next = *self.reg_next.get(&slot)?;
+        let g = self.tracker.gdg.writer_of(next)?;
+        Some(self.tracker.active[g as usize])
     }
 }
 

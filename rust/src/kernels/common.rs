@@ -146,6 +146,24 @@ impl BatchDriver {
         }
     }
 
+    /// Overwrite the whole lane-major slot file from a snapshot of the
+    /// same shape (checkpoint restore). Sits behind
+    /// [`crate::kernels::BatchKernel::restore_slots`] for every
+    /// driver-backed executor.
+    pub fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
+        if slots.len() != self.v.len() {
+            return Err(format!(
+                "slot snapshot has {} words, expected {} ({} slots x {} lanes)",
+                slots.len(),
+                self.v.len(),
+                self.v.len() / self.lanes,
+                self.lanes
+            ));
+        }
+        self.v.copy_from_slice(slots);
+        Ok(())
+    }
+
     /// Write one lane of one slot directly (divergent-lane initialization).
     #[inline]
     pub fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {

@@ -265,6 +265,41 @@ pub trait BatchKernel: Send {
     fn activity_stats(&self) -> Option<crate::activity::ActivityStats> {
         None
     }
+    /// Overwrite the entire lane-major slot file from a snapshot captured
+    /// via [`Self::slots`] (checkpoint restore). The snapshot must come
+    /// from a kernel of the same design and lane count; errors on a
+    /// length mismatch rather than panicking so a corrupt snapshot
+    /// surfaces as a structured failure.
+    fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String>;
+    /// Dynamic activity-tracker state of a sparse executor as a flat word
+    /// dump (see [`crate::activity::ActivityTracker::export_state`]);
+    /// `None` on dense executors, whose only cross-cycle state is the
+    /// slot file itself.
+    fn export_activity(&self) -> Option<Vec<u64>> {
+        None
+    }
+    /// Restore state captured by [`Self::export_activity`]. Dense
+    /// executors accept only an empty dump.
+    fn import_activity(&mut self, data: &[u64]) -> Result<(), String> {
+        if data.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "dense executor {} has no activity state to restore ({} words given)",
+                self.config_name(),
+                data.len()
+            ))
+        }
+    }
+    /// Active-lane mask of the group that computed register `slot`'s
+    /// next-state value in the last [`Self::step`] — the RUM exchange's
+    /// fast-skip oracle: `Some(0)` proves no lane re-evaluated the
+    /// register's writer this cycle, so its committed value cannot differ
+    /// from the previous cycle's. `None` means no such proof is available
+    /// (dense executor, or no writer group) and the caller must scan.
+    fn writer_active_lanes(&self, _slot: u32) -> Option<u64> {
+        None
+    }
 }
 
 /// The kernel configurations with lane-batched executors — since the

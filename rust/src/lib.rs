@@ -34,6 +34,7 @@ pub mod sim;
 pub mod designs;
 pub mod runtime;
 pub mod coordinator;
+pub mod service;
 
 /// Library version string (matches Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -145,6 +145,24 @@ impl Partitioner for MinCut {
     }
 }
 
+/// Replay a previously computed ownership assignment verbatim (the
+/// service design cache stores `Partitioning::owner_of_reg` and rebuilds
+/// the cones through [`partition_ir_with`] — the cheap passes — instead
+/// of re-running the multilevel min-cut search).
+pub struct FixedOwners(pub Vec<usize>);
+
+impl Partitioner for FixedOwners {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn assign(&self, ir: &LayerIr, n: usize) -> Vec<usize> {
+        assert_eq!(self.0.len(), ir.commits.len(), "cached ownership is for another design");
+        assert!(self.0.iter().all(|&p| p < n), "cached ownership exceeds partition count");
+        self.0.clone()
+    }
+}
+
 /// A register tracked across the cycle boundary: committed by `owner`,
 /// read by `readers` (which may include the owner itself — its own
 /// next-state logic reading the register back).
@@ -448,6 +466,30 @@ mod tests {
                 mc.cut_regs(),
                 rr.cut_regs()
             );
+        }
+    }
+
+    /// Replaying a cached `owner_of_reg` through [`FixedOwners`] rebuilds
+    /// an identical partitioning — same per-partition IRs, tracking table
+    /// and cut — without the min-cut search (the design-cache load path).
+    #[test]
+    fn fixed_owners_replay_reproduces_partitioning() {
+        let ir = ir_for("gemmini_like_4");
+        let orig = partition_ir(&ir, 4, PartitionerKind::MinCut);
+        let replay = partition_ir_with(&ir, 4, &FixedOwners(orig.owner_of_reg.clone()));
+        assert_eq!(replay.owner_of_reg, orig.owner_of_reg);
+        assert_eq!(replay.cut_pairs(), orig.cut_pairs());
+        assert_eq!(replay.cut_regs(), orig.cut_regs());
+        assert_eq!(replay.input_deps, orig.input_deps);
+        assert_eq!(replay.tracked.len(), orig.tracked.len());
+        for (a, b) in replay.tracked.iter().zip(&orig.tracked) {
+            assert_eq!((a.owner, a.reg_slot), (b.owner, b.reg_slot));
+            assert_eq!(a.readers, b.readers);
+            assert_eq!(a.rum_readers, b.rum_readers);
+        }
+        for (a, b) in replay.part_irs.iter().zip(&orig.part_irs) {
+            assert_eq!(a.total_ops(), b.total_ops());
+            assert_eq!(a.commits, b.commits);
         }
     }
 

@@ -1,0 +1,343 @@
+//! The `rteaal serve` request loop: NDJSON over stdio or a Unix socket.
+//!
+//! One request line in, one reply line out, in order. Concurrency lives
+//! in the [session manager](crate::service::session) (many sessions
+//! packed onto shared hosts, hosts on the persistent worker pool) — the
+//! protocol itself is deliberately sequential, so replies never
+//! interleave and the transcript is a complete, replayable log.
+//!
+//! Each request runs under a time budget (`--timeout-ms`, overridable
+//! per request via a `timeout_ms` field). The budget bounds the *pump*:
+//! a `poll` that cannot finish in time replies with whatever cycles it
+//! did produce (`done:false`); it only fails with code `timeout` when
+//! the budget expired before a single record was available. A host that
+//! panics mid-step is dropped and its sessions report `wedged` — the
+//! server itself keeps serving.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::service::proto::{
+    self, cache_json, err_reply, ok_reply, record_json, ErrorCode, Request, StimulusSpec, Verb,
+};
+use crate::service::session::SessionManager;
+use crate::util::json::{self, Json};
+
+/// Server configuration (from `rteaal serve` flags).
+pub struct ServeOpts {
+    /// On-disk design-cache directory; `None` = in-memory cache only.
+    pub cache_dir: Option<PathBuf>,
+    /// In-memory LRU capacity (designs).
+    pub cache_cap: usize,
+    /// Default per-request time budget.
+    pub timeout_ms: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { cache_dir: None, cache_cap: 8, timeout_ms: 2_000 }
+    }
+}
+
+/// The server: a session manager plus the request budget.
+pub struct Server {
+    mgr: SessionManager,
+    default_timeout: Duration,
+}
+
+impl Server {
+    pub fn new(opts: ServeOpts) -> Self {
+        Server {
+            mgr: SessionManager::new(opts.cache_dir, opts.cache_cap),
+            default_timeout: Duration::from_millis(opts.timeout_ms),
+        }
+    }
+
+    /// Handle one request line, producing exactly one reply line
+    /// (without trailing newline). Never panics on malformed input.
+    pub fn handle_line(&mut self, line: &str) -> String {
+        let req = match proto::parse_request(line) {
+            Ok(r) => r,
+            Err((id, code, msg)) => return err_reply(id, code, &msg),
+        };
+        let deadline = Instant::now()
+            + req.timeout_ms.map(Duration::from_millis).unwrap_or(self.default_timeout);
+        self.dispatch(&req, deadline)
+            .unwrap_or_else(|(code, msg)| err_reply(Some(req.id), code, &msg))
+    }
+
+    fn dispatch(
+        &mut self,
+        req: &Request,
+        deadline: Instant,
+    ) -> Result<String, (ErrorCode, String)> {
+        let id = req.id;
+        let fail = |msg: String| (proto::classify(&msg), msg);
+        match &req.verb {
+            Verb::Open(cfg) => {
+                let o = self.mgr.open(cfg).map_err(fail)?;
+                Ok(ok_reply(
+                    id,
+                    vec![
+                        ("session", Json::Int(o.session as i64)),
+                        ("cache", cache_json(&o.report)),
+                        ("host", Json::Int(o.host as i64)),
+                        ("lane0", Json::Int(o.lane0 as i64)),
+                    ],
+                ))
+            }
+            Verb::Submit { session, stimulus } => {
+                let queued = match stimulus {
+                    StimulusSpec::DesignCycles(n) => {
+                        self.mgr.submit_design(*session, *n).map_err(fail)?
+                    }
+                    StimulusSpec::Vectors(frames) => {
+                        self.mgr.submit_vectors(*session, frames.clone()).map_err(fail)?
+                    }
+                };
+                Ok(ok_reply(id, vec![("queued", Json::Int(queued as i64))]))
+            }
+            Verb::Poll { session, max_cycles } => {
+                let r = self.mgr.poll(*session, *max_cycles, deadline).map_err(fail)?;
+                if r.records.is_empty() && !r.done && Instant::now() >= deadline {
+                    return Err((
+                        ErrorCode::Timeout,
+                        "request budget expired before any cycle completed".into(),
+                    ));
+                }
+                let cycles = Json::Arr(r.records.iter().map(record_json).collect());
+                Ok(ok_reply(
+                    id,
+                    vec![
+                        ("cycles", cycles),
+                        ("cycle", Json::Int(r.cycle as i64)),
+                        ("done", Json::Bool(r.done)),
+                    ],
+                ))
+            }
+            Verb::Checkpoint { session, path } => {
+                let (bytes, cycle) = self.mgr.checkpoint(*session, path).map_err(fail)?;
+                Ok(ok_reply(
+                    id,
+                    vec![
+                        ("path", Json::Str(path.display().to_string())),
+                        ("bytes", Json::Int(bytes as i64)),
+                        ("cycle", Json::Int(cycle as i64)),
+                    ],
+                ))
+            }
+            Verb::Restore { path } => {
+                let (session, cycle) = self.mgr.restore(path).map_err(fail)?;
+                Ok(ok_reply(
+                    id,
+                    vec![
+                        ("session", Json::Int(session as i64)),
+                        ("cycle", Json::Int(cycle as i64)),
+                    ],
+                ))
+            }
+            Verb::Close { session } => {
+                self.mgr.close(*session).map_err(fail)?;
+                Ok(ok_reply(id, vec![("closed", Json::Int(*session as i64))]))
+            }
+            Verb::Stats => {
+                let c = &self.mgr.cache;
+                Ok(ok_reply(
+                    id,
+                    vec![
+                        (
+                            "cache",
+                            json::obj(vec![
+                                ("mem_hits", Json::Int(c.mem_hits as i64)),
+                                ("disk_hits", Json::Int(c.disk_hits as i64)),
+                                ("misses", Json::Int(c.misses as i64)),
+                                ("resident", Json::Int(c.len() as i64)),
+                            ]),
+                        ),
+                        ("hosts", Json::Int(self.mgr.host_count() as i64)),
+                        ("sessions", Json::Int(self.mgr.session_count() as i64)),
+                    ],
+                ))
+            }
+        }
+    }
+
+    /// Serve a request stream to completion (EOF ends the server).
+    pub fn serve<R: BufRead, W: Write>(&mut self, input: R, mut output: W) -> std::io::Result<()> {
+        for line in input.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = self.handle_line(&line);
+            output.write_all(reply.as_bytes())?;
+            output.write_all(b"\n")?;
+            output.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// `rteaal serve --stdio`: requests on stdin, replies on stdout.
+pub fn serve_stdio(opts: ServeOpts) -> std::io::Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    Server::new(opts).serve(stdin.lock(), stdout.lock())
+}
+
+/// `rteaal serve --socket PATH`: accept Unix-socket connections one at a
+/// time (sessions persist across connections — a client may open, drop
+/// the connection, reconnect, and keep polling the same session ids).
+pub fn serve_unix(path: &std::path::Path, opts: ServeOpts) -> std::io::Result<()> {
+    // a previous server's leftover socket file would make bind fail
+    let _ = std::fs::remove_file(path);
+    let listener = std::os::unix::net::UnixListener::bind(path)?;
+    let mut server = Server::new(opts);
+    for conn in listener.incoming() {
+        let conn = conn?;
+        let reader = BufReader::new(conn.try_clone()?);
+        // a dropped connection ends its serve loop, not the server
+        if let Err(e) = server.serve(reader, conn) {
+            eprintln!("rteaal serve: connection error: {e}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server() -> Server {
+        Server::new(ServeOpts::default())
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("rteaal_api_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn ok(reply: &str) -> Json {
+        let j = json::parse(reply).unwrap();
+        assert!(matches!(j.get("ok"), Some(Json::Bool(true))), "expected ok reply: {reply}");
+        j
+    }
+
+    fn err_code(reply: &str) -> String {
+        let j = json::parse(reply).unwrap();
+        assert!(matches!(j.get("ok"), Some(Json::Bool(false))), "expected error reply: {reply}");
+        j.req("error").unwrap().req_str("code").unwrap().to_string()
+    }
+
+    /// The worked transcript from the module docs, end to end against a
+    /// live server: open (miss) → open (hit, same host) → submit → poll
+    /// → checkpoint → restore → close.
+    #[test]
+    fn worked_transcript_round_trips() {
+        let dir = tmp_dir("transcript");
+        let mut s = server();
+        let r = ok(&s.handle_line(r#"{"id":1,"verb":"open","design":"fir8","lanes":8,"width":1}"#));
+        let cache = r.req("cache").unwrap();
+        assert!(matches!(cache.get("hit"), Some(Json::Bool(false))));
+        let r2 = ok(&s.handle_line(r#"{"id":2,"verb":"open","design":"fir8","lanes":8,"width":1}"#));
+        let cache2 = r2.req("cache").unwrap();
+        assert!(matches!(cache2.get("hit"), Some(Json::Bool(true))));
+        assert_eq!(cache2.req_str("source").unwrap(), "memory");
+        assert_eq!(r.req_u64("host").unwrap(), r2.req_u64("host").unwrap(), "packed");
+
+        ok(&s.handle_line(
+            r#"{"id":3,"verb":"submit","session":0,"stimulus":{"kind":"design","cycles":20}}"#,
+        ));
+        ok(&s.handle_line(
+            r#"{"id":4,"verb":"submit","session":1,"stimulus":{"kind":"design","cycles":20}}"#,
+        ));
+        let p = ok(&s.handle_line(r#"{"id":5,"verb":"poll","session":0}"#));
+        assert!(matches!(p.get("done"), Some(Json::Bool(true))));
+        assert_eq!(p.req_arr("cycles").unwrap().len(), 20);
+        assert_eq!(p.req_u64("cycle").unwrap(), 20);
+
+        let ckpt = dir.join("s0.rtal");
+        let c = ok(&s.handle_line(&format!(
+            r#"{{"id":6,"verb":"checkpoint","session":0,"path":"{}"}}"#,
+            ckpt.display()
+        )));
+        assert_eq!(c.req_u64("cycle").unwrap(), 20);
+        assert!(c.req_u64("bytes").unwrap() > 0);
+
+        let r = ok(&s.handle_line(&format!(
+            r#"{{"id":7,"verb":"restore","path":"{}"}}"#,
+            ckpt.display()
+        )));
+        let restored = r.req_u64("session").unwrap();
+        assert_eq!(r.req_u64("cycle").unwrap(), 20);
+
+        // the restored session continues bit-identically with the original
+        for sid in [0, restored] {
+            ok(&s.handle_line(&format!(
+                r#"{{"id":8,"verb":"submit","session":{sid},"stimulus":{{"kind":"design","cycles":5}}}}"#,
+            )));
+        }
+        // session 1 must also advance for host 0 to pump
+        ok(&s.handle_line(
+            r#"{"id":9,"verb":"submit","session":1,"stimulus":{"kind":"design","cycles":5}}"#,
+        ));
+        let a = ok(&s.handle_line(r#"{"id":10,"verb":"poll","session":0}"#));
+        let b = ok(&s.handle_line(&format!(r#"{{"id":11,"verb":"poll","session":{restored}}}"#)));
+        assert_eq!(
+            a.req_arr("cycles").unwrap(),
+            b.req_arr("cycles").unwrap(),
+            "restored session diverged from the original"
+        );
+
+        let st = ok(&s.handle_line(r#"{"id":12,"verb":"stats"}"#));
+        assert!(st.req_u64("sessions").unwrap() >= 3);
+        ok(&s.handle_line(r#"{"id":13,"verb":"close","session":0}"#));
+        let e = s.handle_line(r#"{"id":14,"verb":"poll","session":0}"#);
+        assert_eq!(err_code(&e), "unknown-session");
+    }
+
+    #[test]
+    fn structured_errors_for_bad_requests() {
+        let mut s = server();
+        assert_eq!(err_code(&s.handle_line("{]")), "bad-request");
+        assert_eq!(err_code(&s.handle_line(r#"{"id":1,"verb":"warp"}"#)), "unknown-verb");
+        assert_eq!(
+            err_code(&s.handle_line(r#"{"id":2,"verb":"open","design":"no_such"}"#)),
+            "unknown-design"
+        );
+        assert_eq!(
+            err_code(&s.handle_line(r#"{"id":3,"verb":"open","design":"fir8","kernel":"QQ"}"#)),
+            "bad-config"
+        );
+        assert_eq!(
+            err_code(&s.handle_line(
+                r#"{"id":4,"verb":"open","design":"fir8","lanes":2,"width":5}"#
+            )),
+            "bad-config"
+        );
+        assert_eq!(err_code(&s.handle_line(r#"{"id":5,"verb":"close","session":99}"#)), "unknown-session");
+        assert_eq!(
+            err_code(&s.handle_line(r#"{"id":6,"verb":"restore","path":"/nonexistent/x.rtal"}"#)),
+            "io"
+        );
+    }
+
+    /// A zero budget with queued work times out (code `timeout`) instead
+    /// of blocking; a later poll with budget completes the work.
+    #[test]
+    fn zero_budget_poll_times_out_cleanly() {
+        let mut s = server();
+        ok(&s.handle_line(r#"{"id":1,"verb":"open","design":"counter"}"#));
+        ok(&s.handle_line(
+            r#"{"id":2,"verb":"submit","session":0,"stimulus":{"kind":"design","cycles":50}}"#,
+        ));
+        let e = s.handle_line(r#"{"id":3,"verb":"poll","session":0,"timeout_ms":0}"#);
+        assert_eq!(err_code(&e), "timeout");
+        let p = ok(&s.handle_line(r#"{"id":4,"verb":"poll","session":0}"#));
+        assert!(matches!(p.get("done"), Some(Json::Bool(true))));
+        assert_eq!(p.req_arr("cycles").unwrap().len(), 50);
+    }
+}

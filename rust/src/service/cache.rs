@@ -1,0 +1,613 @@
+//! Content-addressed design cache: fingerprint the input graph plus the
+//! compile/partitioner configuration, persist the compiled artifacts, and
+//! answer repeat opens with a hash lookup instead of a rebuild.
+//!
+//! The expensive parts of `open` are (a) the graph passes + lowering +
+//! OIM construction ([`compile_design`]) and (b) the multilevel min-cut
+//! search inside [`partition_ir`]. Both depend only on the input graph
+//! and the `(fuse, partitioner, parts)` configuration, so their outputs
+//! are cached under a 128-bit content key:
+//!
+//! * **memory hit** — an `Arc` clone out of the LRU front;
+//! * **disk hit** — JSON loads of the OIM / IR sidecar / group
+//!   dependency graph plus a [`FixedOwners`] replay of the stored
+//!   ownership map (cheap cone walks, no min-cut search);
+//! * **miss** — full compile + partition, then persist for next time.
+//!
+//! See the module docs of [`crate::service`] for the on-disk layout.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::activity::GroupDepGraph;
+use crate::coordinator::compile::{compile_design, CompileOpts};
+use crate::designs::Design;
+use crate::graph::ops::mask;
+use crate::graph::Graph;
+use crate::partition::{partition_ir, partition_ir_with, FixedOwners, PartitionerKind, Partitioning};
+use crate::tensor::ir::LayerIr;
+use crate::tensor::oim::Oim;
+use crate::util::json::{arr_str, arr_u32, arr_u64, obj, parse, Json};
+
+/// Bumped whenever the persisted schema changes; part of the fingerprint,
+/// so old entries simply miss instead of mis-parsing.
+pub const CACHE_FORMAT_VERSION: u64 = 1;
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Two independent FNV-1a streams concatenated to a 128-bit key. The
+/// second stream perturbs both the offset basis and each input byte, so
+/// the halves do not cancel; 128 bits puts accidental collisions between
+/// distinct designs out of practical reach.
+struct Fnv2 {
+    a: u64,
+    b: u64,
+}
+
+impl Fnv2 {
+    fn new() -> Self {
+        Fnv2 { a: FNV_BASIS, b: FNV_BASIS ^ 0x9e37_79b9_7f4a_7c15 }
+    }
+
+    #[inline]
+    fn byte(&mut self, x: u8) {
+        self.a = (self.a ^ x as u64).wrapping_mul(FNV_PRIME);
+        self.b = (self.b ^ (x ^ 0x5a) as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    fn word(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    /// Length-prefixed, so `("ab","c")` and `("a","bc")` hash apart.
+    fn text(&mut self, s: &str) {
+        self.word(s.len() as u64);
+        for b in s.bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.a, self.b)
+    }
+}
+
+/// Content key for one (input graph, compile, partitioning) combination.
+/// Hashes the *un-optimized* input graph — node kinds (with their
+/// payloads), argument lists, widths and names (names survive into the
+/// cached IR sidecar, so they address content too) — plus the knobs that
+/// change the compiled artifacts.
+pub fn design_key(graph: &Graph, fuse: bool, partitioner: PartitionerKind, parts: usize) -> String {
+    let mut h = Fnv2::new();
+    h.word(CACHE_FORMAT_VERSION);
+    h.text(&graph.name);
+    h.word(graph.nodes.len() as u64);
+    for n in &graph.nodes {
+        // the Debug form carries the variant and every payload
+        // (Const value, port index, Shl/Bits immediates, ...)
+        h.text(&format!("{:?}", n.kind));
+        h.byte(n.width);
+        h.word(n.args.len() as u64);
+        for &a in &n.args {
+            h.word(a as u64);
+        }
+        match &n.name {
+            Some(s) => h.text(s),
+            None => h.byte(0xFF),
+        }
+    }
+    h.word(graph.inputs.len() as u64);
+    for p in &graph.inputs {
+        h.text(&p.name);
+        h.byte(p.width);
+        h.word(p.node as u64);
+    }
+    h.word(graph.outputs.len() as u64);
+    for (name, node) in &graph.outputs {
+        h.text(name);
+        h.word(*node as u64);
+    }
+    h.word(graph.regs.len() as u64);
+    for r in &graph.regs {
+        h.text(&r.name);
+        h.word(r.node as u64);
+        h.word(r.next as u64);
+        h.word(r.init);
+        h.byte(r.width);
+    }
+    h.byte(fuse as u8);
+    h.text(partitioner.name());
+    h.word(parts as u64);
+    h.hex()
+}
+
+/// One register of the compiled design: the name clients (and
+/// `lane_init`) use, the slot id it lives in, and its declared width.
+#[derive(Clone, Debug)]
+pub struct RegInfo {
+    pub name: String,
+    pub slot: u32,
+    pub width: u8,
+}
+
+/// The compiled, partitioned artifacts for one design key — everything a
+/// host simulator needs, with no graph pass, OIM build, GDG build or
+/// min-cut search left to run.
+pub struct CachedDesign {
+    pub key: String,
+    pub design_name: String,
+    pub fuse: bool,
+    pub parts: usize,
+    pub partitioner: PartitionerKind,
+    pub ir: LayerIr,
+    pub oim: Oim,
+    pub gdg: GroupDepGraph,
+    /// Final owner per entry of `ir.commits` (see
+    /// [`Partitioning::owner_of_reg`]) — replayed through
+    /// [`FixedOwners`] on every host build.
+    pub owner_of_reg: Vec<usize>,
+    /// Register name → slot map of the compiled graph (node ids are slot
+    /// ids), for `lane_init` resolution and snapshot labeling.
+    pub regs: Vec<RegInfo>,
+    /// Wall time of the original cold compile + partition, as persisted —
+    /// the denominator of the warm-open speedup this cache exists for.
+    pub cold_compile: Duration,
+}
+
+impl CachedDesign {
+    /// Rebuild the [`Partitioning`] by replaying the cached ownership map
+    /// (cone growth + RUM table only; no search).
+    pub fn partitioning(&self) -> Partitioning {
+        partition_ir_with(&self.ir, self.parts, &FixedOwners(self.owner_of_reg.clone()))
+    }
+
+    /// [`Design::resolved_lane_init`] against the cached register map
+    /// (no [`Graph`] needed — disk hits do not carry one).
+    pub fn resolved_lane_init(
+        &self,
+        design: &Design,
+        lanes: usize,
+    ) -> Result<Vec<(u32, usize, u64)>, String> {
+        let mut pokes = Vec::new();
+        for (name, values) in &design.lane_init {
+            if values.is_empty() {
+                return Err(format!("lane_init for '{name}' has no values"));
+            }
+            let reg = self
+                .regs
+                .iter()
+                .find(|r| r.name == *name)
+                .ok_or_else(|| format!("lane_init: no register named '{name}' in {}", self.design_name))?;
+            let m = mask(reg.width);
+            for l in 0..lanes {
+                pokes.push((reg.slot, l, values[l % values.len()] & m));
+            }
+        }
+        Ok(pokes)
+    }
+}
+
+/// Where an `open` was answered from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpenSource {
+    Memory,
+    Disk,
+    Compiled,
+}
+
+impl OpenSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpenSource::Memory => "memory",
+            OpenSource::Disk => "disk",
+            OpenSource::Compiled => "compiled",
+        }
+    }
+}
+
+/// What one `open_design` call did, for the client-visible reply (the CI
+/// smoke job asserts `hit` and compares `open_time` against
+/// `cold_compile`).
+#[derive(Clone, Debug)]
+pub struct OpenReport {
+    pub key: String,
+    pub hit: bool,
+    pub source: OpenSource,
+    /// Wall time of this open (lookup / load / compile, whichever ran).
+    pub open_time: Duration,
+    /// Cold compile + partition time recorded when the entry was built.
+    pub cold_compile: Duration,
+}
+
+/// The cache itself: an on-disk store (optional — `dir: None` is a pure
+/// in-memory cache) fronted by an LRU of `Arc`-shared entries.
+pub struct DesignCache {
+    dir: Option<PathBuf>,
+    cap: usize,
+    mem: HashMap<String, Arc<CachedDesign>>,
+    /// LRU order over `mem` keys, most recently used last.
+    order: Vec<String>,
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+}
+
+impl DesignCache {
+    /// `dir`: persistent store root (created on first write); `cap`:
+    /// max designs held in memory (≥ 1).
+    pub fn new(dir: Option<PathBuf>, cap: usize) -> Self {
+        DesignCache {
+            dir,
+            cap: cap.max(1),
+            mem: HashMap::new(),
+            order: Vec::new(),
+            mem_hits: 0,
+            disk_hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty()
+    }
+
+    /// Open (compile-or-fetch) a design under a configuration. Returns
+    /// the shared artifacts and a report of where they came from.
+    pub fn open_design(
+        &mut self,
+        design: &Design,
+        fuse: bool,
+        parts: usize,
+        partitioner: PartitionerKind,
+    ) -> Result<(Arc<CachedDesign>, OpenReport), String> {
+        if parts == 0 {
+            return Err("parts must be >= 1".into());
+        }
+        let key = design_key(&design.graph, fuse, partitioner, parts);
+        let t0 = Instant::now();
+
+        if let Some(hit) = self.mem.get(&key).cloned() {
+            self.touch(&key);
+            self.mem_hits += 1;
+            let report = OpenReport {
+                key,
+                hit: true,
+                source: OpenSource::Memory,
+                open_time: t0.elapsed(),
+                cold_compile: hit.cold_compile,
+            };
+            return Ok((hit, report));
+        }
+
+        if self.dir.is_some() {
+            // a corrupt or version-skewed disk entry is not an error —
+            // fall through and rebuild over it
+            if let Ok(loaded) = self.load_disk(&key, design, fuse, parts, partitioner) {
+                let entry = Arc::new(loaded);
+                self.insert(key.clone(), entry.clone());
+                self.disk_hits += 1;
+                let report = OpenReport {
+                    key,
+                    hit: true,
+                    source: OpenSource::Disk,
+                    open_time: t0.elapsed(),
+                    cold_compile: entry.cold_compile,
+                };
+                return Ok((entry, report));
+            }
+        }
+
+        // miss: full compile + partition, persist, then serve
+        let c = compile_design(design, CompileOpts { fuse });
+        let parting = partition_ir(&c.ir, parts, partitioner);
+        let gdg = GroupDepGraph::build(&c.ir, &c.oim);
+        let regs = c
+            .graph
+            .regs
+            .iter()
+            .map(|r| RegInfo { name: r.name.clone(), slot: r.node, width: r.width })
+            .collect();
+        let cold = t0.elapsed();
+        let entry = Arc::new(CachedDesign {
+            key: key.clone(),
+            design_name: design.name.clone(),
+            fuse,
+            parts,
+            partitioner,
+            ir: c.ir,
+            oim: c.oim,
+            gdg,
+            owner_of_reg: parting.owner_of_reg,
+            regs,
+            cold_compile: cold,
+        });
+        if let Err(e) = self.persist(&entry) {
+            // persistence is best-effort; the entry still serves from memory
+            eprintln!("rteaal serve: cache persist failed for {key}: {e}");
+        }
+        self.insert(key.clone(), entry.clone());
+        self.misses += 1;
+        let report = OpenReport {
+            key,
+            hit: false,
+            source: OpenSource::Compiled,
+            open_time: t0.elapsed(),
+            cold_compile: cold,
+        };
+        Ok((entry, report))
+    }
+
+    fn touch(&mut self, key: &str) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(pos);
+            self.order.push(k);
+        }
+    }
+
+    fn insert(&mut self, key: String, entry: Arc<CachedDesign>) {
+        if self.mem.insert(key.clone(), entry).is_none() {
+            self.order.push(key);
+        } else {
+            self.touch(&key);
+        }
+        while self.mem.len() > self.cap {
+            let victim = self.order.remove(0);
+            self.mem.remove(&victim);
+        }
+    }
+
+    fn entry_dir(&self, key: &str) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(key))
+    }
+
+    fn persist(&self, e: &CachedDesign) -> Result<(), String> {
+        let Some(final_dir) = self.entry_dir(&e.key) else { return Ok(()) };
+        let parent = final_dir.parent().expect("entry dir has a parent");
+        std::fs::create_dir_all(parent).map_err(|er| er.to_string())?;
+        // stage into <key>.tmp, then rename: a killed server never leaves
+        // a half-written entry under the real key
+        let tmp = parent.join(format!("{}.tmp", e.key));
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp).map_err(|er| er.to_string())?;
+        let write = |name: &str, j: Json| -> Result<(), String> {
+            std::fs::write(tmp.join(name), j.to_string()).map_err(|er| er.to_string())
+        };
+        let meta = obj(vec![
+            ("version", Json::Int(CACHE_FORMAT_VERSION as i64)),
+            ("key", Json::Str(e.key.clone())),
+            ("design", Json::Str(e.design_name.clone())),
+            ("fuse", Json::Bool(e.fuse)),
+            ("parts", Json::Int(e.parts as i64)),
+            ("partitioner", Json::Str(e.partitioner.name().to_string())),
+            ("cold_compile_ns", Json::Int(e.cold_compile.as_nanos() as i64)),
+            (
+                "owner_of_reg",
+                arr_u64(&e.owner_of_reg.iter().map(|&p| p as u64).collect::<Vec<_>>()),
+            ),
+            ("reg_names", arr_str(&e.regs.iter().map(|r| r.name.clone()).collect::<Vec<_>>())),
+            ("reg_slots", arr_u32(&e.regs.iter().map(|r| r.slot).collect::<Vec<_>>())),
+            (
+                "reg_widths",
+                arr_u64(&e.regs.iter().map(|r| r.width as u64).collect::<Vec<_>>()),
+            ),
+        ]);
+        write("meta.json", meta)?;
+        write("oim.json", e.oim.to_json())?;
+        write("ir.json", e.ir.to_json())?;
+        write("gdg.json", e.gdg.to_json())?;
+        let _ = std::fs::remove_dir_all(&final_dir);
+        std::fs::rename(&tmp, &final_dir).map_err(|er| er.to_string())
+    }
+
+    fn load_disk(
+        &self,
+        key: &str,
+        design: &Design,
+        fuse: bool,
+        parts: usize,
+        partitioner: PartitionerKind,
+    ) -> Result<CachedDesign, String> {
+        let dir = self.entry_dir(key).ok_or("no cache dir")?;
+        let read = |name: &str| -> Result<Json, String> {
+            let text = std::fs::read_to_string(dir.join(name))
+                .map_err(|e| format!("{name}: {e}"))?;
+            parse(&text).map_err(|e| format!("{name}: {e}"))
+        };
+        let meta = read("meta.json")?;
+        let schema = |e: crate::util::json::JsonError| format!("meta.json: {e}");
+        if meta.req_u64("version").map_err(schema)? != CACHE_FORMAT_VERSION {
+            return Err("cache format version skew".into());
+        }
+        // paranoia against a (truncated-key) collision or a hand-edited
+        // store: the stored configuration must echo the request
+        let stored_fuse = match meta.get("fuse") {
+            Some(Json::Bool(b)) => Some(*b),
+            _ => None,
+        };
+        if meta.req_str("design").map_err(schema)? != design.name
+            || meta.req_usize("parts").map_err(schema)? != parts
+            || meta.req_str("partitioner").map_err(schema)? != partitioner.name()
+            || stored_fuse != Some(fuse)
+        {
+            return Err("cache entry does not match requested configuration".into());
+        }
+        let cold_compile = Duration::from_nanos(meta.req_u64("cold_compile_ns").map_err(schema)?);
+        let owner_of_reg: Vec<usize> = meta
+            .req_u64_vec("owner_of_reg")
+            .map_err(schema)?
+            .into_iter()
+            .map(|p| p as usize)
+            .collect();
+        let reg_names = meta.req_arr("reg_names").map_err(schema)?;
+        let reg_slots = meta.req_u32_vec("reg_slots").map_err(schema)?;
+        let reg_widths = meta.req_u64_vec("reg_widths").map_err(schema)?;
+        if reg_names.len() != reg_slots.len() || reg_names.len() != reg_widths.len() {
+            return Err("meta.json: register arrays disagree on length".into());
+        }
+        let mut regs = Vec::with_capacity(reg_names.len());
+        for i in 0..reg_names.len() {
+            let name = reg_names[i]
+                .as_str()
+                .ok_or("meta.json: reg_names holds a non-string")?
+                .to_string();
+            regs.push(RegInfo { name, slot: reg_slots[i], width: reg_widths[i] as u8 });
+        }
+        let oim = Oim::from_json(&read("oim.json")?).map_err(|e| format!("oim.json: {e}"))?;
+        let ir = LayerIr::from_json_with_oim(&read("ir.json")?, &oim)
+            .map_err(|e| format!("ir.json: {e}"))?;
+        let gdg = GroupDepGraph::from_json(&read("gdg.json")?).map_err(|e| format!("gdg.json: {e}"))?;
+        if owner_of_reg.len() != ir.commits.len() {
+            return Err("meta.json: ownership map does not cover the commits".into());
+        }
+        if owner_of_reg.iter().any(|&p| p >= parts) {
+            return Err("meta.json: ownership map exceeds partition count".into());
+        }
+        Ok(CachedDesign {
+            key: key.to_string(),
+            design_name: design.name.clone(),
+            fuse,
+            parts,
+            partitioner,
+            ir,
+            oim,
+            gdg,
+            owner_of_reg,
+            regs,
+            cold_compile,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::designs::catalog;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rteaal_cache_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// The fingerprint separates designs and configurations but is stable
+    /// for a fixed input.
+    #[test]
+    fn design_key_is_stable_and_config_sensitive() {
+        let a = catalog("fir8").unwrap();
+        let b = catalog("alu32").unwrap();
+        let k1 = design_key(&a.graph, true, PartitionerKind::MinCut, 2);
+        assert_eq!(k1, design_key(&a.graph, true, PartitionerKind::MinCut, 2));
+        assert_eq!(k1.len(), 32, "128-bit hex key");
+        assert_ne!(k1, design_key(&b.graph, true, PartitionerKind::MinCut, 2));
+        assert_ne!(k1, design_key(&a.graph, false, PartitionerKind::MinCut, 2));
+        assert_ne!(k1, design_key(&a.graph, true, PartitionerKind::RoundRobin, 2));
+        assert_ne!(k1, design_key(&a.graph, true, PartitionerKind::MinCut, 4));
+    }
+
+    /// Memory → disk → miss precedence, with hit/miss accounting; a
+    /// second cache instance over the same directory loads from disk and
+    /// its artifacts drive a bit-identical simulation.
+    #[test]
+    fn open_design_hits_memory_then_disk_and_replays_identically() {
+        use crate::coordinator::parallel::BatchParallelSim;
+        use crate::kernels::KernelConfig;
+
+        let d = catalog("fir8").unwrap();
+        let dir = tmp_dir("roundtrip");
+        let mut cache = DesignCache::new(Some(dir.clone()), 4);
+        let (cold, r0) = cache.open_design(&d, true, 2, PartitionerKind::MinCut).unwrap();
+        assert!(!r0.hit);
+        assert_eq!(r0.source, OpenSource::Compiled);
+        let (_, r1) = cache.open_design(&d, true, 2, PartitionerKind::MinCut).unwrap();
+        assert!(r1.hit);
+        assert_eq!(r1.source, OpenSource::Memory);
+        assert_eq!(r1.key, r0.key);
+        assert_eq!((cache.mem_hits, cache.disk_hits, cache.misses), (1, 0, 1));
+
+        // fresh front over the same store: must come back from disk
+        let mut cache2 = DesignCache::new(Some(dir.clone()), 4);
+        let (warm, r2) = cache2.open_design(&d, true, 2, PartitionerKind::MinCut).unwrap();
+        assert!(r2.hit);
+        assert_eq!(r2.source, OpenSource::Disk);
+        assert_eq!(warm.cold_compile, cold.cold_compile);
+        assert_eq!(warm.owner_of_reg, cold.owner_of_reg);
+        assert_eq!(warm.regs.len(), cold.regs.len());
+
+        // the disk-loaded artifacts simulate bit-identically to the
+        // freshly compiled ones
+        let lanes = 4;
+        let mut sc = BatchParallelSim::with_partitioning(
+            &cold.ir,
+            KernelConfig::PSU,
+            cold.partitioning(),
+            lanes,
+            false,
+            cold.partitioner,
+        );
+        let mut sw = BatchParallelSim::with_partitioning(
+            &warm.ir,
+            KernelConfig::PSU,
+            warm.partitioning(),
+            lanes,
+            false,
+            warm.partitioner,
+        );
+        let mut stim = d.make_lane_stimulus(lanes);
+        let mut stim2 = d.make_lane_stimulus(lanes);
+        for cyc in 0..64 {
+            sc.step(&stim(cyc));
+            sw.step(&stim2(cyc));
+            for l in 0..lanes {
+                assert_eq!(sc.lane_outputs(l), sw.lane_outputs(l), "cycle {cyc} lane {l}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A truncated disk entry is rebuilt, not served or panicked on.
+    #[test]
+    fn corrupt_disk_entry_falls_back_to_recompile() {
+        let d = catalog("counter").unwrap();
+        let dir = tmp_dir("corrupt");
+        let mut cache = DesignCache::new(Some(dir.clone()), 4);
+        let (_, r0) = cache.open_design(&d, true, 1, PartitionerKind::MinCut).unwrap();
+        // clobber the OIM payload on disk
+        std::fs::write(dir.join(&r0.key).join("oim.json"), "{\"truncated\":").unwrap();
+        let mut cache2 = DesignCache::new(Some(dir.clone()), 4);
+        let (_, r1) = cache2.open_design(&d, true, 1, PartitionerKind::MinCut).unwrap();
+        assert!(!r1.hit, "corrupt entry must rebuild");
+        assert_eq!(r1.source, OpenSource::Compiled);
+        // ...and the rebuild repaired the store
+        let mut cache3 = DesignCache::new(Some(dir.clone()), 4);
+        let (_, r2) = cache3.open_design(&d, true, 1, PartitionerKind::MinCut).unwrap();
+        assert_eq!(r2.source, OpenSource::Disk);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The LRU cap bounds the in-memory set; evicted entries come back
+    /// from disk.
+    #[test]
+    fn lru_evicts_beyond_cap() {
+        let dir = tmp_dir("lru");
+        let mut cache = DesignCache::new(Some(dir.clone()), 2);
+        for name in ["counter", "alu32", "fir8"] {
+            let d = catalog(name).unwrap();
+            cache.open_design(&d, true, 1, PartitionerKind::MinCut).unwrap();
+        }
+        assert_eq!(cache.len(), 2, "cap respected");
+        // counter was evicted; reopening is a disk hit, not a rebuild
+        let d = catalog("counter").unwrap();
+        let (_, r) = cache.open_design(&d, true, 1, PartitionerKind::MinCut).unwrap();
+        assert_eq!(r.source, OpenSource::Disk);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,119 @@
+//! Simulation service: `rteaal serve` — a long-running simulation daemon
+//! with a content-addressed design cache, concurrent lane-packed
+//! sessions, and checkpoint/restore.
+//!
+//! The batch executors amortize one OIM walk over `B` stimulus lanes;
+//! this module amortizes one *compiled design* over many client
+//! sessions, and one *process* over many designs:
+//!
+//! * [`cache`] — the *content-addressed design cache*. Opening a design
+//!   fingerprints the input graph together with the compile and
+//!   partitioner configuration; compiled artifacts (OIM, IR sidecar,
+//!   group dependency graph, register-ownership map) are persisted under
+//!   that key and fronted by an in-memory LRU, so a repeat open is a
+//!   hash lookup plus (at worst) a JSON load — never a re-compile and
+//!   never a re-run of the min-cut search.
+//! * [`session`] — the *session manager*. Each session owns a slice of
+//!   lanes on a shared `P×B` host simulator; small same-design sessions
+//!   are packed onto one B-lane kernel and isolated by lane masks, so
+//!   `K` sessions cost one OIM walk, not `K`. Hosts run on the existing
+//!   persistent worker pool; no per-session threads are spawned.
+//! * [`checkpoint`] — *versioned binary snapshots*. A session (or a
+//!   whole host) snapshots its slot files, activity-tracker masks and
+//!   cycle counters to disk and restores bit-identically mid-run;
+//!   corrupt or truncated snapshots are rejected with a structured
+//!   error, never a panic.
+//! * [`proto`] / [`api`] — the *job API*: newline-delimited JSON over
+//!   stdio or a Unix socket, with per-request time budgets and
+//!   structured error replies so a wedged session degrades gracefully
+//!   instead of hanging the server.
+//!
+//! # Request/response schema
+//!
+//! One JSON object per line in both directions. Every request carries a
+//! client-chosen `id`, echoed on the reply. Replies are
+//! `{"id":N,"ok":true,...}` or
+//! `{"id":N,"ok":false,"error":{"code":"...","message":"..."}}`.
+//!
+//! | verb         | request fields                                              | reply fields |
+//! |--------------|-------------------------------------------------------------|--------------|
+//! | `open`       | `design`; optional `kernel` (default `PSU`), `parts` (1), `lanes` (1, the host width B), `width` (1, lanes for *this* session), `sparse` (false), `fuse` (true) | `session`, `cache` `{key, hit, source, open_ms, cold_compile_ms}`, `host`, `lane0` |
+//! | `submit`     | `session`; stimulus: `{"kind":"design","cycles":N}` or `{"kind":"vectors","vectors":[[...],...]}` (one inner array per cycle, `inputs × width` lane-major words) | `queued` (cycles now queued) |
+//! | `poll`       | `session`; optional `max_cycles`                            | `cycles` (per-cycle output records drained), `cycle` (session cycle count), `done` |
+//! | `checkpoint` | `session`, `path`                                           | `path`, `bytes`, `cycle` |
+//! | `restore`    | `path`; optional `design` override check                    | `session` (a **new** session), `cycle` |
+//! | `close`      | `session`                                                   | `closed` |
+//! | `stats`      | —                                                           | cache hit/miss counters, host and session counts |
+//!
+//! Error codes: `bad-request` (malformed JSON or fields), `unknown-verb`,
+//! `unknown-design`, `unknown-session`, `bad-config` (lane overflow,
+//! unsupported kernel), `snapshot` (corrupt/unreadable checkpoint), `io`,
+//! `timeout` (per-request budget exceeded), `wedged` (the session's host
+//! panicked; the session is failed but the server keeps running).
+//!
+//! # Worked transcript
+//!
+//! ```text
+//! → {"id":1,"verb":"open","design":"fir8","kernel":"PSU","lanes":8}
+//! ← {"id":1,"ok":true,"session":0,"cache":{"key":"0f3a...","hit":false,"source":"compiled","open_ms":412.0,"cold_compile_ms":412.0},"host":0,"lane0":0}
+//! → {"id":2,"verb":"open","design":"fir8","kernel":"PSU","lanes":8}
+//! ← {"id":2,"ok":true,"session":1,"cache":{"key":"0f3a...","hit":true,"source":"memory","open_ms":0.1,...},"host":0,"lane0":1}
+//! → {"id":3,"verb":"submit","session":0,"stimulus":{"kind":"design","cycles":100}}
+//! ← {"id":3,"ok":true,"queued":100}
+//! → {"id":4,"verb":"poll","session":0}
+//! ← {"id":4,"ok":true,"cycle":100,"done":true,"cycles":[{"cycle":1,"out":{"y":"0x2a"}},...]}
+//! → {"id":5,"verb":"checkpoint","session":0,"path":"/tmp/s0.rtal"}
+//! ← {"id":5,"ok":true,"path":"/tmp/s0.rtal","bytes":1832,"cycle":100}
+//! → {"id":6,"verb":"restore","path":"/tmp/s0.rtal"}
+//! ← {"id":6,"ok":true,"session":2,"cycle":100}
+//! → {"id":7,"verb":"close","session":0}
+//! ← {"id":7,"ok":true,"closed":0}
+//! ```
+//!
+//! # Cache directory layout
+//!
+//! ```text
+//! <cache-dir>/<key>/          key = 128-bit FNV-1a fingerprint (hex) of
+//!                             the input graph + fuse + partitioner + parts
+//!   meta.json                 format version, design name, config echo,
+//!                             cold compile time, register name→slot map,
+//!                             the register-ownership map (replayed through
+//!                             FixedOwners — no min-cut search on a hit)
+//!   oim.json                  the OIM tensors (format B; C is re-derived)
+//!   ir.json                   LayerIr sidecar (ports, commits, init,
+//!                             names/widths — everything the OIM lacks)
+//!   gdg.json                  the group dependency graph, CSR indexes
+//!                             included (no rebuild pass on load)
+//! ```
+//!
+//! Writes are staged into `<key>.tmp` and renamed into place, so a
+//! killed server never leaves a half-written entry under the real key.
+//!
+//! # Session → lane packing rules
+//!
+//! * A host is one [`BatchParallelSim`](crate::coordinator::parallel::BatchParallelSim)
+//!   (`P` partitions × `B` lanes on the persistent worker pool; `P = 1`
+//!   covers unpartitioned designs).
+//! * A new session joins an existing host iff it matches the host's
+//!   **signature** — (cache key, kernel config, parts, B, sparse) — and
+//!   the host has `width` contiguous free lanes. Otherwise a new host is
+//!   built (from the cached artifacts; no recompilation either way).
+//! * Sessions are isolated by construction: lanes never interact inside
+//!   a kernel, a session's stimulus is written only to its own lanes,
+//!   and unattached lanes are driven with all-zero inputs.
+//! * A session driven by the *design* stimulus reproduces `rteaal sim`
+//!   exactly: slice lane `i` is driven by `make_stimulus_for_lane(i)`,
+//!   so a width-1 session matches a scalar run and a width-B session
+//!   matches `rteaal sim --lanes B`, bit for bit.
+//! * Hosts advance **bulk-synchronously**: one pump steps
+//!   `min(queued cycles over all attached sessions)` (bounded by the
+//!   per-request budget and output-buffer backpressure). A session with
+//!   an empty stimulus queue therefore stalls its host-mates — submit
+//!   stimulus in comparable batches, or open with a dedicated host
+//!   (pick a distinct `lanes` value) for latency-sensitive work.
+
+pub mod api;
+pub mod cache;
+pub mod checkpoint;
+pub mod proto;
+pub mod session;

@@ -1,0 +1,354 @@
+//! Wire protocol for `rteaal serve`: newline-delimited JSON requests and
+//! replies (schema in the [module docs](crate::service)).
+//!
+//! This module is pure data: parse a request line into a typed
+//! [`Request`], build reply lines from typed results. The I/O loop and
+//! the dispatch live in [`api`](crate::service::api).
+//!
+//! Register and output values are encoded as `"0x…"` hex strings in
+//! replies (the custom JSON layer's integers are `i64`, and slot values
+//! are full `u64` words); requests may spell stimulus words either way.
+
+use std::path::PathBuf;
+
+use crate::kernels::KernelConfig;
+use crate::partition::PartitionerKind;
+use crate::service::cache::OpenReport;
+use crate::service::session::{CycleRecord, SessionConfig};
+use crate::util::json::{self, Json};
+
+/// Structured error category, reported as `error.code` on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadRequest,
+    UnknownVerb,
+    UnknownDesign,
+    UnknownSession,
+    BadConfig,
+    Snapshot,
+    Io,
+    Timeout,
+    Wedged,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad-request",
+            ErrorCode::UnknownVerb => "unknown-verb",
+            ErrorCode::UnknownDesign => "unknown-design",
+            ErrorCode::UnknownSession => "unknown-session",
+            ErrorCode::BadConfig => "bad-config",
+            ErrorCode::Snapshot => "snapshot",
+            ErrorCode::Io => "io",
+            ErrorCode::Timeout => "timeout",
+            ErrorCode::Wedged => "wedged",
+        }
+    }
+}
+
+/// Classify a session-manager error string into a wire code. The manager
+/// reports errors as prose; the stable part of the contract is the code.
+pub fn classify(msg: &str) -> ErrorCode {
+    if msg.contains("unknown design") {
+        ErrorCode::UnknownDesign
+    } else if msg.contains("unknown session") {
+        ErrorCode::UnknownSession
+    } else if msg.contains("wedged") || msg.contains("is failed") {
+        ErrorCode::Wedged
+    } else if msg.contains("snapshot") || msg.contains("Corrupt") {
+        ErrorCode::Snapshot
+    } else if msg.contains("No such file") || msg.contains("o such file") || msg.contains("(os error") {
+        ErrorCode::Io
+    } else {
+        ErrorCode::BadConfig
+    }
+}
+
+/// Stimulus payload of a `submit`.
+#[derive(Debug)]
+pub enum StimulusSpec {
+    /// Replay `cycles` of the design's canonical stream.
+    DesignCycles(u64),
+    /// Explicit frames, one inner vec per cycle (`inputs × width` words).
+    Vectors(Vec<Vec<u64>>),
+}
+
+/// A parsed request.
+#[derive(Debug)]
+pub enum Verb {
+    Open(SessionConfig),
+    Submit { session: u64, stimulus: StimulusSpec },
+    Poll { session: u64, max_cycles: usize },
+    Checkpoint { session: u64, path: PathBuf },
+    Restore { path: PathBuf },
+    Close { session: u64 },
+    Stats,
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub verb: Verb,
+    /// Per-request time budget override (`timeout_ms` field).
+    pub timeout_ms: Option<u64>,
+}
+
+/// A parse failure, carrying the request id when one was readable (so
+/// the error reply can still be correlated).
+pub type ParseError = (Option<u64>, ErrorCode, String);
+
+fn bad(id: Option<u64>, msg: impl Into<String>) -> ParseError {
+    (id, ErrorCode::BadRequest, msg.into())
+}
+
+/// Accept a stimulus word as an integer or a `"0x…"` hex string.
+fn word(j: &Json) -> Option<u64> {
+    match j {
+        Json::Int(i) => u64::try_from(*i).ok(),
+        Json::Str(s) => {
+            let h = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X"))?;
+            u64::from_str_radix(h, 16).ok()
+        }
+        _ => None,
+    }
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, ParseError> {
+    let j = json::parse(line).map_err(|e| bad(None, format!("malformed JSON: {e}")))?;
+    let id = match j.get("id").and_then(Json::as_u64) {
+        Some(id) => id,
+        None => return Err(bad(None, "missing or non-integer 'id'")),
+    };
+    let some = Some(id);
+    let verb = j.req_str("verb").map_err(|e| bad(some, e.to_string()))?;
+    let verb = match verb {
+        "open" => {
+            let mut cfg = SessionConfig {
+                design: j.req_str("design").map_err(|e| bad(some, e.to_string()))?.to_string(),
+                ..SessionConfig::default()
+            };
+            if let Some(k) = j.get("kernel").and_then(Json::as_str) {
+                cfg.kernel = KernelConfig::parse(k).ok_or_else(|| {
+                    (some, ErrorCode::BadConfig, format!("unknown kernel '{k}'"))
+                })?;
+            }
+            if let Some(p) = j.get("partitioner").and_then(Json::as_str) {
+                cfg.partitioner = PartitionerKind::parse(p).ok_or_else(|| {
+                    (some, ErrorCode::BadConfig, format!("unknown partitioner '{p}'"))
+                })?;
+            }
+            if let Some(v) = j.get("parts") {
+                cfg.parts = v.as_usize().ok_or_else(|| bad(some, "'parts' not an integer"))?;
+            }
+            if let Some(v) = j.get("lanes") {
+                cfg.lanes = v.as_usize().ok_or_else(|| bad(some, "'lanes' not an integer"))?;
+            }
+            cfg.width = cfg.lanes;
+            if let Some(v) = j.get("width") {
+                cfg.width = v.as_usize().ok_or_else(|| bad(some, "'width' not an integer"))?;
+            }
+            if let Some(v) = j.get("sparse") {
+                cfg.sparse = matches!(v, Json::Bool(true));
+            }
+            if let Some(v) = j.get("fuse") {
+                cfg.fuse = !matches!(v, Json::Bool(false));
+            }
+            Verb::Open(cfg)
+        }
+        "submit" => {
+            let session = j.req_u64("session").map_err(|e| bad(some, e.to_string()))?;
+            let st = j.req("stimulus").map_err(|e| bad(some, e.to_string()))?;
+            let kind = st.req_str("kind").map_err(|e| bad(some, e.to_string()))?;
+            let stimulus = match kind {
+                "design" => StimulusSpec::DesignCycles(
+                    st.req_u64("cycles").map_err(|e| bad(some, e.to_string()))?,
+                ),
+                "vectors" => {
+                    let frames = st.req_arr("vectors").map_err(|e| bad(some, e.to_string()))?;
+                    let mut out = Vec::with_capacity(frames.len());
+                    for (i, f) in frames.iter().enumerate() {
+                        let row = f
+                            .as_arr()
+                            .ok_or_else(|| bad(some, format!("vector {i} is not an array")))?;
+                        let mut words = Vec::with_capacity(row.len());
+                        for (k, w) in row.iter().enumerate() {
+                            words.push(word(w).ok_or_else(|| {
+                                bad(some, format!("vector {i} word {k} is not a u64"))
+                            })?);
+                        }
+                        out.push(words);
+                    }
+                    StimulusSpec::Vectors(out)
+                }
+                other => return Err(bad(some, format!("unknown stimulus kind '{other}'"))),
+            };
+            Verb::Submit { session, stimulus }
+        }
+        "poll" => Verb::Poll {
+            session: j.req_u64("session").map_err(|e| bad(some, e.to_string()))?,
+            max_cycles: j
+                .get("max_cycles")
+                .map(|v| v.as_usize().ok_or_else(|| bad(some, "'max_cycles' not an integer")))
+                .transpose()?
+                .unwrap_or(usize::MAX),
+        },
+        "checkpoint" => Verb::Checkpoint {
+            session: j.req_u64("session").map_err(|e| bad(some, e.to_string()))?,
+            path: PathBuf::from(j.req_str("path").map_err(|e| bad(some, e.to_string()))?),
+        },
+        "restore" => Verb::Restore {
+            path: PathBuf::from(j.req_str("path").map_err(|e| bad(some, e.to_string()))?),
+        },
+        "close" => Verb::Close {
+            session: j.req_u64("session").map_err(|e| bad(some, e.to_string()))?,
+        },
+        "stats" => Verb::Stats,
+        other => return Err((some, ErrorCode::UnknownVerb, format!("unknown verb '{other}'"))),
+    };
+    let timeout_ms = j
+        .get("timeout_ms")
+        .map(|v| v.as_u64().ok_or_else(|| bad(some, "'timeout_ms' not an integer")))
+        .transpose()?;
+    Ok(Request { id, verb, timeout_ms })
+}
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:#x}"))
+}
+
+/// `{"id":N,"ok":true,<fields>}` as one line.
+pub fn ok_reply(id: u64, mut fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("id", Json::Int(id as i64)), ("ok", Json::Bool(true))];
+    all.append(&mut fields);
+    json::obj(all).to_string()
+}
+
+/// `{"id":N,"ok":false,"error":{...}}` as one line. A `None` id (the
+/// request was unreadable) is reported as JSON `null`.
+pub fn err_reply(id: Option<u64>, code: ErrorCode, message: &str) -> String {
+    let idj = match id {
+        Some(i) => Json::Int(i as i64),
+        None => Json::Null,
+    };
+    json::obj(vec![
+        ("id", idj),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            json::obj(vec![
+                ("code", Json::Str(code.as_str().to_string())),
+                ("message", Json::Str(message.to_string())),
+            ]),
+        ),
+    ])
+    .to_string()
+}
+
+/// The `cache` sub-object of an `open` reply.
+pub fn cache_json(report: &OpenReport) -> Json {
+    json::obj(vec![
+        ("key", Json::Str(report.key.clone())),
+        ("hit", Json::Bool(report.hit)),
+        ("source", Json::Str(report.source.name().to_string())),
+        ("open_ms", Json::Num(report.open_time.as_secs_f64() * 1e3)),
+        ("cold_compile_ms", Json::Num(report.cold_compile.as_secs_f64() * 1e3)),
+    ])
+}
+
+/// One drained cycle record: `{"cycle":N,"out":{"port":"0x…",...}}`.
+pub fn record_json(rec: &CycleRecord) -> Json {
+    json::obj(vec![
+        ("cycle", Json::Int(rec.cycle as i64)),
+        (
+            "out",
+            Json::Obj(rec.out.iter().map(|(name, v)| (name.clone(), hex(*v))).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_open_with_defaults_and_overrides() {
+        let r = parse_request(r#"{"id":7,"verb":"open","design":"fir8"}"#).unwrap();
+        match r.verb {
+            Verb::Open(cfg) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(cfg.design, "fir8");
+                assert_eq!(cfg.kernel, KernelConfig::PSU);
+                assert_eq!((cfg.parts, cfg.lanes, cfg.width), (1, 1, 1));
+                assert!(!cfg.sparse);
+                assert!(cfg.fuse);
+            }
+            v => panic!("wrong verb {v:?}"),
+        }
+        // width defaults to lanes, explicit width narrows it
+        let r = parse_request(
+            r#"{"id":8,"verb":"open","design":"fir8","kernel":"ti","lanes":8,"width":2,"sparse":true,"fuse":false,"parts":4,"partitioner":"rr"}"#,
+        )
+        .unwrap();
+        match r.verb {
+            Verb::Open(cfg) => {
+                assert_eq!(cfg.kernel, KernelConfig::TI);
+                assert_eq!((cfg.parts, cfg.lanes, cfg.width), (4, 8, 2));
+                assert!(cfg.sparse && !cfg.fuse);
+                assert_eq!(cfg.partitioner, PartitionerKind::RoundRobin);
+            }
+            v => panic!("wrong verb {v:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_submit_vectors_with_hex_words() {
+        let r = parse_request(
+            r#"{"id":1,"verb":"submit","session":3,"stimulus":{"kind":"vectors","vectors":[[1,"0xff"],[2,3]]}}"#,
+        )
+        .unwrap();
+        match r.verb {
+            Verb::Submit { session: 3, stimulus: StimulusSpec::Vectors(v) } => {
+                assert_eq!(v, vec![vec![1, 0xff], vec![2, 3]]);
+            }
+            v => panic!("wrong verb {v:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_carry_the_id_when_readable() {
+        let e = parse_request(r#"{"id":9,"verb":"fly"}"#).unwrap_err();
+        assert_eq!(e.0, Some(9));
+        assert_eq!(e.1, ErrorCode::UnknownVerb);
+        let e = parse_request("not json").unwrap_err();
+        assert_eq!(e.0, None);
+        assert_eq!(e.1, ErrorCode::BadRequest);
+        let e = parse_request(r#"{"verb":"stats"}"#).unwrap_err();
+        assert_eq!(e.0, None, "no id to echo");
+    }
+
+    #[test]
+    fn reply_lines_are_single_line_json() {
+        let ok = ok_reply(4, vec![("queued", Json::Int(10))]);
+        assert!(!ok.contains('\n'));
+        let j = crate::util::json::parse(&ok).unwrap();
+        assert_eq!(j.req_u64("id").unwrap(), 4);
+        assert!(matches!(j.get("ok"), Some(Json::Bool(true))));
+        assert_eq!(j.req_u64("queued").unwrap(), 10);
+
+        let err = err_reply(None, ErrorCode::Snapshot, "bad magic");
+        let j = crate::util::json::parse(&err).unwrap();
+        assert!(matches!(j.get("id"), Some(Json::Null)));
+        assert_eq!(j.req("error").unwrap().req_str("code").unwrap(), "snapshot");
+    }
+
+    #[test]
+    fn classify_maps_manager_errors_to_codes() {
+        assert_eq!(classify("unknown design 'x'"), ErrorCode::UnknownDesign);
+        assert_eq!(classify("unknown session 9"), ErrorCode::UnknownSession);
+        assert_eq!(classify("session 1 is failed: host wedged mid-step"), ErrorCode::Wedged);
+        assert_eq!(classify("snapshot rejected: lane mismatch"), ErrorCode::Snapshot);
+        assert_eq!(classify("width 9 exceeds host lanes 8"), ErrorCode::BadConfig);
+    }
+}

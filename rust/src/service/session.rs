@@ -1,0 +1,864 @@
+//! Session manager: many client sessions, few host simulators.
+//!
+//! A **host** is one [`BatchParallelSim`] (`P` partitions × `B` lanes on
+//! the persistent worker pool). A **session** owns a contiguous slice of
+//! a host's lanes. Same-design sessions whose configuration matches an
+//! existing host's signature — (cache key, kernel, parts, B, sparse) —
+//! are packed onto it, so `K` small sessions cost one OIM walk per
+//! cycle instead of `K`. Isolation is structural: lanes never interact
+//! inside a kernel, each session's stimulus is scattered only into its
+//! own lanes, and free lanes are driven with zeros.
+//!
+//! Hosts advance **bulk-synchronously** (Manticore-style): one pump
+//! steps `min(queued cycles over all attached sessions)`, bounded by the
+//! request deadline and per-session output-buffer backpressure. A
+//! session with an empty queue therefore stalls its host-mates until it
+//! submits or closes — the packing rule clients must know (see the
+//! module docs of [`crate::service`]).
+//!
+//! Stimulus either replays the design's canonical stream (slice lane `j`
+//! draws from `make_stimulus_for_lane(j)`, so a width-1 session is
+//! bit-identical to scalar `rteaal sim` and a width-B session to
+//! `rteaal sim --lanes B`) or is an explicit per-cycle vector queue. The
+//! canonical stream is indexed by the *session* cycle: a restored
+//! session fast-forwards its generators to its cycle count before
+//! drawing, so checkpoint/restore does not fork the stream.
+//!
+//! Checkpoints: a session that owns its whole host snapshots the host's
+//! complete [`SimState`](crate::coordinator::parallel::SimState)
+//! (kind 0); a session sharing a host snapshots the committed registers
+//! of its lanes only (kind 1) — registers are the complete architectural
+//! state here (no memories; every combinational slot is recomputed from
+//! them), so both restores are exact, and the round-trip tests hold both
+//! kinds to bit-identity. Restore always creates a *new* session.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::parallel::BatchParallelSim;
+use crate::designs::catalog;
+use crate::kernels::{supports_sparse, KernelConfig};
+use crate::partition::PartitionerKind;
+use crate::service::cache::{CachedDesign, DesignCache, OpenReport};
+use crate::service::checkpoint::{Snapshot, SnapshotConfig, SnapshotPayload};
+
+/// One lane's stimulus stream: cycle number in, input-port values out.
+type StimulusFn = Box<dyn FnMut(u64) -> Vec<u64>>;
+
+/// Per-session output backlog cap: the pump stops before any attached
+/// session's undrained buffer would exceed this (backpressure instead of
+/// unbounded growth when a client submits much and polls little).
+pub const OUT_BUF_CAP: usize = 4096;
+
+/// Requested configuration for `open`.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub design: String,
+    pub kernel: KernelConfig,
+    pub parts: usize,
+    /// Host width B (lanes per kernel step).
+    pub lanes: usize,
+    /// Lanes this session owns (1 ≤ width ≤ lanes).
+    pub width: usize,
+    pub sparse: bool,
+    pub fuse: bool,
+    pub partitioner: PartitionerKind,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            design: String::new(),
+            kernel: KernelConfig::PSU,
+            parts: 1,
+            lanes: 1,
+            width: 1,
+            sparse: false,
+            fuse: true,
+            partitioner: PartitionerKind::MinCut,
+        }
+    }
+}
+
+/// One drained cycle: the session's slice-lane-0 design outputs after
+/// that cycle's commit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CycleRecord {
+    pub cycle: u64,
+    pub out: Vec<(String, u64)>,
+}
+
+/// Result of a poll: drained records plus queue status.
+#[derive(Debug)]
+pub struct PollResult {
+    pub records: Vec<CycleRecord>,
+    /// Session cycle count after pumping.
+    pub cycle: u64,
+    /// True when the stimulus queue is fully consumed *and* the output
+    /// buffer is drained.
+    pub done: bool,
+}
+
+/// What `open` produced.
+pub struct OpenOutcome {
+    pub session: u64,
+    pub host: usize,
+    /// Absolute host lane of the session's slice lane 0.
+    pub lane0: usize,
+    pub report: OpenReport,
+}
+
+#[derive(Clone, PartialEq, Eq)]
+struct HostSig {
+    key: String,
+    kernel: KernelConfig,
+    parts: usize,
+    lanes: usize,
+    sparse: bool,
+}
+
+struct Host {
+    sig: HostSig,
+    sim: BatchParallelSim,
+    design: Arc<CachedDesign>,
+    /// Initial slot values (graph constants + register init).
+    init_slots: Vec<u64>,
+    occupied: Vec<bool>,
+    sessions: Vec<u64>,
+    /// Set when the simulator panicked mid-step: the host is dead, its
+    /// sessions are failed, the server lives on.
+    wedged: bool,
+    num_inputs: usize,
+}
+
+impl Host {
+    fn free_run(&self, width: usize) -> Option<usize> {
+        if width == 0 || width > self.occupied.len() {
+            return None;
+        }
+        (0..=self.occupied.len() - width)
+            .find(|&start| self.occupied[start..start + width].iter().all(|&o| !o))
+    }
+}
+
+struct Session {
+    host: usize,
+    lane0: usize,
+    width: usize,
+    design: String,
+    /// Cycles this session has advanced (== frames consumed).
+    cycle: u64,
+    /// Design-stream generators, one per slice lane; created lazily on
+    /// the first pumped design-stimulus cycle.
+    gens: Option<Vec<StimulusFn>>,
+    /// Frames drawn from `gens` so far — fast-forwarded to `cycle`
+    /// before drawing, so restored sessions resume the stream in place.
+    gen_drawn: u64,
+    /// Queued design-stream cycles.
+    design_remaining: u64,
+    /// Queued explicit frames (`inputs × width` lane-major words each).
+    vectors: VecDeque<Vec<u64>>,
+    out_buf: VecDeque<CycleRecord>,
+    failed: Option<String>,
+}
+
+impl Session {
+    fn queued(&self) -> u64 {
+        self.design_remaining + self.vectors.len() as u64
+    }
+}
+
+/// The service's session table: a design cache, the live hosts, and the
+/// sessions packed onto them.
+pub struct SessionManager {
+    pub cache: DesignCache,
+    hosts: Vec<Option<Host>>,
+    sessions: HashMap<u64, Session>,
+    next_session: u64,
+}
+
+impl SessionManager {
+    pub fn new(cache_dir: Option<PathBuf>, cache_cap: usize) -> Self {
+        SessionManager {
+            cache: DesignCache::new(cache_dir, cache_cap),
+            hosts: Vec::new(),
+            sessions: HashMap::new(),
+            next_session: 0,
+        }
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn host_count(&self) -> usize {
+        self.hosts.iter().filter(|h| h.is_some()).count()
+    }
+
+    /// Open a session: fetch-or-compile the design, pack onto a matching
+    /// host (or build one from the cached artifacts), initialize the
+    /// slice lanes.
+    pub fn open(&mut self, cfg: &SessionConfig) -> Result<OpenOutcome, String> {
+        let design = catalog(&cfg.design)
+            .ok_or_else(|| format!("unknown design '{}'", cfg.design))?;
+        if cfg.lanes == 0 || cfg.width == 0 {
+            return Err("lanes and width must be >= 1".into());
+        }
+        if cfg.width > cfg.lanes {
+            return Err(format!("width {} exceeds host lanes {}", cfg.width, cfg.lanes));
+        }
+        if cfg.sparse && !supports_sparse(cfg.kernel) {
+            return Err(format!("kernel {} has no sparse variant", cfg.kernel.name()));
+        }
+        if cfg.sparse && cfg.lanes > 64 {
+            return Err(format!(
+                "sparse supports at most 64 lanes (one activity-mask bit per lane; got {})",
+                cfg.lanes
+            ));
+        }
+        if cfg.parts == 0 {
+            return Err("parts must be >= 1".into());
+        }
+        let (cached, report) =
+            self.cache.open_design(&design, cfg.fuse, cfg.parts, cfg.partitioner)?;
+
+        let sig = HostSig {
+            key: cached.key.clone(),
+            kernel: cfg.kernel,
+            parts: cfg.parts,
+            lanes: cfg.lanes,
+            sparse: cfg.sparse,
+        };
+        let mut placement = None;
+        for (h, slot) in self.hosts.iter().enumerate() {
+            if let Some(host) = slot {
+                if host.wedged || host.sig != sig {
+                    continue;
+                }
+                if let Some(lane0) = host.free_run(cfg.width) {
+                    placement = Some((h, lane0));
+                    break;
+                }
+            }
+        }
+        let (h, lane0) = match placement {
+            Some(p) => p,
+            None => {
+                let sim = BatchParallelSim::with_partitioning(
+                    &cached.ir,
+                    cfg.kernel,
+                    cached.partitioning(),
+                    cfg.lanes,
+                    cfg.sparse,
+                    cfg.partitioner,
+                );
+                let host = Host {
+                    sig: sig.clone(),
+                    init_slots: cached.ir.initial_slots(),
+                    num_inputs: cached.ir.input_slots.len(),
+                    sim,
+                    design: cached.clone(),
+                    occupied: vec![false; cfg.lanes],
+                    sessions: Vec::new(),
+                    wedged: false,
+                };
+                let h = match self.hosts.iter().position(|s| s.is_none()) {
+                    Some(i) => {
+                        self.hosts[i] = Some(host);
+                        i
+                    }
+                    None => {
+                        self.hosts.push(Some(host));
+                        self.hosts.len() - 1
+                    }
+                };
+                (h, 0)
+            }
+        };
+
+        let id = self.next_session;
+        self.next_session += 1;
+        {
+            let host = self.hosts[h].as_mut().expect("placed on a live host");
+            host.occupied[lane0..lane0 + cfg.width].fill(true);
+            host.sessions.push(id);
+            // deterministic slice state regardless of what a previous
+            // occupant left in these lanes: registers back to their init
+            // values, then the design's divergent-lane init, addressed by
+            // *slice* lane so a packed session matches a solo run
+            for &(reg, _, _) in &host.design.ir.commits {
+                let v = host.init_slots[reg as usize];
+                for l in lane0..lane0 + cfg.width {
+                    host.sim.poke_lane(reg, l, v);
+                }
+            }
+            for (slot, j, value) in cached.resolved_lane_init(&design, cfg.width)? {
+                host.sim.poke_lane(slot, lane0 + j, value);
+            }
+        }
+        self.sessions.insert(
+            id,
+            Session {
+                host: h,
+                lane0,
+                width: cfg.width,
+                design: cfg.design.clone(),
+                cycle: 0,
+                gens: None,
+                gen_drawn: 0,
+                design_remaining: 0,
+                vectors: VecDeque::new(),
+                out_buf: VecDeque::new(),
+                failed: None,
+            },
+        );
+        Ok(OpenOutcome { session: id, host: h, lane0, report })
+    }
+
+    fn session(&self, id: u64) -> Result<&Session, String> {
+        self.sessions.get(&id).ok_or_else(|| format!("unknown session {id}"))
+    }
+
+    fn live_session_mut(&mut self, id: u64) -> Result<&mut Session, String> {
+        let s = self.sessions.get_mut(&id).ok_or_else(|| format!("unknown session {id}"))?;
+        if let Some(why) = &s.failed {
+            return Err(format!("session {id} is failed: {why}"));
+        }
+        Ok(s)
+    }
+
+    /// Queue `cycles` of the design's canonical stimulus stream. Returns
+    /// the total queued cycle count.
+    pub fn submit_design(&mut self, id: u64, cycles: u64) -> Result<u64, String> {
+        let s = self.live_session_mut(id)?;
+        if !s.vectors.is_empty() {
+            return Err("explicit vectors are still queued; poll them dry before switching stimulus kinds".into());
+        }
+        s.design_remaining += cycles;
+        Ok(s.queued())
+    }
+
+    /// Queue explicit stimulus frames (`inputs × width` lane-major words
+    /// per cycle). Returns the total queued cycle count.
+    pub fn submit_vectors(&mut self, id: u64, frames: Vec<Vec<u64>>) -> Result<u64, String> {
+        let (host_idx, width) = {
+            let s = self.session(id)?;
+            (s.host, s.width)
+        };
+        let num_inputs =
+            self.hosts[host_idx].as_ref().map(|h| h.num_inputs).ok_or("host is gone")?;
+        let s = self.live_session_mut(id)?;
+        if s.design_remaining > 0 {
+            return Err("design stimulus is still queued; poll it dry before switching stimulus kinds".into());
+        }
+        for (i, f) in frames.iter().enumerate() {
+            if f.len() != num_inputs * width {
+                return Err(format!(
+                    "frame {i} has {} words, expected {} ({} inputs x {} lanes)",
+                    f.len(),
+                    num_inputs * width,
+                    num_inputs,
+                    width
+                ));
+            }
+        }
+        s.vectors.extend(frames);
+        Ok(s.queued())
+    }
+
+    /// Advance the session's host as far as queued stimulus (of every
+    /// attached session), backpressure and the deadline allow, then
+    /// drain up to `max_records` output records.
+    pub fn poll(
+        &mut self,
+        id: u64,
+        max_records: usize,
+        deadline: Instant,
+    ) -> Result<PollResult, String> {
+        let host_idx = self.live_session_mut(id)?.host;
+        self.pump_host(host_idx, deadline)?;
+        let s = self.live_session_mut(id)?;
+        let n = max_records.min(s.out_buf.len());
+        let records: Vec<CycleRecord> = s.out_buf.drain(..n).collect();
+        Ok(PollResult {
+            records,
+            cycle: s.cycle,
+            done: s.queued() == 0 && s.out_buf.is_empty(),
+        })
+    }
+
+    /// Step `hosts[h]` bulk-synchronously until some attached session's
+    /// queue empties, a buffer fills, or the deadline passes.
+    fn pump_host(&mut self, h: usize, deadline: Instant) -> Result<(), String> {
+        let mut host = match self.hosts.get_mut(h).and_then(Option::take) {
+            Some(host) => host,
+            None => return Err("host is gone".into()),
+        };
+        let result = self.pump_host_inner(&mut host, deadline);
+        if host.wedged {
+            // a panicked simulator cannot be trusted; fail every attached
+            // session and drop the host (the pool threads unwind with it)
+            let why = result.clone().err().unwrap_or_else(|| "host wedged".into());
+            for sid in &host.sessions {
+                if let Some(s) = self.sessions.get_mut(sid) {
+                    s.failed = Some(why.clone());
+                }
+            }
+            self.hosts[h] = None;
+        } else {
+            self.hosts[h] = Some(host);
+        }
+        result
+    }
+
+    fn pump_host_inner(&mut self, host: &mut Host, deadline: Instant) -> Result<(), String> {
+        let lanes = host.sig.lanes;
+        let mut frame = vec![0u64; host.num_inputs * lanes];
+        loop {
+            // how far can this bulk-synchronous step go?
+            let mut can = u64::MAX;
+            for sid in &host.sessions {
+                let s = &self.sessions[sid];
+                can = can.min(s.queued());
+                if s.out_buf.len() >= OUT_BUF_CAP {
+                    can = 0;
+                }
+            }
+            if can == 0 || host.sessions.is_empty() || Instant::now() >= deadline {
+                return Ok(());
+            }
+
+            // one cycle: scatter each session's next frame into its lanes
+            frame.fill(0);
+            for sid in host.sessions.clone() {
+                let s = self.sessions.get_mut(&sid).expect("attached session exists");
+                let (lane0, width) = (s.lane0, s.width);
+                if s.design_remaining > 0 {
+                    s.design_remaining -= 1;
+                    if s.gens.is_none() {
+                        let design =
+                            catalog(&s.design).ok_or("design vanished from the catalog")?;
+                        s.gens = Some(
+                            (0..width).map(|j| design.make_stimulus_for_lane(j)).collect(),
+                        );
+                    }
+                    let gens = s.gens.as_mut().expect("just installed");
+                    // fast-forward to the session cycle (restored
+                    // sessions; vector/design interleavings)
+                    while s.gen_drawn < s.cycle {
+                        for g in gens.iter_mut() {
+                            let _ = g(s.gen_drawn);
+                        }
+                        s.gen_drawn += 1;
+                    }
+                    for (j, g) in gens.iter_mut().enumerate() {
+                        let f = g(s.cycle);
+                        debug_assert_eq!(f.len(), host.num_inputs);
+                        for (i, &v) in f.iter().enumerate() {
+                            frame[i * lanes + lane0 + j] = v;
+                        }
+                    }
+                    s.gen_drawn += 1;
+                } else {
+                    let f = s.vectors.pop_front().expect("queued() said so");
+                    for i in 0..host.num_inputs {
+                        for j in 0..width {
+                            frame[i * lanes + lane0 + j] = f[i * width + j];
+                        }
+                    }
+                }
+            }
+
+            let stepped =
+                catch_unwind(AssertUnwindSafe(|| host.sim.step(&frame))).map_err(|p| {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "panic".into());
+                    format!("host wedged mid-step: {msg}")
+                });
+            if let Err(e) = stepped {
+                host.wedged = true;
+                return Err(e);
+            }
+
+            for sid in host.sessions.clone() {
+                let s = self.sessions.get_mut(&sid).expect("attached session exists");
+                s.cycle += 1;
+                let rec = CycleRecord { cycle: s.cycle, out: host.sim.lane_outputs(s.lane0) };
+                s.out_buf.push_back(rec);
+            }
+        }
+    }
+
+    /// Current design outputs of one slice lane (no pumping).
+    pub fn lane_outputs(&self, id: u64, slice_lane: usize) -> Result<Vec<(String, u64)>, String> {
+        let s = self.session(id)?;
+        if slice_lane >= s.width {
+            return Err(format!("slice lane {slice_lane} out of range (width {})", s.width));
+        }
+        let host = self.hosts[s.host].as_ref().ok_or("host is gone")?;
+        Ok(host.sim.lane_outputs(s.lane0 + slice_lane))
+    }
+
+    /// Committed register values of the session's lanes, as
+    /// `(slot, per-slice-lane values)` in `ir.commits` order — the
+    /// complete architectural state, exposed for differential tests.
+    pub fn session_regs(&self, id: u64) -> Result<Vec<(u32, Vec<u64>)>, String> {
+        let s = self.session(id)?;
+        let host = self.hosts[s.host].as_ref().ok_or("host is gone")?;
+        Ok(host
+            .design
+            .ir
+            .commits
+            .iter()
+            .map(|&(reg, _, _)| {
+                (reg, (0..s.width).map(|j| host.sim.reg_lane(reg, s.lane0 + j)).collect())
+            })
+            .collect())
+    }
+
+    /// Snapshot a session to `path`. Returns `(bytes written, cycle)`.
+    pub fn checkpoint(&mut self, id: u64, path: &Path) -> Result<(u64, u64), String> {
+        let snap = self.snapshot(id)?;
+        let bytes = snap.write_file(path).map_err(|e| e.to_string())?;
+        Ok((bytes, snap.cycle()))
+    }
+
+    /// Build the snapshot: full host state when the session owns every
+    /// lane of its host, otherwise the committed registers of its slice.
+    pub fn snapshot(&self, id: u64) -> Result<Snapshot, String> {
+        let s = self.session(id)?;
+        if let Some(why) = &s.failed {
+            return Err(format!("session {id} is failed: {why}"));
+        }
+        let host = self.hosts[s.host].as_ref().ok_or("host is gone")?;
+        let whole_host = host.sessions.len() == 1 && s.width == host.sig.lanes;
+        let config = SnapshotConfig {
+            design_key: host.design.key.clone(),
+            design_name: host.design.design_name.clone(),
+            kernel: host.sig.kernel.name().to_string(),
+            partitioner: host.design.partitioner.name().to_string(),
+            parts: host.sig.parts as u64,
+            lanes: if whole_host { host.sig.lanes as u64 } else { s.width as u64 },
+            sparse: host.sig.sparse,
+            fuse: host.design.fuse,
+        };
+        let payload = if whole_host {
+            SnapshotPayload::FullHost { cycle: s.cycle, state: host.sim.export_state() }
+        } else {
+            let regs = host
+                .design
+                .ir
+                .commits
+                .iter()
+                .map(|&(reg, _, _)| {
+                    let values =
+                        (0..s.width).map(|j| host.sim.reg_lane(reg, s.lane0 + j)).collect();
+                    (reg, values)
+                })
+                .collect();
+            SnapshotPayload::LaneSlice { cycle: s.cycle, regs }
+        };
+        Ok(Snapshot { config, payload })
+    }
+
+    /// Restore a snapshot file into a **new** session (the checkpointed
+    /// one, if still open, is untouched).
+    pub fn restore(&mut self, path: &Path) -> Result<(u64, u64), String> {
+        let snap = Snapshot::read_file(path).map_err(|e| e.to_string())?;
+        self.restore_snapshot(&snap)
+    }
+
+    pub fn restore_snapshot(&mut self, snap: &Snapshot) -> Result<(u64, u64), String> {
+        let kernel = KernelConfig::parse(&snap.config.kernel)
+            .ok_or_else(|| format!("snapshot names unknown kernel '{}'", snap.config.kernel))?;
+        let partitioner = PartitionerKind::parse(&snap.config.partitioner).ok_or_else(|| {
+            format!("snapshot names unknown partitioner '{}'", snap.config.partitioner)
+        })?;
+        let width = snap.config.lanes as usize;
+        let cfg = SessionConfig {
+            design: snap.config.design_name.clone(),
+            kernel,
+            parts: snap.config.parts as usize,
+            // a full-host snapshot needs a fresh host of the same width;
+            // a lane slice packs wherever its width fits
+            lanes: snap.config.lanes as usize,
+            width,
+            sparse: snap.config.sparse,
+            fuse: snap.config.fuse,
+            partitioner,
+        };
+        match &snap.payload {
+            SnapshotPayload::FullHost { cycle, state } => {
+                // build an unshared host by opening at full width, then
+                // overwrite its entire dynamic state
+                let outcome = self.open(&cfg)?;
+                if outcome.report.key != snap.config.design_key {
+                    self.force_close(outcome.session);
+                    return Err(
+                        "snapshot was taken under a different design or configuration (cache key mismatch)"
+                            .into(),
+                    );
+                }
+                let host_idx = self.sessions[&outcome.session].host;
+                let host = self.hosts[host_idx].as_mut().expect("just opened");
+                if host.sessions.len() != 1 {
+                    // cannot happen: open() at width == lanes never packs
+                    self.force_close(outcome.session);
+                    return Err("full-host restore landed on a shared host".into());
+                }
+                if let Err(e) = host.sim.import_state(state) {
+                    self.force_close(outcome.session);
+                    return Err(format!("snapshot rejected: {e}"));
+                }
+                let s = self.sessions.get_mut(&outcome.session).expect("just opened");
+                s.cycle = *cycle;
+                Ok((outcome.session, *cycle))
+            }
+            SnapshotPayload::LaneSlice { cycle, regs } => {
+                let design = catalog(&cfg.design)
+                    .ok_or_else(|| format!("unknown design '{}'", cfg.design))?;
+                // validate against the design's commit set *before*
+                // opening, so a bogus snapshot allocates nothing
+                let (cached, _) =
+                    self.cache.open_design(&design, cfg.fuse, cfg.parts, cfg.partitioner)?;
+                if cached.key != snap.config.design_key {
+                    return Err(
+                        "snapshot was taken under a different design or configuration (cache key mismatch)"
+                            .into(),
+                    );
+                }
+                let commit_slots: HashSet<u32> =
+                    cached.ir.commits.iter().map(|&(reg, _, _)| reg).collect();
+                if regs.len() != commit_slots.len() {
+                    return Err(format!(
+                        "snapshot holds {} registers, design has {}",
+                        regs.len(),
+                        commit_slots.len()
+                    ));
+                }
+                for (slot, values) in regs {
+                    if !commit_slots.contains(slot) {
+                        return Err(format!("snapshot register slot {slot} is not a design register"));
+                    }
+                    if values.len() != width {
+                        return Err("snapshot register lane count disagrees with its width".into());
+                    }
+                }
+                let outcome = self.open(&cfg)?;
+                let host_idx = self.sessions[&outcome.session].host;
+                let host = self.hosts[host_idx].as_mut().expect("just opened");
+                for (slot, values) in regs {
+                    for (j, &v) in values.iter().enumerate() {
+                        host.sim.poke_lane(*slot, outcome.lane0 + j, v);
+                    }
+                }
+                let s = self.sessions.get_mut(&outcome.session).expect("just opened");
+                s.cycle = *cycle;
+                Ok((outcome.session, *cycle))
+            }
+        }
+    }
+
+    /// Close a session, freeing its lanes; an emptied host is dropped.
+    pub fn close(&mut self, id: u64) -> Result<(), String> {
+        let s = self.sessions.remove(&id).ok_or_else(|| format!("unknown session {id}"))?;
+        if let Some(host) = self.hosts.get_mut(s.host).and_then(Option::as_mut) {
+            host.occupied[s.lane0..s.lane0 + s.width].fill(false);
+            host.sessions.retain(|&sid| sid != id);
+            if host.sessions.is_empty() {
+                self.hosts[s.host] = None;
+            }
+        }
+        Ok(())
+    }
+
+    fn force_close(&mut self, id: u64) {
+        let _ = self.close(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn far() -> Instant {
+        Instant::now() + Duration::from_secs(300)
+    }
+
+    fn mgr() -> SessionManager {
+        SessionManager::new(None, 8)
+    }
+
+    fn open_fir8(m: &mut SessionManager, lanes: usize, width: usize) -> OpenOutcome {
+        m.open(&SessionConfig {
+            design: "fir8".into(),
+            lanes,
+            width,
+            ..SessionConfig::default()
+        })
+        .unwrap()
+    }
+
+    /// Tentpole acceptance: two same-design sessions pack onto ONE
+    /// B-lane host, and each is bit-identical, cycle by cycle, to a solo
+    /// scalar run of the design's canonical stimulus.
+    #[test]
+    fn packed_sessions_match_solo_runs_bit_for_bit() {
+        use crate::kernels::build_with_oim;
+        use crate::sim::Simulator;
+
+        let mut m = mgr();
+        let a = open_fir8(&mut m, 4, 1);
+        let b = open_fir8(&mut m, 4, 1);
+        assert_eq!(a.host, b.host, "same signature must pack onto one host");
+        assert_ne!(a.lane0, b.lane0, "distinct lanes");
+        assert_eq!(m.host_count(), 1);
+
+        // a third session too wide for the remaining lanes gets its own host
+        let c = open_fir8(&mut m, 4, 3);
+        assert_ne!(c.host, a.host);
+        assert_eq!(m.host_count(), 2);
+
+        let cycles = 50u64;
+        m.submit_design(a.session, cycles).unwrap();
+        m.submit_design(b.session, cycles).unwrap();
+        let ra = m.poll(a.session, usize::MAX, far()).unwrap();
+        let rb = m.poll(b.session, usize::MAX, far()).unwrap();
+        assert!(ra.done && rb.done);
+        assert_eq!(ra.records.len(), cycles as usize);
+
+        // solo reference: the canonical scalar run
+        let d = catalog("fir8").unwrap();
+        let c2 = crate::coordinator::compile::compile_design(
+            &d,
+            crate::coordinator::compile::CompileOpts::default(),
+        );
+        let kernel = build_with_oim(KernelConfig::PSU, &c2.ir, &c2.oim);
+        let mut solo = Simulator::new(kernel, d.make_stimulus());
+        for (i, rec) in ra.records.iter().enumerate() {
+            solo.run(1);
+            assert_eq!(rec.cycle, i as u64 + 1);
+            assert_eq!(rec.out, solo.outputs(), "session A cycle {}", rec.cycle);
+        }
+        // both width-1 sessions replay the same canonical stream
+        assert_eq!(ra.records, rb.records);
+    }
+
+    /// An empty-queue session stalls its host-mates (the documented
+    /// bulk-synchronous packing rule), and submitting releases them.
+    #[test]
+    fn empty_queue_session_stalls_the_host() {
+        let mut m = mgr();
+        let a = open_fir8(&mut m, 4, 1);
+        let b = open_fir8(&mut m, 4, 1);
+        m.submit_design(a.session, 10).unwrap();
+        let ra = m.poll(a.session, usize::MAX, far()).unwrap();
+        assert_eq!(ra.cycle, 0, "host-mate with an empty queue stalls the host");
+        assert!(!ra.done);
+        m.submit_design(b.session, 10).unwrap();
+        let ra = m.poll(a.session, usize::MAX, far()).unwrap();
+        assert_eq!(ra.cycle, 10);
+        assert!(ra.done);
+    }
+
+    /// Explicit vectors drive exactly the given frames; a width mismatch
+    /// is rejected with a structured error.
+    #[test]
+    fn vector_stimulus_validated_and_applied() {
+        let mut m = mgr();
+        let a = m
+            .open(&SessionConfig {
+                design: "counter".into(),
+                lanes: 2,
+                width: 1,
+                ..SessionConfig::default()
+            })
+            .unwrap();
+        // counter inputs: (en, clear) — one frame per cycle, width 1
+        let bad = vec![vec![1u64, 0, 7]];
+        let err = m.submit_vectors(a.session, bad).unwrap_err();
+        assert!(err.contains("expected 2"), "{err}");
+        m.submit_vectors(a.session, vec![vec![1, 0]; 5]).unwrap();
+        let r = m.poll(a.session, usize::MAX, far()).unwrap();
+        assert_eq!(r.records.last().unwrap().out[0].1, 5, "counter counted the 5 enables");
+    }
+
+    /// Closing a session frees its lanes for reuse, and the reused lanes
+    /// start from clean architectural state.
+    #[test]
+    fn closed_lanes_are_reused_clean() {
+        let mut m = mgr();
+        let a = m
+            .open(&SessionConfig {
+                design: "counter".into(),
+                lanes: 2,
+                width: 1,
+                ..SessionConfig::default()
+            })
+            .unwrap();
+        let b = m
+            .open(&SessionConfig {
+                design: "counter".into(),
+                lanes: 2,
+                width: 1,
+                ..SessionConfig::default()
+            })
+            .unwrap();
+        // advance both so the lanes hold nonzero counts
+        m.submit_vectors(a.session, vec![vec![1, 0]; 4]).unwrap();
+        m.submit_vectors(b.session, vec![vec![1, 0]; 4]).unwrap();
+        assert!(m.poll(a.session, usize::MAX, far()).unwrap().done);
+        m.close(a.session).unwrap();
+        let c = m
+            .open(&SessionConfig {
+                design: "counter".into(),
+                lanes: 2,
+                width: 1,
+                ..SessionConfig::default()
+            })
+            .unwrap();
+        assert_eq!(c.lane0, a.lane0, "freed lane reused");
+        assert_eq!(c.host, b.host, "existing host reused");
+        m.submit_vectors(c.session, vec![vec![1, 0]; 2]).unwrap();
+        m.submit_vectors(b.session, vec![vec![1, 0]; 2]).unwrap();
+        let rc = m.poll(c.session, usize::MAX, far()).unwrap();
+        assert_eq!(rc.records.last().unwrap().out[0].1, 2, "fresh session restarted from init");
+        // host-mate B kept its own state: 4 + 2 enables
+        assert_eq!(m.lane_outputs(b.session, 0).unwrap()[0].1, 6);
+    }
+
+    /// The output-buffer cap backpressures the pump instead of growing
+    /// without bound; draining resumes progress.
+    #[test]
+    fn out_buf_cap_backpressures() {
+        let mut m = mgr();
+        let a = m
+            .open(&SessionConfig {
+                design: "counter".into(),
+                lanes: 1,
+                width: 1,
+                ..SessionConfig::default()
+            })
+            .unwrap();
+        let total = OUT_BUF_CAP as u64 + 100;
+        m.submit_vectors(a.session, vec![vec![1, 0]; total as usize]).unwrap();
+        let r = m.poll(a.session, 0, far()).unwrap();
+        assert_eq!(r.cycle, OUT_BUF_CAP as u64, "pump stopped at the cap");
+        assert!(!r.done);
+        // poll pumps before draining, so the cap-full buffer blocks this
+        // pump; the drain releases the backpressure for the next one
+        let r = m.poll(a.session, usize::MAX, far()).unwrap();
+        assert_eq!(r.records.len(), OUT_BUF_CAP);
+        let r = m.poll(a.session, usize::MAX, far()).unwrap();
+        assert_eq!(r.cycle, total);
+        assert_eq!(r.records.len(), 100);
+        assert!(r.done);
+    }
+}

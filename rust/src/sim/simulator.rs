@@ -28,12 +28,16 @@ pub struct Simulator {
     pub kernel: Box<dyn SimKernel>,
     stimulus: Box<dyn FnMut(u64) -> Vec<u64>>,
     vcd: Option<VcdWriter>,
+    /// First waveform write failure; sampling stops when set and the
+    /// error is reported by [`Simulator::finish`] (the run loops keep
+    /// their throughput-only signatures).
+    vcd_err: Option<std::io::Error>,
     cycle: u64,
 }
 
 impl Simulator {
     pub fn new(kernel: Box<dyn SimKernel>, stimulus: Box<dyn FnMut(u64) -> Vec<u64>>) -> Self {
-        Simulator { kernel, stimulus, vcd: None, cycle: 0 }
+        Simulator { kernel, stimulus, vcd: None, vcd_err: None, cycle: 0 }
     }
 
     /// Attach a VCD waveform writer (paper §6.2: optimizations that would
@@ -44,6 +48,18 @@ impl Simulator {
         Ok(self)
     }
 
+    /// Sample the waveform at the current cycle; on a write failure,
+    /// record the error and stop sampling (a partial waveform plus a
+    /// swallowed error would read as a complete quiescent run).
+    fn sample_vcd(&mut self) {
+        if let Some(vcd) = &mut self.vcd {
+            if let Err(e) = vcd.sample(self.cycle, self.kernel.slots()) {
+                self.vcd_err = Some(e);
+                self.vcd = None;
+            }
+        }
+    }
+
     /// Run for `cycles`, returning throughput statistics.
     pub fn run(&mut self, cycles: u64) -> SimStats {
         let t0 = Instant::now();
@@ -51,9 +67,7 @@ impl Simulator {
             let inputs = (self.stimulus)(self.cycle);
             self.kernel.step(&inputs);
             self.cycle += 1;
-            if let Some(vcd) = &mut self.vcd {
-                vcd.sample(self.cycle, self.kernel.slots());
-            }
+            self.sample_vcd();
         }
         let wall = t0.elapsed();
         SimStats { cycles, wall, hz: cycles as f64 / wall.as_secs_f64().max(1e-12) }
@@ -70,9 +84,7 @@ impl Simulator {
             let inputs = (self.stimulus)(self.cycle);
             self.kernel.step(&inputs);
             self.cycle += 1;
-            if let Some(vcd) = &mut self.vcd {
-                vcd.sample(self.cycle, self.kernel.slots());
-            }
+            self.sample_vcd();
             if pred(&self.kernel.outputs()) {
                 return Some(self.cycle);
             }
@@ -84,8 +96,12 @@ impl Simulator {
         self.kernel.outputs()
     }
 
-    /// Finish any waveform output.
+    /// Finish any waveform output, surfacing a write error recorded
+    /// mid-run (full disk, closed pipe) as well as flush failures.
     pub fn finish(mut self) -> std::io::Result<()> {
+        if let Some(e) = self.vcd_err.take() {
+            return Err(e);
+        }
         if let Some(vcd) = self.vcd.take() {
             vcd.finish()?;
         }
@@ -111,6 +127,25 @@ mod tests {
         let stats = sim.run(1000);
         assert_eq!(stats.cycles, 1000);
         assert!(stats.hz > 0.0);
+    }
+
+    /// A waveform write failure mid-run surfaces from `finish()` instead
+    /// of vanishing (the run itself completes; the error is not lost).
+    #[test]
+    fn vcd_write_failure_surfaces_from_finish() {
+        let full = std::path::Path::new("/dev/full");
+        if !full.exists() {
+            return; // non-Linux dev environment
+        }
+        let d = catalog("counter").unwrap();
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let kernel = build(KernelConfig::PSU, &ir);
+        let mut sim = Simulator::new(kernel, d.make_stimulus()).with_vcd(&ir, full).unwrap();
+        // enough changing samples to overflow the writer's buffer
+        let stats = sim.run(20_000);
+        assert_eq!(stats.cycles, 20_000, "the run itself still completes");
+        assert!(sim.finish().is_err(), "ENOSPC was swallowed");
     }
 
     #[test]

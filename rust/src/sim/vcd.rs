@@ -108,21 +108,27 @@ impl VcdWriter {
     }
 
     /// Emit changed signals at time `cycle`, reading each variable from
-    /// the scalar slot file.
-    pub fn sample(&mut self, cycle: u64, slots: &[u64]) {
+    /// the scalar slot file. A write failure (full disk, closed pipe,
+    /// revoked permissions) is reported, not swallowed.
+    pub fn sample(&mut self, cycle: u64, slots: &[u64]) -> std::io::Result<()> {
         let mut vals = std::mem::take(&mut self.vals);
         for (i, (slot, _, _)) in self.vars.iter().enumerate() {
             vals[i] = slots[*slot as usize];
         }
-        self.sample_values(cycle, &vals);
+        let result = self.sample_values(cycle, &vals);
         self.vals = vals;
+        result
     }
 
     /// Emit changed signals at time `cycle` from pre-gathered values, one
     /// per declared variable (e.g. the value column of a partitioned
     /// run's buffered `write_lane_outputs`). The timestamp is written
     /// only if some variable changed; the first call dumps everything.
-    pub fn sample_values(&mut self, cycle: u64, values: &[u64]) {
+    /// Errors surface on the cycle that failed to write (the change flags
+    /// for that cycle are already consumed — a caller that retries gets a
+    /// waveform with that cycle's deltas dropped, so callers should stop
+    /// sampling on the first error).
+    pub fn sample_values(&mut self, cycle: u64, values: &[u64]) -> std::io::Result<()> {
         debug_assert_eq!(values.len(), self.vars.len());
         self.pending_time = Some(cycle);
         let first = self.first;
@@ -132,15 +138,16 @@ impl VcdWriter {
             if first || self.last[i] != v {
                 self.last[i] = v;
                 if let Some(t) = self.pending_time.take() {
-                    let _ = writeln!(self.out, "#{t}");
+                    writeln!(self.out, "#{t}")?;
                 }
                 if *width == 1 {
-                    let _ = writeln!(self.out, "{}{}", v & 1, code);
+                    writeln!(self.out, "{}{}", v & 1, code)?;
                 } else {
-                    let _ = writeln!(self.out, "b{:b} {}", v, code);
+                    writeln!(self.out, "b{:b} {}", v, code)?;
                 }
             }
         }
+        Ok(())
     }
 
     pub fn finish(mut self) -> std::io::Result<()> {
@@ -165,7 +172,7 @@ mod tests {
         let mut sim = IrSim::new(ir);
         for c in 1..=4u64 {
             sim.step(&[1, 0]);
-            w.sample(c, &sim.slots);
+            w.sample(c, &sim.slots).unwrap();
         }
         w.finish().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
@@ -199,9 +206,9 @@ mod tests {
         let mut w = VcdWriter::create(&ir, &path).unwrap();
         let mut sim = IrSim::new(ir);
         sim.step(&[0, 0]); // enable low: the counter holds its value
-        w.sample(1, &sim.slots); // first sample: full dump at #1
-        w.sample(2, &sim.slots); // same state re-sampled: nothing changes
-        w.sample(3, &sim.slots);
+        w.sample(1, &sim.slots).unwrap(); // first sample: full dump at #1
+        w.sample(2, &sim.slots).unwrap(); // same state re-sampled: nothing changes
+        w.sample(3, &sim.slots).unwrap();
         w.finish().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("#1"), "{text}");
@@ -226,7 +233,7 @@ mod tests {
         let mut w = VcdWriter::create(&ir, &path).unwrap();
         let mut sim = IrSim::new(ir);
         sim.step(&[0]); // !0 = u64::MAX on the 64-bit output
-        w.sample(1, &sim.slots);
+        w.sample(1, &sim.slots).unwrap();
         w.finish().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let ones = "1".repeat(64);
@@ -252,13 +259,50 @@ mod tests {
         for s in slots.iter_mut() {
             *s |= 0xFFFF_FFFF_FFFF_FF00; // garbage above any declared width
         }
-        w.sample(1, &slots);
+        w.sample(1, &slots).unwrap();
         w.finish().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         for line in text.lines().filter(|l| l.starts_with('b')) {
             let bits = line[1..].split(' ').next().unwrap();
             assert!(bits.len() <= 4, "value wider than declared width: {line}");
         }
+    }
+
+    /// An unwritable target fails at creation with an `Err`, not later
+    /// or never (the old writer's only creation-time error path).
+    #[test]
+    fn unwritable_path_is_a_creation_error() {
+        let g = counter(4);
+        let ir = lower(&g);
+        let err = VcdWriter::create(&ir, Path::new("/nonexistent_rteaal_dir/x.vcd"));
+        assert!(err.is_err());
+    }
+
+    /// Write failures *during* sampling are reported instead of being
+    /// swallowed (the satellite fix: the old `sample` discarded them,
+    /// so a full disk produced a silently truncated waveform). `/dev/full`
+    /// accepts the buffered header, then fails with `ENOSPC` once the
+    /// writer's buffer first drains mid-run.
+    #[test]
+    fn write_failure_during_sampling_is_reported() {
+        let full = Path::new("/dev/full");
+        if !full.exists() {
+            return; // non-Linux dev environment
+        }
+        let g = counter(16);
+        let ir = lower(&g);
+        let mut w = VcdWriter::create(&ir, full).unwrap();
+        let mut sim = IrSim::new(ir);
+        let mut failed = false;
+        // enough always-changing samples to overflow the 8 KiB buffer
+        for c in 1..=8_000u64 {
+            sim.step(&[1, 0]);
+            if w.sample(c, &sim.slots).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "ENOSPC never surfaced through sample()");
     }
 
     /// The outputs-only writer declares exactly the design's output ports
@@ -274,9 +318,9 @@ mod tests {
         let mut w = VcdWriter::create_outputs(&ir, &path).unwrap();
         let threes = vec![3u64; n_outputs];
         let fives = vec![5u64; n_outputs];
-        w.sample_values(1, &threes); // full dump
-        w.sample_values(2, &threes); // quiescent
-        w.sample_values(3, &fives); // change
+        w.sample_values(1, &threes).unwrap(); // full dump
+        w.sample_values(2, &threes).unwrap(); // quiescent
+        w.sample_values(3, &fives).unwrap(); // change
         w.finish().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let declared = text.lines().filter(|l| l.starts_with("$var")).count();

@@ -256,6 +256,127 @@ pub struct LayerIr {
 }
 
 impl LayerIr {
+    /// Serialize everything the OIM does **not** carry (the service design
+    /// cache stores this sidecar next to the OIM JSON): ports, commits,
+    /// initial values, names and widths. `layers`/`ext_args` are elided —
+    /// OIM format B is the layers in their natural order, so
+    /// [`Self::from_json_with_oim`] rebuilds them via
+    /// [`Oim::op_recs_natural`](crate::tensor::oim::Oim::op_recs_natural).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr_str, arr_u32, arr_u64, obj, Json};
+        let u8arr = |xs: &[u8]| Json::Arr(xs.iter().map(|&v| Json::Int(v as i64)).collect());
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("num_slots", Json::Int(self.num_slots as i64)),
+            ("commit_reg", arr_u32(&self.commits.iter().map(|c| c.0).collect::<Vec<_>>())),
+            ("commit_next", arr_u32(&self.commits.iter().map(|c| c.1).collect::<Vec<_>>())),
+            ("commit_mask", arr_u64(&self.commits.iter().map(|c| c.2).collect::<Vec<_>>())),
+            ("input_slots", arr_u32(&self.input_slots)),
+            ("input_widths", u8arr(&self.input_widths)),
+            (
+                "output_names",
+                arr_str(&self.output_slots.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>()),
+            ),
+            (
+                "output_slots",
+                arr_u32(&self.output_slots.iter().map(|(_, s)| *s).collect::<Vec<_>>()),
+            ),
+            ("init_slots", arr_u32(&self.init.iter().map(|i| i.0).collect::<Vec<_>>())),
+            ("init_vals", arr_u64(&self.init.iter().map(|i| i.1).collect::<Vec<_>>())),
+            (
+                "slot_names",
+                Json::Arr(
+                    self.slot_names
+                        .iter()
+                        .map(|n| match n {
+                            Some(s) => Json::Str(s.to_string()),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
+            ("slot_widths", u8arr(&self.slot_widths)),
+            ("identity_ops", Json::Int(self.identity_ops as i64)),
+        ])
+    }
+
+    /// Rebuild the full IR from the sidecar plus the OIM it was saved
+    /// with (see [`Self::to_json`]).
+    pub fn from_json_with_oim(
+        j: &crate::util::json::Json,
+        oim: &crate::tensor::oim::Oim,
+    ) -> Result<Self, crate::util::json::JsonError> {
+        use crate::util::json::{Json, JsonError};
+        let num_slots = j.req_usize("num_slots")?;
+        if num_slots != oim.num_slots as usize {
+            return Err(JsonError::Schema(format!(
+                "IR sidecar slot count {num_slots} disagrees with OIM {}",
+                oim.num_slots
+            )));
+        }
+        let (layers, ext_args) = oim.op_recs_natural();
+        let b8 = |key: &str| -> Result<Vec<u8>, JsonError> {
+            Ok(j.req_u64_vec(key)?.into_iter().map(|v| v as u8).collect())
+        };
+        let commit_reg = j.req_u32_vec("commit_reg")?;
+        let commit_next = j.req_u32_vec("commit_next")?;
+        let commit_mask = j.req_u64_vec("commit_mask")?;
+        if commit_reg.len() != commit_next.len() || commit_reg.len() != commit_mask.len() {
+            return Err(JsonError::Schema("commit arrays disagree on length".into()));
+        }
+        let output_names = j.req_arr("output_names")?;
+        let output_slots = j.req_u32_vec("output_slots")?;
+        if output_names.len() != output_slots.len() {
+            return Err(JsonError::Schema("output arrays disagree on length".into()));
+        }
+        let init_slots = j.req_u32_vec("init_slots")?;
+        let init_vals = j.req_u64_vec("init_vals")?;
+        if init_slots.len() != init_vals.len() {
+            return Err(JsonError::Schema("init arrays disagree on length".into()));
+        }
+        let slot_names = j
+            .req_arr("slot_names")?
+            .iter()
+            .map(|v| match v {
+                Json::Null => Ok(None),
+                Json::Str(s) => Ok(Some(s.clone().into_boxed_str())),
+                _ => Err(JsonError::Schema("slot_names element not string/null".into())),
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        if slot_names.len() != num_slots {
+            return Err(JsonError::Schema("slot_names length disagrees with num_slots".into()));
+        }
+        Ok(LayerIr {
+            name: j.req_str("name")?.to_string(),
+            num_slots,
+            layers,
+            ext_args,
+            commits: commit_reg
+                .into_iter()
+                .zip(commit_next)
+                .zip(commit_mask)
+                .map(|((r, n), m)| (r, n, m))
+                .collect(),
+            input_slots: j.req_u32_vec("input_slots")?,
+            input_widths: b8("input_widths")?,
+            output_slots: output_names
+                .iter()
+                .map(|n| {
+                    n.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| JsonError::Schema("output name not a string".into()))
+                })
+                .collect::<Result<Vec<_>, _>>()?
+                .into_iter()
+                .zip(output_slots)
+                .collect(),
+            init: init_slots.into_iter().zip(init_vals).collect(),
+            slot_names,
+            slot_widths: b8("slot_widths")?,
+            identity_ops: j.req_usize("identity_ops")?,
+        })
+    }
+
     /// Total effectual operations.
     pub fn total_ops(&self) -> usize {
         self.layers.iter().map(|l| l.len()).sum()
@@ -540,6 +661,39 @@ mod tests {
         assert_eq!(o["t"], 0b1101_0110);
         assert_eq!(o["p"], 0b1010_1101_0110);
         assert_eq!(o["c"], (0b110101 << 3) | 0b101);
+    }
+
+    /// The sidecar + OIM pair reconstructs a semantically identical IR
+    /// (the design-cache load path): same step behavior, ports, commits
+    /// and metadata.
+    #[test]
+    fn sidecar_roundtrip_through_oim() {
+        use crate::tensor::oim::Oim;
+        let mut rng = Rng::new(9100);
+        let g = random_circuit(&mut rng, 90);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let oim2 =
+            Oim::from_json(&crate::util::json::parse(&oim.to_json().to_string()).unwrap()).unwrap();
+        let side = crate::util::json::parse(&ir.to_json().to_string()).unwrap();
+        let ir2 = LayerIr::from_json_with_oim(&side, &oim2).unwrap();
+        assert_eq!(ir2.name, ir.name);
+        assert_eq!(ir2.commits, ir.commits);
+        assert_eq!(ir2.input_slots, ir.input_slots);
+        assert_eq!(ir2.output_slots, ir.output_slots);
+        assert_eq!(ir2.init, ir.init);
+        assert_eq!(ir2.slot_names, ir.slot_names);
+        assert_eq!(ir2.slot_widths, ir.slot_widths);
+        assert_eq!(ir2.total_ops(), ir.total_ops());
+        let mut a = IrSim::new(ir);
+        let mut b = IrSim::new(ir2);
+        for _ in 0..10 {
+            let inputs = random_inputs(&mut rng, &opt);
+            a.step(&inputs);
+            b.step(&inputs);
+            assert_eq!(a.outputs(), b.outputs());
+        }
     }
 
     #[test]

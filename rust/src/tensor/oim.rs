@@ -227,6 +227,14 @@ impl Oim {
     pub fn op_recs(&self) -> (Vec<Vec<OpRec>>, Vec<u32>) {
         recs_from_arrays(&self.i_payload, &self.c)
     }
+
+    /// Per-op records in format-B (natural S) order — exactly the
+    /// `LayerIr::layers` the OIM was lowered from, which makes the IR
+    /// reconstructable from a cached OIM plus the small
+    /// [`crate::tensor::ir::LayerIr::to_json`] sidecar.
+    pub fn op_recs_natural(&self) -> (Vec<Vec<OpRec>>, Vec<u32>) {
+        recs_from_arrays(&self.i_payload, &self.b)
+    }
 }
 
 /// Rebuild AoS records from one order's arrays.

@@ -490,7 +490,7 @@ fn vcd_identical_across_kernels() {
         let mut stim = d.make_stimulus();
         for cycle in 1..=40u64 {
             k.step(&stim(cycle - 1));
-            w.sample(cycle, k.slots());
+            w.sample(cycle, k.slots()).unwrap();
         }
         w.finish().unwrap();
         texts.push(std::fs::read_to_string(&path).unwrap());

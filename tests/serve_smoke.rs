@@ -1,0 +1,181 @@
+//! Black-box smoke tests of the `rteaal` binary: the `serve --stdio`
+//! NDJSON protocol end to end (double-open cache hit, two concurrent
+//! packed sessions, checkpoint/restore, and a diff against a plain
+//! `rteaal sim` run of the same design), plus the `--vcd` unwritable-
+//! path regression (clean CLI error, not a panic and not silence).
+//!
+//! Session ids are allocated deterministically (0, 1, 2, …), so the
+//! whole transcript is scripted up front and replies are read after
+//! stdin closes — no interactive turn-taking needed.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use rteaal::util::json::{self, Json};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rteaal_smoke_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Fetch a required key from a reply object.
+fn field<'a>(reply: &'a Json, key: &str) -> &'a Json {
+    reply.get(key).unwrap_or_else(|| panic!("reply lacks '{key}': {reply:?}"))
+}
+
+fn as_u64(reply: &Json, key: &str) -> u64 {
+    field(reply, key).as_u64().unwrap_or_else(|| panic!("'{key}' not a u64: {reply:?}"))
+}
+
+/// Parse the `out <name> = 0x…` lines of a `rteaal sim` run.
+fn sim_outputs(stdout: &str) -> HashMap<String, u64> {
+    let mut outs = HashMap::new();
+    for line in stdout.lines() {
+        let Some(rest) = line.trim_start().strip_prefix("out ") else { continue };
+        let Some((name, value)) = rest.split_once(" = 0x") else { continue };
+        outs.insert(name.trim().to_string(), u64::from_str_radix(value.trim(), 16).unwrap());
+    }
+    outs
+}
+
+/// The `out` object of a poll record, decoded to numeric port values.
+fn record_outputs(record: &Json) -> HashMap<String, u64> {
+    let mut outs = HashMap::new();
+    for (name, v) in field(record, "out").as_obj().expect("record 'out' is an object") {
+        let hex = v.as_str().expect("port value is a hex string");
+        let hex = hex.strip_prefix("0x").expect("port value starts with 0x");
+        outs.insert(name.clone(), u64::from_str_radix(hex, 16).unwrap());
+    }
+    outs
+}
+
+#[test]
+fn serve_stdio_transcript_smoke() {
+    let dir = tmp_dir("serve");
+    let snap = dir.join("smoke.rtal");
+    let snap_str = snap.display().to_string();
+    let cache_dir = dir.join("cache").display().to_string();
+
+    // Two same-design sessions pack onto one 4-lane host; both run 40
+    // design cycles, session 0 is checkpointed and restored as session
+    // 2, and both continue 5 more cycles.
+    let transcript = [
+        r#"{"id":1,"verb":"open","design":"fir8","lanes":4,"width":1}"#.to_string(),
+        r#"{"id":2,"verb":"open","design":"fir8","lanes":4,"width":1}"#.to_string(),
+        r#"{"id":3,"verb":"submit","session":0,"stimulus":{"kind":"design","cycles":40}}"#
+            .to_string(),
+        r#"{"id":4,"verb":"submit","session":1,"stimulus":{"kind":"design","cycles":40}}"#
+            .to_string(),
+        r#"{"id":5,"verb":"poll","session":0}"#.to_string(),
+        r#"{"id":6,"verb":"poll","session":1}"#.to_string(),
+        format!(r#"{{"id":7,"verb":"checkpoint","session":0,"path":"{snap_str}"}}"#),
+        format!(r#"{{"id":8,"verb":"restore","path":"{snap_str}"}}"#),
+        r#"{"id":9,"verb":"submit","session":0,"stimulus":{"kind":"design","cycles":5}}"#
+            .to_string(),
+        r#"{"id":10,"verb":"submit","session":2,"stimulus":{"kind":"design","cycles":5}}"#
+            .to_string(),
+        r#"{"id":11,"verb":"poll","session":0}"#.to_string(),
+        r#"{"id":12,"verb":"poll","session":2}"#.to_string(),
+        r#"{"id":13,"verb":"stats"}"#.to_string(),
+        r#"{"id":14,"verb":"close","session":0}"#.to_string(),
+        r#"{"id":15,"verb":"poll","session":0}"#.to_string(),
+    ];
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_rteaal"))
+        .args(["serve", "--stdio", "--cache-dir", &cache_dir])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all((transcript.join("\n") + "\n").as_bytes())
+        .unwrap();
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "serve exited with {:?}: {}", out.status, String::from_utf8_lossy(&out.stderr));
+
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let replies: Vec<Json> = stdout.lines().map(|l| json::parse(l).unwrap()).collect();
+    assert_eq!(replies.len(), transcript.len(), "one reply per request");
+    let reply = |id: u64| {
+        replies
+            .iter()
+            .find(|r| r.get("id").and_then(Json::as_u64) == Some(id))
+            .unwrap_or_else(|| panic!("no reply with id {id}"))
+    };
+    for id in [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14] {
+        assert_eq!(field(reply(id), "ok"), &Json::Bool(true), "request {id} failed");
+    }
+
+    // Double open: first is a compile miss, second a memory hit on the
+    // same host (packed).
+    let (r1, r2) = (reply(1), reply(2));
+    assert_eq!(as_u64(r1, "session"), 0);
+    assert_eq!(as_u64(r2, "session"), 1);
+    assert_eq!(field(field(r1, "cache"), "hit"), &Json::Bool(false));
+    assert_eq!(field(field(r2, "cache"), "hit"), &Json::Bool(true));
+    assert_eq!(field(field(r2, "cache"), "source"), &Json::Str("memory".into()));
+    assert_eq!(as_u64(r1, "host"), as_u64(r2, "host"), "same-design sessions should pack");
+
+    // Two concurrent sessions produce identical per-cycle records.
+    let (r5, r6) = (reply(5), reply(6));
+    assert_eq!(field(r5, "done"), &Json::Bool(true));
+    assert_eq!(field(r5, "cycles"), field(r6, "cycles"), "packed sessions diverged");
+    assert_eq!(field(r5, "cycles").as_arr().unwrap().len(), 40);
+
+    // Checkpoint at cycle 40, restored as session 2 at the same cycle.
+    assert!(as_u64(reply(7), "bytes") > 0);
+    assert_eq!(as_u64(reply(7), "cycle"), 40);
+    assert_eq!(as_u64(reply(8), "session"), 2);
+    assert_eq!(as_u64(reply(8), "cycle"), 40);
+
+    // The restored session's continuation matches the uninterrupted one.
+    let (r11, r12) = (reply(11), reply(12));
+    assert_eq!(field(r11, "cycles"), field(r12, "cycles"), "restore diverged");
+    assert_eq!(as_u64(r11, "cycle"), 45);
+
+    let r13 = reply(13);
+    assert!(as_u64(field(r13, "cache"), "mem_hits") >= 1);
+    assert_eq!(as_u64(field(r13, "cache"), "misses"), 1);
+
+    assert_eq!(as_u64(reply(14), "closed"), 0);
+    let r15 = reply(15);
+    assert_eq!(field(r15, "ok"), &Json::Bool(false));
+    assert_eq!(field(field(r15, "error"), "code"), &Json::Str("unknown-session".into()));
+
+    // Differential check against the plain CLI: lane 0 of the service
+    // equals a solo `rteaal sim` run of the same design and cycle count.
+    let solo = Command::new(env!("CARGO_BIN_EXE_rteaal"))
+        .args(["sim", "--design", "fir8", "--cycles", "45", "--kernel", "PSU"])
+        .output()
+        .unwrap();
+    assert!(solo.status.success());
+    let solo_outs = sim_outputs(&String::from_utf8(solo.stdout).unwrap());
+    assert!(!solo_outs.is_empty(), "no outputs parsed from `rteaal sim`");
+    let last = field(r11, "cycles").as_arr().unwrap().last().unwrap();
+    assert_eq!(as_u64(last, "cycle"), 45);
+    assert_eq!(record_outputs(last), solo_outs, "serve lane 0 != `rteaal sim`");
+}
+
+/// Satellite regression: an unwritable `--vcd` target is a clean CLI
+/// error (nonzero exit, `error:` on stderr), not a panic and not a
+/// silently-absent waveform.
+#[test]
+fn sim_vcd_unwritable_path_is_a_clean_error() {
+    let bad = format!("/nonexistent_rteaal_dir_{}/x.vcd", std::process::id());
+    let out = Command::new(env!("CARGO_BIN_EXE_rteaal"))
+        .args(["sim", "--design", "counter", "--cycles", "4", "--vcd", &bad])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "unwritable --vcd target must fail the run");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error:"), "stderr lacks a clean error: {stderr}");
+    assert!(!stderr.contains("panicked"), "CLI panicked instead of erroring: {stderr}");
+}

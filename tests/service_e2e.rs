@@ -1,0 +1,232 @@
+//! End-to-end tests for the simulation service (`rust/src/service/`):
+//! the checkpoint/restore matrix from the issue (P ∈ {1,4} × B ∈ {1,8},
+//! dense + sparse, `fir8` / `tiny_cpu_divergent`), packed lane-slice
+//! snapshots, corrupted-snapshot rejection, and the warm-open budget
+//! (warm `open_design` must cost < 10% of the cold compile).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use rteaal::designs::catalog;
+use rteaal::kernels::KernelConfig;
+use rteaal::partition::PartitionerKind;
+use rteaal::service::cache::{DesignCache, OpenSource};
+use rteaal::service::session::{SessionConfig, SessionManager};
+
+/// Per-test scratch directory (same convention as the unit tests:
+/// `std::env::temp_dir()` + pid, recreated fresh).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rteaal_svc_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A deadline far enough out that only a wedged host could miss it.
+fn far() -> Instant {
+    Instant::now() + Duration::from_secs(300)
+}
+
+fn cfg(design: &str, parts: usize, lanes: usize, width: usize, sparse: bool) -> SessionConfig {
+    SessionConfig {
+        design: design.into(),
+        kernel: KernelConfig::PSU,
+        parts,
+        lanes,
+        width,
+        sparse,
+        fuse: true,
+        partitioner: PartitionerKind::MinCut,
+    }
+}
+
+/// One cell of the checkpoint matrix: run 30 cycles, checkpoint, run 20
+/// more recording outputs, restore the checkpoint into a fresh session,
+/// run the same 20 — the restored run must be bit-identical in every
+/// per-cycle output record, every committed register slot of every
+/// lane, and (whole-host snapshots) the full exported kernel state.
+fn checkpoint_matrix_case(
+    mgr: &mut SessionManager,
+    dir: &std::path::Path,
+    design: &str,
+    parts: usize,
+    lanes: usize,
+    sparse: bool,
+) {
+    let tag = format!("{design} P={parts} B={lanes} sparse={sparse}");
+    let a = mgr.open(&cfg(design, parts, lanes, lanes, sparse)).unwrap();
+    mgr.submit_design(a.session, 30).unwrap();
+    let warm = mgr.poll(a.session, usize::MAX, far()).unwrap();
+    assert!(warm.done, "{tag}: warm-up did not finish");
+    assert_eq!(warm.cycle, 30, "{tag}");
+
+    let path = dir.join(format!("{design}_p{parts}_b{lanes}_s{}.rtal", u8::from(sparse)));
+    let (bytes, at) = mgr.checkpoint(a.session, &path).unwrap();
+    assert!(bytes > 0, "{tag}: empty snapshot");
+    assert_eq!(at, 30, "{tag}: snapshot cycle");
+
+    mgr.submit_design(a.session, 20).unwrap();
+    let cont_a = mgr.poll(a.session, usize::MAX, far()).unwrap();
+    assert!(cont_a.done && cont_a.cycle == 50, "{tag}");
+
+    let (b, restored_cycle) = mgr.restore(&path).unwrap();
+    assert_eq!(restored_cycle, 30, "{tag}: restore cycle");
+    mgr.submit_design(b, 20).unwrap();
+    let cont_b = mgr.poll(b, usize::MAX, far()).unwrap();
+    assert!(cont_b.done && cont_b.cycle == 50, "{tag}");
+
+    assert_eq!(
+        cont_a.records, cont_b.records,
+        "{tag}: restored run diverged from the uninterrupted run"
+    );
+    assert_eq!(
+        mgr.session_regs(a.session).unwrap(),
+        mgr.session_regs(b).unwrap(),
+        "{tag}: committed register slots differ after restore"
+    );
+    // Both sessions own their whole host, so their snapshots are full
+    // kernel state — compare it outright (slots, activity, trackers).
+    assert_eq!(
+        mgr.snapshot(a.session).unwrap().payload,
+        mgr.snapshot(b).unwrap().payload,
+        "{tag}: full host state differs after restore"
+    );
+
+    mgr.close(a.session).unwrap();
+    mgr.close(b).unwrap();
+}
+
+#[test]
+fn checkpoint_restore_matrix_is_bit_identical() {
+    let dir = tmp_dir("matrix");
+    // One manager for the whole matrix so each (design, parts) compiles
+    // once and the other cells replay it from the cache.
+    let mut mgr = SessionManager::new(Some(dir.join("cache")), 8);
+    for design in ["fir8", "tiny_cpu_divergent"] {
+        for parts in [1usize, 4] {
+            for lanes in [1usize, 8] {
+                for sparse in [false, true] {
+                    checkpoint_matrix_case(&mut mgr, &dir, design, parts, lanes, sparse);
+                }
+            }
+        }
+    }
+}
+
+/// A packed session (sharing a host with another session) snapshots as
+/// a lane slice; restoring it onto a fresh host resumes bit-identically
+/// while the original host and its other tenant keep running.
+#[test]
+fn packed_lane_slice_checkpoint_restores_bit_identical() {
+    let dir = tmp_dir("slice");
+    let mut mgr = SessionManager::new(None, 4);
+    let first = mgr.open(&cfg("fir8", 1, 8, 2, false)).unwrap();
+    let second = mgr.open(&cfg("fir8", 1, 8, 3, false)).unwrap();
+    assert_eq!(first.host, second.host, "same-design sessions should pack");
+    assert_eq!(second.lane0, 2, "contiguous packing after the width-2 slice");
+
+    for id in [first.session, second.session] {
+        mgr.submit_design(id, 25).unwrap();
+        assert!(mgr.poll(id, usize::MAX, far()).unwrap().done);
+    }
+    let path = dir.join("slice.rtal");
+    let (_, at) = mgr.checkpoint(second.session, &path).unwrap();
+    assert_eq!(at, 25);
+
+    for id in [first.session, second.session] {
+        mgr.submit_design(id, 15).unwrap();
+    }
+    let cont = mgr.poll(second.session, usize::MAX, far()).unwrap();
+    assert!(cont.done && cont.cycle == 40);
+
+    let (restored, cycle) = mgr.restore(&path).unwrap();
+    assert_eq!(cycle, 25);
+    mgr.submit_design(restored, 15).unwrap();
+    let cont_r = mgr.poll(restored, usize::MAX, far()).unwrap();
+    assert_eq!(cont.records, cont_r.records, "restored slice diverged");
+    assert_eq!(
+        mgr.session_regs(second.session).unwrap(),
+        mgr.session_regs(restored).unwrap()
+    );
+    // The host-mate was never disturbed: it still drains its own queue.
+    let mate = mgr.poll(first.session, usize::MAX, far()).unwrap();
+    assert!(mate.done && mate.cycle == 40);
+}
+
+/// Corrupted or truncated snapshot files are rejected with a structured
+/// error from `restore` — never a panic, never a silently-wrong state.
+#[test]
+fn corrupt_snapshots_are_rejected_not_loaded() {
+    let dir = tmp_dir("corrupt");
+    let mut mgr = SessionManager::new(None, 4);
+    let s = mgr.open(&cfg("counter", 1, 1, 1, false)).unwrap();
+    mgr.submit_design(s.session, 10).unwrap();
+    assert!(mgr.poll(s.session, usize::MAX, far()).unwrap().done);
+    let path = dir.join("good.rtal");
+    mgr.checkpoint(s.session, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert!(mgr.restore(&path).is_ok(), "the pristine file must load");
+
+    // Single-byte corruption at several depths: header, config, payload,
+    // checksum trailer.
+    let bad_path = dir.join("bad.rtal");
+    for pos in [0, 5, good.len() / 3, good.len() / 2, good.len() - 1] {
+        let mut bad = good.clone();
+        bad[pos] ^= 0x40;
+        std::fs::write(&bad_path, &bad).unwrap();
+        let err = mgr.restore(&bad_path).unwrap_err();
+        assert!(!err.is_empty(), "flip at {pos}: empty error message");
+    }
+    // Truncations, including an empty file.
+    for keep in [0, 3, good.len() / 2, good.len() - 1] {
+        std::fs::write(&bad_path, &good[..keep]).unwrap();
+        assert!(mgr.restore(&bad_path).is_err(), "truncated to {keep} bytes loaded");
+    }
+    // Missing file is an error, not a panic.
+    assert!(mgr.restore(&dir.join("nope.rtal")).is_err());
+}
+
+/// The cache's reason to exist: once a design has been compiled under a
+/// configuration, re-opening it — from memory or from the on-disk store
+/// in a fresh process — costs < 10% of the cold compile+partition time.
+#[test]
+fn warm_open_is_under_ten_percent_of_cold_compile() {
+    let dir = tmp_dir("warm");
+    let design = catalog("rocket_like_1c").unwrap();
+
+    let mut cold_cache = DesignCache::new(Some(dir.clone()), 4);
+    let (_, cold) = cold_cache
+        .open_design(&design, true, 4, PartitionerKind::MinCut)
+        .unwrap();
+    assert!(!cold.hit);
+    assert_eq!(cold.source, OpenSource::Compiled);
+
+    let (_, mem) = cold_cache
+        .open_design(&design, true, 4, PartitionerKind::MinCut)
+        .unwrap();
+    assert!(mem.hit);
+    assert_eq!(mem.source, OpenSource::Memory);
+
+    // A fresh cache over the same directory models a server restart:
+    // the open is answered from disk without recompiling.
+    let mut disk_cache = DesignCache::new(Some(dir), 4);
+    let (_, disk) = disk_cache
+        .open_design(&design, true, 4, PartitionerKind::MinCut)
+        .unwrap();
+    assert!(disk.hit);
+    assert_eq!(disk.source, OpenSource::Disk);
+
+    let budget = cold.cold_compile.as_secs_f64() * 0.10;
+    assert!(
+        mem.open_time.as_secs_f64() < budget,
+        "memory hit took {:?}, cold compile {:?}",
+        mem.open_time,
+        cold.cold_compile
+    );
+    assert!(
+        disk.open_time.as_secs_f64() < budget,
+        "disk hit took {:?}, cold compile {:?}",
+        disk.open_time,
+        cold.cold_compile
+    );
+}
