@@ -32,16 +32,20 @@ fn main() -> anyhow::Result<()> {
     // waveform mode: no mux fusion so named signals survive (§6.2)
     let c = compile_design(&design, CompileOpts { fuse: false });
     let mut kernel = build_with_oim(KernelConfig::PSU, &c.ir, &c.oim);
+    // ports are resolved by name — a design without DMI fails here,
+    // with the missing port named, not mid-run
+    let dmi = DmiHost::new(&c.ir).expect("tiny_cpu exposes the dmi ports");
 
     std::fs::create_dir_all("results")?;
     let mut vcd = VcdWriter::create(&c.ir, std::path::Path::new("results/dmi_session.vcd"))?;
 
     // host session
-    DmiHost::load(kernel.as_mut(), 10, &[14]);
-    DmiHost::load(kernel.as_mut(), 11, &[1]);
+    dmi.load(kernel.as_mut(), 10, &[14]);
+    dmi.load(kernel.as_mut(), 11, &[1]);
+    let idle = vec![0u64; c.ir.input_slots.len()];
     let mut cycle = 0u64;
     loop {
-        kernel.step(&[0, 0, 0, 0]);
+        kernel.step(&idle);
         cycle += 1;
         vcd.sample(cycle, kernel.slots())?;
         if kernel.outputs().iter().any(|(n, v)| n == "halted" && *v == 1) {
@@ -50,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         assert!(cycle < 1000);
     }
     vcd.finish()?;
-    let result = DmiHost::peek(kernel.as_mut(), 0);
+    let result = dmi.peek(kernel.as_mut(), 0);
     println!("DUT halted after {cycle} cycles; RAM[0] = {result} (expected 42)");
     println!("waveform written to results/dmi_session.vcd");
     assert_eq!(result, 42);

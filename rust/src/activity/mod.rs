@@ -89,6 +89,36 @@ impl ActivityStats {
     }
 }
 
+/// Borrowed view of a sparse kernel's change masks for the cycle just
+/// stepped, consumed by the delta-waveform sink
+/// ([`crate::sim::wave::WaveSink`]). Valid from the return of `step()`
+/// until the next `step()`/`poke_lane`:
+///
+/// * `active[g]` — the lanes group `g` evaluated this cycle (a clear bit
+///   proves every slot the group writes is unchanged in that lane);
+/// * `reg_changed[c]` — the lanes in which commit `c` (in `ir.commits`
+///   order) committed a *different* value this cycle (exact, not just
+///   sufficient: the commit loop compares old vs new per lane);
+/// * `changed` — the union over groups, commits, input-port boundary
+///   changes **and out-of-band pokes**: a clear lane bit here proves
+///   every slot of that lane — combinational, register and input alike —
+///   is bit-identical to the previous cycle, so a waveform sink can skip
+///   the whole lane in O(1);
+/// * `recheck` — the lanes an out-of-band `poke_lane` wrote between the
+///   previous step and this one. Per-class gating is *not* exhaustive
+///   there (a poked self-holding register changes with no active writer
+///   group and no `reg_changed` bit), so a sink must fall back to the
+///   full value-diff scan in these lanes. Always a subset of `changed`.
+pub struct WaveMasks<'a> {
+    /// The group dependency graph the masks are indexed by
+    /// (`GroupDepGraph::writer_of` classifies slots to groups).
+    pub gdg: &'a GroupDepGraph,
+    pub active: &'a [u64],
+    pub reg_changed: &'a [u64],
+    pub changed: u64,
+    pub recheck: u64,
+}
+
 /// The all-lanes-active mask for a `lanes`-wide batch (`lanes ≤ 64`).
 #[inline]
 pub fn full_mask(lanes: usize) -> u64 {

@@ -137,6 +137,16 @@ impl PartitionTracker {
         self.active[p] != 0
     }
 
+    /// The lane mask partition `p` is active in this cycle: a clear bit
+    /// proves no boundary source partition `p`'s cone reads (input port
+    /// or cut register) changed in that lane, so everything the
+    /// partition computes there — combinational slots and commits alike
+    /// — is bit-identical to the previous cycle (the delta-waveform
+    /// sink's per-lane skip oracle, [`crate::activity::WaveMasks`]).
+    pub fn active_mask(&self, p: usize) -> u64 {
+        self.active[p]
+    }
+
     /// Record that a register read by `readers` changed in the lanes of
     /// `mask` — those partitions must step next cycle. Drives both the
     /// RUM exchange's differential change bits and the coordinator's

@@ -58,11 +58,18 @@ COMMANDS:
                                probability R per cycle; default random)
             [--cycles N]       cycle count (default: design default)
             [--vcd F]          write waveforms (delta-encoded: quiescent
-                               cycles emit nothing). With --parts: lane 0's
-                               design output ports (partition 0 commits
-                               every output; internal names live in
-                               replicated cones). Not supported with
-                               --lanes (waveforms are per-lane)
+                               cycles and quiescent lanes emit nothing).
+                               With --lanes: every named signal of each
+                               selected lane, gated by the activity
+                               change masks on sparse runs. With --parts:
+                               each selected lane's design output ports
+                               (partition 0 commits every output;
+                               internal names live in replicated cones)
+            [--wave-lanes L,..] with --vcd on a --lanes/--parts run:
+                               comma-separated list of lanes to stream
+                               (default: lane 0). A single lane writes F
+                               itself; several lanes write one file each
+                               with `.laneN` inserted before the extension
   serve                        run the simulation service (NDJSON requests,
                                one per line; schema in the service module
                                docs): a content-addressed design cache,
@@ -74,6 +81,10 @@ COMMANDS:
                                opens are hash lookups, even across runs)
             [--cache-cap N]    in-memory cache capacity (default 8)
             [--timeout-ms N]   default per-request budget (default 2000)
+            [--idle-timeout-ms N]
+                               close --socket connections idle longer
+                               than N ms; their sessions survive a
+                               reconnect (default 30000)
   xla-sim   --design D         simulate via the AOT XLA/PJRT artifact
             [--artifacts DIR]  artifact directory (default: artifacts)
             [--cycles N]
@@ -196,6 +207,54 @@ fn toggle_arg(args: &Args, d: &crate::designs::Design, sparse: bool) -> Result<O
     }
 }
 
+/// Validate and parse `--wave-lanes`: a comma-separated list of lane
+/// indices to stream waveforms for. Requires `--vcd`; every entry must
+/// be a valid lane of the run; duplicates are rejected (two sinks on one
+/// file would interleave). Defaults to `[0]` so plain `--vcd` keeps its
+/// historical lane-0 meaning.
+fn wave_lanes_arg(args: &Args, lanes: usize) -> Result<Vec<usize>> {
+    let spec = match args.opt("wave-lanes") {
+        None => return Ok(vec![0]),
+        Some(s) => s,
+    };
+    if args.opt("vcd").is_none() {
+        bail!("--wave-lanes requires --vcd (it selects which lanes the waveform covers)");
+    }
+    let mut out: Vec<usize> = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        let l: usize = tok
+            .parse()
+            .ok()
+            .with_context(|| format!("--wave-lanes: '{tok}' is not a lane index"))?;
+        if l >= lanes {
+            bail!("--wave-lanes: lane {l} out of range (run has {lanes} lanes)");
+        }
+        if out.contains(&l) {
+            bail!("--wave-lanes: lane {l} listed twice");
+        }
+        out.push(l);
+    }
+    Ok(out)
+}
+
+/// Per-lane waveform file naming: a single selected lane writes the
+/// `--vcd` path as given; several lanes each get `.laneN` inserted
+/// before the extension (`waves.vcd` → `waves.lane3.vcd`).
+fn lane_vcd_path(base: &str, lane: usize, multi: bool) -> PathBuf {
+    if !multi {
+        return PathBuf::from(base);
+    }
+    let p = PathBuf::from(base);
+    match (
+        p.file_stem().and_then(|s| s.to_str()),
+        p.extension().and_then(|e| e.to_str()),
+    ) {
+        (Some(stem), Some(ext)) => p.with_file_name(format!("{stem}.lane{lane}.{ext}")),
+        _ => PathBuf::from(format!("{base}.lane{lane}")),
+    }
+}
+
 fn cmd_sim(args: &Args) -> Result<()> {
     let d = design_arg(args)?;
     let cycles = args.opt_u64("cycles", d.default_cycles)?;
@@ -220,17 +279,22 @@ fn cmd_sim(args: &Args) -> Result<()> {
         }
         let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
         let toggle = toggle_arg(args, &d, sparse)?;
-        // --vcd on a partitioned run dumps lane 0's *output ports*:
-        // internal named slots live in replicated per-partition cones, but
-        // partition 0 computes every design output by construction, so the
-        // buffered lane-0 output values are globally correct committed state.
-        let mut vcd = match args.opt("vcd") {
-            Some(p) => Some(crate::sim::vcd::VcdWriter::create_outputs(
-                &c.ir,
-                std::path::Path::new(p),
-            )?),
-            None => None,
-        };
+        // --vcd on a partitioned run streams the selected lanes' *output
+        // ports*: internal named slots live in replicated per-partition
+        // cones, but partition 0 computes every design output by
+        // construction, so the buffered lane output values are globally
+        // correct committed state.
+        let wave = wave_lanes_arg(args, lanes)?;
+        let mut sinks: Vec<crate::sim::WaveSink> = Vec::new();
+        if let Some(base) = args.opt("vcd") {
+            for &l in &wave {
+                sinks.push(crate::sim::WaveSink::create_outputs(
+                    &c.ir,
+                    l,
+                    &lane_vcd_path(base, l, wave.len() > 1),
+                )?);
+            }
+        }
         let mut sim = super::parallel::BatchParallelSim::with_partitioner(
             &c.ir,
             cfg,
@@ -247,21 +311,17 @@ fn cmd_sim(args: &Args) -> Result<()> {
             None => d.make_lane_stimulus(lanes),
         };
         let mut obuf: Vec<(String, u64)> = Vec::new();
-        let mut vbuf: Vec<u64> = Vec::new();
         let t0 = std::time::Instant::now();
         for cyc in 0..cycles {
             sim.step(&stim(cyc));
-            if let Some(w) = vcd.as_mut() {
-                sim.write_lane_outputs(0, &mut obuf);
-                vbuf.clear();
-                vbuf.extend(obuf.iter().map(|&(_, v)| v));
-                w.sample_values(cyc + 1, &vbuf)
+            for s in &mut sinks {
+                s.sample_parallel(cyc + 1, &sim, &mut obuf)
                     .context("writing VCD waveform (--vcd target)")?;
             }
         }
         let dt = t0.elapsed();
-        if let Some(w) = vcd {
-            w.finish()?;
+        for s in sinks {
+            s.finish()?;
         }
         let aggregate = (cycles as f64 * lanes as f64) / dt.as_secs_f64().max(1e-12);
         println!(
@@ -301,12 +361,11 @@ fn cmd_sim(args: &Args) -> Result<()> {
         if backend != "interp" {
             bail!("--lanes/--sparse require --backend interp (got '{backend}')");
         }
-        if args.opt("vcd").is_some() {
-            bail!("--lanes does not support --vcd (waveforms are per-lane)");
-        }
         let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
-        // validate --toggle before paying for kernel construction
+        // validate --toggle and --wave-lanes before paying for kernel
+        // construction
         let toggle = toggle_arg(args, &d, sparse)?;
+        let wave = wave_lanes_arg(args, lanes)?;
         let mut kernel = if sparse {
             if !crate::kernels::supports_sparse(cfg) {
                 bail!(
@@ -319,6 +378,19 @@ fn cmd_sim(args: &Args) -> Result<()> {
             crate::kernels::build_batch(cfg, &c.ir, &c.oim, lanes)
         };
         d.apply_lane_init(&c.graph, kernel.as_mut());
+        // per-lane delta waveforms: one activity-gated sink per selected
+        // lane, every named slot of that lane (see crate::sim::wave)
+        let mut sinks: Vec<crate::sim::WaveSink> = Vec::new();
+        if let Some(base) = args.opt("vcd") {
+            for &l in &wave {
+                sinks.push(crate::sim::WaveSink::create(
+                    &c.ir,
+                    kernel.as_ref(),
+                    l,
+                    &lane_vcd_path(base, l, wave.len() > 1),
+                )?);
+            }
+        }
         let mut stim = match toggle {
             Some(rate) => d.make_lane_stimulus_toggle(lanes, rate),
             None => d.make_lane_stimulus(lanes),
@@ -326,8 +398,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
         let t0 = std::time::Instant::now();
         for cyc in 0..cycles {
             kernel.step(&stim(cyc));
+            for s in &mut sinks {
+                s.sample_kernel(cyc + 1, kernel.as_ref())
+                    .context("writing VCD waveform (--vcd target)")?;
+            }
         }
         let dt = t0.elapsed();
+        for s in sinks {
+            s.finish()?;
+        }
         let aggregate = (cycles as f64 * lanes as f64) / dt.as_secs_f64().max(1e-12);
         println!(
             "{} x{lanes} lanes: {cycles} cycles/lane in {} ({:.2} M lane-cyc/s aggregate, {:.2} Mcyc/s per lane)",
@@ -411,6 +490,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cache_dir: args.opt("cache-dir").map(PathBuf::from),
         cache_cap: args.opt_usize("cache-cap", 8)?,
         timeout_ms: args.opt_u64("timeout-ms", 2_000)?,
+        idle_timeout_ms: args.opt_u64("idle-timeout-ms", 30_000)?,
     };
     if opts.cache_cap == 0 {
         bail!("--cache-cap must be >= 1 (got 0)");
@@ -583,5 +663,57 @@ mod tests {
         ]));
         let msg = partitioner_arg(&d, true, "interp").unwrap_err().to_string();
         assert!(msg.contains("metis"), "error names the bad strategy: {msg}");
+    }
+
+    /// `--wave-lanes` parses a validated lane list, defaults to lane 0,
+    /// requires `--vcd`, and rejects out-of-range / duplicate /
+    /// non-numeric entries with errors naming the offender.
+    #[test]
+    fn wave_lanes_argument_validation() {
+        let a = Args::parse(&v(&[
+            "sim", "--design", "fir8", "--lanes", "8", "--vcd", "w.vcd",
+            "--wave-lanes", "0,3, 7",
+        ]));
+        assert_eq!(wave_lanes_arg(&a, 8).unwrap(), vec![0, 3, 7]);
+
+        // plain --vcd (no --wave-lanes) keeps the historical lane-0 meaning
+        let b = Args::parse(&v(&["sim", "--design", "fir8", "--lanes", "8", "--vcd", "w.vcd"]));
+        assert_eq!(wave_lanes_arg(&b, 8).unwrap(), vec![0]);
+
+        let no_vcd = Args::parse(&v(&[
+            "sim", "--design", "fir8", "--lanes", "8", "--wave-lanes", "1",
+        ]));
+        let msg = wave_lanes_arg(&no_vcd, 8).unwrap_err().to_string();
+        assert!(msg.contains("--vcd"), "error points at the missing --vcd: {msg}");
+
+        let oob = Args::parse(&v(&[
+            "sim", "--design", "fir8", "--lanes", "4", "--vcd", "w.vcd", "--wave-lanes", "4",
+        ]));
+        let msg = wave_lanes_arg(&oob, 4).unwrap_err().to_string();
+        assert!(msg.contains("out of range"), "{msg}");
+
+        let dup = Args::parse(&v(&[
+            "sim", "--design", "fir8", "--lanes", "4", "--vcd", "w.vcd", "--wave-lanes", "2,2",
+        ]));
+        assert!(wave_lanes_arg(&dup, 4).is_err());
+
+        let junk = Args::parse(&v(&[
+            "sim", "--design", "fir8", "--lanes", "4", "--vcd", "w.vcd", "--wave-lanes", "1,x",
+        ]));
+        let msg = wave_lanes_arg(&junk, 4).unwrap_err().to_string();
+        assert!(msg.contains('x'), "error names the bad token: {msg}");
+    }
+
+    /// Multi-lane waveform runs get `.laneN` inserted before the
+    /// extension; a single selected lane writes the given path verbatim.
+    #[test]
+    fn lane_vcd_path_naming() {
+        assert_eq!(lane_vcd_path("waves.vcd", 3, false), PathBuf::from("waves.vcd"));
+        assert_eq!(lane_vcd_path("waves.vcd", 3, true), PathBuf::from("waves.lane3.vcd"));
+        assert_eq!(
+            lane_vcd_path("out/dir/w.vcd", 0, true),
+            PathBuf::from("out/dir/w.lane0.vcd")
+        );
+        assert_eq!(lane_vcd_path("noext", 2, true), PathBuf::from("noext.lane2"));
     }
 }

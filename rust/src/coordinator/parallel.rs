@@ -142,6 +142,12 @@ pub struct BatchParallelSim {
     input_changed: Vec<u64>,
     input_masks: Vec<u64>,
     num_inputs: usize,
+    /// lanes in which partition 0's slot file — hence any design output —
+    /// may have changed during the last step ([`Self::wave_changed`])
+    wave_live: u64,
+    /// an out-of-band write (`poke_lane` / `import_state`) bypassed the
+    /// `wave_live` accounting; the next step reports every lane changed
+    wave_dirty: bool,
 }
 
 impl BatchParallelSim {
@@ -289,6 +295,8 @@ impl BatchParallelSim {
             input_changed: vec![0u64; num_inputs],
             input_masks: ir.input_widths.iter().map(|&w| mask(w)).collect(),
             num_inputs,
+            wave_live: 0,
+            wave_dirty: false,
         }
     }
 
@@ -334,6 +342,10 @@ impl BatchParallelSim {
         // 3. RUM exchange (differential: only changed lanes cross
         //    partitions), feeding next cycle's activity masks
         let sparse = self.tracker.is_some();
+        // lanes in which a cut register was poked into partition 0 this
+        // cycle — those pokes change partition 0's slot file *after* it
+        // stepped, so the waveform-lane accounting below must include them
+        let mut rum_poked0 = 0u64;
         for t_idx in 0..self.tracked.len() {
             let entry = &self.tracked[t_idx];
             if !sparse && entry.rum_readers.is_empty() {
@@ -377,6 +389,9 @@ impl BatchParallelSim {
                         changed |= 1u64 << l;
                     }
                     for &r in &entry.rum_readers {
+                        if r == 0 {
+                            rum_poked0 |= 1u64 << l;
+                        }
                         self.pool.kernel_mut(r as usize).poke_lane(
                             entry.reg_slot,
                             l,
@@ -390,6 +405,21 @@ impl BatchParallelSim {
                     tr.note_reg_change(&entry.readers, changed);
                 }
             }
+        }
+
+        // 4. waveform-lane accounting (sparse only): a lane's design
+        //    outputs can only differ from the previous cycle when
+        //    partition 0 was active in it (its cone's boundary changed),
+        //    an input port changed in it (passthrough outputs), or a cut
+        //    register was poked into partition 0 in it this cycle. An
+        //    out-of-band poke since the last step voids the proof once.
+        if let Some(t) = &self.tracker {
+            self.wave_live = if std::mem::take(&mut self.wave_dirty) {
+                crate::activity::full_mask(self.lanes)
+            } else {
+                let input_union = self.input_changed.iter().fold(0u64, |a, &m| a | m);
+                t.active_mask(0) | input_union | rum_poked0
+            };
         }
     }
 
@@ -415,6 +445,19 @@ impl BatchParallelSim {
         }
     }
 
+    /// Lanes in which the design outputs may differ from the previous
+    /// cycle, for the delta-waveform sink
+    /// ([`crate::sim::wave::WaveSink::sample_parallel`]): `Some(mask)` on
+    /// sparse runs — a clear bit *proves* the lane's outputs are
+    /// bit-identical to the previous cycle's, so the sink skips the lane
+    /// in O(1) — `None` on dense runs, which keep no change accounting
+    /// (the sink then falls back to a full per-output value diff). Valid
+    /// from the return of [`Self::step`] until the next
+    /// `step`/`poke_lane`.
+    pub fn wave_changed(&self) -> Option<u64> {
+        self.tracker.as_ref().map(|_| self.wave_live)
+    }
+
     /// Committed value of register slot `reg_slot` in `lane`, read from
     /// the partition that owns (commits) the register.
     pub fn reg_lane(&self, reg_slot: u32, lane: usize) -> u64 {
@@ -433,6 +476,7 @@ impl BatchParallelSim {
     /// dense run's would — step in the poked lane next cycle. (The
     /// per-kernel `poke_lane` is equally targeted at the group level.)
     pub fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
+        self.wave_dirty = true;
         for p in 0..self.pool.parts() {
             self.pool.kernel_mut(p).poke_lane(slot, lane, value);
         }
@@ -563,6 +607,7 @@ impl BatchParallelSim {
             t.import_state(&st.tracker_state)?;
         }
         self.cycles_total = st.cycles_total;
+        self.wave_dirty = true;
         Ok(())
     }
 

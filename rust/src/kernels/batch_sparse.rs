@@ -54,7 +54,7 @@ use super::batch::kop_dispatch;
 use super::common::BatchDriver;
 use super::{tile, BatchKernel};
 use crate::activity::gdg::Group;
-use crate::activity::{ActivityStats, ActivityTracker, GroupDepGraph};
+use crate::activity::{ActivityStats, ActivityTracker, GroupDepGraph, WaveMasks};
 use crate::tensor::ir::{KOp, LayerIr, OpRec};
 use crate::tensor::oim::{Oim, OimArrays};
 
@@ -80,19 +80,24 @@ macro_rules! for_lanes {
 /// Shared `poke_lane` body of the sparse executors: write the slot and —
 /// only when the value actually changed — feed the tracker the targeted
 /// invalidation (the slot's writer + reader groups, in the poked lane),
-/// instead of the old all-groups/all-lanes recold per poke.
+/// instead of the old all-groups/all-lanes recold per poke. Returns the
+/// poked lane's bit if the value changed (0 for a no-op poke), which the
+/// executors accumulate into the next cycle's [`WaveMasks::recheck`].
 fn poke_lane_tracked(
     d: &mut BatchDriver,
     tracker: &mut ActivityTracker,
     slot: u32,
     lane: usize,
     value: u64,
-) {
+) -> u64 {
     assert!(lane < d.lanes, "lane {lane} out of range (lanes = {})", d.lanes);
     let changed = d.v[slot as usize * d.lanes + lane] != value;
     d.poke_lane(slot, lane, value);
     if changed {
         tracker.note_slot_changed(slot, 1u64 << lane);
+        1u64 << lane
+    } else {
+        0
     }
 }
 
@@ -233,6 +238,12 @@ pub struct SparseNuBatch {
     chain_buf: Vec<u64>,
     /// reg slot → next slot (see [`next_of_reg`])
     reg_next: std::collections::HashMap<u32, u32>,
+    /// union of all change sources of the last step ([`WaveMasks::changed`])
+    live: u64,
+    /// lanes poked out of band since the previous step ([`WaveMasks::recheck`])
+    recheck: u64,
+    /// poke accumulator, drained into `recheck` at the next step
+    poked: u64,
 }
 
 impl SparseNuBatch {
@@ -247,6 +258,9 @@ impl SparseNuBatch {
             tracker,
             chain_buf: vec![0; max_arity.max(3)],
             reg_next: next_of_reg(&ir.commits),
+            live: 0,
+            recheck: 0,
+            poked: 0,
         }
     }
 
@@ -270,6 +284,11 @@ impl BatchKernel for SparseNuBatch {
 
     fn step(&mut self, inputs: &[u64]) {
         self.d.set_inputs_tracked(inputs, &mut self.tracker.input_changed);
+        // union of every change source this cycle, for WaveMasks::changed:
+        // input boundary bits must be read here (begin_cycle consumes them)
+        let mut live: u64 = self.tracker.input_changed.iter().fold(0, |a, &m| a | m);
+        self.recheck = std::mem::take(&mut self.poked);
+        live |= self.recheck;
         self.tracker.begin_cycle();
         let lanes = self.d.lanes;
         let full = self.tracker.full;
@@ -280,9 +299,11 @@ impl BatchKernel for SparseNuBatch {
             if mask == 0 {
                 continue;
             }
+            live |= mask;
             run_group_sparse(grp, mask, full, lanes, v, &o.c, &mut self.chain_buf);
         }
         self.d.commit_tracked(&mut self.tracker.reg_changed);
+        self.live = live | self.tracker.reg_changed.iter().fold(0, |a, &m| a | m);
     }
 
     fn slots(&self) -> &[u64] {
@@ -298,11 +319,21 @@ impl BatchKernel for SparseNuBatch {
     }
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
-        poke_lane_tracked(&mut self.d, &mut self.tracker, slot, lane, value);
+        self.poked |= poke_lane_tracked(&mut self.d, &mut self.tracker, slot, lane, value);
     }
 
     fn activity_stats(&self) -> Option<ActivityStats> {
         Some(self.tracker.stats())
+    }
+
+    fn wave_masks(&self) -> Option<WaveMasks<'_>> {
+        Some(WaveMasks {
+            gdg: &self.tracker.gdg,
+            active: &self.tracker.active,
+            reg_changed: &self.tracker.reg_changed,
+            changed: self.live,
+            recheck: self.recheck,
+        })
     }
 
     fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {
@@ -509,6 +540,12 @@ pub struct SparseTiBatch {
     tracker: ActivityTracker,
     /// reg slot → next slot (see [`next_of_reg`])
     reg_next: std::collections::HashMap<u32, u32>,
+    /// union of all change sources of the last step ([`WaveMasks::changed`])
+    live: u64,
+    /// lanes poked out of band since the previous step ([`WaveMasks::recheck`])
+    recheck: u64,
+    /// poke accumulator, drained into `recheck` at the next step
+    poked: u64,
 }
 
 impl SparseTiBatch {
@@ -531,6 +568,9 @@ impl SparseTiBatch {
             ranges,
             tracker,
             reg_next: next_of_reg(&ir.commits),
+            live: 0,
+            recheck: 0,
+            poked: 0,
         }
     }
 }
@@ -546,6 +586,10 @@ impl BatchKernel for SparseTiBatch {
 
     fn step(&mut self, inputs: &[u64]) {
         self.d.set_inputs_tracked(inputs, &mut self.tracker.input_changed);
+        // see SparseNuBatch::step — same WaveMasks::changed accumulation
+        let mut live: u64 = self.tracker.input_changed.iter().fold(0, |a, &m| a | m);
+        self.recheck = std::mem::take(&mut self.poked);
+        live |= self.recheck;
         self.tracker.begin_cycle();
         let lanes = self.d.lanes;
         let full = self.tracker.full;
@@ -555,11 +599,13 @@ impl BatchKernel for SparseTiBatch {
             if mask == 0 {
                 continue;
             }
+            live |= mask;
             for (f, rec) in &self.tape[start as usize..end as usize] {
                 f(v, rec, &self.ext_args, lanes, mask, full);
             }
         }
         self.d.commit_tracked(&mut self.tracker.reg_changed);
+        self.live = live | self.tracker.reg_changed.iter().fold(0, |a, &m| a | m);
     }
 
     fn slots(&self) -> &[u64] {
@@ -575,11 +621,21 @@ impl BatchKernel for SparseTiBatch {
     }
 
     fn poke_lane(&mut self, slot: u32, lane: usize, value: u64) {
-        poke_lane_tracked(&mut self.d, &mut self.tracker, slot, lane, value);
+        self.poked |= poke_lane_tracked(&mut self.d, &mut self.tracker, slot, lane, value);
     }
 
     fn activity_stats(&self) -> Option<ActivityStats> {
         Some(self.tracker.stats())
+    }
+
+    fn wave_masks(&self) -> Option<WaveMasks<'_>> {
+        Some(WaveMasks {
+            gdg: &self.tracker.gdg,
+            active: &self.tracker.active,
+            reg_changed: &self.tracker.reg_changed,
+            changed: self.live,
+            recheck: self.recheck,
+        })
     }
 
     fn restore_slots(&mut self, slots: &[u64]) -> Result<(), String> {

@@ -291,6 +291,15 @@ pub trait BatchKernel: Send {
             ))
         }
     }
+    /// Borrowed change-mask view of the cycle just stepped, for the
+    /// delta-waveform sink ([`crate::sim::wave::WaveSink`]): which groups
+    /// evaluated, which commits changed, and which lanes changed at all.
+    /// `None` on dense executors, which detect no changes (the sink then
+    /// falls back to a full per-var value-diff scan). Valid from the
+    /// return of [`Self::step`] until the next `step`/`poke_lane`.
+    fn wave_masks(&self) -> Option<crate::activity::WaveMasks<'_>> {
+        None
+    }
     /// Active-lane mask of the group that computed register `slot`'s
     /// next-state value in the last [`Self::step`] — the RUM exchange's
     /// fast-skip oracle: `Some(0)` proves no lane re-evaluated the

@@ -32,11 +32,14 @@ pub struct ServeOpts {
     pub cache_cap: usize,
     /// Default per-request time budget.
     pub timeout_ms: u64,
+    /// Unix-socket connections idle longer than this are closed (their
+    /// sessions survive; reconnect and keep polling). Ignored on stdio.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { cache_dir: None, cache_cap: 8, timeout_ms: 2_000 }
+        ServeOpts { cache_dir: None, cache_cap: 8, timeout_ms: 2_000, idle_timeout_ms: 30_000 }
     }
 }
 
@@ -107,13 +110,23 @@ impl Server {
                     ));
                 }
                 let cycles = Json::Arr(r.records.iter().map(record_json).collect());
+                let mut fields = vec![
+                    ("cycles", cycles),
+                    ("cycle", Json::Int(r.cycle as i64)),
+                    ("done", Json::Bool(r.done)),
+                ];
+                if let Some(chunk) = r.wave_chunk {
+                    // VCD is pure ASCII; ship the chunk as a JSON string
+                    // (newlines escaped by the encoder)
+                    fields.push(("wave", Json::Str(String::from_utf8_lossy(&chunk).into_owned())));
+                }
+                Ok(ok_reply(id, fields))
+            }
+            Verb::Wave { session, lane } => {
+                self.mgr.attach_wave(*session, *lane).map_err(fail)?;
                 Ok(ok_reply(
                     id,
-                    vec![
-                        ("cycles", cycles),
-                        ("cycle", Json::Int(r.cycle as i64)),
-                        ("done", Json::Bool(r.done)),
-                    ],
+                    vec![("wave", Json::Bool(true)), ("lane", Json::Int(*lane as i64))],
                 ))
             }
             Verb::Checkpoint { session, path } => {
@@ -186,21 +199,77 @@ pub fn serve_stdio(opts: ServeOpts) -> std::io::Result<()> {
     Server::new(opts).serve(stdin.lock(), stdout.lock())
 }
 
-/// `rteaal serve --socket PATH`: accept Unix-socket connections one at a
-/// time (sessions persist across connections — a client may open, drop
-/// the connection, reconnect, and keep polling the same session ids).
+/// `rteaal serve --socket PATH`: accept Unix-socket connections
+/// concurrently (sessions persist across connections — a client may
+/// open, drop the connection, reconnect, and keep polling the same
+/// session ids).
+///
+/// The [`Server`] itself is not `Send` (stimulus closures, the worker
+/// pool), so it stays on the calling thread as a dispatcher: an acceptor
+/// thread spawns one reader thread per connection, readers forward
+/// complete request lines over a channel and relay the reply back. A
+/// client that connects and then stalls — mid-line or silent — occupies
+/// only its own reader thread; other connections keep being served, and
+/// the per-connection idle timeout ([`ServeOpts::idle_timeout_ms`])
+/// eventually reclaims the stalled one.
 pub fn serve_unix(path: &std::path::Path, opts: ServeOpts) -> std::io::Result<()> {
+    use std::sync::mpsc;
     // a previous server's leftover socket file would make bind fail
     let _ = std::fs::remove_file(path);
     let listener = std::os::unix::net::UnixListener::bind(path)?;
+    let idle = Duration::from_millis(opts.idle_timeout_ms.max(1));
     let mut server = Server::new(opts);
-    for conn in listener.incoming() {
-        let conn = conn?;
-        let reader = BufReader::new(conn.try_clone()?);
-        // a dropped connection ends its serve loop, not the server
-        if let Err(e) = server.serve(reader, conn) {
-            eprintln!("rteaal serve: connection error: {e}");
+    let (tx, rx) = mpsc::channel::<(String, mpsc::Sender<String>)>();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(conn) = conn else { continue };
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = serve_unix_conn(conn, tx, idle) {
+                    eprintln!("rteaal serve: connection error: {e}");
+                }
+            });
         }
+    });
+    // dispatcher: requests from every connection are handled here, one
+    // at a time, so replies never interleave within a connection and the
+    // session table needs no locking
+    for (line, reply_tx) in rx {
+        let reply = server.handle_line(&line);
+        let _ = reply_tx.send(reply);
+    }
+    Ok(())
+}
+
+/// One connection's reader loop: forward request lines to the
+/// dispatcher, write its replies back. Returns when the peer disconnects
+/// or stays idle past `idle` (a read timeout surfaces as an error on the
+/// blocked `read_line`).
+fn serve_unix_conn(
+    conn: std::os::unix::net::UnixStream,
+    tx: std::sync::mpsc::Sender<(String, std::sync::mpsc::Sender<String>)>,
+    idle: Duration,
+) -> std::io::Result<()> {
+    conn.set_read_timeout(Some(idle))?;
+    let mut out = conn.try_clone()?;
+    let reader = BufReader::new(conn);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            // idle timeout or dropped peer: close this connection only
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        if tx.send((line, reply_tx)).is_err() {
+            break; // dispatcher is gone; the process is shutting down
+        }
+        let Ok(reply) = reply_rx.recv() else { break };
+        out.write_all(reply.as_bytes())?;
+        out.write_all(b"\n")?;
+        out.flush()?;
     }
     Ok(())
 }
@@ -323,6 +392,128 @@ mod tests {
             err_code(&s.handle_line(r#"{"id":6,"verb":"restore","path":"/nonexistent/x.rtal"}"#)),
             "io"
         );
+    }
+
+    /// The `wave` verb attaches a delta-waveform sink to a packed
+    /// session, `poll` streams incremental chunks, and the concatenated
+    /// chunks are byte-identical to a solo session's single-shot stream
+    /// of the same lane — across chunk boundaries that fall mid-stream.
+    #[test]
+    fn wave_verb_streams_chunks_matching_a_solo_run() {
+        let mut packed = server();
+        ok(&packed.handle_line(r#"{"id":1,"verb":"open","design":"fir8","lanes":2,"width":1}"#));
+        ok(&packed.handle_line(r#"{"id":2,"verb":"open","design":"fir8","lanes":2,"width":1}"#));
+        let w = ok(&packed.handle_line(r#"{"id":3,"verb":"wave","session":1}"#));
+        assert!(matches!(w.get("wave"), Some(Json::Bool(true))));
+        // double-attach and out-of-range slice lanes are structured errors
+        assert_eq!(
+            err_code(&packed.handle_line(r#"{"id":4,"verb":"wave","session":1}"#)),
+            "bad-config"
+        );
+        assert_eq!(
+            err_code(&packed.handle_line(r#"{"id":5,"verb":"wave","session":0,"lane":1}"#)),
+            "bad-config"
+        );
+        assert_eq!(
+            err_code(&packed.handle_line(r#"{"id":5,"verb":"wave","session":9}"#)),
+            "unknown-session"
+        );
+
+        let mut solo = server();
+        ok(&solo.handle_line(r#"{"id":1,"verb":"open","design":"fir8"}"#));
+        ok(&solo.handle_line(r#"{"id":2,"verb":"wave","session":0}"#));
+
+        // three submit/poll rounds against the packed server: every poll
+        // reply carries one partial chunk (a truncated VCD stream —
+        // chunk boundaries fall mid-waveform, not at sample boundaries)
+        let mut streamed = String::new();
+        for round in 0..3 {
+            for sid in [0, 1] {
+                ok(&packed.handle_line(&format!(
+                    r#"{{"id":6,"verb":"submit","session":{sid},"stimulus":{{"kind":"design","cycles":10}}}}"#
+                )));
+            }
+            let p = ok(&packed.handle_line(r#"{"id":7,"verb":"poll","session":1}"#));
+            let chunk = p.req_str("wave").unwrap();
+            if round == 0 {
+                assert!(chunk.contains("$enddefinitions"), "first chunk carries the header");
+            } else {
+                assert!(!chunk.contains("$enddefinitions"), "header only once");
+            }
+            streamed.push_str(chunk);
+            ok(&packed.handle_line(r#"{"id":8,"verb":"poll","session":0}"#));
+        }
+        ok(&solo.handle_line(
+            r#"{"id":3,"verb":"submit","session":0,"stimulus":{"kind":"design","cycles":30}}"#,
+        ));
+        let p = ok(&solo.handle_line(r#"{"id":4,"verb":"poll","session":0}"#));
+        assert_eq!(
+            streamed,
+            p.req_str("wave").unwrap(),
+            "concatenated packed-session chunks diverge from the solo stream"
+        );
+        // a session without a sink has no wave field at all
+        let bare = ok(&packed.handle_line(r#"{"id":9,"verb":"poll","session":0}"#));
+        assert!(bare.get("wave").is_none());
+    }
+
+    /// Satellite regression: a client that connects and goes silent (or
+    /// stalls mid-line) must not delay another connection's requests —
+    /// the listener is one reader thread per connection with a
+    /// dispatcher, not a sequential accept loop — and the idle timeout
+    /// eventually reclaims the wedged connection.
+    #[test]
+    fn wedged_client_does_not_block_a_second_connection() {
+        use std::io::Read;
+        use std::os::unix::net::UnixStream;
+
+        let dir = tmp_dir("unix_wedge");
+        let sock = dir.join("serve.sock");
+        let sock2 = sock.clone();
+        std::thread::spawn(move || {
+            let _ = serve_unix(
+                &sock2,
+                ServeOpts { idle_timeout_ms: 500, ..ServeOpts::default() },
+            );
+        });
+        let t0 = Instant::now();
+        let mut wedged = loop {
+            match UnixStream::connect(&sock) {
+                Ok(c) => break c,
+                Err(e) => {
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(10),
+                        "server socket never came up: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        // the wedged client stalls mid-request: bytes but no newline
+        wedged.write_all(b"{\"id\":9").unwrap();
+
+        let mut fast = UnixStream::connect(&sock).unwrap();
+        fast.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        fast.write_all(b"{\"id\":1,\"verb\":\"open\",\"design\":\"counter\"}\n").unwrap();
+        let mut reader = BufReader::new(fast.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        ok(&reply);
+        fast.write_all(b"{\"id\":2,\"verb\":\"stats\"}\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        ok(&reply);
+
+        // the idle timeout reclaims the wedged connection: its next read
+        // sees EOF once the server drops it
+        wedged.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut buf = [0u8; 8];
+        assert_eq!(
+            wedged.read(&mut buf).unwrap(),
+            0,
+            "server should close the idle connection"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// A zero budget with queued work times out (code `timeout`) instead

@@ -24,9 +24,10 @@
 //!   corrupt or truncated snapshots are rejected with a structured
 //!   error, never a panic.
 //! * [`proto`] / [`api`] — the *job API*: newline-delimited JSON over
-//!   stdio or a Unix socket, with per-request time budgets and
-//!   structured error replies so a wedged session degrades gracefully
-//!   instead of hanging the server.
+//!   stdio or a Unix socket (concurrent connections, one reader thread
+//!   each, per-connection idle timeout), with per-request time budgets
+//!   and structured error replies so a wedged session or client
+//!   degrades gracefully instead of hanging the server.
 //!
 //! # Request/response schema
 //!
@@ -39,11 +40,21 @@
 //! |--------------|-------------------------------------------------------------|--------------|
 //! | `open`       | `design`; optional `kernel` (default `PSU`), `parts` (1), `lanes` (1, the host width B), `width` (1, lanes for *this* session), `sparse` (false), `fuse` (true) | `session`, `cache` `{key, hit, source, open_ms, cold_compile_ms}`, `host`, `lane0` |
 //! | `submit`     | `session`; stimulus: `{"kind":"design","cycles":N}` or `{"kind":"vectors","vectors":[[...],...]}` (one inner array per cycle, `inputs × width` lane-major words) | `queued` (cycles now queued) |
-//! | `poll`       | `session`; optional `max_cycles`                            | `cycles` (per-cycle output records drained), `cycle` (session cycle count), `done` |
+//! | `poll`       | `session`; optional `max_cycles`                            | `cycles` (per-cycle output records drained), `cycle` (session cycle count), `done`; with a `wave` sink attached also `wave` (incremental VCD chunk, possibly empty) |
+//! | `wave`       | `session`; optional `lane` (0, a *slice* lane of the session) | `wave` (true), `lane` |
 //! | `checkpoint` | `session`, `path`                                           | `path`, `bytes`, `cycle` |
 //! | `restore`    | `path`; optional `design` override check                    | `session` (a **new** session), `cycle` |
 //! | `close`      | `session`                                                   | `closed` |
 //! | `stats`      | —                                                           | cache hit/miss counters, host and session counts |
+//!
+//! `wave` attaches an activity-gated delta-waveform sink
+//! ([`crate::sim::WaveSink`]) to one slice lane; from then on every
+//! `poll` reply carries the VCD bytes produced since the previous poll
+//! as a JSON string. Chunks are *not* standalone VCD documents — only
+//! their concatenation is, and it is byte-identical to a solo
+//! `rteaal sim --parts P --vcd` run of the same lane when the sink is
+//! attached before the first poll. Quiescent cycles (no lane activity)
+//! contribute zero bytes.
 //!
 //! Error codes: `bad-request` (malformed JSON or fields), `unknown-verb`,
 //! `unknown-design`, `unknown-session`, `bad-config` (lane overflow,
@@ -58,10 +69,12 @@
 //! ← {"id":1,"ok":true,"session":0,"cache":{"key":"0f3a...","hit":false,"source":"compiled","open_ms":412.0,"cold_compile_ms":412.0},"host":0,"lane0":0}
 //! → {"id":2,"verb":"open","design":"fir8","kernel":"PSU","lanes":8}
 //! ← {"id":2,"ok":true,"session":1,"cache":{"key":"0f3a...","hit":true,"source":"memory","open_ms":0.1,...},"host":0,"lane0":1}
+//! → {"id":3,"verb":"wave","session":0}
+//! ← {"id":3,"ok":true,"wave":true,"lane":0}
 //! → {"id":3,"verb":"submit","session":0,"stimulus":{"kind":"design","cycles":100}}
 //! ← {"id":3,"ok":true,"queued":100}
 //! → {"id":4,"verb":"poll","session":0}
-//! ← {"id":4,"ok":true,"cycle":100,"done":true,"cycles":[{"cycle":1,"out":{"y":"0x2a"}},...]}
+//! ← {"id":4,"ok":true,"cycle":100,"done":true,"cycles":[{"cycle":1,"out":{"y":"0x2a"}},...],"wave":"$timescale 1ns $end\n...#1\nb101010 a\n..."}
 //! → {"id":5,"verb":"checkpoint","session":0,"path":"/tmp/s0.rtal"}
 //! ← {"id":5,"ok":true,"path":"/tmp/s0.rtal","bytes":1832,"cycle":100}
 //! → {"id":6,"verb":"restore","path":"/tmp/s0.rtal"}
@@ -86,8 +99,15 @@
 //!                             included (no rebuild pass on load)
 //! ```
 //!
-//! Writes are staged into `<key>.tmp` and renamed into place, so a
-//! killed server never leaves a half-written entry under the real key.
+//! Writes are staged into a pid-unique `<key>.tmp.<pid>` and renamed
+//! into place — rename-is-commit is the only synchronization. A killed
+//! server never leaves a half-written entry under the real key; two
+//! *processes* racing the same key never share a staging directory, and
+//! the loser of the commit rename treats the winner's entry as its own
+//! success. Evicting a corrupt entry renames it to a pid-unique
+//! `<key>.trash.<pid>` tombstone before deletion, so a concurrent
+//! reader sees the old entry, the new one, or nothing (→ recompile) —
+//! never a half-deleted directory.
 //!
 //! # Session → lane packing rules
 //!

@@ -80,6 +80,9 @@ pub enum Verb {
     Open(SessionConfig),
     Submit { session: u64, stimulus: StimulusSpec },
     Poll { session: u64, max_cycles: usize },
+    /// Attach a delta-waveform sink to one *slice* lane of a session;
+    /// subsequent `poll` replies carry the incremental VCD chunks.
+    Wave { session: u64, lane: usize },
     Checkpoint { session: u64, path: PathBuf },
     Restore { path: PathBuf },
     Close { session: u64 },
@@ -193,6 +196,14 @@ pub fn parse_request(line: &str) -> Result<Request, ParseError> {
                 .map(|v| v.as_usize().ok_or_else(|| bad(some, "'max_cycles' not an integer")))
                 .transpose()?
                 .unwrap_or(usize::MAX),
+        },
+        "wave" => Verb::Wave {
+            session: j.req_u64("session").map_err(|e| bad(some, e.to_string()))?,
+            lane: j
+                .get("lane")
+                .map(|v| v.as_usize().ok_or_else(|| bad(some, "'lane' not an integer")))
+                .transpose()?
+                .unwrap_or(0),
         },
         "checkpoint" => Verb::Checkpoint {
             session: j.req_u64("session").map_err(|e| bad(some, e.to_string()))?,
@@ -314,6 +325,16 @@ mod tests {
             }
             v => panic!("wrong verb {v:?}"),
         }
+    }
+
+    #[test]
+    fn parses_wave_with_default_lane() {
+        let r = parse_request(r#"{"id":2,"verb":"wave","session":5}"#).unwrap();
+        assert!(matches!(r.verb, Verb::Wave { session: 5, lane: 0 }));
+        let r = parse_request(r#"{"id":3,"verb":"wave","session":1,"lane":3}"#).unwrap();
+        assert!(matches!(r.verb, Verb::Wave { session: 1, lane: 3 }));
+        let e = parse_request(r#"{"id":4,"verb":"wave","lane":1}"#).unwrap_err();
+        assert_eq!(e.1, ErrorCode::BadRequest, "missing session: {}", e.2);
     }
 
     #[test]

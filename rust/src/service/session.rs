@@ -44,6 +44,7 @@ use crate::kernels::{supports_sparse, KernelConfig};
 use crate::partition::PartitionerKind;
 use crate::service::cache::{CachedDesign, DesignCache, OpenReport};
 use crate::service::checkpoint::{Snapshot, SnapshotConfig, SnapshotPayload};
+use crate::sim::WaveSink;
 
 /// One lane's stimulus stream: cycle number in, input-port values out.
 type StimulusFn = Box<dyn FnMut(u64) -> Vec<u64>>;
@@ -100,6 +101,12 @@ pub struct PollResult {
     /// True when the stimulus queue is fully consumed *and* the output
     /// buffer is drained.
     pub done: bool,
+    /// Incremental VCD bytes accumulated since the last poll; `None`
+    /// when no `wave` sink is attached (possibly-empty bytes otherwise —
+    /// quiescent cycles contribute nothing). Concatenating every chunk
+    /// reproduces the exact byte stream a solo `rteaal sim --vcd` run of
+    /// the same lane writes.
+    pub wave_chunk: Option<Vec<u8>>,
 }
 
 /// What `open` produced.
@@ -162,6 +169,9 @@ struct Session {
     /// Queued explicit frames (`inputs × width` lane-major words each).
     vectors: VecDeque<Vec<u64>>,
     out_buf: VecDeque<CycleRecord>,
+    /// Delta-waveform sink over one slice lane's design outputs; the
+    /// pump samples it every stepped cycle and `poll` drains the bytes.
+    wave: Option<WaveSink<Vec<u8>>>,
     failed: Option<String>,
 }
 
@@ -312,6 +322,7 @@ impl SessionManager {
                 design_remaining: 0,
                 vectors: VecDeque::new(),
                 out_buf: VecDeque::new(),
+                wave: None,
                 failed: None,
             },
         );
@@ -369,9 +380,34 @@ impl SessionManager {
         Ok(s.queued())
     }
 
+    /// Attach a delta-waveform sink to `slice_lane` of the session. The
+    /// pump samples it after every stepped cycle from then on and `poll`
+    /// drains the accumulated VCD bytes incrementally; attach before the
+    /// first poll for a stream bit-identical to a solo `--vcd` run (a
+    /// later attach starts with a full value dump of the current state).
+    pub fn attach_wave(&mut self, id: u64, slice_lane: usize) -> Result<(), String> {
+        let (host_idx, lane0, width) = {
+            let s = self.live_session_mut(id)?;
+            (s.host, s.lane0, s.width)
+        };
+        if slice_lane >= width {
+            return Err(format!("slice lane {slice_lane} out of range (width {width})"));
+        }
+        let host = self.hosts[host_idx].as_ref().ok_or("host is gone")?;
+        let sink = WaveSink::attach_outputs(&host.design.ir, lane0 + slice_lane, Vec::new())
+            .map_err(|e| format!("wave sink: {e}"))?;
+        let s = self.sessions.get_mut(&id).expect("checked above");
+        if s.wave.is_some() {
+            return Err(format!("session {id} already streams a waveform"));
+        }
+        s.wave = Some(sink);
+        Ok(())
+    }
+
     /// Advance the session's host as far as queued stimulus (of every
     /// attached session), backpressure and the deadline allow, then
-    /// drain up to `max_records` output records.
+    /// drain up to `max_records` output records (and the waveform bytes,
+    /// when a sink is attached).
     pub fn poll(
         &mut self,
         id: u64,
@@ -387,6 +423,7 @@ impl SessionManager {
             records,
             cycle: s.cycle,
             done: s.queued() == 0 && s.out_buf.is_empty(),
+            wave_chunk: s.wave.as_mut().map(WaveSink::take_chunk),
         })
     }
 
@@ -417,6 +454,7 @@ impl SessionManager {
     fn pump_host_inner(&mut self, host: &mut Host, deadline: Instant) -> Result<(), String> {
         let lanes = host.sig.lanes;
         let mut frame = vec![0u64; host.num_inputs * lanes];
+        let mut wave_buf: Vec<(String, u64)> = Vec::new();
         loop {
             // how far can this bulk-synchronous step go?
             let mut can = u64::MAX;
@@ -491,6 +529,12 @@ impl SessionManager {
                 s.cycle += 1;
                 let rec = CycleRecord { cycle: s.cycle, out: host.sim.lane_outputs(s.lane0) };
                 s.out_buf.push_back(rec);
+                if let Some(w) = s.wave.as_mut() {
+                    // timestamped by the *session* cycle, matching the
+                    // `cyc + 1` numbering of `rteaal sim --vcd`
+                    w.sample_parallel(s.cycle, &host.sim, &mut wave_buf)
+                        .expect("Vec<u8> writes are infallible");
+                }
             }
         }
     }

@@ -5,54 +5,212 @@
 //! [`DmiHost`] is a minimal FESVR analog for `tiny_cpu`: it drives the
 //! `dmi_*` input ports to write words into DUT RAM before releasing the
 //! core, and reads results back through `dmi_rdata` after completion.
+//!
+//! The host resolves every port it touches **by name at construction**
+//! ([`DmiHost::new`]) and reports a structured error naming the missing
+//! port, so a design with extra ports, reordered ports, or no DMI at all
+//! fails loudly before the first cycle instead of silently driving the
+//! wrong wires. The batched methods ([`DmiHost::load_lanes`],
+//! [`DmiHost::run_to_halt_lanes`], [`DmiHost::peek_lane`]) drive a
+//! *distinct* DMI program into every lane of a batched kernel — paired
+//! with [`designs::tiny_cpu::tiny_cpu_divergent`](crate::designs::tiny_cpu)
+//! lane ROMs, that is B different host-DUT sessions per OIM walk.
 
-use crate::kernels::SimKernel;
+use crate::kernels::{BatchKernel, SimKernel};
+use crate::tensor::ir::LayerIr;
 
-/// Input port order expected from `designs::tiny_cpu`:
-/// `[dmi_wen, dmi_addr, dmi_wdata, dmi_raddr]`.
-pub struct DmiHost;
+/// FESVR-style DMI host with ports resolved by name.
+///
+/// Holds the positions of the `dmi_wen` / `dmi_addr` / `dmi_wdata` /
+/// `dmi_raddr` input ports (indices into the kernel's input frame) and of
+/// the `dmi_rdata` / `halted` outputs (indices into
+/// [`SimKernel::outputs`] / [`BatchKernel::lane_outputs`], which follow
+/// `LayerIr::output_slots` order). Any kernel built from the same
+/// [`LayerIr`] — scalar or batched, dense or sparse — is compatible.
+pub struct DmiHost {
+    wen: usize,
+    addr: usize,
+    wdata: usize,
+    raddr: usize,
+    num_inputs: usize,
+    rdata: usize,
+    halted: usize,
+}
 
 impl DmiHost {
+    /// Resolve the DMI ports in `ir`. Errors name the missing port and
+    /// list what the design actually exposes.
+    pub fn new(ir: &LayerIr) -> Result<DmiHost, String> {
+        let input = |name: &str| -> Result<usize, String> {
+            ir.input_slots
+                .iter()
+                .position(|&s| {
+                    ir.slot_names.get(s as usize).and_then(|n| n.as_deref()) == Some(name)
+                })
+                .ok_or_else(|| {
+                    let have: Vec<&str> = ir
+                        .input_slots
+                        .iter()
+                        .filter_map(|&s| ir.slot_names.get(s as usize).and_then(|n| n.as_deref()))
+                        .collect();
+                    format!(
+                        "design '{}' has no input port '{name}' (inputs: {have:?})",
+                        ir.name
+                    )
+                })
+        };
+        let output = |name: &str| -> Result<usize, String> {
+            ir.output_slots.iter().position(|(n, _)| n == name).ok_or_else(|| {
+                let have: Vec<&str> =
+                    ir.output_slots.iter().map(|(n, _)| n.as_str()).collect();
+                format!("design '{}' has no output '{name}' (outputs: {have:?})", ir.name)
+            })
+        };
+        Ok(DmiHost {
+            wen: input("dmi_wen")?,
+            addr: input("dmi_addr")?,
+            wdata: input("dmi_wdata")?,
+            raddr: input("dmi_raddr")?,
+            num_inputs: ir.input_slots.len(),
+            rdata: output("dmi_rdata")?,
+            halted: output("halted")?,
+        })
+    }
+
+    /// One scalar input frame with the DMI ports set and every other
+    /// port idle (zero).
+    fn frame(&self, wen: u64, addr: u64, wdata: u64, raddr: u64) -> Vec<u64> {
+        let mut f = vec![0u64; self.num_inputs];
+        f[self.wen] = wen;
+        f[self.addr] = addr;
+        f[self.wdata] = wdata;
+        f[self.raddr] = raddr;
+        f
+    }
+
     /// Write `words` into DUT RAM starting at `base` (one word per cycle).
-    pub fn load(kernel: &mut dyn SimKernel, base: u32, words: &[u32]) {
+    pub fn load(&self, kernel: &mut dyn SimKernel, base: u32, words: &[u32]) {
         for (i, &w) in words.iter().enumerate() {
-            kernel.step(&[1, (base + i as u32) as u64, w as u64, 0]);
+            kernel.step(&self.frame(1, (base + i as u32) as u64, w as u64, 0));
         }
         // settle cycle with DMI idle
-        kernel.step(&[0, 0, 0, 0]);
+        kernel.step(&self.frame(0, 0, 0, 0));
     }
 
     /// Read one word of DUT RAM via the DMI read port.
-    pub fn peek(kernel: &mut dyn SimKernel, addr: u32) -> u64 {
+    pub fn peek(&self, kernel: &mut dyn SimKernel, addr: u32) -> u64 {
         // drive raddr; the read is combinational, visible after the step
-        kernel.step(&[0, 0, 0, addr as u64]);
-        kernel
-            .outputs()
-            .into_iter()
-            .find(|(n, _)| n == "dmi_rdata")
-            .map(|(_, v)| v)
-            .expect("design exposes dmi_rdata")
+        kernel.step(&self.frame(0, 0, 0, addr as u64));
+        kernel.outputs()[self.rdata].1
     }
 
     /// Run until the DUT raises `halted` (returns cycles, None on timeout).
-    pub fn run_to_halt(kernel: &mut dyn SimKernel, max_cycles: u64) -> Option<u64> {
+    pub fn run_to_halt(&self, kernel: &mut dyn SimKernel, max_cycles: u64) -> Option<u64> {
         for c in 0..max_cycles {
-            kernel.step(&[0, 0, 0, 0]);
-            if kernel.outputs().iter().any(|(n, v)| n == "halted" && *v == 1) {
+            kernel.step(&self.frame(0, 0, 0, 0));
+            if kernel.outputs()[self.halted].1 == 1 {
                 return Some(c + 1);
             }
         }
         None
+    }
+
+    /// Write a *different* word stream into every lane's RAM, starting at
+    /// `base` in each. `words[l]` is lane `l`'s stream; streams may have
+    /// different lengths — a lane whose stream is exhausted idles
+    /// (`dmi_wen = 0`) while the longer ones finish. Ends with one shared
+    /// settle cycle. Errors if `words.len() != kernel.lanes()`.
+    pub fn load_lanes(
+        &self,
+        kernel: &mut dyn BatchKernel,
+        base: u32,
+        words: &[Vec<u32>],
+    ) -> Result<(), String> {
+        let lanes = kernel.lanes();
+        if words.len() != lanes {
+            return Err(format!(
+                "load_lanes: {} word streams for a {lanes}-lane kernel",
+                words.len()
+            ));
+        }
+        let longest = words.iter().map(Vec::len).max().unwrap_or(0);
+        let mut frame = vec![0u64; self.num_inputs * lanes];
+        for i in 0..longest {
+            frame.fill(0);
+            for (l, stream) in words.iter().enumerate() {
+                if let Some(&w) = stream.get(i) {
+                    frame[self.wen * lanes + l] = 1;
+                    frame[self.addr * lanes + l] = (base + i as u32) as u64;
+                    frame[self.wdata * lanes + l] = w as u64;
+                }
+            }
+            kernel.step(&frame);
+        }
+        frame.fill(0);
+        kernel.step(&frame);
+        Ok(())
+    }
+
+    /// Run with the DMI idle until **every** lane raises `halted`.
+    /// Returns each lane's halt cycle (counted from this call, 1-based),
+    /// or None if any lane is still running after `max_cycles`. Lanes
+    /// that halt early keep stepping (the CPU holds its halted state) —
+    /// lanes never desynchronize.
+    pub fn run_to_halt_lanes(
+        &self,
+        kernel: &mut dyn BatchKernel,
+        max_cycles: u64,
+    ) -> Option<Vec<u64>> {
+        let lanes = kernel.lanes();
+        let frame = vec![0u64; self.num_inputs * lanes];
+        let mut halted_at = vec![0u64; lanes];
+        let mut running = lanes;
+        for c in 0..max_cycles {
+            kernel.step(&frame);
+            for (l, at) in halted_at.iter_mut().enumerate() {
+                if *at == 0 && kernel.lane_outputs(l)[self.halted].1 == 1 {
+                    *at = c + 1;
+                    running -= 1;
+                }
+            }
+            if running == 0 {
+                return Some(halted_at);
+            }
+        }
+        None
+    }
+
+    /// Read one word of one lane's RAM. Costs a cycle on the whole batch
+    /// (`dmi_raddr` is driven on every lane; only `lane`'s `dmi_rdata`
+    /// is returned).
+    pub fn peek_lane(
+        &self,
+        kernel: &mut dyn BatchKernel,
+        lane: usize,
+        addr: u32,
+    ) -> Result<u64, String> {
+        let lanes = kernel.lanes();
+        if lane >= lanes {
+            return Err(format!("peek_lane: lane {lane} out of range ({lanes} lanes)"));
+        }
+        let mut frame = vec![0u64; self.num_inputs * lanes];
+        for l in 0..lanes {
+            frame[self.raddr * lanes + l] = addr as u64;
+        }
+        kernel.step(&frame);
+        Ok(kernel.lane_outputs(lane)[self.rdata].1)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::designs::tiny_cpu::{self, addi, beq, halt, lw, sw};
+    use crate::designs::tiny_cpu::{self, add, addi, beq, halt, lw, sw};
+    use crate::designs::{Design, Stimulus};
     use crate::graph::passes::optimize;
-    use crate::kernels::{build, KernelConfig};
+    use crate::kernels::{build, build_batch, build_sparse, KernelConfig};
     use crate::tensor::ir::lower;
+    use crate::tensor::oim::Oim;
 
     /// Full host-DUT session: the DUT spin-waits on a mailbox flag, the
     /// host preloads data + raises the flag via DMI, the program consumes
@@ -70,12 +228,80 @@ mod tests {
         let g = tiny_cpu::tiny_cpu(&prog);
         let (opt, _) = optimize(&g);
         let ir = lower(&opt);
+        let dmi = DmiHost::new(&ir).expect("tiny_cpu exposes the dmi ports");
         let mut kernel = build(KernelConfig::PSU, &ir);
         // host writes 35 into the mailbox, then raises the flag
-        DmiHost::load(kernel.as_mut(), 10, &[35]);
-        DmiHost::load(kernel.as_mut(), 11, &[1]);
-        let cycles = DmiHost::run_to_halt(kernel.as_mut(), 100).expect("halts");
+        dmi.load(kernel.as_mut(), 10, &[35]);
+        dmi.load(kernel.as_mut(), 11, &[1]);
+        let cycles = dmi.run_to_halt(kernel.as_mut(), 100).expect("halts");
         assert!(cycles < 50);
-        assert_eq!(DmiHost::peek(kernel.as_mut(), 0), 42);
+        assert_eq!(dmi.peek(kernel.as_mut(), 0), 42);
+    }
+
+    /// A design without the DMI ports is rejected with an error naming
+    /// the port — no panic, no wrong-wire driving.
+    #[test]
+    fn missing_ports_are_a_structured_error() {
+        let g = crate::designs::simple::fir(8, 16);
+        let (opt, _) = optimize(&g);
+        let ir = lower(&opt);
+        let err = DmiHost::new(&ir).unwrap_err();
+        assert!(err.contains("dmi_wen"), "error names the missing port: {err}");
+        assert!(err.contains("no input port"), "error says what is wrong: {err}");
+    }
+
+    /// B host-DUT sessions on one batched kernel: each lane runs a
+    /// *different* program (divergent lane ROMs) against *different*
+    /// mailbox data (per-lane DMI load), and every lane's result matches
+    /// its own program semantics.
+    #[test]
+    fn divergent_lanes_run_distinct_dmi_programs() {
+        // program A: RAM[0] = mailbox + 7;  program B: RAM[0] = mailbox * 2
+        let spin = vec![lw(2, 0, 11), beq(2, 0, 0)];
+        let mut prog_add = spin.clone();
+        prog_add.extend([lw(1, 0, 10), addi(1, 1, 7), sw(1, 0, 0), halt()]);
+        let mut prog_dbl = spin;
+        prog_dbl.extend([lw(1, 0, 10), add(1, 1, 1), sw(1, 0, 0), halt()]);
+        let progs = vec![prog_add.clone(), prog_dbl.clone()];
+
+        let rom_words = prog_add.len().max(prog_dbl.len());
+        let d = Design {
+            name: "dmi_divergent".into(),
+            graph: tiny_cpu::tiny_cpu_divergent(rom_words, &prog_add),
+            stimulus: Stimulus::Zero,
+            default_cycles: 200,
+            lane_init: tiny_cpu::lane_rom_init(rom_words, &progs),
+        };
+        let (opt, _) = optimize(&d.graph);
+        let ir = lower(&opt);
+        let oim = Oim::from_ir(&ir);
+        let dmi = DmiHost::new(&ir).expect("tiny_cpu exposes the dmi ports");
+
+        let lanes = 4;
+        let mailbox = [5u32, 9, 11, 100];
+        // lane l runs progs[l % 2]: expected RAM[0] per lane
+        let expect = [5 + 7, 9 * 2, 11 + 7, 100 * 2];
+        for sparse in [false, true] {
+            let mut kernel = if sparse {
+                build_sparse(KernelConfig::PSU, &ir, &oim, lanes)
+            } else {
+                build_batch(KernelConfig::PSU, &ir, &oim, lanes)
+            };
+            d.apply_lane_init(&opt, kernel.as_mut());
+            let per_lane: Vec<Vec<u32>> = mailbox.iter().map(|&m| vec![m]).collect();
+            dmi.load_lanes(kernel.as_mut(), 10, &per_lane).unwrap();
+            dmi.load_lanes(kernel.as_mut(), 11, &vec![vec![1]; lanes]).unwrap();
+            let halted = dmi
+                .run_to_halt_lanes(kernel.as_mut(), 200)
+                .unwrap_or_else(|| panic!("all lanes halt (sparse={sparse})"));
+            assert_eq!(halted.len(), lanes);
+            for (l, &want) in expect.iter().enumerate() {
+                let got = dmi.peek_lane(kernel.as_mut(), l, 0).unwrap();
+                assert_eq!(got, want as u64, "lane {l} result (sparse={sparse})");
+            }
+            // wrong stream count and bad lane are structured errors
+            assert!(dmi.load_lanes(kernel.as_mut(), 0, &[vec![0]]).is_err());
+            assert!(dmi.peek_lane(kernel.as_mut(), lanes, 0).is_err());
+        }
     }
 }

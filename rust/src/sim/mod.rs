@@ -1,9 +1,12 @@
 //! Simulation infrastructure: the cycle driver ([`simulator`]), VCD
-//! waveform generation ([`vcd`], paper §6.2) and the DMI-style host–DUT
-//! channel ([`dmi`], paper §6.2).
+//! waveform generation ([`vcd`], paper §6.2), activity-driven delta
+//! waveforms for the batched engine ([`wave`]) and the DMI-style
+//! host–DUT channel ([`dmi`], paper §6.2).
 
 pub mod simulator;
 pub mod vcd;
+pub mod wave;
 pub mod dmi;
 
 pub use simulator::{SimStats, Simulator};
+pub use wave::WaveSink;

@@ -25,8 +25,14 @@ use std::path::Path;
 use crate::graph::ops::mask;
 use crate::tensor::ir::LayerIr;
 
-pub struct VcdWriter {
-    out: BufWriter<File>,
+/// Generic over the byte sink so the same emission code serves files
+/// (`BufWriter<File>`, the default — all pre-existing call sites) and
+/// in-memory buffers (`Vec<u8>`, the serve waveform-streaming chunks and
+/// the byte-identity tests). Byte-identity between the scalar full-diff
+/// path and the mask-gated [`crate::sim::wave::WaveSink`] holds because
+/// both run exactly this writer's [`Self::record`].
+pub struct VcdWriter<W: Write = BufWriter<File>> {
+    out: W,
     /// (slot, id string, width)
     vars: Vec<(u32, String, u8)>,
     last: Vec<u64>,
@@ -51,10 +57,23 @@ fn id_code(mut n: usize) -> String {
     s
 }
 
-impl VcdWriter {
+impl VcdWriter<BufWriter<File>> {
     /// Writer over every *named* slot of `ir` (the scalar simulator's
     /// waveform: one variable per named signal).
     pub fn create(ir: &LayerIr, path: &Path) -> std::io::Result<Self> {
+        Self::new(ir, BufWriter::new(File::create(path)?))
+    }
+
+    /// File-backed [`Self::new_outputs`].
+    pub fn create_outputs(ir: &LayerIr, path: &Path) -> std::io::Result<Self> {
+        Self::new_outputs(ir, BufWriter::new(File::create(path)?))
+    }
+}
+
+impl<W: Write> VcdWriter<W> {
+    /// Writer over every named slot of `ir` into an arbitrary byte sink
+    /// (the header is written immediately).
+    pub fn new(ir: &LayerIr, out: W) -> std::io::Result<Self> {
         let vars: Vec<(u32, u8, &str)> = ir
             .slot_names
             .iter()
@@ -63,7 +82,7 @@ impl VcdWriter {
                 name.as_deref().map(|n| (slot as u32, ir.slot_widths[slot], n))
             })
             .collect();
-        Self::with_vars(ir, path, &vars)
+        Self::with_vars(ir, out, &vars)
     }
 
     /// Writer over the design's **output ports** only, in
@@ -73,17 +92,16 @@ impl VcdWriter {
     /// by construction, so its committed output-port values are globally
     /// correct. [`Self::sample_values`] pairs with the lane-buffered
     /// `write_lane_outputs` values, which follow the same order.
-    pub fn create_outputs(ir: &LayerIr, path: &Path) -> std::io::Result<Self> {
+    pub fn new_outputs(ir: &LayerIr, out: W) -> std::io::Result<Self> {
         let vars: Vec<(u32, u8, &str)> = ir
             .output_slots
             .iter()
             .map(|(name, slot)| (*slot, ir.slot_widths[*slot as usize], name.as_str()))
             .collect();
-        Self::with_vars(ir, path, &vars)
+        Self::with_vars(ir, out, &vars)
     }
 
-    fn with_vars(ir: &LayerIr, path: &Path, wanted: &[(u32, u8, &str)]) -> std::io::Result<Self> {
-        let mut out = BufWriter::new(File::create(path)?);
+    fn with_vars(ir: &LayerIr, mut out: W, wanted: &[(u32, u8, &str)]) -> std::io::Result<Self> {
         writeln!(out, "$date today $end")?;
         writeln!(out, "$version rteaal {} $end", crate::VERSION)?;
         writeln!(out, "$timescale 1ns $end")?;
@@ -130,24 +148,66 @@ impl VcdWriter {
     /// sampling on the first error).
     pub fn sample_values(&mut self, cycle: u64, values: &[u64]) -> std::io::Result<()> {
         debug_assert_eq!(values.len(), self.vars.len());
+        self.begin_sample(cycle);
+        for i in 0..self.vars.len() {
+            self.record(i, values[i])?;
+        }
+        self.end_sample();
+        Ok(())
+    }
+
+    /// Start a sample at time `cycle`. The timestamp is buffered: it is
+    /// written only if a subsequent [`Self::record`] emits a value.
+    pub fn begin_sample(&mut self, cycle: u64) {
         self.pending_time = Some(cycle);
-        let first = self.first;
-        self.first = false;
-        for (i, (_, code, width)) in self.vars.iter().enumerate() {
-            let v = values[i] & mask(*width);
-            if first || self.last[i] != v {
-                self.last[i] = v;
-                if let Some(t) = self.pending_time.take() {
-                    writeln!(self.out, "#{t}")?;
-                }
-                if *width == 1 {
-                    writeln!(self.out, "{}{}", v & 1, code)?;
-                } else {
-                    writeln!(self.out, "b{:b} {}", v, code)?;
-                }
+    }
+
+    /// Compare-and-emit one variable. Callers must visit variables in
+    /// ascending index order within a sample (declaration order — the
+    /// order [`Self::sample_values`] uses), and between
+    /// [`Self::begin_sample`] and [`Self::end_sample`]. Skipping an index
+    /// whose value is unchanged produces byte-identical output to
+    /// recording it — this is the contract the mask-gated
+    /// [`crate::sim::wave::WaveSink`] is built on.
+    pub fn record(&mut self, i: usize, value: u64) -> std::io::Result<()> {
+        let (_, ref code, width) = self.vars[i];
+        let v = value & mask(width);
+        if self.first || self.last[i] != v {
+            self.last[i] = v;
+            if let Some(t) = self.pending_time.take() {
+                writeln!(self.out, "#{t}")?;
+            }
+            if width == 1 {
+                writeln!(self.out, "{}{}", v & 1, code)?;
+            } else {
+                writeln!(self.out, "b{:b} {}", v, code)?;
             }
         }
         Ok(())
+    }
+
+    /// Close the current sample. After the first sample completes, the
+    /// writer switches from full-dump to delta mode.
+    pub fn end_sample(&mut self) {
+        self.first = false;
+    }
+
+    /// True until the first sample has completed — that sample must visit
+    /// every variable (the full dump).
+    pub fn is_first(&self) -> bool {
+        self.first
+    }
+
+    /// The declared variables: `(slot, id code, width)` in declaration
+    /// order. Index `i` here is the `i` accepted by [`Self::record`].
+    pub fn vars(&self) -> &[(u32, String, u8)] {
+        &self.vars
+    }
+
+    /// The underlying byte sink (e.g. to drain a `Vec<u8>`-backed
+    /// writer's accumulated bytes as a streaming chunk).
+    pub fn writer_mut(&mut self) -> &mut W {
+        &mut self.out
     }
 
     pub fn finish(mut self) -> std::io::Result<()> {

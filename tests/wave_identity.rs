@@ -1,0 +1,206 @@
+//! Byte-identity of the activity-gated waveform sink (`sim::wave`)
+//! against full value-diff references, across the whole execution grid:
+//!
+//! * **kernel mode** (P = 1): a dense or sparse batched kernel with a
+//!   [`WaveSink`] per selected lane, versus a *scalar* kernel replaying
+//!   that lane's stimulus through the plain [`VcdWriter`] full-diff
+//!   `sample` path — every named slot is a variable;
+//! * **outputs mode** (P = 4): a partitioned [`BatchParallelSim`] with
+//!   outputs-only sinks, versus the scalar kernel's `outputs()` column
+//!   through `VcdWriter::sample_values`.
+//!
+//! Grid: P ∈ {1, 4} × B ∈ {1, 8} × {dense, sparse} on `fir8`
+//! (input-driven: exercises the input/group gating classes) and
+//! `tiny_cpu_divergent` (self-driving with per-lane ROM programs:
+//! exercises register gating, divergent lane_init replay, and the
+//! quiescent tail after each lane halts). Identity is exact byte
+//! equality of the VCD streams — headers, timestamps, change lines.
+
+use rteaal::coordinator::compile::{compile_design, CompileOpts, Compiled};
+use rteaal::coordinator::parallel::BatchParallelSim;
+use rteaal::designs::{catalog, Design};
+use rteaal::kernels::{build_batch, build_sparse, build_with_oim, KernelConfig};
+use rteaal::sim::vcd::VcdWriter;
+use rteaal::sim::WaveSink;
+
+/// Compile a catalog design in waveform mode (no mux fusion, so named
+/// internal signals survive as variables — the `--vcd` CLI setting).
+fn compiled(name: &str) -> (Design, Compiled) {
+    let d = catalog(name).unwrap_or_else(|| panic!("catalog has {name}"));
+    let c = compile_design(&d, CompileOpts { fuse: false });
+    (d, c)
+}
+
+/// Scalar full-diff reference over **every named slot**, replaying lane
+/// `lane` of a `lanes`-wide batched run (stimulus and divergent-lane
+/// initialization included).
+fn scalar_all_slots(d: &Design, c: &Compiled, lane: usize, lanes: usize, cycles: u64) -> Vec<u8> {
+    let mut k = build_with_oim(KernelConfig::PSU, &c.ir, &c.oim);
+    for (slot, l, v) in d.resolved_lane_init(&c.graph, lanes) {
+        if l == lane {
+            k.poke(slot, v);
+        }
+    }
+    let mut w = VcdWriter::new(&c.ir, Vec::new()).unwrap();
+    let mut stim = d.make_stimulus_for_lane(lane);
+    for cyc in 0..cycles {
+        k.step(&stim(cyc));
+        w.sample(cyc + 1, k.slots()).unwrap();
+    }
+    w.writer_mut().clone()
+}
+
+/// Scalar full-diff reference over the design's **output ports** only
+/// (the variable set of a partitioned run), same replay rules.
+fn scalar_outputs(d: &Design, c: &Compiled, lane: usize, lanes: usize, cycles: u64) -> Vec<u8> {
+    let mut k = build_with_oim(KernelConfig::PSU, &c.ir, &c.oim);
+    for (slot, l, v) in d.resolved_lane_init(&c.graph, lanes) {
+        if l == lane {
+            k.poke(slot, v);
+        }
+    }
+    let mut w = VcdWriter::new_outputs(&c.ir, Vec::new()).unwrap();
+    let mut stim = d.make_stimulus_for_lane(lane);
+    for cyc in 0..cycles {
+        k.step(&stim(cyc));
+        let vals: Vec<u64> = k.outputs().into_iter().map(|(_, v)| v).collect();
+        w.sample_values(cyc + 1, &vals).unwrap();
+    }
+    w.writer_mut().clone()
+}
+
+/// One batched kernel run with a mask-gated sink on each lane in
+/// `wave_lanes`; returns each lane's VCD bytes.
+fn batched_all_slots(
+    d: &Design,
+    c: &Compiled,
+    sparse: bool,
+    lanes: usize,
+    wave_lanes: &[usize],
+    cycles: u64,
+) -> Vec<(usize, Vec<u8>)> {
+    let mut k = if sparse {
+        build_sparse(KernelConfig::PSU, &c.ir, &c.oim, lanes)
+    } else {
+        build_batch(KernelConfig::PSU, &c.ir, &c.oim, lanes)
+    };
+    d.apply_lane_init(&c.graph, k.as_mut());
+    let mut sinks: Vec<WaveSink<Vec<u8>>> = wave_lanes
+        .iter()
+        .map(|&l| WaveSink::attach(&c.ir, k.as_ref(), l, Vec::new()).unwrap())
+        .collect();
+    let mut stim = d.make_lane_stimulus(lanes);
+    for cyc in 0..cycles {
+        k.step(&stim(cyc));
+        for s in &mut sinks {
+            s.sample_kernel(cyc + 1, k.as_ref()).unwrap();
+        }
+    }
+    wave_lanes.iter().copied().zip(sinks.iter_mut().map(WaveSink::take_chunk)).collect()
+}
+
+/// One partitioned run with an outputs-only sink on each lane in
+/// `wave_lanes`; returns each lane's VCD bytes.
+fn parallel_outputs(
+    d: &Design,
+    c: &Compiled,
+    sparse: bool,
+    parts: usize,
+    lanes: usize,
+    wave_lanes: &[usize],
+    cycles: u64,
+) -> Vec<(usize, Vec<u8>)> {
+    let mut sim = BatchParallelSim::new(&c.ir, KernelConfig::PSU, parts, lanes, sparse);
+    for (slot, l, v) in d.resolved_lane_init(&c.graph, lanes) {
+        sim.poke_lane(slot, l, v);
+    }
+    let mut sinks: Vec<WaveSink<Vec<u8>>> = wave_lanes
+        .iter()
+        .map(|&l| WaveSink::attach_outputs(&c.ir, l, Vec::new()).unwrap())
+        .collect();
+    let mut stim = d.make_lane_stimulus(lanes);
+    let mut buf: Vec<(String, u64)> = Vec::new();
+    for cyc in 0..cycles {
+        sim.step(&stim(cyc));
+        for s in &mut sinks {
+            s.sample_parallel(cyc + 1, &sim, &mut buf).unwrap();
+        }
+    }
+    wave_lanes.iter().copied().zip(sinks.iter_mut().map(WaveSink::take_chunk)).collect()
+}
+
+fn assert_identical(
+    kind: &str,
+    design: &str,
+    sparse: bool,
+    lanes: usize,
+    lane: usize,
+    got: &[u8],
+    want: &[u8],
+) {
+    assert!(!want.is_empty(), "{kind} {design}: empty reference stream");
+    assert_eq!(
+        String::from_utf8_lossy(got),
+        String::from_utf8_lossy(want),
+        "{kind}: {design} sparse={sparse} B={lanes} lane={lane} diverged \
+         from the scalar full-diff reference"
+    );
+}
+
+fn kernel_mode_grid(design: &str, cycles: u64) {
+    let (d, c) = compiled(design);
+    for sparse in [false, true] {
+        for &lanes in &[1usize, 8] {
+            let wave_lanes: &[usize] = if lanes == 1 { &[0] } else { &[0, 3, 7] };
+            let runs = batched_all_slots(&d, &c, sparse, lanes, wave_lanes, cycles);
+            for (lane, bytes) in runs {
+                let reference = scalar_all_slots(&d, &c, lane, lanes, cycles);
+                assert_identical("kernel-mode", design, sparse, lanes, lane, &bytes, &reference);
+            }
+        }
+    }
+}
+
+fn outputs_mode_grid(design: &str, cycles: u64) {
+    let (d, c) = compiled(design);
+    let parts = 4;
+    for sparse in [false, true] {
+        for &lanes in &[1usize, 8] {
+            let wave_lanes: &[usize] = if lanes == 1 { &[0] } else { &[0, 3, 7] };
+            let runs = parallel_outputs(&d, &c, sparse, parts, lanes, wave_lanes, cycles);
+            for (lane, bytes) in runs {
+                let reference = scalar_outputs(&d, &c, lane, lanes, cycles);
+                assert_identical("outputs-mode", design, sparse, lanes, lane, &bytes, &reference);
+            }
+        }
+    }
+}
+
+/// P = 1, every named slot: dense and sparse batched sinks equal the
+/// scalar full-diff writer on the input-driven FIR.
+#[test]
+fn kernel_mode_fir8() {
+    kernel_mode_grid("fir8", 48);
+}
+
+/// P = 1 on the divergent-ROM CPU: per-lane programs replayed through
+/// lane_init, register/group gating, and the post-halt quiescent tail.
+#[test]
+fn kernel_mode_tiny_cpu_divergent() {
+    kernel_mode_grid("tiny_cpu_divergent", 220);
+}
+
+/// P = 4, output ports: the partitioned sink (lane-gated by
+/// `wave_changed`) equals the scalar outputs-only reference.
+#[test]
+fn outputs_mode_fir8() {
+    outputs_mode_grid("fir8", 48);
+}
+
+/// P = 4 on the divergent-ROM CPU (lane_init lands through
+/// `BatchParallelSim::poke_lane`, which also dirties the wave mask —
+/// over-approximation that must not change a single byte).
+#[test]
+fn outputs_mode_tiny_cpu_divergent() {
+    outputs_mode_grid("tiny_cpu_divergent", 220);
+}
