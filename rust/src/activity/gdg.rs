@@ -20,7 +20,7 @@ use crate::util::json::{arr_u32, obj, Json, JsonError};
 /// One (layer, op-type) group of the format-C walk, addressed by its flat
 /// op range in the format-C arrays (`c.s_coords[op_start..op_end]` are its
 /// output slots; its operand slots start at `c.r_coords[r_start]`).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Group {
     pub layer: u32,
     pub opcode: u8,
@@ -39,7 +39,7 @@ impl Group {
 
 /// The compile-time dependency structure driving activity propagation.
 /// All dependency lists are sorted and deduplicated.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct GroupDepGraph {
     /// Groups in execution (topological) order.
     pub groups: Vec<Group>,
@@ -157,6 +157,160 @@ impl GroupDepGraph {
         g.reader_groups = reader_edges.into_iter().map(|(_, gid)| gid).collect();
         g.slot_writer = writer;
         g
+    }
+
+    /// Splice a new GDG out of a prior one plus a grafted IR/OIM (the
+    /// incremental-compile path). Groups living in layers not marked
+    /// `touched` keep their prior dependency lists and slot→reader CSR
+    /// entries (group indices remapped by `(layer, opcode)` identity,
+    /// which is stable across a graft); groups in touched layers — the
+    /// ones whose op composition may have changed — re-run the full
+    /// operand classification of [`GroupDepGraph::build`]. Returns the
+    /// spliced graph plus `(reused, rebuilt)` group counts. The result is
+    /// equal to `build(ir, oim)` whenever the untouched layers really are
+    /// unchanged, which the delta pass guarantees: grafted ops only write
+    /// fresh slots, surviving ops never change layer or opcode, and a
+    /// slot read by a surviving op keeps its writer.
+    pub fn splice(
+        prior: &GroupDepGraph,
+        ir: &LayerIr,
+        oim: &Oim,
+        touched: &[bool],
+    ) -> (Self, usize, usize) {
+        use std::collections::HashMap;
+        assert_eq!(touched.len(), oim.num_layers(), "touched flags must cover every layer");
+        let num_slots = oim.num_slots as usize;
+        const NONE: u32 = u32::MAX;
+        let mut writer = vec![NONE; num_slots];
+        let mut input_of = vec![NONE; num_slots];
+        for (i, &s) in ir.input_slots.iter().enumerate() {
+            input_of[s as usize] = i as u32;
+        }
+        let mut commit_of = vec![NONE; num_slots];
+        for (ci, &(reg, _, _)) in ir.commits.iter().enumerate() {
+            commit_of[reg as usize] = ci as u32;
+        }
+        let prior_of: HashMap<(u32, u8), u32> = prior
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(i, pg)| ((pg.layer, pg.opcode), i as u32))
+            .collect();
+        let mut new_of_prior = vec![NONE; prior.groups.len()];
+        let mut reused_prior = vec![false; prior.groups.len()];
+        let (mut reused, mut rebuilt) = (0usize, 0usize);
+
+        let mut g = GroupDepGraph::default();
+        let mut reader_edges: Vec<(u32, u32)> = Vec::new();
+        let mut op_idx = 0usize;
+        let mut r_idx = 0usize;
+        for layer in 0..oim.num_layers() {
+            for n in 0..NUM_KOPS {
+                let cnt = oim.n_payload[layer * NUM_KOPS + n] as usize;
+                if cnt == 0 {
+                    continue;
+                }
+                let gid = g.groups.len() as u32;
+                let group = Group {
+                    layer: layer as u32,
+                    opcode: n as u8,
+                    op_start: op_idx as u32,
+                    op_end: (op_idx + cnt) as u32,
+                    r_start: r_idx as u32,
+                };
+                let prior_gid = prior_of.get(&(layer as u32, n as u8)).copied();
+                if let Some(pg) = prior_gid {
+                    new_of_prior[pg as usize] = gid;
+                }
+                // Reuse the prior lists when the layer is untouched and
+                // every upstream dep survived (always, by construction —
+                // the check is defensive).
+                let mut lists: Option<(Vec<u32>, Vec<u32>, Vec<u32>)> = None;
+                if !touched[layer] {
+                    if let Some(pg) = prior_gid {
+                        let pg = pg as usize;
+                        let deps = prior.group_deps[pg].iter();
+                        let mapped: Vec<u32> = deps.map(|&d| new_of_prior[d as usize]).collect();
+                        if !mapped.contains(&NONE) {
+                            reused_prior[pg] = true;
+                            let ideps = prior.input_deps[pg].clone();
+                            let rdeps = prior.reg_deps[pg].clone();
+                            lists = Some((mapped, ideps, rdeps));
+                        }
+                    }
+                }
+                let (gdeps, ideps, rdeps) = if let Some(l) = lists {
+                    reused += 1;
+                    for _ in 0..cnt {
+                        r_idx += oim.c.arity[op_idx] as usize;
+                        op_idx += 1;
+                    }
+                    l
+                } else {
+                    rebuilt += 1;
+                    let mut gdeps: Vec<u32> = Vec::new();
+                    let mut ideps: Vec<u32> = Vec::new();
+                    let mut rdeps: Vec<u32> = Vec::new();
+                    for _ in 0..cnt {
+                        let ar = oim.c.arity[op_idx] as usize;
+                        for o in 0..ar {
+                            let slot = oim.c.r_coords[r_idx + o] as usize;
+                            reader_edges.push((slot as u32, gid));
+                            let w = writer[slot];
+                            if w != NONE {
+                                debug_assert!(w < gid, "operand produced in the same layer");
+                                gdeps.push(w);
+                            } else if input_of[slot] != NONE {
+                                ideps.push(input_of[slot]);
+                            } else if commit_of[slot] != NONE {
+                                rdeps.push(commit_of[slot]);
+                            }
+                        }
+                        r_idx += ar;
+                        op_idx += 1;
+                    }
+                    for d in [&mut gdeps, &mut ideps, &mut rdeps] {
+                        d.sort_unstable();
+                        d.dedup();
+                    }
+                    (gdeps, ideps, rdeps)
+                };
+                for op in group.op_start..group.op_end {
+                    writer[oim.c.s_coords[op as usize] as usize] = gid;
+                }
+                g.num_edges += gdeps.len() + ideps.len() + rdeps.len();
+                g.total_ops += cnt;
+                g.groups.push(group);
+                g.group_deps.push(gdeps);
+                g.input_deps.push(ideps);
+                g.reg_deps.push(rdeps);
+            }
+        }
+        debug_assert_eq!(g.total_ops, oim.total_ops());
+        // Reader pairs of reused groups carry over from the prior CSR
+        // (their operand sets are unchanged); rebuilt groups contributed
+        // theirs during the scan above.
+        let prior_slots = prior.reader_offsets.len().saturating_sub(1);
+        for slot in 0..prior_slots {
+            for &pg in prior.readers_of(slot as u32) {
+                if reused_prior[pg as usize] {
+                    reader_edges.push((slot as u32, new_of_prior[pg as usize]));
+                }
+            }
+        }
+        reader_edges.sort_unstable();
+        reader_edges.dedup();
+        let mut offsets = vec![0u32; num_slots + 1];
+        for &(s, _) in &reader_edges {
+            offsets[s as usize + 1] += 1;
+        }
+        for i in 1..offsets.len() {
+            offsets[i] += offsets[i - 1];
+        }
+        g.reader_offsets = offsets;
+        g.reader_groups = reader_edges.into_iter().map(|(_, gid)| gid).collect();
+        g.slot_writer = writer;
+        (g, reused, rebuilt)
     }
 
     /// The group that writes `slot` within the cycle, if any (`None` for

@@ -70,6 +70,18 @@ COMMANDS:
                                (default: lane 0). A single lane writes F
                                itself; several lanes write one file each
                                with `.laneN` inserted before the extension
+            [--incremental]    open through the design cache's cone-delta
+                               reuse path: if the cache holds an entry of
+                               the same design family (e.g. the base of a
+                               `_edit` variant) under the same config,
+                               only the changed register cones are
+                               recompiled and spliced into the cached
+                               artifacts; prints a `cache:` line with the
+                               reused/rebuilt group counts. Exact-key
+                               re-opens hit as usual; with no donor the
+                               open falls back to a cold compile
+            [--cache-dir DIR]  design-cache directory for --incremental
+                               (default .rteaal-cache)
   serve                        run the simulation service (NDJSON requests,
                                one per line; schema in the service module
                                docs): a content-addressed design cache,
@@ -271,6 +283,65 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let sparse = args.flag("sparse");
     validate_lanes(lanes, sparse)?;
     let partitioner = partitioner_arg(args, parts_given, backend)?;
+
+    if args.flag("incremental") {
+        if backend != "interp" {
+            bail!("--incremental requires --backend interp (got '{backend}')");
+        }
+        if args.opt("vcd").is_some() {
+            bail!("--incremental does not stream waveforms (run without --incremental for --vcd)");
+        }
+        let cfg = KernelConfig::parse(args.opt_or("kernel", "PSU")).context("bad --kernel")?;
+        let toggle = toggle_arg(args, &d, sparse)?;
+        let cache_dir = PathBuf::from(args.opt_or("cache-dir", ".rteaal-cache"));
+        let mut cache = crate::service::cache::DesignCache::new(Some(cache_dir), 8);
+        let (cached, report) = cache
+            .open_design_incremental(&d, true, parts, partitioner)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "cache: key={} source={} incremental={} reused_groups={} rebuilt_groups={} open {}",
+            report.key,
+            report.source.name(),
+            report.incremental,
+            report.reused_groups,
+            report.rebuilt_groups,
+            crate::util::fmt_duration(report.open_time)
+        );
+        let mut sim = super::parallel::BatchParallelSim::with_partitioning(
+            &cached.ir,
+            cfg,
+            cached.partitioning(),
+            lanes,
+            sparse,
+            partitioner,
+        );
+        let pokes = cached.resolved_lane_init(&d, lanes).map_err(|e| anyhow::anyhow!(e))?;
+        for (slot, lane, value) in pokes {
+            sim.poke_lane(slot, lane, value);
+        }
+        let mut stim = match toggle {
+            Some(rate) => d.make_lane_stimulus_toggle(lanes, rate),
+            None => d.make_lane_stimulus(lanes),
+        };
+        let t0 = std::time::Instant::now();
+        for cyc in 0..cycles {
+            sim.step(&stim(cyc));
+        }
+        let dt = t0.elapsed();
+        let aggregate = (cycles as f64 * lanes as f64) / dt.as_secs_f64().max(1e-12);
+        println!(
+            "{} x{parts} parts x{lanes} lanes [{}] (cached): {cycles} cycles/lane in {} ({:.2} M lane-cyc/s aggregate)",
+            cfg.name(),
+            partitioner.name(),
+            crate::util::fmt_duration(dt),
+            aggregate / 1e6
+        );
+        for (oname, v) in sim.lane_outputs(0) {
+            println!("  lane0 out {oname} = {v:#x}");
+        }
+        return Ok(());
+    }
+
     let c = compile_design(&d, CompileOpts { fuse: args.opt("vcd").is_none() });
 
     if parts_given {

@@ -1,0 +1,311 @@
+//! Incremental recompilation: content-hashed cone deltas.
+//!
+//! Given an edited [`Design`] and the cached artifacts of a *prior*
+//! compile of the same design family ([`CachedDesign`]), diff the
+//! per-register cone hashes ([`crate::graph::cone`]) and rebuild only
+//! the cones that changed:
+//!
+//! 1. **Diff** — registers whose cone hash moved (plus the output cone,
+//!    if its combined hash moved) form the invalidation set. A changed
+//!    input-port interface or register list disables delta matching
+//!    entirely (`None` → the caller falls back to a cold compile).
+//! 2. **Sub-compile** — the changed cones are extracted into a small
+//!    sub-graph (all ports and registers as boundary sources, only the
+//!    changed next-state logic included) and run through the *same*
+//!    optimize → lower pipeline as a cold compile. This is where the
+//!    speedup comes from: the graph passes dominate cold-compile time
+//!    and now see only the edited cones.
+//! 3. **Graft** — the optimized sub-IR is spliced into a clone of the
+//!    prior [`LayerIr`]: boundary sources map to their prior slots,
+//!    new ops get fresh slots appended after the prior slot file (which
+//!    keeps every layer's strictly-ascending-by-out invariant), and the
+//!    changed registers' commits are repointed. Ops orphaned by the
+//!    graft (the *old* cones of the changed registers) are garbage
+//!    collected by a liveness walk from the commits and outputs.
+//! 4. **Splice** — [`Oim::splice`] and [`GroupDepGraph::splice`] rebuild
+//!    only the rows and groups of layers the graft touched, copying
+//!    everything else from the prior artifacts.
+//!
+//! The resulting artifacts simulate bit-identically to a cold compile
+//! of the edited design (compared by register *name* — slot ids differ,
+//! since the graft preserves the prior numbering).
+
+use std::collections::HashMap;
+
+use crate::activity::GroupDepGraph;
+use crate::designs::Design;
+use crate::graph::cone::{cone_hashes, ConeHashes};
+use crate::graph::ops::mask;
+use crate::graph::{passes, Graph, NodeId, NodeKind};
+use crate::service::cache::{CachedDesign, RegInfo};
+use crate::tensor::ir::{lower, KOp, LayerIr};
+use crate::tensor::oim::{operand_slots, Oim};
+
+/// Everything a delta pass produces: spliced artifacts plus the reuse
+/// accounting surfaced in [`crate::service::cache::OpenReport`].
+pub struct DeltaOut {
+    pub ir: LayerIr,
+    pub oim: Oim,
+    pub gdg: GroupDepGraph,
+    /// Cone signature of the *edited* design, persisted with the new
+    /// cache entry so it can donate deltas in turn.
+    pub cone: ConeHashes,
+    /// Register map of the grafted IR (prior slots, edited widths).
+    pub regs: Vec<RegInfo>,
+    /// GDG groups copied from the prior artifacts unchanged.
+    pub reused_groups: usize,
+    /// GDG groups rebuilt because their layer was touched by the graft.
+    pub rebuilt_groups: usize,
+    /// Names of the registers whose cones were recompiled.
+    pub changed_regs: Vec<String>,
+}
+
+/// Attempt an incremental compile of `design` against `prior`. Returns
+/// `None` when the designs are not delta-compatible (different port
+/// interface or register list, or a register the graft needs is missing
+/// from the prior artifacts) — the caller then cold-compiles instead.
+pub fn delta_compile(design: &Design, prior: &CachedDesign, fuse: bool) -> Option<DeltaOut> {
+    let g = &design.graph;
+    let cone = cone_hashes(g);
+    if cone.inputs != prior.cone.inputs || cone.regs.len() != prior.cone.regs.len() {
+        return None;
+    }
+    // Commit order must survive the graft: the register name *sequence*
+    // has to match, not just the set.
+    for (a, b) in cone.regs.iter().zip(&prior.cone.regs) {
+        if a.0 != b.0 {
+            return None;
+        }
+    }
+    let mut changed: Vec<usize> = Vec::new();
+    for (i, (_, h)) in cone.regs.iter().enumerate() {
+        if *h != prior.cone.regs[i].1 {
+            changed.push(i);
+        }
+    }
+    let outputs_changed = cone.outputs != prior.cone.outputs;
+    if changed.is_empty() && !outputs_changed {
+        // byte-level edits (reordered nodes, renamed wires feeding
+        // nothing) that leave every cone hash intact: reuse wholesale
+        return Some(DeltaOut {
+            ir: prior.ir.clone(),
+            oim: prior.oim.clone(),
+            gdg: prior.gdg.clone(),
+            cone,
+            regs: prior.regs.clone(),
+            reused_groups: prior.gdg.groups.len(),
+            rebuilt_groups: 0,
+            changed_regs: Vec::new(),
+        });
+    }
+
+    // ---- sub-graph: only the changed cones, cut at sources ----
+    let mut include = vec![false; g.nodes.len()];
+    let mut stack: Vec<NodeId> = changed.iter().map(|&i| g.regs[i].next).collect();
+    if outputs_changed {
+        stack.extend(g.outputs.iter().map(|&(_, o)| o));
+    }
+    while let Some(id) = stack.pop() {
+        let node = &g.nodes[id as usize];
+        match node.kind {
+            // ports and registers are boundary sources — not traversed
+            NodeKind::Input(_) | NodeKind::Reg(_) => {}
+            NodeKind::Const(_) | NodeKind::Prim(_) => {
+                if !include[id as usize] {
+                    include[id as usize] = true;
+                    stack.extend(node.args.iter().copied());
+                }
+            }
+        }
+    }
+    let mut sub = Graph::new(&g.name);
+    let mut node_map = vec![u32::MAX; g.nodes.len()];
+    for p in &g.inputs {
+        node_map[p.node as usize] = sub.input(&p.name, p.width);
+    }
+    for r in &g.regs {
+        node_map[r.node as usize] = sub.reg(&r.name, r.width, r.init);
+    }
+    // included nodes in ascending (= topological) id order
+    for (id, node) in g.nodes.iter().enumerate() {
+        if !include[id] {
+            continue;
+        }
+        let nid = match &node.kind {
+            NodeKind::Const(v) => sub.konst(*v, node.width),
+            NodeKind::Prim(op) => {
+                let args: Vec<NodeId> = node.args.iter().map(|&a| node_map[a as usize]).collect();
+                sub.prim_w(*op, &args, node.width)
+            }
+            _ => unreachable!("include set holds only consts and prims"),
+        };
+        if let Some(name) = &node.name {
+            sub.name_node(nid, name);
+        }
+        node_map[id] = nid;
+    }
+    for &ri in &changed {
+        let r = &g.regs[ri];
+        sub.connect_reg(node_map[r.node as usize], node_map[r.next as usize]);
+    }
+    if outputs_changed {
+        for (name, o) in &g.outputs {
+            sub.output(name, node_map[*o as usize]);
+        }
+    }
+
+    // ---- same pipeline as a cold compile, on the small graph ----
+    let opt = if fuse { passes::optimize(&sub).0 } else { passes::optimize_no_fusion(&sub) };
+    let sub_ir = lower(&opt);
+
+    // ---- slot map: boundary sources to prior slots, new ops fresh ----
+    if opt.inputs.len() != prior.ir.input_slots.len() {
+        return None;
+    }
+    let prior_slot_of: HashMap<&str, u32> =
+        prior.regs.iter().map(|r| (r.name.as_str(), r.slot)).collect();
+    let old_slots = prior.ir.num_slots;
+    let mut next_fresh = old_slots as u32;
+    let mut slot_of = vec![u32::MAX; opt.nodes.len()];
+    for (id, node) in opt.nodes.iter().enumerate() {
+        slot_of[id] = match node.kind {
+            NodeKind::Input(pi) => prior.ir.input_slots[pi as usize],
+            NodeKind::Reg(ri) => match prior_slot_of.get(opt.regs[ri as usize].name.as_str()) {
+                Some(&s) => s,
+                // the prior compile dead-coded this register away — its
+                // slot is gone, so the graft cannot anchor to it
+                None => return None,
+            },
+            NodeKind::Const(_) | NodeKind::Prim(_) => {
+                let s = next_fresh;
+                next_fresh += 1;
+                s
+            }
+        };
+    }
+
+    // ---- graft the optimized sub-IR into the prior IR ----
+    let mut ir = prior.ir.clone();
+    ir.num_slots = next_fresh as usize;
+    for node in &opt.nodes {
+        if matches!(node.kind, NodeKind::Const(_) | NodeKind::Prim(_)) {
+            ir.slot_names.push(node.name.clone());
+            ir.slot_widths.push(node.width);
+        }
+    }
+    for (id, node) in opt.nodes.iter().enumerate() {
+        if let NodeKind::Const(v) = node.kind {
+            ir.init.push((slot_of[id], v));
+        }
+    }
+    let depth = ir.layers.len().max(sub_ir.layers.len());
+    ir.layers.resize(depth, Vec::new());
+    let mut touched = vec![false; depth];
+    for (li, layer) in sub_ir.layers.iter().enumerate() {
+        if layer.is_empty() {
+            continue;
+        }
+        touched[li] = true;
+        for rec in layer {
+            let mut r2 = *rec;
+            r2.out = slot_of[rec.out as usize];
+            r2.a = slot_of[rec.a as usize];
+            if r2.arity >= 2 {
+                r2.b = slot_of[rec.b as usize];
+            }
+            if r2.kop() == KOp::MuxChain {
+                let ar = rec.arity as usize;
+                let ext = &sub_ir.ext_args[rec.ext as usize..rec.ext as usize + ar - 2];
+                r2.ext = ir.ext_args.len() as u32;
+                for &e in ext {
+                    ir.ext_args.push(slot_of[e as usize]);
+                }
+            } else if r2.arity >= 3 {
+                r2.c = slot_of[rec.c as usize];
+            }
+            // fresh out slots are all >= the prior slot count and
+            // monotone in sub node id, so appending keeps each layer
+            // strictly ascending by `out`
+            ir.layers[li].push(r2);
+        }
+    }
+
+    // repoint the changed registers' commits (and refresh their widths
+    // and init values — both are part of the cone hash)
+    let commit_of_slot: HashMap<u32, usize> =
+        ir.commits.iter().enumerate().map(|(i, c)| (c.0, i)).collect();
+    let opt_reg_of: HashMap<&str, usize> =
+        opt.regs.iter().enumerate().map(|(i, r)| (r.name.as_str(), i)).collect();
+    let mut changed_regs = Vec::with_capacity(changed.len());
+    for &ri in &changed {
+        let name = g.regs[ri].name.as_str();
+        let Some(&oi) = opt_reg_of.get(name) else { return None };
+        let r = &opt.regs[oi];
+        let Some(&slot) = prior_slot_of.get(name) else { return None };
+        let Some(&ci) = commit_of_slot.get(&slot) else { return None };
+        ir.commits[ci] = (slot, slot_of[r.next as usize], mask(r.width));
+        ir.slot_widths[slot as usize] = r.width;
+        if let Some(e) = ir.init.iter_mut().find(|e| e.0 == slot) {
+            e.1 = r.init;
+        } else {
+            ir.init.push((slot, r.init));
+        }
+        changed_regs.push(name.to_string());
+    }
+    if outputs_changed {
+        ir.output_slots =
+            sub_ir.output_slots.iter().map(|(n, s)| (n.clone(), slot_of[*s as usize])).collect();
+    }
+
+    // ---- GC: drop ops orphaned by the graft (old changed cones) ----
+    let mut writer: HashMap<u32, (usize, usize)> = HashMap::new();
+    for (li, layer) in ir.layers.iter().enumerate() {
+        for (oi, rec) in layer.iter().enumerate() {
+            writer.insert(rec.out, (li, oi));
+        }
+    }
+    let mut live: Vec<Vec<bool>> = ir.layers.iter().map(|l| vec![false; l.len()]).collect();
+    let mut roots: Vec<u32> = ir.commits.iter().map(|c| c.1).collect();
+    roots.extend(ir.output_slots.iter().map(|(_, s)| *s));
+    while let Some(slot) = roots.pop() {
+        if let Some(&(li, oi)) = writer.get(&slot) {
+            if !live[li][oi] {
+                live[li][oi] = true;
+                roots.extend(operand_slots(&ir.layers[li][oi], &ir.ext_args));
+            }
+        }
+    }
+    for (li, layer) in ir.layers.iter_mut().enumerate() {
+        let before = layer.len();
+        let mut oi = 0usize;
+        layer.retain(|_| {
+            let keep = live[li][oi];
+            oi += 1;
+            keep
+        });
+        if layer.len() != before {
+            touched[li] = true;
+        }
+    }
+
+    // ---- splice the OIM and GDG around the untouched layers ----
+    let oim = Oim::splice(&prior.oim, &ir, &touched);
+    let (gdg, reused, rebuilt) = GroupDepGraph::splice(&prior.gdg, &ir, &oim, &touched);
+
+    let mut regs = prior.regs.clone();
+    for &ri in &changed {
+        if let Some(rr) = regs.iter_mut().find(|rr| rr.name == g.regs[ri].name) {
+            rr.width = g.regs[ri].width;
+        }
+    }
+    Some(DeltaOut {
+        ir,
+        oim,
+        gdg,
+        cone,
+        regs,
+        reused_groups: reused,
+        rebuilt_groups: rebuilt,
+        changed_regs,
+    })
+}

@@ -5,6 +5,7 @@
 
 pub mod cli;
 pub mod compile;
+pub mod incremental;
 pub mod sweep;
 pub mod autotune;
 pub mod pool;

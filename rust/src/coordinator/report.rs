@@ -18,6 +18,7 @@ use crate::partition::PartitionerKind;
 use crate::perf::machine::{self, Machine};
 use crate::perf::topdown;
 use crate::perf::trace::SimStyle;
+use crate::service::cache::DesignCache;
 use crate::util::fmt_bytes;
 use crate::util::tables::Table;
 
@@ -387,6 +388,76 @@ pub fn tab07_compile_scaling(ctx: &Ctx) -> Table {
     t
 }
 
+/// Designs measured by the incremental-recompile half of Table 7: the
+/// cold column compiles the one-module `_edit` catalog variant from
+/// scratch; the incremental column opens the base design first and then
+/// routes the edit through the cone-delta reuse path.
+pub const TAB07_DESIGNS: [&str; 2] = ["rocket_like_1c", "boom_like_1c"];
+
+/// One measured (cold, incremental) compile pair for [`tab07_table`].
+pub struct Tab07Point {
+    pub design: String,
+    pub cold: std::time::Duration,
+    pub incremental: std::time::Duration,
+    pub reused_groups: usize,
+    pub rebuilt_groups: usize,
+}
+
+/// Measure cold vs incremental recompile of a one-module edit on each
+/// [`TAB07_DESIGNS`] entry. Both caches are memory-only so the timings
+/// compare compile work, not disk IO; parts=2 under the min-cut
+/// partitioner so the incremental path also exercises warm-start FM.
+pub fn tab07_measure(_ctx: &Ctx) -> Vec<Tab07Point> {
+    let (parts, pk) = (2usize, PartitionerKind::MinCut);
+    let mut points = Vec::new();
+    for name in TAB07_DESIGNS {
+        let edited = catalog(&format!("{name}_edit")).expect("catalog edit variant");
+        // cold: a fresh cache compiles the edited design from scratch
+        let mut cold_cache = DesignCache::new(None, 4);
+        let t0 = std::time::Instant::now();
+        let (_, rc) = cold_cache.open_design(&edited, true, parts, pk).expect("cold open");
+        let cold = t0.elapsed();
+        assert!(!rc.hit, "fresh cache must miss on {name}_edit");
+        // incremental: warm another cache with the base, then open the edit
+        let base = catalog(name).expect("catalog design");
+        let mut warm_cache = DesignCache::new(None, 4);
+        warm_cache.open_design(&base, true, parts, pk).expect("base open");
+        let t1 = std::time::Instant::now();
+        let (_, ri) = warm_cache
+            .open_design_incremental(&edited, true, parts, pk)
+            .expect("incremental open");
+        let incremental = t1.elapsed();
+        assert!(ri.incremental, "edit of {name} should take the delta path");
+        points.push(Tab07Point {
+            design: name.to_string(),
+            cold,
+            incremental,
+            reused_groups: ri.reused_groups,
+            rebuilt_groups: ri.rebuilt_groups,
+        });
+    }
+    points
+}
+
+/// Table 7 (incremental half): measured cold vs incremental recompile.
+pub fn tab07_table(points: &[Tab07Point]) -> Table {
+    let mut t = Table::new(
+        "Table 7b — incremental recompile of a one-module edit (measured)",
+        &["design", "cold (s)", "incr (s)", "ratio", "groups reused", "groups rebuilt"],
+    );
+    for p in points {
+        t.row(vec![
+            p.design.clone(),
+            fmt_s(p.cold),
+            fmt_s(p.incremental),
+            format!("{:.2}", p.incremental.as_secs_f64() / p.cold.as_secs_f64().max(1e-9)),
+            p.reused_groups.to_string(),
+            p.rebuilt_groups.to_string(),
+        ]);
+    }
+    t
+}
+
 // ---------------------------------------------------------------- Fig 20
 
 /// Paper Fig 20: main evaluation — best RTeAAL kernel vs baselines across
@@ -744,7 +815,7 @@ pub fn run_experiment(id: &str, ctx: &Ctx) -> Option<Vec<Table>> {
         "fig17" => vec![fig17_scaling(ctx)],
         "fig18" => vec![fig18_vs_baselines(ctx)],
         "fig19" => vec![fig19_o0(ctx)],
-        "tab07" => vec![tab07_compile_scaling(ctx)],
+        "tab07" => vec![tab07_compile_scaling(ctx), tab07_table(&tab07_measure(ctx))],
         "fig20" => vec![fig20_main_eval(ctx), fig20_best_kernel_matrix()],
         "fig21" => vec![fig21_llc()],
         "fig22" => vec![fig22_lanes(ctx)],

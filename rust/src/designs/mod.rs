@@ -261,6 +261,18 @@ pub fn catalog(name: &str) -> Option<Design> {
             }
         }
         _ => {
+            // "<base>_edit": the canonical incremental-compile workload —
+            // the base design with one module's next-state function
+            // modified, every other cone bit-identical. The *graph* name
+            // is left untouched so the edited design stays in the same
+            // cache family as its base (see
+            // `service::cache::DesignCache::open_design_incremental`).
+            if let Some(base) = name.strip_suffix("_edit") {
+                let mut d = catalog(base)?;
+                apply_module_edit(&mut d.graph);
+                d.name = name.into();
+                return Some(d);
+            }
             if let Some(rest) = name.strip_prefix("rocket_like_") {
                 if rest == "xs" {
                     // small export-sized variant for the XLA backend
@@ -319,6 +331,20 @@ pub fn catalog(name: &str) -> Option<Design> {
         }
     };
     Some(d)
+}
+
+/// The canonical single-module edit used by the incremental-compile
+/// benchmarks: XOR one stage register's next-state value with a fixed
+/// constant. Targets `c0_s0` (rocket_like), `b0_rob0` (boom_like), or
+/// the first register otherwise; panics on register-free designs.
+pub fn apply_module_edit(g: &mut Graph) {
+    use crate::graph::ops::{mask, PrimOp};
+    assert!(!g.regs.is_empty(), "cannot apply a module edit to a register-free design");
+    let idx = g.regs.iter().position(|r| r.name == "c0_s0" || r.name == "b0_rob0").unwrap_or(0);
+    let (reg_node, old_next, w) = (g.regs[idx].node, g.regs[idx].next, g.regs[idx].width);
+    let k = g.konst(0x5A5A_5A5A & mask(w), w);
+    let x = g.prim_w(PrimOp::Xor, &[old_next, k], w);
+    g.connect_reg(reg_node, x);
 }
 
 /// Names used by the main evaluation (paper Fig 20's x-axis analog).

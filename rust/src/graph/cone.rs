@@ -1,0 +1,202 @@
+//! Per-register cone content hashes for incremental compilation.
+//!
+//! Each writable register's next-state cone (the combinational logic
+//! feeding its `next` node, cut at sources: constants, input ports and
+//! *other registers* — referenced by name, not traversed) is hashed with
+//! the same dual-stream FNV used by the design-cache key
+//! ([`crate::util::fnv::Fnv2`]). Two designs of the same family whose
+//! register `r` hashes equal are guaranteed to compute identical
+//! next-state functions for `r`, regardless of how node ids shifted —
+//! the hash encodes the cone's *shape* (DFS visit order with back-
+//! references), not the ids. That is the invalidation unit of the
+//! incremental compile path ([`crate::coordinator::incremental`]): after
+//! an edit, only registers whose cone hash changed (plus the output cone,
+//! if its hash changed) are recompiled.
+
+use std::collections::HashMap;
+
+use super::{Graph, NodeId, NodeKind};
+use crate::util::fnv::Fnv2;
+
+/// The content signature of every invalidation unit of a design.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConeHashes {
+    /// `(register name, cone hash)` per entry of `Graph::regs`, in
+    /// register order. The hash covers the register's own declaration
+    /// (name, width, init) plus its next-state cone.
+    pub regs: Vec<(String, String)>,
+    /// One hash over all output cones, in output order (names included).
+    pub outputs: String,
+    /// Signature of the input-port interface (names + widths, in order).
+    /// A changed interface disables delta matching entirely.
+    pub inputs: String,
+}
+
+/// Hash the combinational cone rooted at `start`. Registers are leaves
+/// (identified by name); constants and inputs are leaves; primitive ops
+/// hash their opcode, width and argument structure. `order` carries the
+/// DFS visit indices so shared subtrees hash as back-references — the
+/// hash is a function of the cone's structure only, never of node ids.
+fn hash_cone(g: &Graph, start: NodeId, h: &mut Fnv2, order: &mut HashMap<NodeId, u32>) {
+    // iterative preorder DFS; children pushed in reverse so they pop in
+    // argument order
+    let mut stack: Vec<NodeId> = vec![start];
+    while let Some(id) = stack.pop() {
+        if let Some(&ix) = order.get(&id) {
+            h.text("ref");
+            h.word(ix as u64);
+            continue;
+        }
+        order.insert(id, order.len() as u32);
+        let node = &g.nodes[id as usize];
+        match &node.kind {
+            NodeKind::Const(v) => {
+                h.text("C");
+                h.word(*v);
+                h.byte(node.width);
+            }
+            NodeKind::Input(pi) => {
+                h.text("I");
+                h.text(&g.inputs[*pi as usize].name);
+                h.byte(node.width);
+            }
+            NodeKind::Reg(ri) => {
+                // leaf: cones are combinational; the register's own cone
+                // is hashed separately under its name
+                h.text("R");
+                h.text(&g.regs[*ri as usize].name);
+                h.byte(node.width);
+            }
+            NodeKind::Prim(op) => {
+                h.text("P");
+                h.text(&format!("{op:?}"));
+                h.byte(node.width);
+                h.word(node.args.len() as u64);
+                for &a in node.args.iter().rev() {
+                    stack.push(a);
+                }
+            }
+        }
+    }
+}
+
+/// Compute the full [`ConeHashes`] signature of a graph. O(total cone
+/// size): each register cone is walked once with a fresh visit map.
+pub fn cone_hashes(g: &Graph) -> ConeHashes {
+    let mut regs = Vec::with_capacity(g.regs.len());
+    for r in &g.regs {
+        let mut h = Fnv2::new();
+        h.text("REG");
+        h.text(&r.name);
+        h.byte(r.width);
+        h.word(r.init);
+        let mut order = HashMap::new();
+        hash_cone(g, r.next, &mut h, &mut order);
+        regs.push((r.name.clone(), h.hex()));
+    }
+    let mut ho = Fnv2::new();
+    ho.word(g.outputs.len() as u64);
+    for (name, node) in &g.outputs {
+        ho.text(name);
+        let mut order = HashMap::new();
+        hash_cone(g, *node, &mut ho, &mut order);
+    }
+    let mut hi = Fnv2::new();
+    hi.word(g.inputs.len() as u64);
+    for p in &g.inputs {
+        hi.text(&p.name);
+        hi.byte(p.width);
+    }
+    ConeHashes { regs, outputs: ho.hex(), inputs: hi.hex() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::PrimOp;
+
+    fn two_reg_design(k: u64) -> Graph {
+        let mut g = Graph::new("t");
+        let i = g.input("in", 8);
+        let r0 = g.reg("r0", 8, 0);
+        let r1 = g.reg("r1", 8, 0);
+        let c = g.konst(k, 8);
+        let a = g.prim_w(PrimOp::Add, &[i, c], 8);
+        let x = g.prim_w(PrimOp::Xor, &[r0, i], 8);
+        g.connect_reg(r0, a);
+        g.connect_reg(r1, x);
+        g.output("out", r1);
+        g
+    }
+
+    /// Editing one register's cone changes exactly that register's hash
+    /// (node ids shift, but untouched cones hash identically).
+    #[test]
+    fn edit_invalidates_only_the_touched_cone() {
+        let a = cone_hashes(&two_reg_design(1));
+        let b = cone_hashes(&two_reg_design(2));
+        assert_eq!(a.regs.len(), 2);
+        assert_eq!(a.inputs, b.inputs);
+        assert_eq!(a.outputs, b.outputs, "outputs read only r1, which is unchanged");
+        assert_ne!(a.regs[0], b.regs[0], "r0's cone carries the edited constant");
+        assert_eq!(a.regs[1], b.regs[1], "r1's cone is untouched");
+    }
+
+    /// The hash is id-independent: inserting an unrelated node before the
+    /// cone leaves its hash unchanged.
+    #[test]
+    fn hash_ignores_node_id_shifts() {
+        let g1 = two_reg_design(1);
+        let mut g2 = Graph::new("t");
+        let _pad = g2.konst(0x3F, 8); // shifts every later node id
+        let i = g2.input("in", 8);
+        let r0 = g2.reg("r0", 8, 0);
+        let r1 = g2.reg("r1", 8, 0);
+        let c = g2.konst(1, 8);
+        let a = g2.prim_w(PrimOp::Add, &[i, c], 8);
+        let x = g2.prim_w(PrimOp::Xor, &[r0, i], 8);
+        g2.connect_reg(r0, a);
+        g2.connect_reg(r1, x);
+        g2.output("out", r1);
+        let h1 = cone_hashes(&g1);
+        let h2 = cone_hashes(&g2);
+        assert_eq!(h1.regs, h2.regs);
+        assert_eq!(h1.outputs, h2.outputs);
+        assert_eq!(h1.inputs, h2.inputs);
+    }
+
+    /// Shared subtrees hash as back-references, and diamond sharing is
+    /// distinguished from duplicated structure.
+    #[test]
+    fn sharing_is_part_of_the_shape() {
+        let mut g1 = Graph::new("s");
+        let i = g1.input("in", 8);
+        let n = g1.prim_w(PrimOp::Not, &[i], 8);
+        let shared = g1.prim_w(PrimOp::Add, &[n, n], 8); // same node twice
+        let r = g1.reg("r", 8, 0);
+        g1.connect_reg(r, shared);
+
+        let mut g2 = Graph::new("s");
+        let i = g2.input("in", 8);
+        let n1 = g2.prim_w(PrimOp::Not, &[i], 8);
+        let n2 = g2.prim_w(PrimOp::Not, &[i], 8); // structurally equal twin
+        let dup = g2.prim_w(PrimOp::Add, &[n1, n2], 8);
+        let r = g2.reg("r", 8, 0);
+        g2.connect_reg(r, dup);
+
+        assert_ne!(cone_hashes(&g1).regs[0].1, cone_hashes(&g2).regs[0].1);
+    }
+
+    /// Catalog designs hash deterministically.
+    #[test]
+    fn catalog_hashes_are_stable() {
+        let d = crate::designs::catalog("fir8").unwrap();
+        let a = cone_hashes(&d.graph);
+        let b = cone_hashes(&d.graph);
+        assert_eq!(a, b);
+        assert_eq!(a.regs.len(), d.graph.regs.len());
+        for (_, h) in &a.regs {
+            assert_eq!(h.len(), 32);
+        }
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod ops;
 pub mod builder;
+pub mod cone;
 pub mod passes;
 pub mod levelize;
 

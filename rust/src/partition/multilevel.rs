@@ -110,6 +110,97 @@ pub fn partition(hg: &RegHypergraph, n: usize, seed: u64) -> Vec<u32> {
     part
 }
 
+/// Warm-start k-way partitioning for incremental recompiles: seed the
+/// assignment from a previous run instead of coarsening from scratch.
+/// `prev[v]` carries vertex `v`'s prior part (clamped into range), or
+/// `None` for vertices whose cone changed (or is new) — those are
+/// re-homed greedily by edge affinity in decreasing weight order, exactly
+/// like [`initial`]. The seed then gets the same boundary-FM polish (with
+/// best-prefix rollback) and final balance repair as the cold path, so
+/// the result respects [`balance_limit`] with the anchor pinned to 0 —
+/// but skips the coarsening hierarchy entirely, which is what makes the
+/// warm path cheap.
+pub fn warm_start(hg: &RegHypergraph, n: usize, prev: &[Option<u32>]) -> Vec<u32> {
+    assert!(n >= 1);
+    assert_eq!(prev.len(), hg.n, "prev assignment must cover every vertex");
+    if n == 1 || hg.n <= 1 {
+        return vec![0; hg.n];
+    }
+    let total: u64 = hg.weight.iter().sum();
+    let max_w = hg.weight.iter().copied().max().unwrap_or(0);
+    let limit = balance_limit(total, n, max_w);
+    let level = Level {
+        weight: hg.weight.clone(),
+        edges: hg.edges.clone(),
+        edge_weight: hg.edge_weight.clone(),
+        pins: hg.pins.clone(),
+        anchor: hg.anchor,
+    };
+    const UNPLACED: u32 = u32::MAX;
+    let mut part = vec![UNPLACED; hg.n];
+    let mut load = vec![0u64; n];
+    part[hg.anchor] = 0;
+    load[0] += level.weight[hg.anchor];
+    for (v, prev_p) in prev.iter().enumerate() {
+        if v == hg.anchor {
+            continue;
+        }
+        if let Some(p) = prev_p {
+            // carried verbatim, even if the prior run used a different
+            // balance point — refine/rebalance below repair any drift
+            let p = (*p as usize).min(n - 1);
+            part[v] = p as u32;
+            load[p] += level.weight[v];
+        }
+    }
+    let mut cnt: Vec<Vec<u32>> = level.edges.iter().map(|_| vec![0u32; n]).collect();
+    for (e, pins) in level.edges.iter().enumerate() {
+        for &v in pins {
+            if part[v as usize] != UNPLACED {
+                cnt[e][part[v as usize] as usize] += 1;
+            }
+        }
+    }
+    let mut order: Vec<u32> =
+        (0..hg.n as u32).filter(|&v| part[v as usize] == UNPLACED).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(level.weight[v as usize]), v));
+    for &v in &order {
+        let v = v as usize;
+        let w = level.weight[v];
+        let mut best: Option<(u64, usize)> = None;
+        for p in 0..n {
+            if load[p] + w > limit {
+                continue;
+            }
+            let mut s = 0u64;
+            for &e in &level.pins[v] {
+                if cnt[e as usize][p] > 0 {
+                    s += level.edge_weight[e as usize];
+                }
+            }
+            let better = match best {
+                None => true,
+                Some((bs, bp)) => s > bs || (s == bs && (load[p], p) < (load[bp], bp)),
+            };
+            if better {
+                best = Some((s, p));
+            }
+        }
+        let p = match best {
+            Some((_, p)) => p,
+            None => (0..n).min_by_key(|&p| (load[p], p)).unwrap(),
+        };
+        part[v] = p as u32;
+        load[p] += w;
+        for &e in &level.pins[v] {
+            cnt[e as usize][p] += 1;
+        }
+    }
+    refine(&level, n, limit, &mut part);
+    rebalance(&level, n, limit, &mut part);
+    part
+}
+
 /// One heavy-edge-matching coarsening step; `None` when matching no
 /// longer shrinks the graph meaningfully.
 fn coarsen(level: &Level, merge_cap: u64, rng: &mut Rng) -> Option<(Level, Vec<u32>)> {
@@ -495,6 +586,42 @@ mod tests {
             let cut = connectivity_cost(&hg, &part);
             let base = connectivity_cost(&hg, &scattered);
             assert!(cut < base, "n={n}: multilevel cut {cut} vs scatter {base}");
+        }
+    }
+
+    /// Warm-starting from a perturbed prior assignment stays balanced,
+    /// keeps the anchor pinned, and lands within a small factor of the
+    /// from-scratch cut.
+    #[test]
+    fn warm_start_stays_near_the_scratch_cut() {
+        let hg = hg_for("gemmini_like_8");
+        let total: u64 = hg.weight.iter().sum();
+        let max_w = hg.weight.iter().copied().max().unwrap();
+        for n in [2usize, 4] {
+            let scratch = partition(&hg, n, 1);
+            // forget every 5th vertex (the "changed cones") and feed the
+            // rest back as the warm seed
+            let prev: Vec<Option<u32>> = scratch
+                .iter()
+                .enumerate()
+                .map(|(v, &p)| if v % 5 == 0 { None } else { Some(p) })
+                .collect();
+            let warm = warm_start(&hg, n, &prev);
+            assert_eq!(warm.len(), hg.n);
+            assert_eq!(warm[hg.anchor], 0, "anchor pinned to 0");
+            assert!(warm.iter().all(|&p| (p as usize) < n));
+            let limit = balance_limit(total, n, max_w);
+            let mut load = vec![0u64; n];
+            for (v, &p) in warm.iter().enumerate() {
+                load[p as usize] += hg.weight[v];
+            }
+            assert!(load.iter().all(|&l| l <= limit), "n={n}: warm start respects balance");
+            let warm_cut = connectivity_cost(&hg, &warm);
+            let scratch_cut = connectivity_cost(&hg, &scratch);
+            assert!(
+                warm_cut <= 2 * scratch_cut.max(1),
+                "n={n}: warm cut {warm_cut} vs scratch {scratch_cut}"
+            );
         }
     }
 

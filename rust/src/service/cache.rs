@@ -14,6 +14,17 @@
 //!   ownership map (cheap cone walks, no min-cut search);
 //! * **miss** — full compile + partition, then persist for next time.
 //!
+//! A third answer sits between "hit" and "miss":
+//! [`DesignCache::open_design_incremental`] treats an exact-key miss
+//! whose design *family* (same graph name and configuration, different
+//! content) is already cached as a **near-miss**: it diffs the stored
+//! per-register cone hashes ([`crate::graph::cone`]) against the
+//! requested graph, rebuilds only the changed cones
+//! ([`crate::coordinator::incremental::delta_compile`]), warm-starts the
+//! partitioner from the donor's ownership, and commits the spliced
+//! artifacts under the new key — a small fraction of a cold compile for
+//! a single-module edit.
+//!
 //! See the module docs of [`crate::service`] for the on-disk layout.
 
 use std::collections::HashMap;
@@ -23,59 +34,23 @@ use std::time::{Duration, Instant};
 
 use crate::activity::GroupDepGraph;
 use crate::coordinator::compile::{compile_design, CompileOpts};
+use crate::coordinator::incremental::delta_compile;
 use crate::designs::Design;
+use crate::graph::cone::{cone_hashes, ConeHashes};
 use crate::graph::ops::mask;
 use crate::graph::Graph;
-use crate::partition::{partition_ir, partition_ir_with, FixedOwners, PartitionerKind, Partitioning};
+use crate::partition::{
+    partition_ir, partition_ir_with, warm_partition, FixedOwners, PartitionerKind, Partitioning,
+};
 use crate::tensor::ir::LayerIr;
 use crate::tensor::oim::Oim;
+use crate::util::fnv::Fnv2;
 use crate::util::json::{arr_str, arr_u32, arr_u64, obj, parse, Json};
 
 /// Bumped whenever the persisted schema changes; part of the fingerprint,
-/// so old entries simply miss instead of mis-parsing.
-pub const CACHE_FORMAT_VERSION: u64 = 1;
-
-const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
-const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
-
-/// Two independent FNV-1a streams concatenated to a 128-bit key. The
-/// second stream perturbs both the offset basis and each input byte, so
-/// the halves do not cancel; 128 bits puts accidental collisions between
-/// distinct designs out of practical reach.
-struct Fnv2 {
-    a: u64,
-    b: u64,
-}
-
-impl Fnv2 {
-    fn new() -> Self {
-        Fnv2 { a: FNV_BASIS, b: FNV_BASIS ^ 0x9e37_79b9_7f4a_7c15 }
-    }
-
-    #[inline]
-    fn byte(&mut self, x: u8) {
-        self.a = (self.a ^ x as u64).wrapping_mul(FNV_PRIME);
-        self.b = (self.b ^ (x ^ 0x5a) as u64).wrapping_mul(FNV_PRIME);
-    }
-
-    fn word(&mut self, x: u64) {
-        for b in x.to_le_bytes() {
-            self.byte(b);
-        }
-    }
-
-    /// Length-prefixed, so `("ab","c")` and `("a","bc")` hash apart.
-    fn text(&mut self, s: &str) {
-        self.word(s.len() as u64);
-        for b in s.bytes() {
-            self.byte(b);
-        }
-    }
-
-    fn hex(&self) -> String {
-        format!("{:016x}{:016x}", self.a, self.b)
-    }
-}
+/// so old entries simply miss instead of mis-parsing. v2 added the graph
+/// (family) name and the per-register cone hashes to `meta.json`.
+pub const CACHE_FORMAT_VERSION: u64 = 2;
 
 /// Content key for one (input graph, compile, partitioning) combination.
 /// Hashes the *un-optimized* input graph — node kinds (with their
@@ -141,6 +116,10 @@ pub struct RegInfo {
 pub struct CachedDesign {
     pub key: String,
     pub design_name: String,
+    /// Name of the input *graph* — the design family. Catalog `_edit`
+    /// variants share it with their base design, which is what the
+    /// incremental-open donor search keys on.
+    pub graph_name: String,
     pub fuse: bool,
     pub parts: usize,
     pub partitioner: PartitionerKind,
@@ -154,6 +133,9 @@ pub struct CachedDesign {
     /// Register name → slot map of the compiled graph (node ids are slot
     /// ids), for `lane_init` resolution and snapshot labeling.
     pub regs: Vec<RegInfo>,
+    /// Per-register cone content hashes of the *un-optimized* input
+    /// graph — the invalidation units the incremental open path diffs.
+    pub cone: ConeHashes,
     /// Wall time of the original cold compile + partition, as persisted —
     /// the denominator of the warm-open speedup this cache exists for.
     pub cold_compile: Duration,
@@ -218,6 +200,14 @@ pub struct OpenReport {
     pub key: String,
     pub hit: bool,
     pub source: OpenSource,
+    /// True when this open was served by the cone-delta reuse path (a
+    /// near-miss rebuilt incrementally from a same-family donor entry).
+    pub incremental: bool,
+    /// GDG groups carried over unchanged from the donor (incremental
+    /// opens only; 0 otherwise).
+    pub reused_groups: usize,
+    /// GDG groups rebuilt by the delta pass (incremental opens only).
+    pub rebuilt_groups: usize,
     /// Wall time of this open (lookup / load / compile, whichever ran).
     pub open_time: Duration,
     /// Cold compile + partition time recorded when the entry was built.
@@ -272,44 +262,19 @@ impl DesignCache {
         if parts == 0 {
             return Err("parts must be >= 1".into());
         }
+        self.sweep_trash();
         let key = design_key(&design.graph, fuse, partitioner, parts);
         let t0 = Instant::now();
 
-        if let Some(hit) = self.mem.get(&key).cloned() {
-            self.touch(&key);
-            self.mem_hits += 1;
-            let report = OpenReport {
-                key,
-                hit: true,
-                source: OpenSource::Memory,
-                open_time: t0.elapsed(),
-                cold_compile: hit.cold_compile,
-            };
-            return Ok((hit, report));
-        }
-
-        if self.dir.is_some() {
-            // a corrupt or version-skewed disk entry is not an error —
-            // fall through and rebuild over it
-            if let Ok(loaded) = self.load_disk(&key, design, fuse, parts, partitioner) {
-                let entry = Arc::new(loaded);
-                self.insert(key.clone(), entry.clone());
-                self.disk_hits += 1;
-                let report = OpenReport {
-                    key,
-                    hit: true,
-                    source: OpenSource::Disk,
-                    open_time: t0.elapsed(),
-                    cold_compile: entry.cold_compile,
-                };
-                return Ok((entry, report));
-            }
+        if let Some(hit) = self.exact_hit(&key, design, fuse, parts, partitioner, t0) {
+            return Ok(hit);
         }
 
         // miss: full compile + partition, persist, then serve
         let c = compile_design(design, CompileOpts { fuse });
         let parting = partition_ir(&c.ir, parts, partitioner);
         let gdg = GroupDepGraph::build(&c.ir, &c.oim);
+        let cone = cone_hashes(&design.graph);
         let regs = c
             .graph
             .regs
@@ -320,6 +285,7 @@ impl DesignCache {
         let entry = Arc::new(CachedDesign {
             key: key.clone(),
             design_name: design.name.clone(),
+            graph_name: design.graph.name.clone(),
             fuse,
             parts,
             partitioner,
@@ -328,6 +294,7 @@ impl DesignCache {
             gdg,
             owner_of_reg: parting.owner_of_reg,
             regs,
+            cone,
             cold_compile: cold,
         });
         if let Err(e) = self.persist(&entry) {
@@ -340,10 +307,210 @@ impl DesignCache {
             key,
             hit: false,
             source: OpenSource::Compiled,
+            incremental: false,
+            reused_groups: 0,
+            rebuilt_groups: 0,
             open_time: t0.elapsed(),
             cold_compile: cold,
         };
         Ok((entry, report))
+    }
+
+    /// [`Self::open_design`] with the **reuse path**: an exact-key miss
+    /// whose design family is already cached (same graph name, `fuse`,
+    /// `parts` and partitioner under a different content key) is rebuilt
+    /// incrementally — cone-hash diff against the donor, delta compile of
+    /// the changed cones only, warm-start partitioning seeded from the
+    /// donor's ownership — and committed under the new key. Falls back to
+    /// the cold path whenever no donor matches or the delta pass bails
+    /// (changed interface, renamed registers, ...). Exact hits are served
+    /// exactly as [`Self::open_design`] would.
+    pub fn open_design_incremental(
+        &mut self,
+        design: &Design,
+        fuse: bool,
+        parts: usize,
+        partitioner: PartitionerKind,
+    ) -> Result<(Arc<CachedDesign>, OpenReport), String> {
+        if parts == 0 {
+            return Err("parts must be >= 1".into());
+        }
+        self.sweep_trash();
+        let key = design_key(&design.graph, fuse, partitioner, parts);
+        let t0 = Instant::now();
+
+        if let Some(hit) = self.exact_hit(&key, design, fuse, parts, partitioner, t0) {
+            return Ok(hit);
+        }
+
+        if let Some(donor) = self.find_donor(design, fuse, parts, partitioner, &key) {
+            if let Some(delta) = delta_compile(design, &donor, fuse) {
+                let owner = match partitioner {
+                    PartitionerKind::MinCut => {
+                        // prior ownership keyed by register name, minus the
+                        // edited registers (those are re-homed by the warm
+                        // FM pass)
+                        let commit_of_slot: HashMap<u32, usize> =
+                            donor.ir.commits.iter().enumerate().map(|(i, c)| (c.0, i)).collect();
+                        let mut prev: HashMap<String, usize> = HashMap::new();
+                        for r in &donor.regs {
+                            if delta.changed_regs.iter().any(|n| n == &r.name) {
+                                continue;
+                            }
+                            if let Some(&ci) = commit_of_slot.get(&r.slot) {
+                                prev.insert(r.name.clone(), donor.owner_of_reg[ci]);
+                            }
+                        }
+                        warm_partition(&delta.ir, parts, &prev)
+                    }
+                    PartitionerKind::RoundRobin => {
+                        (0..delta.ir.commits.len()).map(|i| i % parts).collect()
+                    }
+                };
+                let cold = t0.elapsed();
+                let entry = Arc::new(CachedDesign {
+                    key: key.clone(),
+                    design_name: design.name.clone(),
+                    graph_name: design.graph.name.clone(),
+                    fuse,
+                    parts,
+                    partitioner,
+                    ir: delta.ir,
+                    oim: delta.oim,
+                    gdg: delta.gdg,
+                    owner_of_reg: owner,
+                    regs: delta.regs,
+                    cone: delta.cone,
+                    cold_compile: cold,
+                });
+                if let Err(e) = self.persist(&entry) {
+                    eprintln!("rteaal serve: cache persist failed for {key}: {e}");
+                }
+                self.insert(key.clone(), entry.clone());
+                self.misses += 1;
+                let report = OpenReport {
+                    key,
+                    hit: false,
+                    source: OpenSource::Compiled,
+                    incremental: true,
+                    reused_groups: delta.reused_groups,
+                    rebuilt_groups: delta.rebuilt_groups,
+                    open_time: t0.elapsed(),
+                    cold_compile: cold,
+                };
+                return Ok((entry, report));
+            }
+        }
+
+        self.open_design(design, fuse, parts, partitioner)
+    }
+
+    /// Serve an exact-key hit from memory or disk, if one exists.
+    fn exact_hit(
+        &mut self,
+        key: &str,
+        design: &Design,
+        fuse: bool,
+        parts: usize,
+        partitioner: PartitionerKind,
+        t0: Instant,
+    ) -> Option<(Arc<CachedDesign>, OpenReport)> {
+        if let Some(hit) = self.mem.get(key).cloned() {
+            self.touch(key);
+            self.mem_hits += 1;
+            let report = OpenReport {
+                key: key.to_string(),
+                hit: true,
+                source: OpenSource::Memory,
+                incremental: false,
+                reused_groups: 0,
+                rebuilt_groups: 0,
+                open_time: t0.elapsed(),
+                cold_compile: hit.cold_compile,
+            };
+            return Some((hit, report));
+        }
+        if self.dir.is_some() {
+            // a corrupt or version-skewed disk entry is not an error —
+            // the caller falls through and rebuilds over it
+            if let Ok(loaded) = self.load_disk(key, design, fuse, parts, partitioner) {
+                let entry = Arc::new(loaded);
+                self.insert(key.to_string(), entry.clone());
+                self.disk_hits += 1;
+                let report = OpenReport {
+                    key: key.to_string(),
+                    hit: true,
+                    source: OpenSource::Disk,
+                    incremental: false,
+                    reused_groups: 0,
+                    rebuilt_groups: 0,
+                    open_time: t0.elapsed(),
+                    cold_compile: entry.cold_compile,
+                };
+                return Some((entry, report));
+            }
+        }
+        None
+    }
+
+    /// Find a same-family donor for an incremental open: an entry with
+    /// the same graph name and `(fuse, parts, partitioner)` configuration
+    /// under a different content key. Memory first (most recently used
+    /// wins), then a scan of the store directory.
+    fn find_donor(
+        &self,
+        design: &Design,
+        fuse: bool,
+        parts: usize,
+        partitioner: PartitionerKind,
+        skip_key: &str,
+    ) -> Option<Arc<CachedDesign>> {
+        let family = |e: &CachedDesign| {
+            e.graph_name == design.graph.name
+                && e.fuse == fuse
+                && e.parts == parts
+                && e.partitioner == partitioner
+        };
+        for key in self.order.iter().rev() {
+            if key == skip_key {
+                continue;
+            }
+            if let Some(e) = self.mem.get(key) {
+                if family(e) {
+                    return Some(e.clone());
+                }
+            }
+        }
+        let dir = self.dir.as_ref()?;
+        let entries = std::fs::read_dir(dir).ok()?;
+        for entry in entries.flatten() {
+            let Ok(name) = entry.file_name().into_string() else { continue };
+            if name == skip_key || name.contains(".tmp.") || name.contains(".trash.") {
+                continue;
+            }
+            if let Ok(e) = self.load_disk_raw(&name) {
+                if family(&e) {
+                    return Some(Arc::new(e));
+                }
+            }
+        }
+        None
+    }
+
+    /// Remove `.trash.` tombstone directories left behind by an eviction
+    /// interrupted between its rename and delete (the owner normally
+    /// deletes its tombstone immediately). Best-effort, racing deleters
+    /// are harmless.
+    fn sweep_trash(&self) {
+        let Some(dir) = &self.dir else { return };
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        for entry in entries.flatten() {
+            if let Ok(name) = entry.file_name().into_string() {
+                if name.contains(".trash.") {
+                    let _ = std::fs::remove_dir_all(entry.path());
+                }
+            }
+        }
     }
 
     fn touch(&mut self, key: &str) {
@@ -385,10 +552,13 @@ impl DesignCache {
         let write = |name: &str, j: Json| -> Result<(), String> {
             std::fs::write(tmp.join(name), j.to_string()).map_err(|er| er.to_string())
         };
+        let cone_names: Vec<String> = e.cone.regs.iter().map(|(n, _)| n.clone()).collect();
+        let cone_hash_strs: Vec<String> = e.cone.regs.iter().map(|(_, h)| h.clone()).collect();
         let meta = obj(vec![
             ("version", Json::Int(CACHE_FORMAT_VERSION as i64)),
             ("key", Json::Str(e.key.clone())),
             ("design", Json::Str(e.design_name.clone())),
+            ("graph", Json::Str(e.graph_name.clone())),
             ("fuse", Json::Bool(e.fuse)),
             ("parts", Json::Int(e.parts as i64)),
             ("partitioner", Json::Str(e.partitioner.name().to_string())),
@@ -403,6 +573,10 @@ impl DesignCache {
                 "reg_widths",
                 arr_u64(&e.regs.iter().map(|r| r.width as u64).collect::<Vec<_>>()),
             ),
+            ("cone_regs", arr_str(&cone_names)),
+            ("cone_reg_hashes", arr_str(&cone_hash_strs)),
+            ("cone_outputs", Json::Str(e.cone.outputs.clone())),
+            ("cone_inputs", Json::Str(e.cone.inputs.clone())),
         ]);
         write("meta.json", meta)?;
         write("oim.json", e.oim.to_json())?;
@@ -444,6 +618,23 @@ impl DesignCache {
         parts: usize,
         partitioner: PartitionerKind,
     ) -> Result<CachedDesign, String> {
+        let e = self.load_disk_raw(key)?;
+        // paranoia against a (truncated-key) collision or a hand-edited
+        // store: the stored configuration must echo the request
+        if e.design_name != design.name
+            || e.parts != parts
+            || e.partitioner != partitioner
+            || e.fuse != fuse
+        {
+            return Err("cache entry does not match requested configuration".into());
+        }
+        Ok(e)
+    }
+
+    /// Load a disk entry by key, trusting the stored configuration (no
+    /// request echo-check): the donor search deliberately loads entries
+    /// of *other* designs in the family.
+    fn load_disk_raw(&self, key: &str) -> Result<CachedDesign, String> {
         let dir = self.entry_dir(key).ok_or("no cache dir")?;
         let read = |name: &str| -> Result<Json, String> {
             let text = std::fs::read_to_string(dir.join(name))
@@ -455,19 +646,15 @@ impl DesignCache {
         if meta.req_u64("version").map_err(schema)? != CACHE_FORMAT_VERSION {
             return Err("cache format version skew".into());
         }
-        // paranoia against a (truncated-key) collision or a hand-edited
-        // store: the stored configuration must echo the request
-        let stored_fuse = match meta.get("fuse") {
-            Some(Json::Bool(b)) => Some(*b),
-            _ => None,
+        let design_name = meta.req_str("design").map_err(schema)?.to_string();
+        let graph_name = meta.req_str("graph").map_err(schema)?.to_string();
+        let fuse = match meta.get("fuse") {
+            Some(Json::Bool(b)) => *b,
+            _ => return Err("meta.json: fuse missing or non-bool".into()),
         };
-        if meta.req_str("design").map_err(schema)? != design.name
-            || meta.req_usize("parts").map_err(schema)? != parts
-            || meta.req_str("partitioner").map_err(schema)? != partitioner.name()
-            || stored_fuse != Some(fuse)
-        {
-            return Err("cache entry does not match requested configuration".into());
-        }
+        let parts = meta.req_usize("parts").map_err(schema)?;
+        let partitioner = PartitionerKind::parse(meta.req_str("partitioner").map_err(schema)?)
+            .ok_or("meta.json: unknown partitioner")?;
         let cold_compile = Duration::from_nanos(meta.req_u64("cold_compile_ns").map_err(schema)?);
         let owner_of_reg: Vec<usize> = meta
             .req_u64_vec("owner_of_reg")
@@ -489,6 +676,24 @@ impl DesignCache {
                 .to_string();
             regs.push(RegInfo { name, slot: reg_slots[i], width: reg_widths[i] as u8 });
         }
+        let cone_names = meta.req_arr("cone_regs").map_err(schema)?;
+        let cone_hash_strs = meta.req_arr("cone_reg_hashes").map_err(schema)?;
+        if cone_names.len() != cone_hash_strs.len() {
+            return Err("meta.json: cone arrays disagree on length".into());
+        }
+        let mut cone_regs = Vec::with_capacity(cone_names.len());
+        for i in 0..cone_names.len() {
+            let n = cone_names[i].as_str().ok_or("meta.json: cone_regs holds a non-string")?;
+            let h = cone_hash_strs[i]
+                .as_str()
+                .ok_or("meta.json: cone_reg_hashes holds a non-string")?;
+            cone_regs.push((n.to_string(), h.to_string()));
+        }
+        let cone = ConeHashes {
+            regs: cone_regs,
+            outputs: meta.req_str("cone_outputs").map_err(schema)?.to_string(),
+            inputs: meta.req_str("cone_inputs").map_err(schema)?.to_string(),
+        };
         let oim = Oim::from_json(&read("oim.json")?).map_err(|e| format!("oim.json: {e}"))?;
         let ir = LayerIr::from_json_with_oim(&read("ir.json")?, &oim)
             .map_err(|e| format!("ir.json: {e}"))?;
@@ -501,7 +706,8 @@ impl DesignCache {
         }
         Ok(CachedDesign {
             key: key.to_string(),
-            design_name: design.name.clone(),
+            design_name,
+            graph_name,
             fuse,
             parts,
             partitioner,
@@ -510,6 +716,7 @@ impl DesignCache {
             gdg,
             owner_of_reg,
             regs,
+            cone,
             cold_compile,
         })
     }
@@ -670,6 +877,101 @@ mod tests {
                 "staging litter left behind: {name}"
             );
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Touching an entry (memory hit) moves it to the MRU end, so the
+    /// untouched entry is the one evicted when the cap is exceeded.
+    #[test]
+    fn lru_touch_changes_the_eviction_victim() {
+        let dir = tmp_dir("lru_touch");
+        let mut cache = DesignCache::new(Some(dir.clone()), 2);
+        let counter = catalog("counter").unwrap();
+        let alu = catalog("alu32").unwrap();
+        let fir = catalog("fir8").unwrap();
+        cache.open_design(&counter, true, 1, PartitionerKind::MinCut).unwrap();
+        cache.open_design(&alu, true, 1, PartitionerKind::MinCut).unwrap();
+        // touch counter: alu32 becomes the LRU victim
+        let (_, r) = cache.open_design(&counter, true, 1, PartitionerKind::MinCut).unwrap();
+        assert_eq!(r.source, OpenSource::Memory);
+        cache.open_design(&fir, true, 1, PartitionerKind::MinCut).unwrap();
+        assert_eq!(cache.len(), 2);
+        let (_, rc) = cache.open_design(&counter, true, 1, PartitionerKind::MinCut).unwrap();
+        assert_eq!(rc.source, OpenSource::Memory, "touched entry must survive the eviction");
+        let (_, ra) = cache.open_design(&alu, true, 1, PartitionerKind::MinCut).unwrap();
+        assert_eq!(ra.source, OpenSource::Disk, "untouched entry was the victim");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `.trash.` tombstones left by an eviction that crashed between its
+    /// rename and delete are swept by the next open.
+    #[test]
+    fn trash_tombstones_are_swept_on_open() {
+        let d = catalog("counter").unwrap();
+        let dir = tmp_dir("trash");
+        let mut cache = DesignCache::new(Some(dir.clone()), 4);
+        cache.open_design(&d, true, 1, PartitionerKind::MinCut).unwrap();
+        let orphan = dir.join("deadbeef.trash.12345");
+        std::fs::create_dir_all(orphan.join("sub")).unwrap();
+        std::fs::write(orphan.join("meta.json"), "{}").unwrap();
+        cache.open_design(&d, true, 1, PartitionerKind::MinCut).unwrap();
+        assert!(!orphan.exists(), "tombstone must be swept by the next open");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The incremental open path with an in-memory donor: a cold open of
+    /// the base design donates its artifacts to the `_edit` variant of
+    /// the same family, which is rebuilt through the cone delta and
+    /// committed under its own key — an exact hit on reopen.
+    #[test]
+    fn incremental_open_reuses_an_in_memory_donor() {
+        let base = catalog("fir8").unwrap();
+        let edit = catalog("fir8_edit").unwrap();
+        let dir = tmp_dir("incr_mem");
+        let mut cache = DesignCache::new(Some(dir.clone()), 4);
+        let (_, rb) = cache.open_design(&base, true, 2, PartitionerKind::MinCut).unwrap();
+        let (_, re) =
+            cache.open_design_incremental(&edit, true, 2, PartitionerKind::MinCut).unwrap();
+        assert!(re.incremental, "same-family near-miss must take the delta path");
+        assert!(!re.hit);
+        assert_ne!(re.key, rb.key, "the edit commits under its own content key");
+        assert!(re.reused_groups > 0, "untouched groups must be carried over");
+        let (_, r2) =
+            cache.open_design_incremental(&edit, true, 2, PartitionerKind::MinCut).unwrap();
+        assert!(r2.hit && !r2.incremental, "reopen is an exact hit");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The incremental open path with a *disk* donor: a fresh cache front
+    /// whose memory holds nothing still finds the base entry by scanning
+    /// the store directory.
+    #[test]
+    fn incremental_open_finds_the_donor_on_disk() {
+        let base = catalog("fir8").unwrap();
+        let edit = catalog("fir8_edit").unwrap();
+        let dir = tmp_dir("incr_disk");
+        {
+            let mut cache = DesignCache::new(Some(dir.clone()), 4);
+            cache.open_design(&base, true, 2, PartitionerKind::MinCut).unwrap();
+        }
+        let mut cache2 = DesignCache::new(Some(dir.clone()), 4);
+        let (_, re) =
+            cache2.open_design_incremental(&edit, true, 2, PartitionerKind::MinCut).unwrap();
+        assert!(re.incremental, "donor must be discovered by the disk scan");
+        assert_eq!(re.source, OpenSource::Compiled);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// With no family donor anywhere, the incremental open falls back to
+    /// a plain cold compile.
+    #[test]
+    fn incremental_open_without_a_donor_falls_back_to_cold() {
+        let d = catalog("counter").unwrap();
+        let dir = tmp_dir("incr_cold");
+        let mut cache = DesignCache::new(Some(dir.clone()), 4);
+        let (_, r) = cache.open_design_incremental(&d, true, 1, PartitionerKind::MinCut).unwrap();
+        assert!(!r.hit && !r.incremental);
+        assert_eq!(r.source, OpenSource::Compiled);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -38,7 +38,7 @@
 //!
 //! | verb         | request fields                                              | reply fields |
 //! |--------------|-------------------------------------------------------------|--------------|
-//! | `open`       | `design`; optional `kernel` (default `PSU`), `parts` (1), `lanes` (1, the host width B), `width` (1, lanes for *this* session), `sparse` (false), `fuse` (true) | `session`, `cache` `{key, hit, source, open_ms, cold_compile_ms}`, `host`, `lane0` |
+//! | `open`       | `design`; optional `kernel` (default `PSU`), `parts` (1), `lanes` (1, the host width B), `width` (1, lanes for *this* session), `sparse` (false), `fuse` (true), `incremental` (false, route an exact-key miss through the cone-delta reuse path) | `session`, `cache` `{key, hit, source, incremental, reused_groups, rebuilt_groups, open_ms, cold_compile_ms}`, `host`, `lane0` |
 //! | `submit`     | `session`; stimulus: `{"kind":"design","cycles":N}` or `{"kind":"vectors","vectors":[[...],...]}` (one inner array per cycle, `inputs × width` lane-major words) | `queued` (cycles now queued) |
 //! | `poll`       | `session`; optional `max_cycles`                            | `cycles` (per-cycle output records drained), `cycle` (session cycle count), `done`; with a `wave` sink attached also `wave` (incremental VCD chunk, possibly empty) |
 //! | `wave`       | `session`; optional `lane` (0, a *slice* lane of the session) | `wave` (true), `lane` |
@@ -66,7 +66,7 @@
 //!
 //! ```text
 //! → {"id":1,"verb":"open","design":"fir8","kernel":"PSU","lanes":8}
-//! ← {"id":1,"ok":true,"session":0,"cache":{"key":"0f3a...","hit":false,"source":"compiled","open_ms":412.0,"cold_compile_ms":412.0},"host":0,"lane0":0}
+//! ← {"id":1,"ok":true,"session":0,"cache":{"key":"0f3a...","hit":false,"source":"compiled","incremental":false,"reused_groups":0,"rebuilt_groups":0,"open_ms":412.0,"cold_compile_ms":412.0},"host":0,"lane0":0}
 //! → {"id":2,"verb":"open","design":"fir8","kernel":"PSU","lanes":8}
 //! ← {"id":2,"ok":true,"session":1,"cache":{"key":"0f3a...","hit":true,"source":"memory","open_ms":0.1,...},"host":0,"lane0":1}
 //! → {"id":3,"verb":"wave","session":0}
@@ -88,16 +88,40 @@
 //! ```text
 //! <cache-dir>/<key>/          key = 128-bit FNV-1a fingerprint (hex) of
 //!                             the input graph + fuse + partitioner + parts
-//!   meta.json                 format version, design name, config echo,
-//!                             cold compile time, register name→slot map,
-//!                             the register-ownership map (replayed through
-//!                             FixedOwners — no min-cut search on a hit)
+//!   meta.json                 format version, design + graph (family)
+//!                             names, config echo, cold compile time,
+//!                             register name→slot map, the
+//!                             register-ownership map (replayed through
+//!                             FixedOwners — no min-cut search on a hit),
+//!                             and the per-register cone content hashes
+//!                             (`cone_regs`/`cone_reg_hashes` plus the
+//!                             `cone_outputs`/`cone_inputs` signatures)
 //!   oim.json                  the OIM tensors (format B; C is re-derived)
 //!   ir.json                   LayerIr sidecar (ports, commits, init,
 //!                             names/widths — everything the OIM lacks)
 //!   gdg.json                  the group dependency graph, CSR indexes
 //!                             included (no rebuild pass on load)
 //! ```
+//!
+//! Format version 2 added the graph name and the cone hashes; version-1
+//! entries miss on the version check and are recompiled (never
+//! misread). The cone hashes drive the **incremental open**
+//! (`open` with `"incremental":true`, or `rteaal sim --incremental`):
+//! on an exact-key miss the cache looks for a *donor* — a cached entry
+//! of the same graph family under the same fuse/parts/partitioner
+//! config but a different key (an entry on disk is fine) — and diffs
+//! the request's cone hashes against it. Registers whose fan-in cone
+//! hash (and the output/input signatures) match are *reused*: their OIM
+//! rows, GDG groups and slot→reader indexes are spliced from the donor;
+//! only the changed cones are recompiled and grafted in, and the
+//! partition assignment is warm-started from the donor's ownership map
+//! (k-way FM refinement seeded with the previous owners — no
+//! coarsen/split phase). The result is committed under the request's
+//! *own* content key, so a later exact open hits normally; a request
+//! with no donor (or a cross-family diff, e.g. changed ports or a
+//! renamed register sequence) silently falls back to the cold path.
+//! Snapshot restores always re-open by exact content key and never take
+//! the delta path.
 //!
 //! Writes are staged into a pid-unique `<key>.tmp.<pid>` and renamed
 //! into place — rename-is-commit is the only synchronization. A killed
@@ -107,7 +131,9 @@
 //! success. Evicting a corrupt entry renames it to a pid-unique
 //! `<key>.trash.<pid>` tombstone before deletion, so a concurrent
 //! reader sees the old entry, the new one, or nothing (→ recompile) —
-//! never a half-deleted directory.
+//! never a half-deleted directory. Leftover tombstones (a server killed
+//! mid-eviction) are swept by the next `open_design` on the same cache
+//! directory.
 //!
 //! # Session → lane packing rules
 //!

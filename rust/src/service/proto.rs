@@ -158,6 +158,9 @@ pub fn parse_request(line: &str) -> Result<Request, ParseError> {
             if let Some(v) = j.get("fuse") {
                 cfg.fuse = !matches!(v, Json::Bool(false));
             }
+            if let Some(v) = j.get("incremental") {
+                cfg.incremental = matches!(v, Json::Bool(true));
+            }
             Verb::Open(cfg)
         }
         "submit" => {
@@ -263,6 +266,9 @@ pub fn cache_json(report: &OpenReport) -> Json {
         ("key", Json::Str(report.key.clone())),
         ("hit", Json::Bool(report.hit)),
         ("source", Json::Str(report.source.name().to_string())),
+        ("incremental", Json::Bool(report.incremental)),
+        ("reused_groups", Json::Int(report.reused_groups as i64)),
+        ("rebuilt_groups", Json::Int(report.rebuilt_groups as i64)),
         ("open_ms", Json::Num(report.open_time.as_secs_f64() * 1e3)),
         ("cold_compile_ms", Json::Num(report.cold_compile.as_secs_f64() * 1e3)),
     ])

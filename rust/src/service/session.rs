@@ -67,6 +67,11 @@ pub struct SessionConfig {
     pub sparse: bool,
     pub fuse: bool,
     pub partitioner: PartitionerKind,
+    /// Route the open through the cone-delta reuse path
+    /// ([`DesignCache::open_design_incremental`]): an exact-key miss with
+    /// a cached same-family entry is rebuilt incrementally instead of
+    /// from scratch. Snapshot restores always use the exact path.
+    pub incremental: bool,
 }
 
 impl Default for SessionConfig {
@@ -80,6 +85,7 @@ impl Default for SessionConfig {
             sparse: false,
             fuse: true,
             partitioner: PartitionerKind::MinCut,
+            incremental: false,
         }
     }
 }
@@ -232,8 +238,11 @@ impl SessionManager {
         if cfg.parts == 0 {
             return Err("parts must be >= 1".into());
         }
-        let (cached, report) =
-            self.cache.open_design(&design, cfg.fuse, cfg.parts, cfg.partitioner)?;
+        let (cached, report) = if cfg.incremental {
+            self.cache.open_design_incremental(&design, cfg.fuse, cfg.parts, cfg.partitioner)?
+        } else {
+            self.cache.open_design(&design, cfg.fuse, cfg.parts, cfg.partitioner)?
+        };
 
         let sig = HostSig {
             key: cached.key.clone(),
@@ -636,6 +645,9 @@ impl SessionManager {
             sparse: snap.config.sparse,
             fuse: snap.config.fuse,
             partitioner,
+            // restores re-open by exact content key (checked below) —
+            // the delta reuse path would commit a *different* key
+            incremental: false,
         };
         match &snap.payload {
             SnapshotPayload::FullHost { cycle, state } => {

@@ -56,7 +56,7 @@ impl OimArrays {
 }
 
 /// The concrete OIM: shared rank-I payloads plus both format lowerings.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Oim {
     /// ops per layer (format B: payload array of rank I)
     pub i_payload: Vec<u32>,
@@ -234,6 +234,69 @@ impl Oim {
     /// [`crate::tensor::ir::LayerIr::to_json`] sidecar.
     pub fn op_recs_natural(&self) -> (Vec<Vec<OpRec>>, Vec<u32>) {
         recs_from_arrays(&self.i_payload, &self.b)
+    }
+
+    /// Splice a new OIM out of a prior one plus a grafted IR (the
+    /// incremental-compile path): layers not marked `touched` copy the
+    /// prior's format-B and format-C array segments verbatim; touched
+    /// layers — and any layers beyond the prior's depth — are rebuilt
+    /// from `ir.layers` exactly as [`Oim::from_ir`] would. The result is
+    /// bit-identical to `Oim::from_ir(ir)` whenever untouched layers of
+    /// `ir` really are unchanged from the prior IR, which the delta pass
+    /// guarantees by construction (grafted ops only ever land in touched
+    /// layers).
+    pub fn splice(prior: &Oim, ir: &LayerIr, touched: &[bool]) -> Oim {
+        assert_eq!(touched.len(), ir.layers.len(), "touched flags must cover every layer");
+        // Per-layer (op, operand) offsets into the prior's flat arrays.
+        // Both orders share op offsets (a layer occupies the same flat op
+        // range in B and C) and, since a layer's operand total is the sum
+        // of its arities in either order, operand offsets too.
+        let mut off = Vec::with_capacity(prior.i_payload.len() + 1);
+        {
+            let (mut op, mut r) = (0usize, 0usize);
+            for &cnt in &prior.i_payload {
+                off.push((op, r));
+                for k in 0..cnt as usize {
+                    r += prior.b.arity[op + k] as usize;
+                }
+                op += cnt as usize;
+            }
+            off.push((op, r));
+        }
+        fn copy(dst: &mut OimArrays, src: &OimArrays, ops: (usize, usize), rs: (usize, usize)) {
+            dst.s_coords.extend_from_slice(&src.s_coords[ops.0..ops.1]);
+            dst.opcode.extend_from_slice(&src.opcode[ops.0..ops.1]);
+            dst.arity.extend_from_slice(&src.arity[ops.0..ops.1]);
+            dst.imm.extend_from_slice(&src.imm[ops.0..ops.1]);
+            dst.mask.extend_from_slice(&src.mask[ops.0..ops.1]);
+            dst.aux.extend_from_slice(&src.aux[ops.0..ops.1]);
+            dst.r_coords.extend_from_slice(&src.r_coords[rs.0..rs.1]);
+        }
+        let mut o = Oim { num_slots: ir.num_slots as u32, ..Default::default() };
+        for (li, layer) in ir.layers.iter().enumerate() {
+            o.i_payload.push(layer.len() as u32);
+            if !touched[li] && li < prior.i_payload.len() {
+                debug_assert_eq!(prior.i_payload[li] as usize, layer.len());
+                let ((o0, r0), (o1, r1)) = (off[li], off[li + 1]);
+                copy(&mut o.b, &prior.b, (o0, o1), (r0, r1));
+                copy(&mut o.c, &prior.c, (o0, o1), (r0, r1));
+                let n = &prior.n_payload[li * NUM_KOPS..(li + 1) * NUM_KOPS];
+                o.n_payload.extend_from_slice(n);
+            } else {
+                for rec in layer {
+                    o.b.push(rec, &ir.ext_args);
+                }
+                let mut sorted: Vec<&OpRec> = layer.iter().collect();
+                sorted.sort_by_key(|r| r.op);
+                let mut per_op = vec![0u32; NUM_KOPS];
+                for rec in sorted {
+                    per_op[rec.op as usize] += 1;
+                    o.c.push(rec, &ir.ext_args);
+                }
+                o.n_payload.extend_from_slice(&per_op);
+            }
+        }
+        o
     }
 }
 

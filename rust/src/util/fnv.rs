@@ -1,0 +1,83 @@
+//! The 128-bit content hash shared by the design cache and the
+//! incremental compiler.
+//!
+//! Two independent FNV-1a streams concatenated to a 128-bit key. The
+//! second stream perturbs both the offset basis and each input byte, so
+//! the halves do not cancel; 128 bits puts accidental collisions between
+//! distinct designs (and distinct register cones) out of practical
+//! reach. Moved out of `service/cache.rs` so `graph::cone` can hash
+//! per-register cones with byte-identical semantics.
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Dual-stream FNV-1a accumulator (see module docs).
+pub struct Fnv2 {
+    a: u64,
+    b: u64,
+}
+
+impl Fnv2 {
+    pub fn new() -> Self {
+        Fnv2 { a: FNV_BASIS, b: FNV_BASIS ^ 0x9e37_79b9_7f4a_7c15 }
+    }
+
+    #[inline]
+    pub fn byte(&mut self, x: u8) {
+        self.a = (self.a ^ x as u64).wrapping_mul(FNV_PRIME);
+        self.b = (self.b ^ (x ^ 0x5a) as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn word(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    /// Length-prefixed, so `("ab","c")` and `("a","bc")` hash apart.
+    pub fn text(&mut self, s: &str) {
+        self.word(s.len() as u64);
+        for b in s.bytes() {
+            self.byte(b);
+        }
+    }
+
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.a, self.b)
+    }
+}
+
+impl Default for Fnv2 {
+    fn default() -> Self {
+        Fnv2::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_is_32_chars_and_input_sensitive() {
+        let mut a = Fnv2::new();
+        a.text("hello");
+        let mut b = Fnv2::new();
+        b.text("hello");
+        assert_eq!(a.hex(), b.hex());
+        assert_eq!(a.hex().len(), 32);
+        let mut c = Fnv2::new();
+        c.text("hellp");
+        assert_ne!(a.hex(), c.hex());
+    }
+
+    #[test]
+    fn length_prefix_separates_concatenations() {
+        let mut a = Fnv2::new();
+        a.text("ab");
+        a.text("c");
+        let mut b = Fnv2::new();
+        b.text("a");
+        b.text("bc");
+        assert_ne!(a.hex(), b.hex());
+    }
+}

@@ -4,6 +4,7 @@
 //! `rand`, `proptest` and `criterion`; these small modules stand in for them
 //! so the rest of the library has no external dependencies beyond `xla`.
 
+pub mod fnv;
 pub mod json;
 pub mod prng;
 pub mod cli;

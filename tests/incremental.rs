@@ -1,0 +1,156 @@
+//! Incremental compilation end-to-end.
+//!
+//! Three guarantees, matching the acceptance criteria of the cone-delta
+//! reuse path:
+//! * **splice oracle** — the delta pass's spliced OIM and GDG must be
+//!   *equal* to from-scratch rebuilds over the same grafted IR (the
+//!   splices are pure reuse, never approximations);
+//! * **bit identity** — a simulator built from the incrementally opened
+//!   artifacts must match a cold-compiled one on every output *and*
+//!   every committed register (compared by register name — edits
+//!   renumber slots) on every cycle, across P ∈ {1, 4} × B ∈ {1, 8} ×
+//!   dense/sparse;
+//! * **speed** — the warm open of a one-module edit of `rocket_like_1c`
+//!   must cost less than half of a from-scratch open.
+
+use std::collections::HashMap;
+
+use rteaal::activity::gdg::GroupDepGraph;
+use rteaal::coordinator::incremental::delta_compile;
+use rteaal::coordinator::parallel::BatchParallelSim;
+use rteaal::designs::catalog;
+use rteaal::kernels::KernelConfig;
+use rteaal::partition::PartitionerKind;
+use rteaal::service::cache::DesignCache;
+use rteaal::tensor::ir::LayerIr;
+use rteaal::tensor::oim::Oim;
+
+/// (register name, register slot) for every commit; every commit slot
+/// carries the register's name (set by `Graph::reg` and kept by `lower`).
+fn named_commits(ir: &LayerIr) -> Vec<(String, u32)> {
+    ir.commits
+        .iter()
+        .map(|&(slot, _, _)| {
+            let name = ir.slot_names[slot as usize].as_deref().expect("commit slot is named");
+            (name.to_string(), slot)
+        })
+        .collect()
+}
+
+#[test]
+fn delta_artifacts_match_a_from_scratch_rebuild_of_the_grafted_ir() {
+    let base = catalog("fir8").expect("catalog design");
+    let edited = catalog("fir8_edit").expect("catalog edit variant");
+    let mut cache = DesignCache::new(None, 4);
+    let (donor, _) = cache.open_design(&base, true, 2, PartitionerKind::MinCut).expect("open");
+    let delta = delta_compile(&edited, &donor, true).expect("same-family edit must delta");
+    assert!(!delta.changed_regs.is_empty(), "the edit changes at least one cone");
+    assert!(delta.reused_groups > 0, "untouched layers keep their groups");
+    let oim = Oim::from_ir(&delta.ir);
+    assert_eq!(delta.oim, oim, "spliced OIM must equal a from-scratch rebuild");
+    let gdg = GroupDepGraph::build(&delta.ir, &oim);
+    assert_eq!(delta.gdg, gdg, "spliced GDG must equal a from-scratch rebuild");
+}
+
+#[test]
+fn incremental_simulator_is_bit_identical_to_cold_across_configs() {
+    let base = catalog("rocket_like_1c").expect("catalog design");
+    let edited = catalog("rocket_like_1c_edit").expect("catalog edit variant");
+    let pk = PartitionerKind::MinCut;
+    let cycles = 50u64;
+    for &parts in &[1usize, 4] {
+        let mut cold_cache = DesignCache::new(None, 4);
+        let (cold, rc) = cold_cache.open_design(&edited, true, parts, pk).expect("cold open");
+        let mut warm_cache = DesignCache::new(None, 4);
+        warm_cache.open_design(&base, true, parts, pk).expect("base open");
+        let (inc, ri) =
+            warm_cache.open_design_incremental(&edited, true, parts, pk).expect("warm open");
+        assert!(ri.incremental, "P={parts}: the edit must take the delta path");
+        assert_eq!(rc.key, ri.key, "both opens commit under the same content key");
+        let cold_regs = named_commits(&cold.ir);
+        let inc_by_name: HashMap<String, u32> = named_commits(&inc.ir).into_iter().collect();
+        assert_eq!(cold_regs.len(), inc_by_name.len(), "same register set");
+        for &lanes in &[1usize, 8] {
+            for &sparse in &[false, true] {
+                let cfg = KernelConfig::PSU;
+                let mut a = BatchParallelSim::with_partitioning(
+                    &cold.ir,
+                    cfg,
+                    cold.partitioning(),
+                    lanes,
+                    sparse,
+                    pk,
+                );
+                let mut b = BatchParallelSim::with_partitioning(
+                    &inc.ir,
+                    cfg,
+                    inc.partitioning(),
+                    lanes,
+                    sparse,
+                    pk,
+                );
+                for (slot, lane, v) in cold.resolved_lane_init(&edited, lanes).expect("init") {
+                    a.poke_lane(slot, lane, v);
+                }
+                for (slot, lane, v) in inc.resolved_lane_init(&edited, lanes).expect("init") {
+                    b.poke_lane(slot, lane, v);
+                }
+                let mut stim_a = edited.make_lane_stimulus(lanes);
+                let mut stim_b = edited.make_lane_stimulus(lanes);
+                for c in 0..cycles {
+                    let frame = stim_a(c);
+                    assert_eq!(frame, stim_b(c), "stimulus is deterministic");
+                    a.step(&frame);
+                    b.step(&frame);
+                    for l in 0..lanes {
+                        assert_eq!(
+                            a.lane_outputs(l),
+                            b.lane_outputs(l),
+                            "P={parts} B={lanes} sparse={sparse} cycle {c} lane {l}: outputs"
+                        );
+                        for (name, slot) in &cold_regs {
+                            let want = a.reg_lane(*slot, l);
+                            let got = b.reg_lane(inc_by_name[name], l);
+                            assert_eq!(
+                                want, got,
+                                "P={parts} B={lanes} sparse={sparse} cycle {c} lane {l}: \
+                                 register {name}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_recompile_is_under_half_of_cold_on_rocket_like_1c() {
+    let base = catalog("rocket_like_1c").expect("catalog design");
+    let edited = catalog("rocket_like_1c_edit").expect("catalog edit variant");
+    let (parts, pk) = (2usize, PartitionerKind::MinCut);
+    // best-of-2 on both sides to absorb shared-runner noise; memory-only
+    // caches so the comparison is compile work, not disk IO
+    let mut cold = std::time::Duration::MAX;
+    for _ in 0..2 {
+        let mut cache = DesignCache::new(None, 4);
+        let t0 = std::time::Instant::now();
+        cache.open_design(&edited, true, parts, pk).expect("cold open");
+        cold = cold.min(t0.elapsed());
+    }
+    let mut inc = std::time::Duration::MAX;
+    for _ in 0..2 {
+        let mut cache = DesignCache::new(None, 4);
+        cache.open_design(&base, true, parts, pk).expect("base open");
+        let t0 = std::time::Instant::now();
+        let (_, r) = cache.open_design_incremental(&edited, true, parts, pk).expect("warm open");
+        assert!(r.incremental, "the edit must take the delta path");
+        inc = inc.min(t0.elapsed());
+    }
+    assert!(
+        inc.as_secs_f64() < 0.5 * cold.as_secs_f64(),
+        "incremental open ({:.4}s) must be under half of cold ({:.4}s)",
+        inc.as_secs_f64(),
+        cold.as_secs_f64()
+    );
+}

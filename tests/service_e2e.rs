@@ -37,6 +37,7 @@ fn cfg(design: &str, parts: usize, lanes: usize, width: usize, sparse: bool) -> 
         sparse,
         fuse: true,
         partitioner: PartitionerKind::MinCut,
+        incremental: false,
     }
 }
 
