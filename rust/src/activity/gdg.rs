@@ -418,6 +418,14 @@ impl GroupDepGraph {
         Ok(g)
     }
 
+    /// Raw slot→reader CSR (`offsets`, `groups`) and slot→writer map,
+    /// exposed for static verification ([`crate::analysis`]) only — the
+    /// runtime entry points are [`Self::readers_of`] / [`Self::writer_of`].
+    #[inline]
+    pub fn reader_csr(&self) -> (&[u32], &[u32], &[u32]) {
+        (&self.reader_offsets, &self.reader_groups, &self.slot_writer)
+    }
+
     /// The groups with a direct operand on `slot` (sorted, deduplicated);
     /// empty for unread and out-of-range slots. This is the entry point of
     /// targeted invalidation ([`super::mask::ActivityTracker::note_slot_changed`]):

@@ -1,0 +1,315 @@
+//! GDG soundness pass (codes GD01–GD08; catalog in [`super`]).
+//!
+//! Proves the property the sparse executors and targeted invalidation
+//! assume: the [`GroupDepGraph`] is an *exact* index of the format-C op
+//! stream. The pass recomputes the within-cycle writer map group by
+//! group (in the graph's own topological order) and demands that every
+//! operand produce its precise edge — reader-CSR membership (GD01), the
+//! classified dependency edge (GD08), and writer agreement (GD05) — while
+//! the set checks (GD07, GD06) bound the over-approximation from above.
+
+use std::collections::HashSet;
+
+use crate::activity::gdg::GroupDepGraph;
+use crate::tensor::ir::{LayerIr, NUM_KOPS};
+use crate::tensor::oim::Oim;
+
+use super::Sink;
+
+pub(crate) fn check(ir: &LayerIr, oim: &Oim, gdg: &GroupDepGraph, sink: &mut Sink) {
+    let n_groups = gdg.groups.len();
+    let ns = oim.num_slots as usize;
+
+    // ---- GD04: groups tile the format-C arrays exactly ----
+    let mut tiling_ok = true;
+    if gdg.group_deps.len() != n_groups
+        || gdg.input_deps.len() != n_groups
+        || gdg.reg_deps.len() != n_groups
+    {
+        sink.error(
+            "GD04",
+            format!(
+                "dependency lists disagree with group count ({}/{}/{} vs {n_groups})",
+                gdg.group_deps.len(),
+                gdg.input_deps.len(),
+                gdg.reg_deps.len()
+            ),
+        );
+        return; // indices below would be meaningless
+    }
+    let (mut expect_op, mut expect_r) = (0u32, 0u32);
+    let mut prev_key: Option<(u32, u8)> = None;
+    for (gi, grp) in gdg.groups.iter().enumerate() {
+        if grp.op_start != expect_op {
+            tiling_ok = false;
+            sink.error(
+                "GD04",
+                format!("group {gi}: op range starts at {}, expected {expect_op}", grp.op_start),
+            );
+        }
+        if grp.op_end <= grp.op_start {
+            tiling_ok = false;
+            sink.error("GD04", format!("group {gi}: empty or inverted op range"));
+        }
+        if grp.r_start != expect_r {
+            tiling_ok = false;
+            sink.error(
+                "GD04",
+                format!("group {gi}: operand range starts at {}, expected {expect_r}", grp.r_start),
+            );
+        }
+        if let Some(pk) = prev_key {
+            if (grp.layer, grp.opcode) <= pk {
+                tiling_ok = false;
+                sink.error(
+                    "GD04",
+                    format!(
+                        "group {gi}: (layer {}, opcode {}) not above predecessor {pk:?}",
+                        grp.layer, grp.opcode
+                    ),
+                );
+            }
+        }
+        prev_key = Some((grp.layer, grp.opcode));
+        let idx = grp.layer as usize * NUM_KOPS + grp.opcode as usize;
+        match oim.n_payload.get(idx) {
+            Some(&n) if n as usize == grp.ops() => {}
+            got => {
+                tiling_ok = false;
+                sink.error(
+                    "GD04",
+                    format!(
+                        "group {gi} (layer {}, opcode {}): {} ops but n_payload says {got:?}",
+                        grp.layer,
+                        grp.opcode,
+                        grp.ops()
+                    ),
+                );
+            }
+        }
+        let ops = oim.c.opcode.get(grp.op_start as usize..grp.op_end as usize).unwrap_or(&[]);
+        if ops.len() != grp.ops() {
+            tiling_ok = false;
+            sink.error("GD04", format!("group {gi}: op range exceeds format-C arrays"));
+        } else if ops.iter().any(|&o| o != grp.opcode) {
+            tiling_ok = false;
+            sink.error(
+                "GD04",
+                format!("group {gi}: format-C opcode disagrees with group opcode {}", grp.opcode),
+            );
+        }
+        expect_op = grp.op_end;
+        let arities = oim.c.arity.get(grp.op_start as usize..grp.op_end as usize).unwrap_or(&[]);
+        expect_r = grp.r_start + arities.iter().map(|&a| a as u32).sum::<u32>();
+    }
+    if expect_op as usize != oim.total_ops() {
+        tiling_ok = false;
+        sink.error(
+            "GD04",
+            format!("groups cover {expect_op} format-C ops, OIM holds {}", oim.total_ops()),
+        );
+    }
+    if gdg.total_ops != oim.total_ops() {
+        tiling_ok = false;
+        sink.error(
+            "GD04",
+            format!("gdg.total_ops {} != oim.total_ops() {}", gdg.total_ops, oim.total_ops()),
+        );
+    }
+
+    // ---- GD02 / GD03: dependency list sanity (independent of tiling) ----
+    let mut edges = 0usize;
+    for (gi, deps) in gdg.group_deps.iter().enumerate() {
+        edges += deps.len();
+        for &d in deps {
+            if d as usize >= n_groups {
+                sink.error("GD02", format!("group {gi}: dep {d} >= group count {n_groups}"));
+            } else if d as usize >= gi {
+                sink.error("GD03", format!("group {gi}: dep {d} is not strictly upstream"));
+            } else if gdg.groups[d as usize].layer >= gdg.groups[gi].layer {
+                sink.error(
+                    "GD03",
+                    format!(
+                        "group {gi} (layer {}): dep {d} lives in layer {} (not earlier)",
+                        gdg.groups[gi].layer,
+                        gdg.groups[d as usize].layer
+                    ),
+                );
+            }
+        }
+    }
+    for (gi, deps) in gdg.input_deps.iter().enumerate() {
+        edges += deps.len();
+        for &i in deps {
+            if i as usize >= ir.input_slots.len() {
+                sink.error(
+                    "GD02",
+                    format!("group {gi}: input dep {i} >= {} ports", ir.input_slots.len()),
+                );
+            }
+        }
+    }
+    for (gi, deps) in gdg.reg_deps.iter().enumerate() {
+        edges += deps.len();
+        for &c in deps {
+            if c as usize >= ir.commits.len() {
+                sink.error(
+                    "GD02",
+                    format!("group {gi}: register dep {c} >= {} commits", ir.commits.len()),
+                );
+            }
+        }
+    }
+    if edges != gdg.num_edges {
+        sink.error("GD02", format!("num_edges {} but lists hold {edges}", gdg.num_edges));
+    }
+
+    if !tiling_ok {
+        return; // operand-exactness checks key off the op ranges
+    }
+
+    // ---- operand walk: GD01, GD08, GD05, and the actual reader pairs ----
+    const NONE: u32 = u32::MAX;
+    let mut input_of = vec![NONE; ns];
+    for (i, &s) in ir.input_slots.iter().enumerate() {
+        if (s as usize) < ns {
+            input_of[s as usize] = i as u32;
+        }
+    }
+    let mut commit_of = vec![NONE; ns];
+    for (ci, &(reg, _, _)) in ir.commits.iter().enumerate() {
+        if (reg as usize) < ns {
+            commit_of[reg as usize] = ci as u32;
+        }
+    }
+    let mut writer = vec![NONE; ns];
+    let mut actual_pairs: HashSet<(u32, u32)> = HashSet::new();
+    let mut read_slots = vec![false; ns];
+    let mut r_idx;
+    for (gi, grp) in gdg.groups.iter().enumerate() {
+        r_idx = grp.r_start as usize;
+        for op in grp.op_start..grp.op_end {
+            let ar = oim.c.arity.get(op as usize).map(|&a| a as usize).unwrap_or(0);
+            let Some(operands) = oim.c.r_coords.get(r_idx..r_idx + ar) else {
+                sink.error("GD04", format!("group {gi}: operand range exceeds r_coords"));
+                return;
+            };
+            for &slot in operands {
+                if slot as usize >= ns {
+                    continue; // SP02 already reported the coordinate
+                }
+                read_slots[slot as usize] = true;
+                actual_pairs.insert((slot, gi as u32));
+                if gdg.readers_of(slot).binary_search(&(gi as u32)).is_err() {
+                    sink.error(
+                        "GD01",
+                        format!(
+                            "group {gi} reads slot {slot} but is missing from the slot→reader \
+                             index (targeted invalidation would skip it)"
+                        ),
+                    );
+                }
+                let w = writer[slot as usize];
+                if w != NONE {
+                    if gdg.group_deps[gi].binary_search(&w).is_err() {
+                        sink.error(
+                            "GD08",
+                            format!(
+                                "group {gi} reads slot {slot} written by group {w}, but \
+                                 group_deps has no such edge"
+                            ),
+                        );
+                    }
+                } else if input_of[slot as usize] != NONE {
+                    if gdg.input_deps[gi].binary_search(&input_of[slot as usize]).is_err() {
+                        sink.error(
+                            "GD08",
+                            format!(
+                                "group {gi} reads input port {} (slot {slot}), but input_deps \
+                                 has no such edge",
+                                input_of[slot as usize]
+                            ),
+                        );
+                    }
+                } else if commit_of[slot as usize] != NONE
+                    && gdg.reg_deps[gi].binary_search(&commit_of[slot as usize]).is_err()
+                {
+                    sink.error(
+                        "GD08",
+                        format!(
+                            "group {gi} reads register commit {} (slot {slot}), but reg_deps \
+                             has no such edge",
+                            commit_of[slot as usize]
+                        ),
+                    );
+                }
+            }
+            r_idx += ar;
+        }
+        for op in grp.op_start..grp.op_end {
+            if let Some(&s) = oim.c.s_coords.get(op as usize) {
+                if (s as usize) < ns {
+                    writer[s as usize] = gi as u32;
+                }
+            }
+        }
+    }
+
+    // ---- GD05: slot→writer map matches the recomputation ----
+    let (_, _, slot_writer) = gdg.reader_csr();
+    if slot_writer.len() == ns {
+        for (s, (&got, &want)) in slot_writer.iter().zip(&writer).enumerate() {
+            if got != want {
+                sink.error(
+                    "GD05",
+                    format!("slot {s}: slot_writer says group {got}, recomputation says {want}"),
+                );
+            }
+        }
+    } // length mismatch is SP05's finding
+
+    // ---- GD07: phantom readers (over-approximation is safe → warning) ----
+    let (offsets, rows, _) = gdg.reader_csr();
+    if offsets.len() == ns + 1 {
+        for (s, w) in offsets.windows(2).enumerate() {
+            let Some(row) = rows.get(w[0] as usize..w[1] as usize) else { continue };
+            for &g in row {
+                if !actual_pairs.contains(&(s as u32, g)) {
+                    sink.warn(
+                        "GD07",
+                        format!(
+                            "slot {s} lists group {g} as a reader, but no operand of that group \
+                             touches the slot (harmless over-invalidation)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- GD06: dead groups ----
+    let mut live = read_slots;
+    for (_, s) in &ir.output_slots {
+        if (*s as usize) < ns {
+            live[*s as usize] = true;
+        }
+    }
+    for &(_, next, _) in &ir.commits {
+        if (next as usize) < ns {
+            live[next as usize] = true;
+        }
+    }
+    for (gi, grp) in gdg.groups.iter().enumerate() {
+        let outs = oim.c.s_coords.get(grp.op_start as usize..grp.op_end as usize).unwrap_or(&[]);
+        if !outs.is_empty() && outs.iter().all(|&s| (s as usize) < ns && !live[s as usize]) {
+            sink.warn(
+                "GD06",
+                format!(
+                    "group {gi} (layer {}, opcode {}): no output slot is read, committed, or a \
+                     design output — the group is dead weight in every cycle",
+                    grp.layer, grp.opcode
+                ),
+            );
+        }
+    }
+}

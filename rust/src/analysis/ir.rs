@@ -1,0 +1,369 @@
+//! IR well-formedness pass (codes IR01–IR09; catalog in [`super`]).
+//!
+//! Consumes only the [`LayerIr`]: schedule soundness (write-before-read,
+//! single driver, format-B in-layer order), reference bounds, mask/width
+//! agreement, an independent combinational-cycle check, and the width /
+//! dead-op lints.
+
+use crate::graph::ops::mask;
+use crate::tensor::ir::{KOp, LayerIr, OpRec, NUM_KOPS};
+
+use super::Sink;
+
+/// Operand slots of a record, with every index defensively bounded (a
+/// corrupted record must produce a diagnostic, not a panic). Returns
+/// `Err` with a description when the record's opcode / arity / ext range
+/// is itself out of bounds.
+pub(crate) fn safe_operands(rec: &OpRec, ext_args: &[u32]) -> Result<Vec<u32>, String> {
+    if rec.op as usize >= NUM_KOPS {
+        return Err(format!("opcode {} out of range (NUM_KOPS = {NUM_KOPS})", rec.op));
+    }
+    let ar = rec.arity as usize;
+    if ar == 0 {
+        return Err("arity 0".to_string());
+    }
+    if rec.kop() == KOp::MuxChain {
+        if ar < 3 || ar % 2 == 0 {
+            return Err(format!("muxchain arity {ar} not an odd count >= 3"));
+        }
+        let (start, end) = (rec.ext as usize, rec.ext as usize + ar - 2);
+        let Some(ext) = ext_args.get(start..end) else {
+            return Err(format!(
+                "muxchain ext range {start}..{end} exceeds ext_args ({})",
+                ext_args.len()
+            ));
+        };
+        let mut v = vec![rec.a, rec.b];
+        v.extend_from_slice(ext);
+        Ok(v)
+    } else {
+        if ar > 3 {
+            return Err(format!("arity {ar} > 3 for non-muxchain op"));
+        }
+        Ok([rec.a, rec.b, rec.c][..ar].to_vec())
+    }
+}
+
+/// Exact result width of a record given its operand widths, capped at 65
+/// (the only question asked is "does it exceed the 64-bit word").
+fn inferred_width(rec: &OpRec, ops: &[u32], width_of: impl Fn(u32) -> u32) -> u32 {
+    let cap = |w: u32| w.min(65);
+    let wa = ops.first().map(|&s| width_of(s)).unwrap_or(0);
+    let wb = ops.get(1).map(|&s| width_of(s)).unwrap_or(0);
+    match rec.kop() {
+        KOp::Add | KOp::Sub => cap(wa.max(wb) + 1),
+        KOp::Mul => cap(wa + wb),
+        KOp::Div => wa,
+        KOp::Rem => wa.min(wb),
+        KOp::Lt
+        | KOp::Leq
+        | KOp::Gt
+        | KOp::Geq
+        | KOp::Eq
+        | KOp::Neq
+        | KOp::AndrK
+        | KOp::Orr
+        | KOp::Xorr => 1,
+        KOp::And | KOp::Or | KOp::Xor => wa.max(wb),
+        KOp::Not | KOp::Copy | KOp::Dshr => wa,
+        KOp::Neg => cap(wa + 1),
+        KOp::ShlI | KOp::Cat => cap(wa + rec.imm as u32),
+        KOp::ShrI => wa.saturating_sub(rec.imm as u32),
+        // a << b with b up to 2^wb - 1
+        KOp::Dshl => {
+            if wb >= 7 {
+                65
+            } else {
+                cap(wa + (1u32 << wb) - 1)
+            }
+        }
+        // widest selected value (selectors contribute nothing)
+        KOp::Mux | KOp::MuxChain => {
+            ops.iter().skip(1).map(|&s| width_of(s)).max().unwrap_or(0)
+        }
+    }
+}
+
+pub(crate) fn check(ir: &LayerIr, sink: &mut Sink) {
+    let ns = ir.num_slots;
+    let oob = |s: u32| s as usize >= ns;
+
+    // ---- IR06: bounds of every slot reference outside the op stream ----
+    for (i, &s) in ir.input_slots.iter().enumerate() {
+        if oob(s) {
+            sink.error("IR06", format!("input port {i} slot {s} >= num_slots {ns}"));
+        }
+    }
+    for (name, s) in &ir.output_slots {
+        if oob(*s) {
+            sink.error("IR06", format!("output '{name}' slot {s} >= num_slots {ns}"));
+        }
+    }
+    for (ci, &(reg, next, _)) in ir.commits.iter().enumerate() {
+        if oob(reg) || oob(next) {
+            sink.error("IR06", format!("commit {ci} ({reg} <- {next}) references slot >= {ns}"));
+        }
+    }
+    for &(s, _) in &ir.init {
+        if oob(s) {
+            sink.error("IR06", format!("init entry slot {s} >= num_slots {ns}"));
+        }
+    }
+    if ir.slot_widths.len() != ns {
+        sink.error(
+            "IR06",
+            format!("slot_widths has {} entries for {ns} slots", ir.slot_widths.len()),
+        );
+    }
+    let width_of = |s: u32| ir.slot_widths.get(s as usize).map(|&w| w as u32).unwrap_or(64);
+
+    // ---- slot classification (boundary sources) ----
+    let mut is_input = vec![false; ns];
+    for &s in &ir.input_slots {
+        if !oob(s) {
+            is_input[s as usize] = true;
+        }
+    }
+    let mut is_reg = vec![false; ns];
+    for &(reg, _, _) in &ir.commits {
+        if !oob(reg) {
+            is_reg[reg as usize] = true;
+        }
+    }
+    let mut is_init = vec![false; ns];
+    for &(s, _) in &ir.init {
+        if !oob(s) {
+            is_init[s as usize] = true;
+        }
+    }
+
+    // ---- walk 1: drivers, layer order, masks ----
+    const NONE: u32 = u32::MAX;
+    let mut writer_layer = vec![NONE; ns];
+    for (li, layer) in ir.layers.iter().enumerate() {
+        let mut prev_out: Option<u32> = None;
+        let mut order_reported = false;
+        for (oi, rec) in layer.iter().enumerate() {
+            if rec.op as usize >= NUM_KOPS {
+                sink.error("IR06", format!("layer {li} op {oi}: opcode {} out of range", rec.op));
+                continue;
+            }
+            if oob(rec.out) {
+                sink.error(
+                    "IR06",
+                    format!("layer {li} op {oi}: out slot {} >= num_slots {ns}", rec.out),
+                );
+                continue;
+            }
+            if let Some(p) = prev_out {
+                if rec.out <= p && !order_reported {
+                    order_reported = true;
+                    sink.error(
+                        "IR05",
+                        format!(
+                            "layer {li}: op {oi} out {} not strictly above predecessor {p} \
+                             (format-B natural S order broken)",
+                            rec.out
+                        ),
+                    );
+                }
+            }
+            prev_out = Some(rec.out);
+            if writer_layer[rec.out as usize] != NONE {
+                sink.error(
+                    "IR02",
+                    format!(
+                        "slot {} driven twice: layer {} and layer {li}",
+                        rec.out, writer_layer[rec.out as usize]
+                    ),
+                );
+            } else {
+                writer_layer[rec.out as usize] = li as u32;
+            }
+            if is_input[rec.out as usize] || is_reg[rec.out as usize] {
+                sink.error(
+                    "IR02",
+                    format!(
+                        "layer {li} op {oi} drives slot {}, which is an input port or register",
+                        rec.out
+                    ),
+                );
+            }
+            let declared = mask(width_of(rec.out).min(64) as u8);
+            if rec.mask & !declared != 0 {
+                sink.error(
+                    "IR04",
+                    format!(
+                        "layer {li} op {oi} (slot {}): mask {:#x} admits bits above declared \
+                         width {}",
+                        rec.out,
+                        rec.mask,
+                        width_of(rec.out)
+                    ),
+                );
+            }
+        }
+    }
+    for (ci, &(reg, _, m)) in ir.commits.iter().enumerate() {
+        if oob(reg) {
+            continue;
+        }
+        let declared = mask(width_of(reg).min(64) as u8);
+        if m & !declared != 0 {
+            sink.error(
+                "IR04",
+                format!(
+                    "commit {ci} (register slot {reg}): mask {m:#x} admits bits above declared \
+                     width {}",
+                    width_of(reg)
+                ),
+            );
+        }
+    }
+
+    // ---- walk 2: operand discipline + width lints ----
+    let mut read = vec![false; ns];
+    for (name, s) in &ir.output_slots {
+        let _ = name;
+        if !oob(*s) {
+            read[*s as usize] = true;
+        }
+    }
+    for &(_, next, _) in &ir.commits {
+        if !oob(next) {
+            read[next as usize] = true;
+        }
+    }
+    for (li, layer) in ir.layers.iter().enumerate() {
+        for (oi, rec) in layer.iter().enumerate() {
+            let ops = match safe_operands(rec, &ir.ext_args) {
+                Ok(v) => v,
+                Err(e) => {
+                    sink.error("IR06", format!("layer {li} op {oi}: {e}"));
+                    continue;
+                }
+            };
+            for &r in &ops {
+                if oob(r) {
+                    sink.error(
+                        "IR06",
+                        format!("layer {li} op {oi}: operand slot {r} >= num_slots {ns}"),
+                    );
+                    continue;
+                }
+                read[r as usize] = true;
+                let wl = writer_layer[r as usize];
+                if wl != NONE {
+                    if wl >= li as u32 {
+                        sink.error(
+                            "IR01",
+                            format!(
+                                "layer {li} op {oi} reads slot {r} written in layer {wl} \
+                                 (write-before-read violated)"
+                            ),
+                        );
+                    }
+                } else if !(is_input[r as usize] || is_reg[r as usize] || is_init[r as usize]) {
+                    sink.error(
+                        "IR01",
+                        format!(
+                            "layer {li} op {oi} reads slot {r}, which is never written and \
+                             never initialized"
+                        ),
+                    );
+                }
+            }
+            let inf = inferred_width(rec, &ops, width_of);
+            if inf > 64 {
+                sink.warn(
+                    "IR07",
+                    format!(
+                        "layer {li} op {oi} ({}): exact result exceeds 64 bits; value wraps in \
+                         the u64 slot file",
+                        rec.kop().mnemonic()
+                    ),
+                );
+            }
+        }
+    }
+
+    // ---- IR08: commit truncation lint ----
+    for (ci, &(reg, next, m)) in ir.commits.iter().enumerate() {
+        if oob(next) {
+            continue;
+        }
+        if width_of(next) > m.count_ones() {
+            sink.warn(
+                "IR08",
+                format!(
+                    "commit {ci} (register slot {reg}): next-state slot {next} is {} bits wide \
+                     but the commit mask keeps {}",
+                    width_of(next),
+                    m.count_ones()
+                ),
+            );
+        }
+    }
+
+    // ---- IR09: dead ops ----
+    for (li, layer) in ir.layers.iter().enumerate() {
+        for (oi, rec) in layer.iter().enumerate() {
+            if !oob(rec.out) && !read[rec.out as usize] {
+                sink.warn(
+                    "IR09",
+                    format!(
+                        "layer {li} op {oi}: slot {} is read by nothing, committed nowhere, and \
+                         not a design output",
+                        rec.out
+                    ),
+                );
+            }
+        }
+    }
+
+    // ---- IR03: combinational cycles, independent of the schedule ----
+    // Kahn toposort over the op dependence graph derived purely from
+    // operand/writer slots; the layer structure is deliberately ignored
+    // so a corrupted schedule cannot mask a cycle.
+    let flat: Vec<&OpRec> = ir.layers.iter().flatten().collect();
+    let total = flat.len();
+    let mut writer_op = vec![NONE; ns];
+    for (id, rec) in flat.iter().enumerate() {
+        if !oob(rec.out) && writer_op[rec.out as usize] == NONE {
+            writer_op[rec.out as usize] = id as u32;
+        }
+    }
+    let mut indeg = vec![0u32; total];
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); total];
+    for (id, rec) in flat.iter().enumerate() {
+        let Ok(ops) = safe_operands(rec, &ir.ext_args) else { continue };
+        for &r in &ops {
+            if oob(r) {
+                continue;
+            }
+            let w = writer_op[r as usize];
+            if w != NONE {
+                adj[w as usize].push(id as u32);
+                indeg[id] += 1;
+            }
+        }
+    }
+    let mut queue: Vec<u32> =
+        indeg.iter().enumerate().filter(|&(_, &d)| d == 0).map(|(i, _)| i as u32).collect();
+    let mut done = 0usize;
+    while let Some(id) = queue.pop() {
+        done += 1;
+        for &dep in &adj[id as usize] {
+            indeg[dep as usize] -= 1;
+            if indeg[dep as usize] == 0 {
+                queue.push(dep);
+            }
+        }
+    }
+    if done < total {
+        sink.error(
+            "IR03",
+            format!("combinational cycle: {} of {total} ops unreachable by toposort", total - done),
+        );
+    }
+}

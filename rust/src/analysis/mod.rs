@@ -1,0 +1,345 @@
+//! `rteaal check`: static verification of the compiled artifact bundle.
+//!
+//! The paper's core representation claim — simulation behavior lives in
+//! tensor *data* (`LayerIr`/`Oim`/`GroupDepGraph`), not generated code —
+//! means the invariants the runtime depends on are checkable on the
+//! artifacts themselves, before a single cycle runs. This module is that
+//! checker: four pass families over the bundle, each emitting diagnostics
+//! with **stable codes** (never renumbered; retired codes are not
+//! reused). An `Error` means a runtime that consumes the artifact can
+//! produce wrong values or panic; a `Warning` is a lint — the artifact is
+//! sound but suspicious (dead logic, wrap/truncation hazards,
+//! over-approximated activity indices that cost work but never
+//! correctness).
+//!
+//! Entry points: [`verify_artifacts`] (the full bundle; the partition
+//! audit runs only when a [`Partitioning`] is supplied) — called by the
+//! `rteaal check` CLI verb and, opt-in via `--verify` / `"verify":true`
+//! (always-on under `debug_assertions`), from
+//! `DesignCache::open_design{,_incremental}`.
+//!
+//! # Diagnostic catalog
+//!
+//! **IR well-formedness** ([`ir`]) — over [`LayerIr`] alone:
+//!
+//! | code | severity | invariant |
+//! |------|----------|-----------|
+//! | IR01 | error | write-before-read: every operand slot is an input, a register, an initialized constant, or written in a strictly earlier layer |
+//! | IR02 | error | single driver: no slot is written by two ops, or by an op and a port/commit |
+//! | IR03 | error | no combinational cycles (Kahn toposort over the op dependence graph, independent of the layer schedule) |
+//! | IR04 | error | result/commit masks never admit bits above the declared slot width |
+//! | IR05 | error | within a layer, ops are strictly ascending by `out` (the format-B natural S order the OIM lowering assumes) |
+//! | IR06 | error | every slot / opcode / `ext_args` reference is in range |
+//! | IR07 | warn  | width-overflow lint: an op whose exact result exceeds 64 bits wraps in the u64 slot file |
+//! | IR08 | warn  | commit-truncation lint: a commit mask narrower than its next-state slot's declared width drops bits |
+//! | IR09 | warn  | dead-op lint: an op output read by nothing, committed nowhere, and not a design output |
+//!
+//! Exactness: IR01/IR02/IR05/IR06 are literal scans of the schedule;
+//! IR03 re-derives reachability without trusting layers, so a corrupted
+//! schedule cannot mask a cycle. IR04 is exact because kernels apply
+//! `rec.mask` verbatim ([`crate::tensor::ir::eval_rec`]). IR07–IR09 are
+//! conservative lints: they may fire on intentional RTL idioms (wrapping
+//! counters, rotate-by-shift), never on artifacts the runtime would
+//! misexecute — hence warnings.
+//!
+//! **GDG soundness** ([`gdg`]) — the properties sparse targeted
+//! invalidation assumes ([`crate::activity`]):
+//!
+//! | code | severity | invariant |
+//! |------|----------|-----------|
+//! | GD01 | error | every operand slot of every group appears in the slot→reader CSR (`readers_of`) — the exact property `note_slot_changed` relies on |
+//! | GD02 | error | no dangling refs: dependency lists index real groups / input ports / commits |
+//! | GD03 | error | dependencies are topological: strictly earlier group, strictly earlier layer |
+//! | GD04 | error | groups tile the format-C op/operand arrays exactly, in (layer, opcode) order, matching `n_payload` |
+//! | GD05 | error | the slot→writer map equals the last-writer relation of the format-C walk |
+//! | GD06 | warn  | dead-group lint: a group none of whose outputs is read, committed, or a design output |
+//! | GD07 | warn  | phantom-reader lint: a CSR entry for a slot the group never reads (wasted wakeups, never wrong values) |
+//! | GD08 | error | every classified operand yields its dependency edge (group/input/register) in the per-group lists |
+//!
+//! Exactness: GD01/GD05/GD08 recompute the classification of
+//! [`GroupDepGraph::build`] from the format-C arrays and compare — a
+//! single dropped edge (which would make the sparse executors skip live
+//! work) is reported with its (group, slot) witness. GD07 is the safe
+//! direction (over-approximation) and therefore a lint.
+//!
+//! **Partition audit** ([`partition`]) — over a [`Partitioning`]:
+//!
+//! | code | severity | invariant |
+//! |------|----------|-----------|
+//! | PT01 | error | `owner_of_reg` is total and in range |
+//! | PT02 | error | register ownership is a disjoint cover: every commit in exactly one partition, agreeing with `owner_of_reg` |
+//! | PT03 | error | every cross-partition register read appears in the RUM exchange set (`tracked` readers / `rum_readers`) |
+//! | PT04 | error | never-written (ROM) registers stay out of the tracking table |
+//! | PT05 | error | the boundary reader map (`readers_of_slot`) agrees with the tracking table |
+//! | PT06 | error | partition 0 owns the design outputs; others export none |
+//! | PT07 | warn  | phantom-RUM-reader lint: a tracked reader partition that never reads the register |
+//! |
+//!
+//! Exactness of PT03: a partition reads register `r` iff `r` is an
+//! operand of a kept op, a commit next-state slot, or (partition 0) an
+//! output slot — register slots have no within-cycle writer, so this
+//! equals the cone-boundary source set `partition_ir` derives readers
+//! from. Both directions are compared; the unsafe one (missing reader)
+//! is the error.
+//!
+//! **Splice audit** ([`splice`]) — structural proof for incrementally
+//! spliced `Oim`/`GroupDepGraph` (cheap replacement for the
+//! splice-oracle differential test, also valid on cold artifacts):
+//!
+//! | code | severity | invariant |
+//! |------|----------|-----------|
+//! | SP01 | error | OIM layer shape: `i_payload`/`n_payload` lengths and sums match the IR's layers |
+//! | SP02 | error | coordinate/arity/opcode bounds: every S/R coordinate < `num_slots`, operand totals match arities |
+//! | SP03 | error | format B equals the (grafted) IR's layers field-for-field, operand-for-operand |
+//! | SP04 | error | format C is exactly the stable opcode sort of format B, layer by layer, agreeing with `n_payload` |
+//! | SP05 | error | the reader CSR is structurally sound: monotone offsets covering `num_slots`, sorted/deduplicated rows, in-range entries |
+//!
+//! Exactness: `Oim::splice` promises bit-identity with `Oim::from_ir(ir)`;
+//! SP03+SP04 verify precisely that (B is `from_ir`'s natural order, C its
+//! stable sort), so a splice that copied a stale row or mis-sliced an
+//! operand segment cannot pass. SP05 proves the spliced CSR is a valid
+//! index regardless of provenance.
+
+// This module takes none of the crate-wide clippy allowances (see the CI
+// lint job): the verifier is new code with no index-loop heritage, so it
+// holds itself to the unrelaxed lint set.
+#![deny(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::inherent_to_string,
+    clippy::type_complexity,
+    clippy::new_without_default
+)]
+
+use std::collections::HashMap;
+
+use crate::activity::GroupDepGraph;
+use crate::partition::Partitioning;
+use crate::tensor::ir::LayerIr;
+use crate::tensor::oim::Oim;
+use crate::util::json::{obj, Json};
+
+pub mod gdg;
+pub mod ir;
+pub mod partition;
+pub mod splice;
+
+/// Diagnostic severity. `Error` = the runtime can misexecute the
+/// artifact; `Warning` = lint (sound but suspicious).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding: a stable code, a severity, and a witness message naming
+/// the concrete slot/op/group/partition that violates the invariant.
+#[derive(Clone, Debug)]
+pub struct Diag {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}: {}", self.severity.name(), self.code, self.message)
+    }
+}
+
+/// Every diagnostic code with its severity (the seeded-fault test corpus
+/// asserts one mutator per entry).
+pub const ALL_CODES: &[(&str, Severity)] = &[
+    ("IR01", Severity::Error),
+    ("IR02", Severity::Error),
+    ("IR03", Severity::Error),
+    ("IR04", Severity::Error),
+    ("IR05", Severity::Error),
+    ("IR06", Severity::Error),
+    ("IR07", Severity::Warning),
+    ("IR08", Severity::Warning),
+    ("IR09", Severity::Warning),
+    ("GD01", Severity::Error),
+    ("GD02", Severity::Error),
+    ("GD03", Severity::Error),
+    ("GD04", Severity::Error),
+    ("GD05", Severity::Error),
+    ("GD06", Severity::Warning),
+    ("GD07", Severity::Warning),
+    ("GD08", Severity::Error),
+    ("PT01", Severity::Error),
+    ("PT02", Severity::Error),
+    ("PT03", Severity::Error),
+    ("PT04", Severity::Error),
+    ("PT05", Severity::Error),
+    ("PT06", Severity::Error),
+    ("PT07", Severity::Warning),
+    ("SP01", Severity::Error),
+    ("SP02", Severity::Error),
+    ("SP03", Severity::Error),
+    ("SP04", Severity::Error),
+    ("SP05", Severity::Error),
+];
+
+/// Per-code cap on *stored* diagnostics: a badly corrupted artifact
+/// trips the same invariant thousands of times; the report keeps the
+/// first few witnesses per code and counts the rest in `suppressed`.
+const PER_CODE_CAP: usize = 16;
+
+/// Collecting sink the passes emit into.
+#[derive(Default)]
+pub(crate) struct Sink {
+    diags: Vec<Diag>,
+    per_code: HashMap<&'static str, usize>,
+    suppressed: usize,
+}
+
+impl Sink {
+    pub(crate) fn new() -> Self {
+        Sink { diags: Vec::new(), per_code: HashMap::new(), suppressed: 0 }
+    }
+
+    fn emit(&mut self, code: &'static str, severity: Severity, message: String) {
+        debug_assert!(
+            ALL_CODES.iter().any(|&(c, s)| c == code && s == severity),
+            "unregistered diagnostic {code}/{}",
+            severity.name()
+        );
+        let n = self.per_code.entry(code).or_insert(0);
+        *n += 1;
+        if *n > PER_CODE_CAP {
+            self.suppressed += 1;
+        } else {
+            self.diags.push(Diag { code, severity, message });
+        }
+    }
+
+    pub(crate) fn error(&mut self, code: &'static str, message: String) {
+        self.emit(code, Severity::Error, message);
+    }
+
+    pub(crate) fn warn(&mut self, code: &'static str, message: String) {
+        self.emit(code, Severity::Warning, message);
+    }
+
+    fn into_report(self, design: &str) -> Report {
+        let errors = self
+            .per_code
+            .iter()
+            .filter(|(c, _)| matches!(lookup(c), Some(Severity::Error)))
+            .map(|(_, n)| n)
+            .sum();
+        let warnings = self
+            .per_code
+            .iter()
+            .filter(|(c, _)| matches!(lookup(c), Some(Severity::Warning)))
+            .map(|(_, n)| n)
+            .sum();
+        Report {
+            design: design.to_string(),
+            diags: self.diags,
+            errors,
+            warnings,
+            suppressed: self.suppressed,
+        }
+    }
+}
+
+fn lookup(code: &str) -> Option<Severity> {
+    ALL_CODES.iter().find(|&&(c, _)| c == code).map(|&(_, s)| s)
+}
+
+/// The result of a verification run. `errors`/`warnings` count every
+/// occurrence (including ones suppressed past the per-code cap);
+/// `diags` holds the stored witnesses.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub design: String,
+    pub diags: Vec<Diag>,
+    pub errors: usize,
+    pub warnings: usize,
+    pub suppressed: usize,
+}
+
+impl Report {
+    /// Zero errors (warnings allowed).
+    pub fn is_clean(&self) -> bool {
+        self.errors == 0
+    }
+
+    /// Did any diagnostic with this code fire?
+    pub fn has(&self, code: &str) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} error(s), {} warning(s){}",
+            self.design,
+            self.errors,
+            self.warnings,
+            if self.suppressed > 0 {
+                format!(" ({} suppressed past per-code cap)", self.suppressed)
+            } else {
+                String::new()
+            }
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("design", Json::Str(self.design.clone())),
+            ("errors", Json::Int(self.errors as i64)),
+            ("warnings", Json::Int(self.warnings as i64)),
+            ("suppressed", Json::Int(self.suppressed as i64)),
+            (
+                "diags",
+                Json::Arr(
+                    self.diags
+                        .iter()
+                        .map(|d| {
+                            obj(vec![
+                                ("code", Json::Str(d.code.to_string())),
+                                ("severity", Json::Str(d.severity.name().to_string())),
+                                ("message", Json::Str(d.message.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Verify a compiled artifact bundle. Runs the IR, splice and GDG pass
+/// families always, and the partition audit when `parting` is supplied
+/// (the design-cache hook passes `None` — partitionings are replayed
+/// per-open, so the cache verifies the shared artifacts and `rteaal
+/// check` / session open verify the partitioned view).
+pub fn verify_artifacts(
+    design: &str,
+    layer_ir: &LayerIr,
+    oim: &Oim,
+    dep_graph: &GroupDepGraph,
+    parting: Option<&Partitioning>,
+) -> Report {
+    let mut sink = Sink::new();
+    ir::check(layer_ir, &mut sink);
+    splice::check(layer_ir, oim, dep_graph, &mut sink);
+    gdg::check(layer_ir, oim, dep_graph, &mut sink);
+    if let Some(p) = parting {
+        partition::check(layer_ir, p, &mut sink);
+    }
+    sink.into_report(design)
+}

@@ -1,0 +1,269 @@
+//! Partition audit pass (codes PT01–PT07; catalog in [`super`]).
+//!
+//! Recomputes, from the filtered per-partition IRs alone, exactly which
+//! boundary register slots each partition reads, and demands that the
+//! RUM tracking table cover every cross-partition read (PT03) — the
+//! property that makes the bulk-synchronous exchange sound. The
+//! recomputation is exact because a register slot has no within-cycle
+//! writer: a partition reads it iff it appears as an operand (or seed)
+//! of the partition's cone with no cone-local producer.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::partition::{never_written, Partitioning};
+use crate::tensor::ir::LayerIr;
+
+use super::Sink;
+
+/// Boundary source slots of one per-partition IR: slots consumed by its
+/// ops / commits / outputs that no op of the same IR produces.
+fn source_slots(pir: &LayerIr, ns: usize) -> HashSet<u32> {
+    let mut written = vec![false; ns];
+    for rec in pir.layers.iter().flatten() {
+        if (rec.out as usize) < ns {
+            written[rec.out as usize] = true;
+        }
+    }
+    let mut sources = HashSet::new();
+    let mut note = |s: u32| {
+        if (s as usize) < ns && !written[s as usize] {
+            sources.insert(s);
+        }
+    };
+    for rec in pir.layers.iter().flatten() {
+        if let Ok(ops) = super::ir::safe_operands(rec, &pir.ext_args) {
+            for s in ops {
+                note(s);
+            }
+        }
+    }
+    for &(_, next, _) in &pir.commits {
+        note(next);
+    }
+    for (_, s) in &pir.output_slots {
+        note(*s);
+    }
+    sources
+}
+
+pub(crate) fn check(ir: &LayerIr, parting: &Partitioning, sink: &mut Sink) {
+    let n = parting.num_partitions();
+    let ns = ir.num_slots;
+    let n_regs = ir.commits.len();
+
+    // ---- PT01: ownership vector shape ----
+    if parting.owner_of_reg.len() != n_regs {
+        sink.error(
+            "PT01",
+            format!(
+                "owner_of_reg has {} entries for {n_regs} commits",
+                parting.owner_of_reg.len()
+            ),
+        );
+        return; // the cover check below indexes by commit
+    }
+    for (ri, &p) in parting.owner_of_reg.iter().enumerate() {
+        if p >= n {
+            sink.error("PT01", format!("register {ri}: owner {p} >= partition count {n}"));
+        }
+    }
+
+    // ---- PT02: per-partition commits form a disjoint cover ----
+    let ri_of_reg: HashMap<u32, usize> =
+        ir.commits.iter().enumerate().map(|(ri, &(reg, _, _))| (reg, ri)).collect();
+    let mut seen = vec![false; n_regs];
+    for (p, pir) in parting.part_irs.iter().enumerate() {
+        for &(reg, _, _) in &pir.commits {
+            let Some(&ri) = ri_of_reg.get(&reg) else {
+                sink.error(
+                    "PT02",
+                    format!("partition {p} commits register slot {reg}, unknown to the full IR"),
+                );
+                continue;
+            };
+            if seen[ri] {
+                sink.error(
+                    "PT02",
+                    format!("register {ri} (slot {reg}) committed by more than one partition"),
+                );
+            }
+            seen[ri] = true;
+            if parting.owner_of_reg[ri] != p {
+                sink.error(
+                    "PT02",
+                    format!(
+                        "register {ri} (slot {reg}) committed by partition {p} but owned by {}",
+                        parting.owner_of_reg[ri]
+                    ),
+                );
+            }
+        }
+    }
+    for (ri, s) in seen.iter().enumerate() {
+        if !s {
+            sink.error(
+                "PT02",
+                format!(
+                    "register {ri} (slot {}) committed by no partition — state would freeze",
+                    ir.commits[ri].0
+                ),
+            );
+        }
+    }
+
+    // ---- PT06: partition 0 owns the design outputs, others own none ----
+    if let Some(p0) = parting.part_irs.first() {
+        if p0.output_slots != ir.output_slots {
+            sink.error(
+                "PT06",
+                format!(
+                    "partition 0 carries {} output slots, full IR has {}",
+                    p0.output_slots.len(),
+                    ir.output_slots.len()
+                ),
+            );
+        }
+    }
+    for (p, pir) in parting.part_irs.iter().enumerate().skip(1) {
+        if !pir.output_slots.is_empty() {
+            sink.error(
+                "PT06",
+                format!(
+                    "partition {p} carries {} output slots (only 0 may)",
+                    pir.output_slots.len()
+                ),
+            );
+        }
+    }
+
+    // ---- recompute boundary reads per partition ----
+    let never = never_written(ir);
+    let sources: Vec<HashSet<u32>> =
+        parting.part_irs.iter().map(|pir| source_slots(pir, ns)).collect();
+    let tracked_of_slot: HashMap<u32, &crate::partition::TrackedReg> =
+        parting.tracked.iter().map(|t| (t.reg_slot, t)).collect();
+
+    // ---- PT04: ROM never enters the tracking table ----
+    for t in &parting.tracked {
+        if let Some(&ri) = ri_of_reg.get(&t.reg_slot) {
+            if never[ri] {
+                sink.error(
+                    "PT04",
+                    format!(
+                        "register {ri} (slot {}) is never written (pure ROM) but is RUM-tracked",
+                        t.reg_slot
+                    ),
+                );
+            }
+        } else {
+            sink.error(
+                "PT04",
+                format!("tracked slot {} is not a register of the full IR", t.reg_slot),
+            );
+        }
+        if t.owner >= n {
+            sink.error(
+                "PT01",
+                format!("tracked slot {}: owner {} >= partition count {n}", t.reg_slot, t.owner),
+            );
+        }
+    }
+
+    // ---- PT03: every cross-partition register read is RUM-covered ----
+    for (p, srcs) in sources.iter().enumerate() {
+        for &slot in srcs {
+            let Some(&ri) = ri_of_reg.get(&slot) else { continue }; // input/constant slot
+            if never[ri] {
+                continue; // ROM: value can never change, correctly untracked
+            }
+            let Some(t) = tracked_of_slot.get(&slot) else {
+                sink.error(
+                    "PT03",
+                    format!(
+                        "partition {p} reads register slot {slot} (register {ri}), which is \
+                         absent from the RUM tracking table"
+                    ),
+                );
+                continue;
+            };
+            if t.readers.binary_search(&(p as u32)).is_err() {
+                sink.error(
+                    "PT03",
+                    format!(
+                        "partition {p} reads register slot {slot} but is missing from its \
+                         reader list"
+                    ),
+                );
+            }
+            if p != t.owner && t.rum_readers.binary_search(&(p as u32)).is_err() {
+                sink.error(
+                    "PT03",
+                    format!(
+                        "partition {p} reads register slot {slot} owned by partition {}, but \
+                         the RUM exchange set omits it — the read would see a stale value",
+                        t.owner
+                    ),
+                );
+            }
+        }
+    }
+    // rum_readers must be exactly readers minus the owner
+    for t in &parting.tracked {
+        let want: Vec<u32> =
+            t.readers.iter().copied().filter(|&p| p as usize != t.owner).collect();
+        if t.rum_readers != want {
+            sink.error(
+                "PT03",
+                format!(
+                    "tracked slot {}: rum_readers {:?} != readers-minus-owner {:?}",
+                    t.reg_slot, t.rum_readers, want
+                ),
+            );
+        }
+    }
+
+    // ---- PT07: phantom RUM readers (over-approximation is safe) ----
+    for t in &parting.tracked {
+        for &p in &t.readers {
+            if (p as usize) < n && !sources[p as usize].contains(&t.reg_slot) {
+                sink.warn(
+                    "PT07",
+                    format!(
+                        "tracked slot {}: partition {p} is listed as a reader but its cone \
+                         never reads the slot (harmless extra propagation)",
+                        t.reg_slot
+                    ),
+                );
+            }
+        }
+    }
+
+    // ---- PT05: the targeted-wake slot map agrees with the cones ----
+    for (&slot, readers) in &parting.readers_of_slot {
+        let want: Vec<u32> = (0..n)
+            .filter(|&p| sources[p].contains(&slot))
+            .map(|p| p as u32)
+            .collect();
+        if *readers != want {
+            sink.error(
+                "PT05",
+                format!(
+                    "readers_of_slot[{slot}] = {readers:?}, but the cones read it from {want:?}"
+                ),
+            );
+        }
+    }
+    for (p, srcs) in sources.iter().enumerate() {
+        for &slot in srcs {
+            if !parting.readers_of_slot.contains_key(&slot) {
+                sink.error(
+                    "PT05",
+                    format!(
+                        "partition {p} reads boundary slot {slot}, absent from readers_of_slot \
+                         (targeted poke wake would miss it)"
+                    ),
+                );
+            }
+        }
+    }
+}

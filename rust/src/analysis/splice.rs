@@ -1,0 +1,334 @@
+//! Splice / OIM structural audit (codes SP01–SP05; catalog in [`super`]).
+//!
+//! Proves that an [`Oim`] — whether built cold by `Oim::from_ir` or grown
+//! by `Oim::splice` — is exactly the OIM the IR denotes, and that the
+//! [`GroupDepGraph`]'s slot→reader CSR is structurally sound. Because
+//! format B is defined as a field-for-field flattening of the IR layers
+//! (SP03) and format C as the per-layer stable opcode sort of B (SP04),
+//! a clean report here is equivalent to the splice oracle's bit-identity
+//! claim, at a fraction of the cost of recompiling.
+
+use crate::activity::gdg::GroupDepGraph;
+use crate::tensor::ir::{KOp, LayerIr, NUM_KOPS};
+use crate::tensor::oim::{Oim, OimArrays};
+
+use super::Sink;
+
+/// Per-layer (op offset, operand offset) cursors into an [`OimArrays`],
+/// derived from `i_payload`. Returns `None` when the arity array itself
+/// is too short to walk (reported by the caller as SP02).
+fn layer_cursors(i_payload: &[u32], arrays: &OimArrays) -> Option<Vec<(usize, usize)>> {
+    let mut cursors = Vec::with_capacity(i_payload.len());
+    let (mut op, mut r) = (0usize, 0usize);
+    for &n in i_payload {
+        cursors.push((op, r));
+        let end = op + n as usize;
+        let seg = arrays.arity.get(op..end)?;
+        r += seg.iter().map(|&a| a as usize).sum::<usize>();
+        op = end;
+    }
+    Some(cursors)
+}
+
+/// Checks the internal consistency of one format's arrays: equal lengths,
+/// coordinate/opcode/arity bounds, and r_coords sized by the arity sums.
+fn check_arrays(fmt: &str, arrays: &OimArrays, num_slots: usize, sink: &mut Sink) -> bool {
+    let n = arrays.s_coords.len();
+    let lens = [
+        arrays.arity.len(),
+        arrays.opcode.len(),
+        arrays.imm.len(),
+        arrays.mask.len(),
+        arrays.aux.len(),
+    ];
+    if lens.iter().any(|&l| l != n) {
+        sink.error(
+            "SP02",
+            format!(
+                "format {fmt}: parallel array lengths disagree (s_coords {n}, others {lens:?})"
+            ),
+        );
+        return false;
+    }
+    let mut ok = true;
+    for (i, &s) in arrays.s_coords.iter().enumerate() {
+        if s as usize >= num_slots {
+            let msg = format!("format {fmt} op {i}: out coord {s} >= num_slots {num_slots}");
+            sink.error("SP02", msg);
+            ok = false;
+        }
+    }
+    for (i, &o) in arrays.opcode.iter().enumerate() {
+        if o as usize >= NUM_KOPS {
+            sink.error("SP02", format!("format {fmt} op {i}: opcode {o} out of range"));
+            ok = false;
+        }
+    }
+    let mut r_expect = 0usize;
+    for (i, &a) in arrays.arity.iter().enumerate() {
+        if a == 0 {
+            sink.error("SP02", format!("format {fmt} op {i}: arity 0"));
+            ok = false;
+        }
+        if arrays.opcode[i] as usize == KOp::MuxChain as usize && (a < 3 || a % 2 == 0) {
+            sink.error(
+                "SP02",
+                format!("format {fmt} op {i}: muxchain arity {a} not an odd count >= 3"),
+            );
+            ok = false;
+        }
+        r_expect += a as usize;
+    }
+    if arrays.r_coords.len() != r_expect {
+        sink.error(
+            "SP02",
+            format!(
+                "format {fmt}: r_coords has {} entries but arities sum to {r_expect}",
+                arrays.r_coords.len()
+            ),
+        );
+        ok = false;
+    }
+    for (i, &s) in arrays.r_coords.iter().enumerate() {
+        if s as usize >= num_slots {
+            sink.error(
+                "SP02",
+                format!("format {fmt} operand {i}: coord {s} >= num_slots {num_slots}"),
+            );
+            ok = false;
+        }
+    }
+    ok
+}
+
+pub(crate) fn check(ir: &LayerIr, oim: &Oim, gdg: &GroupDepGraph, sink: &mut Sink) {
+    // ---- SP01: layer shape ----
+    if oim.num_slots as usize != ir.num_slots {
+        sink.error(
+            "SP01",
+            format!("oim.num_slots {} != ir.num_slots {}", oim.num_slots, ir.num_slots),
+        );
+    }
+    if oim.i_payload.len() != ir.layers.len() {
+        sink.error(
+            "SP01",
+            format!("i_payload has {} layers, IR has {}", oim.i_payload.len(), ir.layers.len()),
+        );
+        return; // every later comparison keys off the layer structure
+    }
+    for (li, (&n, layer)) in oim.i_payload.iter().zip(&ir.layers).enumerate() {
+        if n as usize != layer.len() {
+            sink.error(
+                "SP01",
+                format!("layer {li}: i_payload says {n} ops, IR has {}", layer.len()),
+            );
+        }
+    }
+    if oim.n_payload.len() != ir.layers.len() * NUM_KOPS {
+        sink.error(
+            "SP01",
+            format!(
+                "n_payload has {} entries, expected layers * NUM_KOPS = {}",
+                oim.n_payload.len(),
+                ir.layers.len() * NUM_KOPS
+            ),
+        );
+    } else {
+        for (li, &n) in oim.i_payload.iter().enumerate() {
+            let sum: u32 = oim.n_payload[li * NUM_KOPS..(li + 1) * NUM_KOPS].iter().sum();
+            if sum != n {
+                sink.error(
+                    "SP01",
+                    format!("layer {li}: n_payload opcode counts sum to {sum}, i_payload says {n}"),
+                );
+            }
+        }
+    }
+
+    // ---- SP02: array-level consistency of both formats ----
+    let b_ok = check_arrays("B", &oim.b, oim.num_slots as usize, sink);
+    let c_ok = check_arrays("C", &oim.c, oim.num_slots as usize, sink);
+
+    // ---- SP03: format B is the IR layers, field for field ----
+    if b_ok {
+        match layer_cursors(&oim.i_payload, &oim.b) {
+            Some(cursors) => {
+                'layers: for (li, layer) in ir.layers.iter().enumerate() {
+                    let (mut op, mut r) = cursors[li];
+                    for (oi, rec) in layer.iter().enumerate() {
+                        if op >= oim.b.s_coords.len() {
+                            sink.error(
+                                "SP03",
+                                format!("layer {li}: format B ends before IR op {oi}"),
+                            );
+                            break 'layers;
+                        }
+                        let operands = match super::ir::safe_operands(rec, &ir.ext_args) {
+                            Ok(v) => v,
+                            Err(_) => continue, // already an IR06; comparison meaningless
+                        };
+                        let b_r = oim.b.r_coords.get(r..r + operands.len()).unwrap_or(&[]);
+                        let same = oim.b.s_coords[op] == rec.out
+                            && oim.b.opcode[op] == rec.op
+                            && oim.b.arity[op] == rec.arity
+                            && oim.b.imm[op] == rec.imm
+                            && oim.b.mask[op] == rec.mask
+                            && oim.b.aux[op] == rec.aux
+                            && b_r == operands.as_slice();
+                        if !same {
+                            sink.error(
+                                "SP03",
+                                format!(
+                                    "layer {li} op {oi}: format B disagrees with IR (B out {} op {} \
+                                     vs IR out {} op {})",
+                                    oim.b.s_coords[op], oim.b.opcode[op], rec.out, rec.op
+                                ),
+                            );
+                        }
+                        r += operands.len();
+                        op += 1;
+                    }
+                }
+            }
+            None => sink.error("SP03", "format B arity array too short to walk layers".to_string()),
+        }
+    }
+
+    // ---- SP04: format C is the per-layer stable opcode sort of B ----
+    if b_ok && c_ok && oim.b.s_coords.len() == oim.c.s_coords.len() {
+        let (b_cur, c_cur) = (
+            layer_cursors(&oim.i_payload, &oim.b),
+            layer_cursors(&oim.i_payload, &oim.c),
+        );
+        if let (Some(b_cur), Some(c_cur)) = (b_cur, c_cur) {
+            for li in 0..ir.layers.len() {
+                let n = oim.i_payload[li] as usize;
+                let (b_op, b_r) = b_cur[li];
+                let (c_op, mut c_r) = c_cur[li];
+                if b_op + n > oim.b.s_coords.len() || c_op + n > oim.c.s_coords.len() {
+                    break;
+                }
+                // Stable sort of B's in-layer op indices by opcode.
+                let mut order: Vec<usize> = (b_op..b_op + n).collect();
+                order.sort_by_key(|&i| oim.b.opcode[i]);
+                // Operand offset of each B op within the layer.
+                let mut b_off = vec![0usize; n];
+                let mut acc = b_r;
+                for (k, slot) in b_off.iter_mut().enumerate() {
+                    *slot = acc;
+                    acc += oim.b.arity[b_op + k] as usize;
+                }
+                let mut reported = false;
+                for (k, &bi) in order.iter().enumerate() {
+                    let ci = c_op + k;
+                    let ar = oim.b.arity[bi] as usize;
+                    let b_seg = oim.b.r_coords.get(b_off[bi - b_op]..b_off[bi - b_op] + ar);
+                    let c_seg = oim.c.r_coords.get(c_r..c_r + oim.c.arity[ci] as usize);
+                    let same = oim.c.s_coords[ci] == oim.b.s_coords[bi]
+                        && oim.c.opcode[ci] == oim.b.opcode[bi]
+                        && oim.c.arity[ci] == oim.b.arity[bi]
+                        && oim.c.imm[ci] == oim.b.imm[bi]
+                        && oim.c.mask[ci] == oim.b.mask[bi]
+                        && oim.c.aux[ci] == oim.b.aux[bi]
+                        && b_seg.is_some()
+                        && b_seg == c_seg;
+                    if !same && !reported {
+                        reported = true;
+                        sink.error(
+                            "SP04",
+                            format!(
+                                "layer {li} position {k}: format C is not the stable opcode sort \
+                                 of B (C out {} op {} vs expected out {} op {})",
+                                oim.c.s_coords[ci],
+                                oim.c.opcode[ci],
+                                oim.b.s_coords[bi],
+                                oim.b.opcode[bi]
+                            ),
+                        );
+                    }
+                    c_r += oim.c.arity[ci] as usize;
+                }
+            }
+        }
+    } else if b_ok && c_ok {
+        sink.error(
+            "SP04",
+            format!(
+                "formats B and C have different op counts ({} vs {})",
+                oim.b.s_coords.len(),
+                oim.c.s_coords.len()
+            ),
+        );
+    }
+
+    // ---- SP05: slot→reader CSR structure ----
+    let (offsets, rows, slot_writer) = gdg.reader_csr();
+    let ns = ir.num_slots;
+    if offsets.len() != ns + 1 {
+        sink.error(
+            "SP05",
+            format!("reader CSR has {} offsets for {ns} slots (want {})", offsets.len(), ns + 1),
+        );
+        return;
+    }
+    if offsets.first() != Some(&0) {
+        sink.error("SP05", format!("reader CSR offsets start at {:?}, not 0", offsets.first()));
+    }
+    if offsets.last().copied().unwrap_or(0) as usize != rows.len() {
+        sink.error(
+            "SP05",
+            format!(
+                "reader CSR last offset {} != reader_groups len {}",
+                offsets.last().copied().unwrap_or(0),
+                rows.len()
+            ),
+        );
+    }
+    let mut monotone_ok = true;
+    for (s, w) in offsets.windows(2).enumerate() {
+        if w[1] < w[0] {
+            monotone_ok = false;
+            sink.error(
+                "SP05",
+                format!("reader CSR offsets non-monotone at slot {s}: {} -> {}", w[0], w[1]),
+            );
+        }
+    }
+    let n_groups = gdg.groups.len() as u32;
+    if monotone_ok {
+        for (s, w) in offsets.windows(2).enumerate() {
+            let Some(row) = rows.get(w[0] as usize..w[1] as usize) else { continue };
+            for pair in row.windows(2) {
+                if pair[1] <= pair[0] {
+                    sink.error(
+                        "SP05",
+                        format!(
+                            "slot {s} reader row not strictly increasing: {} then {}",
+                            pair[0], pair[1]
+                        ),
+                    );
+                }
+            }
+            for &g in row {
+                if g >= n_groups {
+                    sink.error(
+                        "SP05",
+                        format!("slot {s} reader row references group {g} >= {n_groups}"),
+                    );
+                }
+            }
+        }
+    }
+    if slot_writer.len() != ns {
+        sink.error(
+            "SP05",
+            format!("slot_writer has {} entries for {ns} slots", slot_writer.len()),
+        );
+    } else {
+        for (s, &g) in slot_writer.iter().enumerate() {
+            if g != u32::MAX && g >= n_groups {
+                sink.error("SP05", format!("slot_writer[{s}] = {g} >= group count {n_groups}"));
+            }
+        }
+    }
+}

@@ -24,6 +24,27 @@ COMMANDS:
   compile   --design D         compile D; print graph/OIM/format statistics
             [--emit-oim F]     also write the OIM tensors as JSON (paper §6.1)
             [--emit-fir F]     also write the design as FIRRTL text
+  check     [--design D]       statically verify the compiled artifact
+                               bundle (LayerIr/OIM/GDG/partitioning)
+                               against the sparse, partitioned, and
+                               incremental invariants — stable diagnostic
+                               codes IR01-IR09, GD01-GD08, PT01-PT07,
+                               SP01-SP05 (catalog in the analysis module
+                               docs). Without --design, sweeps the full
+                               design catalog. Exits nonzero on any
+                               error-severity finding; warnings are lints
+            [--json]           one JSON report object per line instead of
+                               human-readable text
+            [--parts P]        partitions for the partition audit
+                               (default 2)
+            [--partitioner X]  rr|mincut (default mincut)
+            [--incremental]    verify through the design cache instead of
+                               a direct compile: cold-open each design,
+                               then warm-open its `_edit` variant via the
+                               cone-delta reuse path and verify the
+                               *spliced* artifacts too
+            [--cache-dir DIR]  cache directory for --incremental
+                               (default .rteaal-check-cache)
   sim       --design D         simulate D
             [--kernel K]       RU|OU|NU|PSU|IU|SU|TI (default PSU)
             [--backend B]      interp|verilator|essent|event|parallel (default interp)
@@ -82,6 +103,10 @@ COMMANDS:
                                open falls back to a cold compile
             [--cache-dir DIR]  design-cache directory for --incremental
                                (default .rteaal-cache)
+            [--verify]         run the static artifact verifier (see
+                               `check`) on the compiled or cached bundle
+                               before simulating; refuse to run on any
+                               error-severity finding
   serve                        run the simulation service (NDJSON requests,
                                one per line; schema in the service module
                                docs): a content-addressed design cache,
@@ -97,6 +122,10 @@ COMMANDS:
                                close --socket connections idle longer
                                than N ms; their sessions survive a
                                reconnect (default 30000)
+            [--verify]         statically verify every design open,
+                               server-wide; failing opens report
+                               bad-config (sessions may also opt in per
+                               open with \"verify\":true)
   xla-sim   --design D         simulate via the AOT XLA/PJRT artifact
             [--artifacts DIR]  artifact directory (default: artifacts)
             [--cycles N]
@@ -128,6 +157,7 @@ pub fn run(args: Args) -> Result<()> {
             Ok(())
         }
         "compile" => cmd_compile(&args),
+        "check" => cmd_check(&args),
         "sim" => cmd_sim(&args),
         "serve" => cmd_serve(&args),
         "xla-sim" => cmd_xla_sim(&args),
@@ -165,6 +195,116 @@ fn cmd_compile(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("emit-fir") {
         std::fs::write(path, crate::firrtl::print(&c.graph))?;
         println!("wrote FIRRTL to {path}");
+    }
+    Ok(())
+}
+
+/// The design sweep `rteaal check` runs without `--design`: the main
+/// evaluation set plus the small/structural designs the tests lean on
+/// (including the ROM-carrying divergent CPU, which exercises PT04).
+fn check_sweep() -> Vec<String> {
+    let mut names: Vec<String> =
+        ["counter", "alu32", "fir8", "tiny_cpu_divergent", "alu_farm_64", "rocket_like_xs"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    for n in crate::designs::main_eval_designs() {
+        names.push(n.to_string());
+    }
+    names
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    use crate::analysis::verify_artifacts;
+    use crate::partition::partition_ir;
+
+    let json_out = args.flag("json");
+    let parts = args.opt_usize("parts", 2)?;
+    if parts == 0 {
+        bail!("--parts must be >= 1 (got 0)");
+    }
+    let name = args.opt_or("partitioner", "mincut");
+    let partitioner = crate::partition::PartitionerKind::parse(name)
+        .with_context(|| format!("unknown partitioner '{name}' (use rr or mincut)"))?;
+    let incremental = args.flag("incremental");
+    let names: Vec<String> = match args.opt("design") {
+        Some(d) => vec![d.to_string()],
+        None => check_sweep(),
+    };
+
+    let mut cache = incremental.then(|| {
+        let dir = PathBuf::from(args.opt_or("cache-dir", ".rteaal-check-cache"));
+        crate::service::cache::DesignCache::new(Some(dir), 4)
+    });
+
+    let mut reports = Vec::new();
+    for name in &names {
+        let d = catalog(name)
+            .with_context(|| format!("unknown design '{name}' (see `rteaal designs`)"))?;
+        match cache.as_mut() {
+            None => {
+                // direct: compile cold and verify the fresh bundle
+                let c = compile_design(&d, CompileOpts::default());
+                let gdg = crate::activity::GroupDepGraph::build(&c.ir, &c.oim);
+                let parting = partition_ir(&c.ir, parts, partitioner);
+                reports.push(verify_artifacts(name, &c.ir, &c.oim, &gdg, Some(&parting)));
+            }
+            Some(cache) => {
+                // through the cache: cold-open the base, then warm-open
+                // its `_edit` variant via the cone-delta reuse path, so
+                // the *spliced* OIM/GDG get verified too
+                let (entry, _) = cache
+                    .open_design(&d, true, parts, partitioner)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                let parting = entry.partitioning();
+                reports.push(verify_artifacts(
+                    name,
+                    &entry.ir,
+                    &entry.oim,
+                    &entry.gdg,
+                    Some(&parting),
+                ));
+                let edit = format!("{name}_edit");
+                if let Some(ed) = catalog(&edit) {
+                    let (entry, rep) = cache
+                        .open_design_incremental(&ed, true, parts, partitioner)
+                        .map_err(|e| anyhow::anyhow!(e))?;
+                    if !rep.incremental && !rep.hit {
+                        bail!("{edit}: incremental open fell back to a cold compile (no donor?)");
+                    }
+                    let parting = entry.partitioning();
+                    reports.push(verify_artifacts(
+                        &edit,
+                        &entry.ir,
+                        &entry.oim,
+                        &entry.gdg,
+                        Some(&parting),
+                    ));
+                }
+            }
+        }
+    }
+
+    let total_errors: usize = reports.iter().map(|r| r.errors).sum();
+    let total_warnings: usize = reports.iter().map(|r| r.warnings).sum();
+    if json_out {
+        for r in &reports {
+            println!("{}", r.to_json());
+        }
+    } else {
+        for r in &reports {
+            println!("{}", r.summary());
+            for diag in &r.diags {
+                println!("  {diag}");
+            }
+        }
+        println!(
+            "checked {} artifact bundle(s): {total_errors} error(s), {total_warnings} warning(s)",
+            reports.len()
+        );
+    }
+    if total_errors > 0 {
+        bail!("rteaal check: {total_errors} error-severity finding(s)");
     }
     Ok(())
 }
@@ -295,6 +435,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         let toggle = toggle_arg(args, &d, sparse)?;
         let cache_dir = PathBuf::from(args.opt_or("cache-dir", ".rteaal-cache"));
         let mut cache = crate::service::cache::DesignCache::new(Some(cache_dir), 8);
+        cache.verify = args.flag("verify");
         let (cached, report) = cache
             .open_design_incremental(&d, true, parts, partitioner)
             .map_err(|e| anyhow::anyhow!(e))?;
@@ -343,6 +484,22 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
 
     let c = compile_design(&d, CompileOpts { fuse: args.opt("vcd").is_none() });
+
+    if args.flag("verify") {
+        // refuse to simulate an artifact bundle the static verifier
+        // rejects (warnings are reported but do not block)
+        let gdg = crate::activity::GroupDepGraph::build(&c.ir, &c.oim);
+        let parting = crate::partition::partition_ir(&c.ir, parts, partitioner);
+        let report =
+            crate::analysis::verify_artifacts(&c.name, &c.ir, &c.oim, &gdg, Some(&parting));
+        for diag in &report.diags {
+            eprintln!("  {diag}");
+        }
+        if !report.is_clean() {
+            bail!("artifact verification failed — {}", report.summary());
+        }
+        println!("verify: {}", report.summary());
+    }
 
     if parts_given {
         if backend != "interp" {
@@ -562,6 +719,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cache_cap: args.opt_usize("cache-cap", 8)?,
         timeout_ms: args.opt_u64("timeout-ms", 2_000)?,
         idle_timeout_ms: args.opt_u64("idle-timeout-ms", 30_000)?,
+        verify: args.flag("verify"),
     };
     if opts.cache_cap == 0 {
         bail!("--cache-cap must be >= 1 (got 0)");

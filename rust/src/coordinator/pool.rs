@@ -71,6 +71,14 @@ struct Shared {
     shutdown: AtomicBool,
     start: Barrier,
     done: Barrier,
+    /// Phase counter for debug-build protocol assertions: even = staging
+    /// (coordinator owns the cells, workers parked on `start`), odd =
+    /// stepping (each thread owns only its own kernel). Incremented by
+    /// the coordinator alone — to odd before `start.wait()`, back to even
+    /// after `done.wait()` — so each barrier crossing publishes the new
+    /// phase, and a worker observing the wrong parity has caught a
+    /// violation of the sharing protocol documented above.
+    phase: AtomicUsize,
 }
 
 /// A pool of `P - 1` persistent worker threads driving partitions
@@ -94,6 +102,13 @@ fn worker_loop(shared: Arc<Shared>, idx: usize, gate: std::sync::mpsc::Receiver<
         if shared.shutdown.load(Ordering::Acquire) {
             return;
         }
+        // Past the start barrier of a live cycle: the coordinator must
+        // have published the stepping (odd) phase before releasing us.
+        debug_assert_eq!(
+            shared.phase.load(Ordering::Relaxed) % 2,
+            1,
+            "worker {idx} entered a step while the pool was in the staging phase"
+        );
         if shared.active[idx].load(Ordering::Relaxed) {
             let stepped = catch_unwind(AssertUnwindSafe(|| {
                 // SAFETY: between the barriers this worker is the only
@@ -126,6 +141,7 @@ impl WorkerPool {
             shutdown: AtomicBool::new(false),
             start: Barrier::new(parts),
             done: Barrier::new(parts),
+            phase: AtomicUsize::new(0),
         });
         let mut handles = Vec::with_capacity(parts.saturating_sub(1));
         let mut gates = Vec::with_capacity(parts.saturating_sub(1));
@@ -204,6 +220,11 @@ impl WorkerPool {
         for (flag, &a) in shared.active.iter().zip(active) {
             flag.store(a, Ordering::Relaxed);
         }
+        // Enter the stepping phase *before* the start barrier: the
+        // barrier's happens-before edge publishes the odd count to every
+        // worker it releases.
+        let prev = shared.phase.fetch_add(1, Ordering::Relaxed);
+        debug_assert_eq!(prev % 2, 0, "step() entered while a step was already in flight");
         shared.start.wait();
         let own = catch_unwind(AssertUnwindSafe(|| {
             if active[0] {
@@ -213,6 +234,11 @@ impl WorkerPool {
             }
         }));
         shared.done.wait();
+        // Back to the staging phase. Workers do not assert here — they
+        // may reach their next start.wait() before this increment — but
+        // the coordinator itself must observe the parity it created.
+        let prev = shared.phase.fetch_add(1, Ordering::Relaxed);
+        debug_assert_eq!(prev % 2, 1, "phase counter desynchronized across the done barrier");
         for p in &shared.panicked {
             if p.load(Ordering::Acquire) {
                 panic!("partition worker panicked during step");

@@ -32,6 +32,7 @@ pub mod baselines;
 pub mod perf;
 pub mod sim;
 pub mod designs;
+pub mod analysis;
 pub mod runtime;
 pub mod coordinator;
 pub mod service;

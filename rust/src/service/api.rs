@@ -35,11 +35,21 @@ pub struct ServeOpts {
     /// Unix-socket connections idle longer than this are closed (their
     /// sessions survive; reconnect and keep polling). Ignored on stdio.
     pub idle_timeout_ms: u64,
+    /// Run the static artifact verifier ([`crate::analysis`]) on every
+    /// design open, server-wide (`rteaal serve --verify`). Individual
+    /// sessions can also request it per open (`"verify":true`).
+    pub verify: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { cache_dir: None, cache_cap: 8, timeout_ms: 2_000, idle_timeout_ms: 30_000 }
+        ServeOpts {
+            cache_dir: None,
+            cache_cap: 8,
+            timeout_ms: 2_000,
+            idle_timeout_ms: 30_000,
+            verify: false,
+        }
     }
 }
 
@@ -51,10 +61,9 @@ pub struct Server {
 
 impl Server {
     pub fn new(opts: ServeOpts) -> Self {
-        Server {
-            mgr: SessionManager::new(opts.cache_dir, opts.cache_cap),
-            default_timeout: Duration::from_millis(opts.timeout_ms),
-        }
+        let mut mgr = SessionManager::new(opts.cache_dir, opts.cache_cap);
+        mgr.cache.verify = opts.verify;
+        Server { mgr, default_timeout: Duration::from_millis(opts.timeout_ms) }
     }
 
     /// Handle one request line, producing exactly one reply line
@@ -156,6 +165,21 @@ impl Server {
             }
             Verb::Stats => {
                 let c = &self.mgr.cache;
+                let lanes = Json::Arr(
+                    self.mgr
+                        .occupancy()
+                        .into_iter()
+                        .map(|(session, host, lane0, width, host_lanes)| {
+                            json::obj(vec![
+                                ("session", Json::Int(session as i64)),
+                                ("host", Json::Int(host as i64)),
+                                ("lane0", Json::Int(lane0 as i64)),
+                                ("width", Json::Int(width as i64)),
+                                ("host_lanes", Json::Int(host_lanes as i64)),
+                            ])
+                        })
+                        .collect(),
+                );
                 Ok(ok_reply(
                     id,
                     vec![
@@ -165,11 +189,13 @@ impl Server {
                                 ("mem_hits", Json::Int(c.mem_hits as i64)),
                                 ("disk_hits", Json::Int(c.disk_hits as i64)),
                                 ("misses", Json::Int(c.misses as i64)),
+                                ("incremental", Json::Int(c.incremental as i64)),
                                 ("resident", Json::Int(c.len() as i64)),
                             ]),
                         ),
                         ("hosts", Json::Int(self.mgr.host_count() as i64)),
                         ("sessions", Json::Int(self.mgr.session_count() as i64)),
+                        ("lanes", lanes),
                     ],
                 ))
             }
@@ -363,6 +389,19 @@ mod tests {
 
         let st = ok(&s.handle_line(r#"{"id":12,"verb":"stats"}"#));
         assert!(st.req_u64("sessions").unwrap() >= 3);
+        assert_eq!(
+            st.req("cache").unwrap().req_u64("incremental").unwrap(),
+            0,
+            "no open used the delta reuse path"
+        );
+        let lanes = st.req_arr("lanes").unwrap();
+        assert_eq!(lanes.len() as u64, st.req_u64("sessions").unwrap());
+        // sessions 0 and 1 are packed on host 0, lanes [0] and [1]
+        assert_eq!(lanes[0].req_u64("session").unwrap(), 0);
+        assert_eq!(lanes[0].req_u64("lane0").unwrap(), 0);
+        assert_eq!(lanes[1].req_u64("lane0").unwrap(), 1);
+        assert_eq!(lanes[0].req_u64("host").unwrap(), lanes[1].req_u64("host").unwrap());
+        assert_eq!(lanes[0].req_u64("host_lanes").unwrap(), 8);
         ok(&s.handle_line(r#"{"id":13,"verb":"close","session":0}"#));
         let e = s.handle_line(r#"{"id":14,"verb":"poll","session":0}"#);
         assert_eq!(err_code(&e), "unknown-session");

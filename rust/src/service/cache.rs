@@ -225,6 +225,14 @@ pub struct DesignCache {
     pub mem_hits: u64,
     pub disk_hits: u64,
     pub misses: u64,
+    /// Misses answered by the cone-delta reuse path (a subset of
+    /// `misses`).
+    pub incremental: u64,
+    /// Statically verify artifacts on every open ([`crate::analysis`]);
+    /// failures turn the open into an error. Always on under
+    /// `debug_assertions`; opt-in (`--verify` / `"verify":true`)
+    /// otherwise.
+    pub verify: bool,
 }
 
 impl DesignCache {
@@ -239,7 +247,35 @@ impl DesignCache {
             mem_hits: 0,
             disk_hits: 0,
             misses: 0,
+            incremental: 0,
+            verify: false,
         }
+    }
+
+    /// Statically verify an entry's artifact bundle (see
+    /// [`crate::analysis`]) when opted in via [`Self::verify`] — always
+    /// on under `debug_assertions`. The cache verifies the shared
+    /// IR/OIM/GDG; the partitioned view is replayed per-open and checked
+    /// by `rteaal check` and session opens.
+    fn maybe_verify(&self, e: &CachedDesign) -> Result<(), String> {
+        if !(self.verify || cfg!(debug_assertions)) {
+            return Ok(());
+        }
+        let report =
+            crate::analysis::verify_artifacts(&e.design_name, &e.ir, &e.oim, &e.gdg, None);
+        if report.is_clean() {
+            return Ok(());
+        }
+        let mut msg = format!("artifact verification failed — {}", report.summary());
+        for d in report
+            .diags
+            .iter()
+            .filter(|d| d.severity == crate::analysis::Severity::Error)
+            .take(4)
+        {
+            msg.push_str(&format!("; {d}"));
+        }
+        Err(msg)
     }
 
     pub fn len(&self) -> usize {
@@ -267,6 +303,7 @@ impl DesignCache {
         let t0 = Instant::now();
 
         if let Some(hit) = self.exact_hit(&key, design, fuse, parts, partitioner, t0) {
+            self.maybe_verify(&hit.0)?;
             return Ok(hit);
         }
 
@@ -297,6 +334,7 @@ impl DesignCache {
             cone,
             cold_compile: cold,
         });
+        self.maybe_verify(&entry)?;
         if let Err(e) = self.persist(&entry) {
             // persistence is best-effort; the entry still serves from memory
             eprintln!("rteaal serve: cache persist failed for {key}: {e}");
@@ -340,6 +378,7 @@ impl DesignCache {
         let t0 = Instant::now();
 
         if let Some(hit) = self.exact_hit(&key, design, fuse, parts, partitioner, t0) {
+            self.maybe_verify(&hit.0)?;
             return Ok(hit);
         }
 
@@ -383,11 +422,13 @@ impl DesignCache {
                     cone: delta.cone,
                     cold_compile: cold,
                 });
+                self.maybe_verify(&entry)?;
                 if let Err(e) = self.persist(&entry) {
                     eprintln!("rteaal serve: cache persist failed for {key}: {e}");
                 }
                 self.insert(key.clone(), entry.clone());
                 self.misses += 1;
+                self.incremental += 1;
                 let report = OpenReport {
                     key,
                     hit: false,

@@ -141,13 +141,7 @@ impl Enc {
     }
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
-    }
-    h
-}
+use crate::util::fnv::fnv1a;
 
 // ---- decoding ----
 

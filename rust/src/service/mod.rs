@@ -38,14 +38,14 @@
 //!
 //! | verb         | request fields                                              | reply fields |
 //! |--------------|-------------------------------------------------------------|--------------|
-//! | `open`       | `design`; optional `kernel` (default `PSU`), `parts` (1), `lanes` (1, the host width B), `width` (1, lanes for *this* session), `sparse` (false), `fuse` (true), `incremental` (false, route an exact-key miss through the cone-delta reuse path) | `session`, `cache` `{key, hit, source, incremental, reused_groups, rebuilt_groups, open_ms, cold_compile_ms}`, `host`, `lane0` |
+//! | `open`       | `design`; optional `kernel` (default `PSU`), `parts` (1), `lanes` (1, the host width B), `width` (1, lanes for *this* session), `sparse` (false), `fuse` (true), `incremental` (false, route an exact-key miss through the cone-delta reuse path), `verify` (false, run the static artifact verifier ([`crate::analysis`]) on this open; an error-severity finding fails the open with `bad-config`) | `session`, `cache` `{key, hit, source, incremental, reused_groups, rebuilt_groups, open_ms, cold_compile_ms}`, `host`, `lane0` |
 //! | `submit`     | `session`; stimulus: `{"kind":"design","cycles":N}` or `{"kind":"vectors","vectors":[[...],...]}` (one inner array per cycle, `inputs × width` lane-major words) | `queued` (cycles now queued) |
 //! | `poll`       | `session`; optional `max_cycles`                            | `cycles` (per-cycle output records drained), `cycle` (session cycle count), `done`; with a `wave` sink attached also `wave` (incremental VCD chunk, possibly empty) |
 //! | `wave`       | `session`; optional `lane` (0, a *slice* lane of the session) | `wave` (true), `lane` |
 //! | `checkpoint` | `session`, `path`                                           | `path`, `bytes`, `cycle` |
 //! | `restore`    | `path`; optional `design` override check                    | `session` (a **new** session), `cycle` |
 //! | `close`      | `session`                                                   | `closed` |
-//! | `stats`      | —                                                           | cache hit/miss counters, host and session counts |
+//! | `stats`      | —                                                           | `cache` `{mem_hits, disk_hits, misses, incremental, resident}` (`incremental` counts misses answered by the cone-delta reuse path), `hosts`, `sessions`, and `lanes` — per-session packed-lane occupancy rows `{session, host, lane0, width, host_lanes}` sorted by session id |
 //!
 //! `wave` attaches an activity-gated delta-waveform sink
 //! ([`crate::sim::WaveSink`]) to one slice lane; from then on every

@@ -161,6 +161,9 @@ pub fn parse_request(line: &str) -> Result<Request, ParseError> {
             if let Some(v) = j.get("incremental") {
                 cfg.incremental = matches!(v, Json::Bool(true));
             }
+            if let Some(v) = j.get("verify") {
+                cfg.verify = matches!(v, Json::Bool(true));
+            }
             Verb::Open(cfg)
         }
         "submit" => {

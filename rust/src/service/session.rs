@@ -72,6 +72,10 @@ pub struct SessionConfig {
     /// a cached same-family entry is rebuilt incrementally instead of
     /// from scratch. Snapshot restores always use the exact path.
     pub incremental: bool,
+    /// Run the static artifact verifier ([`crate::analysis`]) on this
+    /// open and refuse the session if it reports errors. Always on under
+    /// `debug_assertions` regardless of this flag.
+    pub verify: bool,
 }
 
 impl Default for SessionConfig {
@@ -86,6 +90,7 @@ impl Default for SessionConfig {
             fuse: true,
             partitioner: PartitionerKind::MinCut,
             incremental: false,
+            verify: false,
         }
     }
 }
@@ -214,6 +219,27 @@ impl SessionManager {
         self.hosts.iter().filter(|h| h.is_some()).count()
     }
 
+    /// Packed-lane occupancy of every live session, sorted by session id:
+    /// `(session, host, lane0, width, host_lanes)`. `host_lanes` is 0
+    /// when the host is gone (wedged and dropped; the session is failed).
+    pub fn occupancy(&self) -> Vec<(u64, usize, usize, usize, usize)> {
+        let mut rows: Vec<_> = self
+            .sessions
+            .iter()
+            .map(|(&id, s)| {
+                let lanes = self
+                    .hosts
+                    .get(s.host)
+                    .and_then(Option::as_ref)
+                    .map(|h| h.sig.lanes)
+                    .unwrap_or(0);
+                (id, s.host, s.lane0, s.width, lanes)
+            })
+            .collect();
+        rows.sort_unstable();
+        rows
+    }
+
     /// Open a session: fetch-or-compile the design, pack onto a matching
     /// host (or build one from the cached artifacts), initialize the
     /// slice lanes.
@@ -238,11 +264,18 @@ impl SessionManager {
         if cfg.parts == 0 {
             return Err("parts must be >= 1".into());
         }
-        let (cached, report) = if cfg.incremental {
-            self.cache.open_design_incremental(&design, cfg.fuse, cfg.parts, cfg.partitioner)?
+        // per-open verification request: widen the cache's flag for this
+        // open only, so one session asking never weakens a server-wide
+        // `--verify` and never sticks to later sessions
+        let server_verify = self.cache.verify;
+        self.cache.verify = server_verify || cfg.verify;
+        let opened = if cfg.incremental {
+            self.cache.open_design_incremental(&design, cfg.fuse, cfg.parts, cfg.partitioner)
         } else {
-            self.cache.open_design(&design, cfg.fuse, cfg.parts, cfg.partitioner)?
+            self.cache.open_design(&design, cfg.fuse, cfg.parts, cfg.partitioner)
         };
+        self.cache.verify = server_verify;
+        let (cached, report) = opened?;
 
         let sig = HostSig {
             key: cached.key.clone(),
@@ -648,6 +681,7 @@ impl SessionManager {
             // restores re-open by exact content key (checked below) —
             // the delta reuse path would commit a *different* key
             incremental: false,
+            verify: false,
         };
         match &snap.payload {
             SnapshotPayload::FullHost { cycle, state } => {

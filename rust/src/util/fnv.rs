@@ -11,6 +11,16 @@
 const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
 const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
 
+/// Single-stream 64-bit FNV-1a over a byte slice — the checksum variant
+/// (checkpoint trailers). Same constants as [`Fnv2`]'s primary stream.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_BASIS;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
 /// Dual-stream FNV-1a accumulator (see module docs).
 pub struct Fnv2 {
     a: u64,

@@ -1,0 +1,539 @@
+//! Seeded-fault corpus for the static artifact verifier (`rteaal check`).
+//!
+//! One mutator per diagnostic code: each test plants a minimal, targeted
+//! fault in an otherwise-pristine artifact bundle and asserts that the
+//! intended code fires. Collateral findings are allowed (a planted fault
+//! may legitimately trip more than one invariant); what is asserted is
+//! that the *intended* detector sees it. The pristine complement — clean
+//! catalog designs, cold and through the incremental (cone-delta splice)
+//! path — closes the loop: the verifier accepts exactly the artifacts the
+//! compiler produces and rejects every seeded corruption.
+
+use rteaal::activity::gdg::GroupDepGraph;
+use rteaal::analysis::{verify_artifacts, Report};
+use rteaal::coordinator::compile::{compile_design, CompileOpts};
+use rteaal::designs::catalog;
+use rteaal::graph::ops::mask;
+use rteaal::partition::{never_written, partition_ir, PartitionerKind, Partitioning, TrackedReg};
+use rteaal::service::cache::DesignCache;
+use rteaal::tensor::ir::{KOp, LayerIr};
+use rteaal::tensor::oim::Oim;
+use rteaal::util::json::{arr_u32, Json};
+
+/// A compiled artifact bundle to seed faults into.
+struct Bundle {
+    ir: LayerIr,
+    oim: Oim,
+    gdg: GroupDepGraph,
+}
+
+fn bundle(design: &str) -> Bundle {
+    let d = catalog(design).expect("catalog design");
+    let c = compile_design(&d, CompileOpts::default());
+    let gdg = GroupDepGraph::build(&c.ir, &c.oim);
+    Bundle { ir: c.ir, oim: c.oim, gdg }
+}
+
+/// Rebuild the OIM and GDG from a mutated IR, so only the planted IR
+/// fault is visible (the splice/GDG passes see consistent artifacts).
+fn rebuilt(ir: LayerIr) -> Bundle {
+    let oim = Oim::from_ir(&ir);
+    let gdg = GroupDepGraph::build(&ir, &oim);
+    Bundle { ir, oim, gdg }
+}
+
+fn verify(b: &Bundle) -> Report {
+    verify_artifacts("seeded", &b.ir, &b.oim, &b.gdg, None)
+}
+
+fn verify_parted(b: &Bundle, p: &Partitioning) -> Report {
+    verify_artifacts("seeded", &b.ir, &b.oim, &b.gdg, Some(p))
+}
+
+#[track_caller]
+fn assert_fires(r: &Report, code: &str) {
+    let fired: Vec<&str> = r.diags.iter().map(|d| d.code).collect();
+    assert!(r.has(code), "expected {code} to fire; fired: {fired:?}");
+}
+
+#[track_caller]
+fn assert_warns_only(r: &Report, code: &str) {
+    assert_fires(r, code);
+    let errs: Vec<String> = r.diags.iter().map(|d| d.to_string()).collect();
+    assert!(r.is_clean(), "{code} must be a lint, not an error; report: {errs:?}");
+}
+
+/// Round-trip a GDG through its JSON form with the reader CSR / writer
+/// map rewritten — the only route to those fields, which are private to
+/// everything but the serializer and [`GroupDepGraph::reader_csr`].
+fn with_reader_csr(
+    gdg: &GroupDepGraph,
+    offsets: Vec<u32>,
+    rows: Vec<u32>,
+    writer: Vec<u32>,
+) -> GroupDepGraph {
+    let mut j = gdg.to_json();
+    let Json::Obj(ref mut fields) = j else { panic!("gdg json is an object") };
+    fields.insert("reader_offsets".into(), arr_u32(&offsets));
+    fields.insert("reader_groups".into(), arr_u32(&rows));
+    fields.insert("slot_writer".into(), arr_u32(&writer));
+    GroupDepGraph::from_json(&j).expect("mutated gdg json must still deserialize")
+}
+
+// ---------------------------------------------------------------------------
+// IR01–IR09: IR well-formedness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ir01_read_before_write() {
+    let b = bundle("fir8");
+    let mut ir = b.ir;
+    assert!(ir.layers.len() >= 2, "fir8 has a multi-layer schedule");
+    let late = ir.layers.last().unwrap()[0].out;
+    ir.layers[0][0].a = late; // layer-0 op now reads a slot produced later
+    let r = verify(&rebuilt(ir));
+    assert_fires(&r, "IR01");
+}
+
+#[test]
+fn ir02_multi_driver() {
+    let b = bundle("fir8");
+    let mut ir = b.ir;
+    assert!(ir.layers.len() >= 2);
+    let dup = ir.layers[0][0].out;
+    ir.layers[1][0].out = dup; // second driver for an already-written slot
+    let r = verify(&rebuilt(ir));
+    assert_fires(&r, "IR02");
+}
+
+#[test]
+fn ir03_combinational_cycle() {
+    let b = bundle("fir8");
+    let mut ir = b.ir;
+    assert!(ir.layers.len() >= 2);
+    let (sa, sb) = (ir.layers[0][0].out, ir.layers[1][0].out);
+    ir.layers[0][0].a = sb; // A reads B's out...
+    ir.layers[1][0].a = sa; // ...and B reads A's out
+    let r = verify(&rebuilt(ir));
+    assert_fires(&r, "IR03");
+}
+
+#[test]
+fn ir04_mask_exceeds_width() {
+    let b = bundle("fir8");
+    let mut ir = b.ir;
+    let (li, oi) = find_narrow_op(&ir).expect("fir8 has a sub-64-bit op");
+    ir.layers[li][oi].mask = u64::MAX; // admits bits above the declared width
+    let r = verify(&rebuilt(ir));
+    assert_fires(&r, "IR04");
+}
+
+/// First op whose out slot is declared narrower than 64 bits.
+fn find_narrow_op(ir: &LayerIr) -> Option<(usize, usize)> {
+    for (li, layer) in ir.layers.iter().enumerate() {
+        for (oi, rec) in layer.iter().enumerate() {
+            if ir.slot_widths.get(rec.out as usize).is_some_and(|&w| w < 64) {
+                return Some((li, oi));
+            }
+        }
+    }
+    None
+}
+
+#[test]
+fn ir05_format_b_order_broken() {
+    let b = bundle("fir8");
+    let mut ir = b.ir;
+    let li = ir
+        .layers
+        .iter()
+        .position(|l| l.len() >= 2)
+        .expect("fir8 has a layer with two or more ops");
+    ir.layers[li].swap(0, 1); // natural S order no longer ascending
+    let r = verify(&rebuilt(ir));
+    assert_fires(&r, "IR05");
+}
+
+#[test]
+fn ir06_out_of_range_operand() {
+    let mut b = bundle("fir8");
+    // Stale OIM/GDG on purpose: rebuilding from an IR with an out-of-range
+    // operand is exactly what the verifier exists to make unnecessary.
+    b.ir.layers[0][0].a = (b.ir.num_slots + 5) as u32;
+    let r = verify(&b);
+    assert_fires(&r, "IR06");
+}
+
+#[test]
+fn ir07_width_overflow_lint() {
+    let mut b = bundle("fir8");
+    let rec = *b
+        .ir
+        .layers
+        .iter()
+        .flatten()
+        .find(|r| r.op == KOp::Add as u8)
+        .expect("fir8 sums its taps with adds");
+    // 64 + 64 → a 65-bit exact sum: wraps in the u64 slot file.
+    b.ir.slot_widths[rec.a as usize] = 64;
+    b.ir.slot_widths[rec.b as usize] = 64;
+    let r = verify(&b);
+    assert_warns_only(&r, "IR07");
+}
+
+#[test]
+fn ir08_commit_truncation_lint() {
+    let mut b = bundle("fir8");
+    let ci = b
+        .ir
+        .commits
+        .iter()
+        .position(|&(_, _, m)| m.count_ones() < 64)
+        .expect("fir8 has a sub-64-bit register");
+    let next = b.ir.commits[ci].1;
+    b.ir.slot_widths[next as usize] = 64; // next-state wider than the commit keeps
+    let r = verify(&b);
+    assert_warns_only(&r, "IR08");
+}
+
+#[test]
+fn ir09_dead_op_lint() {
+    let b = bundle("fir8");
+    let mut ir = b.ir;
+    assert!(ir.layers.len() >= 2, "the dead op must land after its operand's layer");
+    let last = ir.layers.len() - 1;
+    append_dead_op(&mut ir, last);
+    let r = verify(&rebuilt(ir));
+    assert_warns_only(&r, "IR09");
+}
+
+/// Append a Copy op writing a fresh slot that nothing reads, commits, or
+/// outputs. `layer` selects where it lands (an existing index appends to
+/// that layer; one past the end opens a new layer — a whole dead group).
+fn append_dead_op(ir: &mut LayerIr, layer: usize) {
+    let src = ir.layers[0][0];
+    let w = ir.slot_widths[src.out as usize];
+    let new_slot = ir.num_slots as u32;
+    let mut rec = src;
+    rec.out = new_slot;
+    rec.a = src.out; // written in layer 0, read from any later layer
+    rec.op = KOp::Copy as u8;
+    rec.arity = 1;
+    rec.imm = 0;
+    rec.ext = 0;
+    rec.aux = 0;
+    rec.mask = mask(w);
+    ir.num_slots += 1;
+    ir.slot_widths.push(w);
+    if !ir.slot_names.is_empty() {
+        ir.slot_names.push(None);
+    }
+    if layer < ir.layers.len() {
+        ir.layers[layer].push(rec);
+    } else {
+        ir.layers.push(vec![rec]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SP01–SP05: splice / OIM structural audit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sp01_layer_shape_mismatch() {
+    let mut b = bundle("fir8");
+    b.oim.i_payload[0] += 1; // claims an op layer 0 does not have
+    let r = verify(&b);
+    assert_fires(&r, "SP01");
+}
+
+#[test]
+fn sp02_operand_coordinate_out_of_range() {
+    let mut b = bundle("fir8");
+    b.oim.b.r_coords[0] = b.oim.num_slots + 3;
+    let r = verify(&b);
+    assert_fires(&r, "SP02");
+}
+
+#[test]
+fn sp03_format_b_disagrees_with_ir() {
+    let mut b = bundle("fir8");
+    b.oim.b.mask[0] = b.oim.b.mask[0].wrapping_add(1); // field-for-field no more
+    let r = verify(&b);
+    assert_fires(&r, "SP03");
+}
+
+#[test]
+fn sp04_format_c_not_stable_sort_of_b() {
+    let mut b = bundle("fir8");
+    let o = b.oim.c.opcode[0];
+    // Any different in-range opcode except MuxChain (whose arity rule
+    // would turn this into an SP02 and mask the sort check).
+    b.oim.c.opcode[0] = if o == 0 { 1 } else { 0 };
+    let r = verify(&b);
+    assert_fires(&r, "SP04");
+}
+
+#[test]
+fn sp05_reader_csr_malformed() {
+    let b = bundle("fir8");
+    let (offs, rows, sw) = b.gdg.reader_csr();
+    let mut offs = offs.to_vec();
+    offs.push(*offs.last().unwrap()); // ns + 2 offsets for ns slots
+    let gdg = with_reader_csr(&b.gdg, offs, rows.to_vec(), sw.to_vec());
+    let r = verify(&Bundle { ir: b.ir, oim: b.oim, gdg });
+    assert_fires(&r, "SP05");
+}
+
+// ---------------------------------------------------------------------------
+// GD01–GD08: group dependency graph soundness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gd01_reader_missing_from_csr() {
+    let b = bundle("fir8");
+    let (offs, rows, sw) = b.gdg.reader_csr();
+    let ns = b.ir.num_slots;
+    let s = (0..ns)
+        .find(|&s| offs[s] < offs[s + 1])
+        .expect("some slot has a reader");
+    let mut rows = rows.to_vec();
+    rows.remove(offs[s] as usize); // drop slot s's first reader
+    let mut offs = offs.to_vec();
+    for o in offs.iter_mut().skip(s + 1) {
+        *o -= 1;
+    }
+    let gdg = with_reader_csr(&b.gdg, offs, rows, sw.to_vec());
+    let r = verify(&Bundle { ir: b.ir, oim: b.oim, gdg });
+    assert_fires(&r, "GD01");
+}
+
+#[test]
+fn gd02_dangling_dependency() {
+    let mut b = bundle("fir8");
+    b.gdg.group_deps[0].push(9999); // far beyond the group count
+    let r = verify(&b);
+    assert_fires(&r, "GD02");
+}
+
+#[test]
+fn gd03_non_topological_dependency() {
+    let mut b = bundle("fir8");
+    let last = b.gdg.groups.len() - 1;
+    b.gdg.group_deps[last].push(last as u32); // dep on itself: not upstream
+    let r = verify(&b);
+    assert_fires(&r, "GD03");
+}
+
+#[test]
+fn gd04_groups_do_not_tile_format_c() {
+    let mut b = bundle("fir8");
+    b.gdg.groups[0].op_end += 1; // overlaps the next group's op range
+    let r = verify(&b);
+    assert_fires(&r, "GD04");
+}
+
+#[test]
+fn gd05_slot_writer_mismatch() {
+    let b = bundle("fir8");
+    let (offs, rows, sw) = b.gdg.reader_csr();
+    let mut sw = sw.to_vec();
+    let s = sw
+        .iter()
+        .position(|&g| g != u32::MAX)
+        .expect("some slot has a writer");
+    sw[s] = u32::MAX; // claims the slot is source-only
+    let gdg = with_reader_csr(&b.gdg, offs.to_vec(), rows.to_vec(), sw);
+    let r = verify(&Bundle { ir: b.ir, oim: b.oim, gdg });
+    assert_fires(&r, "GD05");
+}
+
+#[test]
+fn gd06_dead_group_lint() {
+    let b = bundle("fir8");
+    let mut ir = b.ir;
+    let nl = ir.layers.len();
+    append_dead_op(&mut ir, nl); // a fresh single-op layer → its own group
+    let r = verify(&rebuilt(ir));
+    assert_warns_only(&r, "GD06");
+}
+
+#[test]
+fn gd07_phantom_reader_lint() {
+    let b = bundle("fir8");
+    let (offs, rows, sw) = b.gdg.reader_csr();
+    let ns = b.ir.num_slots;
+    // An unread slot (the design output qualifies): its CSR row is empty,
+    // so listing group 0 there is a phantom with no ordering side effects.
+    let s = (0..ns)
+        .find(|&s| offs[s] == offs[s + 1])
+        .expect("some slot has no readers");
+    let mut rows = rows.to_vec();
+    rows.insert(offs[s] as usize, 0);
+    let mut offs = offs.to_vec();
+    for o in offs.iter_mut().skip(s + 1) {
+        *o += 1;
+    }
+    let gdg = with_reader_csr(&b.gdg, offs, rows, sw.to_vec());
+    let r = verify(&Bundle { ir: b.ir, oim: b.oim, gdg });
+    assert_warns_only(&r, "GD07");
+}
+
+#[test]
+fn gd08_missing_dependency_edge() {
+    let mut b = bundle("fir8");
+    let gi = b
+        .gdg
+        .group_deps
+        .iter()
+        .position(|d| !d.is_empty())
+        .expect("some group depends on another");
+    b.gdg.group_deps[gi].remove(0); // the operand that built this edge remains
+    let r = verify(&b);
+    assert_fires(&r, "GD08");
+}
+
+// ---------------------------------------------------------------------------
+// PT01–PT07: partition audit
+// ---------------------------------------------------------------------------
+
+fn parted(design: &str, n: usize) -> (Bundle, Partitioning) {
+    let b = bundle(design);
+    let p = partition_ir(&b.ir, n, PartitionerKind::MinCut);
+    (b, p)
+}
+
+#[test]
+fn pt01_owner_vector_malformed() {
+    let (b, mut p) = parted("fir8", 2);
+    p.owner_of_reg.pop();
+    let r = verify_parted(&b, &p);
+    assert_fires(&r, "PT01");
+}
+
+#[test]
+fn pt02_ownership_not_a_disjoint_cover() {
+    let (b, mut p) = parted("fir8", 2);
+    let reg = p.part_irs[0].commits.first().expect("partition 0 owns a register").0;
+    p.part_irs[0].commits.retain(|c| c.0 != reg); // nobody commits it now
+    let r = verify_parted(&b, &p);
+    assert_fires(&r, "PT02");
+}
+
+#[test]
+fn pt03_cross_partition_read_not_rum_covered() {
+    let (b, mut p) = parted("fir8", 2);
+    let t = p
+        .tracked
+        .iter_mut()
+        .find(|t| !t.rum_readers.is_empty())
+        .expect("a 2-way split of fir8 has a cross-partition read");
+    let victim = *t.rum_readers.last().unwrap();
+    t.readers.retain(|&q| q != victim);
+    t.rum_readers.retain(|&q| q != victim); // consistent, but the read is uncovered
+    let r = verify_parted(&b, &p);
+    assert_fires(&r, "PT03");
+}
+
+#[test]
+fn pt04_rom_in_tracking_table() {
+    let (b, mut p) = parted("tiny_cpu_divergent", 2);
+    let never = never_written(&b.ir);
+    let entry = match (0..b.ir.commits.len()).find(|&ri| never[ri]) {
+        // The real fault: a self-committing register (pure ROM) tracked.
+        Some(ri) => TrackedReg {
+            owner: p.owner_of_reg[ri],
+            reg_slot: b.ir.commits[ri].0,
+            readers: Vec::new(),
+            rum_readers: Vec::new(),
+        },
+        // Fallback fault, same detector: a tracked slot that is no register.
+        None => TrackedReg {
+            owner: 0,
+            reg_slot: b.ir.layers[0][0].out,
+            readers: Vec::new(),
+            rum_readers: Vec::new(),
+        },
+    };
+    p.tracked.push(entry);
+    let r = verify_parted(&b, &p);
+    assert_fires(&r, "PT04");
+}
+
+#[test]
+fn pt05_targeted_wake_map_disagrees() {
+    let (b, mut p) = parted("fir8", 2);
+    let slot = *p.readers_of_slot.keys().next().expect("boundary slots exist");
+    p.readers_of_slot.remove(&slot); // targeted poke wake would miss it
+    let r = verify_parted(&b, &p);
+    assert_fires(&r, "PT05");
+}
+
+#[test]
+fn pt06_outputs_not_on_partition_zero() {
+    let (b, mut p) = parted("fir8", 2);
+    assert!(!b.ir.output_slots.is_empty(), "fir8 has a design output");
+    p.part_irs[0].output_slots.clear();
+    let r = verify_parted(&b, &p);
+    assert_fires(&r, "PT06");
+}
+
+#[test]
+fn pt07_phantom_rum_reader_lint() {
+    let (b, mut p) = parted("fir8", 3);
+    let n = p.num_partitions() as u32;
+    let (ti, q) = p
+        .tracked
+        .iter()
+        .enumerate()
+        .find_map(|(ti, t)| (0..n).find(|q| !t.readers.contains(q)).map(|q| (ti, q)))
+        .expect("some register is not read by every partition");
+    let t = &mut p.tracked[ti];
+    t.readers.push(q);
+    t.readers.sort_unstable();
+    if q as usize != t.owner {
+        t.rum_readers.push(q);
+        t.rum_readers.sort_unstable();
+    }
+    let r = verify_parted(&b, &p);
+    assert_warns_only(&r, "PT07");
+}
+
+// ---------------------------------------------------------------------------
+// The pristine complement: the compiler's own artifacts are clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pristine_catalog_is_clean() {
+    for design in ["counter", "alu32", "fir8", "tiny_cpu_divergent", "rocket_like_1c"] {
+        let b = bundle(design);
+        let p = partition_ir(&b.ir, 2, PartitionerKind::MinCut);
+        let r = verify_artifacts(design, &b.ir, &b.oim, &b.gdg, Some(&p));
+        assert!(
+            r.is_clean(),
+            "pristine {design} must verify clean; got {}: {:?}",
+            r.summary(),
+            r.diags.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn incremental_splice_is_clean() {
+    let base = catalog("fir8").expect("catalog design");
+    let edited = catalog("fir8_edit").expect("catalog edit variant");
+    let mut cache = DesignCache::new(None, 4);
+    cache.open_design(&base, true, 2, PartitionerKind::MinCut).expect("base open");
+    let (entry, rep) = cache
+        .open_design_incremental(&edited, true, 2, PartitionerKind::MinCut)
+        .expect("incremental open");
+    assert!(rep.incremental, "the edit must take the cone-delta path");
+    let p = entry.partitioning();
+    let r = verify_artifacts("fir8_edit", &entry.ir, &entry.oim, &entry.gdg, Some(&p));
+    assert!(
+        r.is_clean(),
+        "spliced artifacts must verify clean; got {}: {:?}",
+        r.summary(),
+        r.diags.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+}
